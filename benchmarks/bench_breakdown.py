@@ -1,0 +1,47 @@
+"""Fig. 8 analogue: per-phase latency breakdown on the UPMEM profile.
+
+Reproduces the paper's two findings:
+  (a) with nprobe fixed, DC's share falls and LC's share rises as nlist
+      grows (fewer vectors per cluster, same query x cluster pairs);
+  (b) with nlist fixed, shares are ~stable in nprobe (all phases linear).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+from benchmarks.common import row
+from repro.core.perf_model import (IndexParams, UPMEM_PROFILE, phase_times,
+                                   PHASES)
+
+BASE = IndexParams(n_total=100_000_000, nlist=2 ** 14, q=10_000, d=128,
+                   k=10, p=96, m=16, cb=256)
+
+
+def _shares(ix):
+    t = phase_times(ix, UPMEM_PROFILE, multiplierless=True)
+    pim = {ph: t[ph] for ph in PHASES if ph != "CL"}   # CL runs on host
+    total = sum(pim.values())
+    return {ph: v / total for ph, v in pim.items()}, total
+
+
+def run(quick: bool = False):
+    out = []
+    dc_shares = {}
+    for logn in (12, 14, 16):                          # Fig. 8a
+        ix = dataclasses.replace(BASE, nlist=2 ** logn)
+        shares, total = _shares(ix)
+        dc_shares[logn] = shares["DC"]
+        out.append(row(f"breakdown/nlist=2^{logn}_nprobe=96", total,
+                       ";".join(f"{ph}={shares[ph]:.2f}"
+                                for ph in ("RC", "LC", "DC", "TS"))))
+    for p in (32, 64, 128):                            # Fig. 8b
+        ix = dataclasses.replace(BASE, p=p)
+        shares, total = _shares(ix)
+        out.append(row(f"breakdown/nlist=2^14_nprobe={p}", total,
+                       ";".join(f"{ph}={shares[ph]:.2f}"
+                                for ph in ("RC", "LC", "DC", "TS"))))
+    out.append(row("breakdown/bottleneck_shift", 0.0,
+                   f"dc_share_drops_with_nlist="
+                   f"{dc_shares[16] < dc_shares[12]}"))
+    return out

@@ -1,0 +1,45 @@
+"""Fig. 6/7 analogue: end-to-end throughput vs nlist and vs nprobe.
+
+Measured on this container's CPU (single device, jnp engine) — absolute
+QPS is not the paper's UPMEM number, but the TRENDS the paper reports are
+reproduced: throughput rises with nlist (fewer scanned vectors) and falls
+with nprobe (more scanned clusters).  The UPMEM-vs-CPU speedup itself is a
+model-derived figure (bench_scaling).
+"""
+
+from __future__ import annotations
+
+import jax
+
+from benchmarks.common import corpus_and_index, timeit, row
+from repro.core import SearchParams, search_ivfpq
+
+
+def run(quick: bool = False):
+    out = []
+    qps_by_nlist = {}
+    nlists = (32, 128) if quick else (32, 64, 128, 256)
+    for nlist in nlists:                       # Fig. 6a: sweep nlist
+        ds, idx, clusters = corpus_and_index(nlist=nlist)
+        p = SearchParams(nprobe=8, k=10, query_chunk=128)
+        t = timeit(lambda: search_ivfpq(idx, clusters, ds.queries, p))
+        qps = ds.queries.shape[0] / t
+        qps_by_nlist[nlist] = qps
+        out.append(row(f"e2e/nlist={nlist}_nprobe=8", t, f"qps={qps:.0f}"))
+    ds, idx, clusters = corpus_and_index(nlist=128)
+    qps_by_nprobe = {}
+    for nprobe in (4, 8, 16, 32):              # Fig. 6b: sweep nprobe
+        p = SearchParams(nprobe=nprobe, k=10, query_chunk=128)
+        t = timeit(lambda: search_ivfpq(idx, clusters, ds.queries, p))
+        qps = ds.queries.shape[0] / t
+        qps_by_nprobe[nprobe] = qps
+        out.append(row(f"e2e/nlist=128_nprobe={nprobe}", t,
+                       f"qps={qps:.0f}"))
+    # paper trends
+    trend_nlist = qps_by_nlist[max(qps_by_nlist)] > qps_by_nlist[
+        min(qps_by_nlist)]
+    trend_nprobe = qps_by_nprobe[4] > qps_by_nprobe[32]
+    out.append(row("e2e/trends", 0.0,
+                   f"qps_up_with_nlist={trend_nlist};"
+                   f"qps_down_with_nprobe={trend_nprobe}"))
+    return out

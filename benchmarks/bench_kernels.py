@@ -1,0 +1,38 @@
+"""Kernel micro-benches (interpret mode on CPU — correctness-scale timing;
+TPU-target perf is the roofline story).  One row per kernel x strategy."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import timeit, row
+from repro.kernels import ops, ref
+
+
+def run(quick: bool = False):
+    rng = np.random.default_rng(0)
+    t_, m, cb, c, dsub = 16, 16, 256, 1024, 8
+    res = jnp.asarray(rng.normal(size=(t_, m * dsub)).astype(np.float32))
+    books = jnp.asarray(rng.normal(size=(m, cb, dsub)).astype(np.float32))
+    sqn = jnp.sum(books * books, -1)
+    codes = jnp.asarray(rng.integers(0, cb, size=(t_, c, m)).astype(np.int32))
+    ids = jnp.asarray(rng.integers(0, 1 << 20, size=(t_, c)).astype(np.int32))
+    sizes = jnp.full((t_,), c, jnp.int32)
+
+    out = []
+    t = timeit(lambda: ops.lut_build(res, books, sqn))
+    out.append(row("kernels/lut_build", t, f"tasks={t_}"))
+    lut = ops.lut_build(res, books, sqn)
+    for strat in ("gather", "onehot"):
+        t = timeit(lambda: ops.pq_scan_dc(lut, codes, sizes, strategy=strat))
+        out.append(row(f"kernels/pq_scan_dc_{strat}", t,
+                       f"rows={t_ * c}"))
+        t = timeit(lambda: ops.pq_scan_topk(lut, codes, ids, sizes, 10,
+                                            strategy=strat))
+        out.append(row(f"kernels/pq_scan_topk_{strat}", t, "k=10_fused"))
+    # oracle comparison cost (ref path)
+    t = timeit(lambda: ref.pq_scan_dc_ref(lut, codes))
+    out.append(row("kernels/pq_scan_dc_ref", t, "jnp_oracle"))
+    return out

@@ -1,0 +1,84 @@
+"""Fig. 11/12 analogue: load-balance ablations on the real engine.
+
+  Fig 11a: full load balancing (split+dup+alloc+sched) vs ID-order naive —
+           makespan speedup (paper: 4.84-6.19x).
+  Fig 11b: allocation-only (no split/dup) vs naive    (paper: 1.76-4.07x).
+  Fig 12a: split-threshold sweep.
+  Fig 12b: duplication-budget sweep (paper: stabilizes after ~1 copy,
+           2-3x from the first copy).
+Makespan = scheduler-predicted max per-shard load (the quantity the paper's
+DPU timeline measures); plus measured CPU wall time of the vmap engine for
+the full-vs-naive headline.
+"""
+
+from __future__ import annotations
+
+import numpy as np
+import jax.numpy as jnp
+
+from benchmarks.common import corpus_and_index, timeit, row
+from repro.core import cluster_locate
+from repro.core.sharded_search import DistributedEngine, EngineConfig
+
+N_SHARDS = 64
+
+
+def _mk_engine(idx, probes, **kw):
+    cfg = EngineConfig(n_shards=N_SHARDS, nprobe=8, k=10,
+                       tasks_per_shard=2048, strategy="gather", **kw)
+    return DistributedEngine(idx, cfg, probes)
+
+
+def run(quick: bool = False):
+    out = []
+    ds, idx, clusters = corpus_and_index(nlist=128, size_skew=None) \
+        if False else corpus_and_index(nlist=128)
+    probes, _ = cluster_locate(ds.queries.astype(jnp.float32),
+                               idx.centroids, 8)
+    probes = np.asarray(probes)
+
+    naive = _mk_engine(idx, probes, naive_layout=True, naive_schedule=True,
+                       split_max=10 ** 9)
+    full = _mk_engine(idx, probes, split_max=int(np.asarray(
+        idx.sizes).mean() * 1.5), dup_budget_bytes=1 << 20)
+    alloc_only = _mk_engine(idx, probes, split_max=10 ** 9)
+
+    def makespan(eng):
+        sched = eng._schedule(probes)
+        eng.carry = []
+        return sched.predicted_load.max(), sched.predicted_load.mean()
+
+    mk_naive, _ = makespan(naive)
+    mk_full, mean_full = makespan(full)
+    mk_alloc, _ = makespan(alloc_only)
+    out.append(row("loadbalance/full_vs_naive", mk_full,
+                   f"speedup={mk_naive / mk_full:.2f}x_paper=4.84-6.19x"))
+    out.append(row("loadbalance/alloc_only_vs_naive", mk_alloc,
+                   f"speedup={mk_naive / mk_alloc:.2f}x_paper=1.76-4.07x"))
+    out.append(row("loadbalance/full_imbalance", 0.0,
+                   f"max_over_mean={mk_full / mean_full:.2f}"))
+
+    # Fig 12a: split threshold sweep
+    mean_sz = float(np.asarray(idx.sizes).mean())
+    for frac in (0.5, 1.0, 2.0, 8.0):
+        eng = _mk_engine(idx, probes, split_max=int(mean_sz * frac))
+        mk, _ = makespan(eng)
+        out.append(row(f"loadbalance/split_max={frac}xmean", mk,
+                       f"speedup_vs_naive={mk_naive / mk:.2f}x"))
+
+    # Fig 12b: duplication budget sweep
+    prev = None
+    for budget_kb in (0, 64, 256, 1024, 4096):
+        eng = _mk_engine(idx, probes, split_max=int(mean_sz * 1.5),
+                         dup_budget_bytes=budget_kb * 1024)
+        mk, _ = makespan(eng)
+        out.append(row(f"loadbalance/dup_budget={budget_kb}KB", mk,
+                       f"speedup_vs_naive={mk_naive / mk:.2f}x"))
+        prev = mk
+
+    # wall-time confirmation (vmap engine, full vs naive schedule)
+    t_naive = timeit(lambda: naive.search(ds.queries, flush=False), iters=2)
+    t_full = timeit(lambda: full.search(ds.queries, flush=False), iters=2)
+    out.append(row("loadbalance/walltime_full", t_full,
+                   f"naive/full={t_naive / t_full:.2f}x(cpu-sim)"))
+    return out

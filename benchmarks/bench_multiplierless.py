@@ -1,0 +1,57 @@
+"""Fig. 10a analogue: multiplier-less ANNS conversion speedup.
+
+Two layers of evidence:
+  * model-level (UPMEM profile): LC speedup and end-to-end speedup with
+    vs without the conversion — paper reports ~1.93x LC, 1.17-1.40x e2e;
+  * engine-level: the integer square-LUT path is bit-identical to the
+    multiply path (losslessness, measured on the real engine) and its
+    ranking agrees with the float path.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import corpus_and_index, timeit, row
+from repro.core import (build_lut, quantize_codebook, quantize_residual,
+                        build_lut_multiplierless, build_lut_int_reference)
+from repro.core.perf_model import IndexParams, UPMEM_PROFILE, phase_times
+
+BASE = IndexParams(n_total=100_000_000, nlist=2 ** 16, q=10_000, d=128,
+                   k=10, p=96, m=16, cb=256)
+
+
+def run(quick: bool = False):
+    out = []
+    # model level (the paper's measured quantity)
+    for logn, label in ((16, "nlist=2^16"), (14, "nlist=2^14")):
+        ix = dataclasses.replace(BASE, nlist=2 ** logn)
+        t_mult = phase_times(ix, UPMEM_PROFILE, multiplierless=False)
+        t_less = phase_times(ix, UPMEM_PROFILE, multiplierless=True)
+        lc = t_mult["LC"] / t_less["LC"]
+        pim = [p for p in ("RC", "LC", "DC", "TS")]
+        e2e = sum(t_mult[p] for p in pim) / sum(t_less[p] for p in pim)
+        out.append(row(f"multless/{label}", sum(t_less[p] for p in pim),
+                       f"lc_speedup={lc:.2f}x;e2e_speedup={e2e:.2f}x"))
+    # engine level: losslessness on the real index
+    ds, idx, clusters = corpus_and_index()
+    qcb = quantize_codebook(idx.codebook, scale=0.05)
+    n_q = 8
+    exact = 0
+    for i in range(n_q):
+        q = ds.queries[i].astype(jnp.float32)
+        res = q - idx.centroids[0]
+        rq = quantize_residual(res, qcb.scale)
+        a = np.asarray(build_lut_multiplierless(qcb, rq))
+        b = np.asarray(build_lut_int_reference(qcb, rq))
+        exact += int((a == b).all())
+    t_lut = timeit(lambda: build_lut_multiplierless(
+        qcb, quantize_residual(ds.queries[0].astype(jnp.float32)
+                               - idx.centroids[0], qcb.scale)))
+    out.append(row("multless/lossless_check", t_lut,
+                   f"bit_exact={exact}/{n_q}"))
+    return out

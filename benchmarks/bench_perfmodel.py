@@ -1,0 +1,59 @@
+"""Fig. 10b analogue: gap between the ideal performance model and the
+imbalanced engine.
+
+The paper measures real-UPMEM time without load balancing vs the model's
+prediction (gap 3.32-6.48x, geomean 5.23x) — the gap IS the load imbalance.
+We reproduce it structurally: predicted makespan of the NAIVE (ID-order)
+layout over the scheduler's per-shard loads vs the balanced ideal
+(mean load), across index settings.
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+from benchmarks.common import corpus_and_index, row
+from repro.core import cluster_locate
+from repro.core.layout import build_layout, estimate_heat
+from repro.core.scheduler import schedule_naive, schedule_batch
+from repro.core.perf_model import (IndexParams, UPMEM_PROFILE,
+                                   make_task_latency_model)
+
+import jax.numpy as jnp
+
+
+def run(quick: bool = False):
+    out = []
+    gaps = []
+    for nlist in ((64,) if quick else (64, 128, 256)):
+        for nprobe in (4, 8):
+            ds, idx, clusters = corpus_and_index(nlist=nlist)
+            probes, _ = cluster_locate(ds.queries.astype(jnp.float32),
+                                       idx.centroids, nprobe)
+            probes = np.asarray(probes)
+            sizes = np.asarray(idx.sizes)
+            heat = estimate_heat(probes[:128], nlist)
+            lm = make_task_latency_model(
+                IndexParams(n_total=int(sizes.sum()), nlist=nlist, q=1,
+                            d=idx.dim, k=10, p=nprobe, m=idx.codebook.m,
+                            cb=idx.codebook.cb), UPMEM_PROFILE)
+            lay = build_layout(sizes, heat, 64, split_max=10 ** 9,
+                               naive=True)
+            slot = np.zeros(len(lay.instances), np.int64)
+            cur = {}
+            for inst in lay.instances:
+                s = lay.shard_of[inst.instance_id]
+                slot[inst.instance_id] = cur.get(s, 0)
+                cur[s] = cur.get(s, 0) + 1
+            sched = schedule_naive(probes[128:], lay, lm, slot,
+                                   tasks_per_shard=4096)
+            real = sched.predicted_load.max()          # imbalanced makespan
+            ideal = sched.predicted_load.sum() / 64    # perfectly balanced
+            gap = real / max(ideal, 1e-12)
+            gaps.append(gap)
+            out.append(row(f"perfmodel/nlist={nlist}_nprobe={nprobe}", real,
+                           f"gap={gap:.2f}x"))
+    geo = float(np.exp(np.mean(np.log(gaps))))
+    out.append(row("perfmodel/geomean_gap", 0.0,
+                   f"geomean={geo:.2f}x_paper=5.23x_range=3.3-6.5x"))
+    return out

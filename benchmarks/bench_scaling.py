@@ -1,0 +1,52 @@
+"""Fig. 13 + headline analogue: DRIM-ANN vs 32-thread CPU, and scaling with
+DPU compute ability (1x/2x/5x).
+
+Paper: geomean speedup 2.92x (1x), 4.63x (2x), 7.12x (5x) on SIFT100M.
+We evaluate the same ratios from the calibrated cost model (UPMEM profile
+vs Xeon profile) across the paper's index sweep, and report geomeans.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import numpy as np
+
+from benchmarks.common import CPU_PROFILE, row
+from repro.core.perf_model import (IndexParams, UPMEM_PROFILE, phase_times,
+                                   total_time)
+
+BASE = IndexParams(n_total=100_000_000, nlist=2 ** 14, q=10_000, d=128,
+                   k=10, p=96, m=16, cb=256)
+
+
+def cpu_time(ix):
+    t = phase_times(ix, CPU_PROFILE, multiplierless=False)
+    return sum(t.values())
+
+
+def run(quick: bool = False):
+    out = []
+    speedups = {1: [], 2: [], 5: []}
+    for logn in (12, 13, 14, 15, 16):
+        # CPU baseline runs f32 Faiss (b_cb=4); the PIM deployment streams
+        # uint8-quantized codebooks (b_cb=1, the multiplierless operands).
+        ix_cpu = dataclasses.replace(BASE, nlist=2 ** logn, b_cb=4)
+        ix_pim = dataclasses.replace(BASE, nlist=2 ** logn, b_cb=1)
+        t_cpu = cpu_time(ix_cpu)
+        for scale in (1, 2, 5):
+            t_pim = total_time(ix_pim, UPMEM_PROFILE, multiplierless=True,
+                               compute_scale=scale)
+            speedups[scale].append(t_cpu / t_pim)
+        out.append(row(f"scaling/nlist=2^{logn}",
+                       total_time(ix_pim, UPMEM_PROFILE,
+                                  multiplierless=True),
+                       f"speedup_1x={speedups[1][-1]:.2f}"
+                       f";2x={speedups[2][-1]:.2f}"
+                       f";5x={speedups[5][-1]:.2f}"))
+    paper = {1: 2.92, 2: 4.63, 5: 7.12}
+    for scale in (1, 2, 5):
+        geo = float(np.exp(np.mean(np.log(speedups[scale]))))
+        out.append(row(f"scaling/geomean_{scale}x", 0.0,
+                       f"model={geo:.2f}x_paper={paper[scale]:.2f}x"))
+    return out

@@ -1,0 +1,52 @@
+"""Shared benchmark fixtures: corpus, index, timing helpers, CPU profile."""
+
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import build_ivfpq, pad_clusters
+from repro.core.perf_model import HardwareProfile
+from repro.data import make_clustered_corpus
+
+# Paper baseline platform: Xeon Gold 5218 (32 threads), AVX2, ~80 GB/s
+# (§II-A cites ANNS-on-CPU memory bandwidth ~80 GB/s [19]).
+CPU_PROFILE = HardwareProfile(
+    name="xeon-gold-5218-32t",
+    pe=32, freq_hz=2.3e9, ops_per_cycle=16.0,   # 8-lane f32 FMA = 16 flop
+    mult_cycles=1.0, bw_per_pe=80e9 / 32, host_bw=80e9,
+    ops_per_load=0.0,
+    notes="Faiss-CPU baseline: AVX2 + OpenMP, memory-bound regime")
+
+_CACHE = {}
+
+
+def corpus_and_index(n=30000, d=64, nlist=128, m=16, cb=256, n_queries=256,
+                     seed=0):
+    key = (n, d, nlist, m, cb, n_queries, seed)
+    if key not in _CACHE:
+        ds = make_clustered_corpus(seed, n=n, d=d, n_queries=n_queries,
+                                   n_components=max(nlist // 2, 8), k_gt=10)
+        idx = build_ivfpq(jax.random.PRNGKey(seed), ds.points, nlist=nlist,
+                          m=m, cb=cb, kmeans_iters=8, pq_iters=8)
+        _CACHE[key] = (ds, idx, pad_clusters(idx))
+    return _CACHE[key]
+
+
+def timeit(fn, *args, warmup=1, iters=3):
+    """-> median seconds per call (fn must block — jax results forced)."""
+    for _ in range(warmup):
+        jax.block_until_ready(fn(*args))
+    ts = []
+    for _ in range(iters):
+        t0 = time.perf_counter()
+        jax.block_until_ready(fn(*args))
+        ts.append(time.perf_counter() - t0)
+    return float(np.median(ts))
+
+
+def row(name: str, seconds: float, derived) -> str:
+    return f"{name},{seconds * 1e6:.1f},{derived}"

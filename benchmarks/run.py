@@ -1,0 +1,55 @@
+# One function per paper table/figure. Prints ``name,us_per_call,derived``
+# CSV rows.  ``python -m benchmarks.run [--quick]``.
+
+from __future__ import annotations
+
+import argparse
+import sys
+import time
+import traceback
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true")
+    ap.add_argument("--only", default=None,
+                    help="comma-separated bench names")
+    args = ap.parse_args()
+
+    from benchmarks import (bench_recall, bench_e2e, bench_breakdown,
+                            bench_multiplierless, bench_perfmodel,
+                            bench_loadbalance, bench_scaling, bench_kernels,
+                            bench_dse)
+    benches = {
+        "recall": bench_recall,            # §V-A accuracy constraint
+        "e2e": bench_e2e,                  # Fig. 6/7
+        "breakdown": bench_breakdown,      # Fig. 8
+        "multiplierless": bench_multiplierless,   # Fig. 10a
+        "perfmodel": bench_perfmodel,      # Fig. 10b
+        "loadbalance": bench_loadbalance,  # Fig. 11/12
+        "scaling": bench_scaling,          # Fig. 13
+        "kernels": bench_kernels,          # Pallas micro-benches
+        "dse": bench_dse,                  # §III-C
+    }
+    if args.only:
+        names = args.only.split(",")
+        benches = {k: v for k, v in benches.items() if k in names}
+
+    print("name,us_per_call,derived")
+    failures = []
+    for name, mod in benches.items():
+        t0 = time.time()
+        try:
+            for line in mod.run(quick=args.quick):
+                print(line, flush=True)
+        except Exception as e:
+            traceback.print_exc()
+            failures.append((name, repr(e)))
+        print(f"# [{name}] {time.time() - t0:.1f}s", flush=True)
+    if failures:
+        print(f"# FAILURES: {failures}", file=sys.stderr)
+        sys.exit(1)
+
+
+if __name__ == "__main__":
+    main()

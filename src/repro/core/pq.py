@@ -1,0 +1,112 @@
+"""Product quantization: codebook training, encoding, decoding.
+
+The PQ codebooks are trained on *residuals* (point − assigned IVF centroid),
+which is the standard IVF-ADC construction (Jégou et al., TPAMI'11) and what
+DRIM-ANN runs on UPMEM. ``CB`` (codebook entries) is a free parameter of the
+paper's DSE — 256 keeps codes in uint8 (the paper's default), larger CB is
+supported with uint16 storage.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.kmeans import kmeans_multi, l2_sq
+
+
+class PQCodebook(NamedTuple):
+    codebooks: jax.Array   # (M, CB, dsub) f32
+    # Cached squared norms of every codebook entry — reused by every LUT
+    # construction (the ||c||^2 term of the expansion).
+    sqnorms: jax.Array     # (M, CB) f32
+
+    @property
+    def m(self) -> int:
+        return self.codebooks.shape[0]
+
+    @property
+    def cb(self) -> int:
+        return self.codebooks.shape[1]
+
+    @property
+    def dsub(self) -> int:
+        return self.codebooks.shape[2]
+
+    @property
+    def dim(self) -> int:
+        return self.m * self.dsub
+
+
+def split_subvectors(x: jax.Array, m: int) -> jax.Array:
+    """(N, D) -> (N, M, D/M). D must divide evenly (configs guarantee it)."""
+    n, d = x.shape
+    assert d % m == 0, f"dim {d} not divisible by M={m}"
+    return x.reshape(n, m, d // m)
+
+
+@functools.partial(jax.jit, static_argnames=("m", "cb", "iters"))
+def train_pq(key: jax.Array, residuals: jax.Array, m: int, cb: int,
+             iters: int = 12) -> PQCodebook:
+    """Train M sub-codebooks of CB entries each on (N, D) residuals."""
+    sub = split_subvectors(residuals.astype(jnp.float32), m)   # (N, M, dsub)
+    st = kmeans_multi(key, sub.transpose(1, 0, 2), k=cb, iters=iters)
+    cbs = st.centroids                                          # (M, CB, dsub)
+    return PQCodebook(cbs, jnp.sum(cbs * cbs, axis=-1))
+
+
+def code_dtype(cb: int):
+    return jnp.uint8 if cb <= 256 else jnp.uint16
+
+
+@jax.jit
+def encode_pq(codebook: PQCodebook, residuals: jax.Array) -> jax.Array:
+    """Encode (N, D) residuals -> (N, M) codes (argmin per subspace)."""
+    sub = split_subvectors(residuals.astype(jnp.float32), codebook.m)
+
+    def per_sub(xs, cs):                       # xs (N, dsub), cs (CB, dsub)
+        return jnp.argmin(l2_sq(xs, cs), axis=1)
+
+    codes = jax.vmap(per_sub, in_axes=(1, 0), out_axes=1)(sub, codebook.codebooks)
+    return codes.astype(code_dtype(codebook.cb))
+
+
+@jax.jit
+def decode_pq(codebook: PQCodebook, codes: jax.Array) -> jax.Array:
+    """(N, M) codes -> (N, D) reconstructed residuals."""
+    gathered = jax.vmap(lambda cs, ix: cs[ix], in_axes=(0, 1), out_axes=1)(
+        codebook.codebooks, codes.astype(jnp.int32))           # (N, M, dsub)
+    n = codes.shape[0]
+    return gathered.reshape(n, codebook.dim)
+
+
+# ---------------------------------------------------------------------------
+# OPQ (Ge et al., CVPR'13): learn an orthogonal rotation R minimizing PQ
+# reconstruction error, then PQ in the rotated space.  DRIM-ANN lists OPQ as a
+# supported variant; we implement the alternating (R <-> codebook) solver.
+# ---------------------------------------------------------------------------
+
+class OPQCodebook(NamedTuple):
+    rotation: jax.Array     # (D, D) orthogonal
+    pq: PQCodebook
+
+
+def train_opq(key: jax.Array, residuals: jax.Array, m: int, cb: int,
+              outer_iters: int = 4, pq_iters: int = 8) -> OPQCodebook:
+    """Alternating OPQ: fix R, train PQ; fix PQ, solve Procrustes for R."""
+    d = residuals.shape[1]
+    r = jnp.eye(d, dtype=jnp.float32)
+    x = residuals.astype(jnp.float32)
+    pq = None
+    for it in range(outer_iters):
+        key, sub = jax.random.split(key)
+        xr = x @ r
+        pq = train_pq(sub, xr, m=m, cb=cb, iters=pq_iters)
+        recon = decode_pq(pq, encode_pq(pq, xr))               # (N, D)
+        # Procrustes: R = argmin ||XR - recon||  =>  R = U V^T of X^T recon
+        u, _, vt = jnp.linalg.svd(x.T @ recon, full_matrices=False)
+        r = u @ vt
+    return OPQCodebook(r, pq)

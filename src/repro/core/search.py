@@ -1,0 +1,119 @@
+"""Single-device five-phase cluster-based ANNS pipeline (paper Fig. 1).
+
+    CL  cluster locating      q x centroids GEMM + top-nprobe
+    RC  residual computation  q - centroid[probe]
+    LC  LUT construction      build_lut (or the Pallas lut_build kernel)
+    DC  distance calculation  adc scan (or the Pallas pq_scan kernel)
+    TS  top-k sorting         lax.top_k merge
+
+The distributed engine (sharded_search.py) runs the same phases with
+LC/DC/TS per shard and a final cross-shard merge.  ``use_kernels=True``
+routes LC/DC through the Pallas kernels in interpret-or-TPU mode.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.kmeans import l2_sq
+from repro.core.ivf import IVFPQIndex, PaddedClusters
+from repro.core.adc import build_lut_batch, adc_distances
+from repro.core.topk import topk_smallest
+
+
+class SearchParams(NamedTuple):
+    nprobe: int
+    k: int
+    strategy: str = "gather"        # "gather" | "onehot" for the DC phase
+    query_chunk: int = 256          # queries per scan step
+    use_kernels: bool = False       # route LC/DC through Pallas kernels
+
+
+def cluster_locate(queries: jax.Array, centroids: jax.Array, nprobe: int):
+    """CL: (Q, D) x (nlist, D) -> probe ids (Q, nprobe) + centroid dists."""
+    d = l2_sq(queries, centroids)
+    nd, idx = jax.lax.top_k(-d, nprobe)
+    return idx.astype(jnp.int32), -nd
+
+
+def _search_chunk(queries, centroids, codebook, clusters: PaddedClusters,
+                  rotation, params: SearchParams):
+    q = queries.astype(jnp.float32)
+    probes, _ = cluster_locate(q, centroids, params.nprobe)       # (Qc, P)
+    qc, p = probes.shape
+    # RC
+    residual = q[:, None, :] - centroids[probes]                  # (Qc, P, D)
+    if rotation is not None:
+        residual = residual @ rotation
+    flat_res = residual.reshape(qc * p, -1)
+    flat_probes = probes.reshape(-1)
+    # gather the probed clusters' codes/ids/sizes
+    codes = clusters.codes[flat_probes]                           # (QcP, C, M)
+    ids = clusters.ids[flat_probes]                               # (QcP, C)
+    sizes = clusters.sizes[flat_probes]                           # (QcP,)
+    if params.use_kernels:
+        from repro.kernels import ops as kops
+        lut = kops.lut_build(flat_res, codebook.codebooks,
+                             codebook.sqnorms)                    # (QcP, M, CB)
+        dists = kops.pq_scan_dc(lut, codes, sizes,
+                                strategy=params.strategy)
+    else:
+        lut = build_lut_batch(codebook, flat_res)
+        dists = adc_distances(
+            lut, codes, sizes,
+            strategy="gather" if params.strategy == "gather" else "onehot")
+    # TS: per query over all probed candidates
+    cand_d = dists.reshape(qc, p * clusters.cmax)
+    cand_i = ids.reshape(qc, p * clusters.cmax)
+    best_d, best_i = topk_smallest(cand_d, cand_i, params.k)
+    return best_d, best_i
+
+
+@functools.partial(jax.jit, static_argnames=("params",))
+def search_ivfpq(index: IVFPQIndex, clusters: PaddedClusters,
+                 queries: jax.Array, params: SearchParams):
+    """Full pipeline over (Q, D) queries, chunked with lax.map to bound the
+    (Q*P, cmax) DC working set. Returns (dists (Q, k), ids (Q, k))."""
+    n = queries.shape[0]
+    chunk = min(params.query_chunk, n)
+    pad = (-n) % chunk
+    qpad = jnp.pad(queries, ((0, pad), (0, 0)))
+    batches = qpad.reshape(-1, chunk, queries.shape[1])
+
+    fn = functools.partial(_search_chunk, centroids=index.centroids,
+                           codebook=index.codebook, clusters=clusters,
+                           rotation=index.rotation, params=params)
+    best_d, best_i = jax.lax.map(lambda qb: fn(qb), batches)
+    best_d = best_d.reshape(-1, params.k)[:n]
+    best_i = best_i.reshape(-1, params.k)[:n]
+    return best_d, best_i
+
+
+@functools.partial(jax.jit, static_argnames=("k", "chunk"))
+def exact_search(points: jax.Array, queries: jax.Array, k: int,
+                 chunk: int = 1024):
+    """Brute-force oracle for recall measurement (chunked over queries)."""
+    n = queries.shape[0]
+    pad = (-n) % chunk
+    qpad = jnp.pad(queries, ((0, pad), (0, 0)))
+
+    def body(_, qb):
+        d = l2_sq(qb, points)
+        nd, idx = jax.lax.top_k(-d, k)
+        return None, (-nd, idx.astype(jnp.int32))
+
+    _, (dd, ii) = jax.lax.scan(body, None,
+                               qpad.reshape(-1, chunk, queries.shape[1]))
+    return dd.reshape(-1, k)[:n], ii.reshape(-1, k)[:n]
+
+
+def recall_at_k(found_ids: jax.Array, true_ids: jax.Array) -> jax.Array:
+    """recall@k: |found ∩ true| / k averaged over queries (paper metric,
+    recall@10 >= 0.8 constraint)."""
+    hits = (found_ids[:, :, None] == true_ids[:, None, :]).any(axis=2)
+    # padding ids are -1 -> never match true ids (>=0)
+    return jnp.mean(jnp.sum(hits, axis=1) / true_ids.shape[1])

@@ -1,0 +1,399 @@
+"""Distributed DRIM-ANN engine: layout-sharded clusters + scheduled scans.
+
+The UPMEM execution model maps onto the mesh as follows (DESIGN.md §2):
+
+  DPU                      -> mesh device ("shards" axis)
+  MRAM cluster residency   -> per-device shard of the padded instance arrays
+  host->DPU query broadcast-> queries + centroids replicated (one broadcast)
+  per-DPU (q, c) task list -> static-shape ShardSchedule tables (scheduler.py)
+  DPU kernel (RC+LC+DC+TS) -> per-shard jnp/Pallas pipeline below
+  host merge barrier       -> all tasks' top-k returned; per-query merge
+
+Two execution paths around ONE per-shard function:
+  * ``shard_map`` over a real mesh axis (production; exercised in tests via
+    a subprocess with --xla_force_host_platform_device_count);
+  * ``vmap`` simulation over the shard axis (single-device tests — identical
+    numerics, no collectives).
+
+The final per-query merge is host-side by default — faithful to UPMEM's
+mandatory DPU->host synchronization (§II-B: DPUs cannot exchange results).
+On TPU the merge could stay on-device; ``merge_on_device`` implements it
+with a segment-top-k for moderate batch sizes and is used by the dry-run.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import PartitionSpec as P
+
+from repro.core.ivf import IVFPQIndex, PaddedClusters
+from repro.core.pq import PQCodebook
+from repro.core.adc import build_lut_batch, adc_distances
+from repro.core.topk import topk_smallest
+from repro.core.layout import Layout, build_layout, estimate_heat
+from repro.core.scheduler import ShardSchedule, schedule_batch
+from repro.core.perf_model import TaskLatencyModel, make_task_latency_model
+
+
+class ShardedIndex(NamedTuple):
+    """Per-shard instance tensors, materialized from a Layout (offline)."""
+    codes: jax.Array        # (S, slots, cpart, M) u8/u16
+    ids: jax.Array          # (S, slots, cpart) i32, -1 pad
+    sizes: jax.Array        # (S, slots) i32
+    cluster_of: jax.Array   # (S, slots) i32 — original cluster id (-1 empty)
+    start_of: jax.Array     # (S, slots) i32 — part row offset (diagnostics)
+    slot_of_instance: np.ndarray   # (n_instances,) host-side
+    centroids: jax.Array    # (nlist, D) f32 — replicated
+    codebook: PQCodebook    # replicated
+    rotation: Optional[jax.Array]
+
+    @property
+    def n_shards(self) -> int:
+        return self.codes.shape[0]
+
+    @property
+    def slots(self) -> int:
+        return self.codes.shape[1]
+
+    @property
+    def cpart(self) -> int:
+        return self.codes.shape[2]
+
+
+def materialize_shards(index: IVFPQIndex, layout: Layout,
+                       pad_multiple: int = 8) -> ShardedIndex:
+    """Offline: CSR index + layout -> dense per-shard tensors (numpy)."""
+    codes_np = np.asarray(index.codes)
+    ids_np = np.asarray(index.ids)
+    offsets = np.asarray(index.offsets)
+    m = codes_np.shape[1]
+    s = layout.n_shards
+    slots = max(int((layout.shard_of == sh).sum()) for sh in range(s))
+    slots = max(slots, 1)
+    cpart = max(i.size for i in layout.instances)
+    cpart = max(-(-cpart // pad_multiple) * pad_multiple, pad_multiple)
+
+    sh_codes = np.zeros((s, slots, cpart, m), dtype=codes_np.dtype)
+    sh_ids = np.full((s, slots, cpart), -1, np.int32)
+    sh_sizes = np.zeros((s, slots), np.int32)
+    sh_cluster = np.full((s, slots), -1, np.int32)
+    sh_start = np.zeros((s, slots), np.int32)
+    slot_of = np.full(len(layout.instances), -1, np.int64)
+
+    cursor = np.zeros(s, np.int64)
+    for inst in layout.instances:
+        sh = int(layout.shard_of[inst.instance_id])
+        slot = int(cursor[sh])
+        cursor[sh] += 1
+        row0 = offsets[inst.cluster] + inst.start
+        sz = int(inst.size)
+        sh_codes[sh, slot, :sz] = codes_np[row0:row0 + sz]
+        sh_ids[sh, slot, :sz] = ids_np[row0:row0 + sz]
+        sh_sizes[sh, slot] = sz
+        sh_cluster[sh, slot] = inst.cluster
+        sh_start[sh, slot] = inst.start
+        slot_of[inst.instance_id] = slot
+
+    return ShardedIndex(jnp.asarray(sh_codes), jnp.asarray(sh_ids),
+                        jnp.asarray(sh_sizes), jnp.asarray(sh_cluster),
+                        jnp.asarray(sh_start), slot_of,
+                        index.centroids, index.codebook, index.rotation)
+
+
+# ---------------------------------------------------------------------------
+# Per-shard task pipeline — the "DPU kernel" (RC + LC + DC + TS).
+# ---------------------------------------------------------------------------
+
+def _shard_tasks_fn(codes, ids, sizes, cluster_of, qidx, sidx, queries,
+                    centroids, codebook: PQCodebook, rotation, *, k: int,
+                    strategy: str, use_kernels: bool,
+                    fused_scan: bool = False, lut_dtype=None,
+                    scan_block: int = 512):
+    """One shard's batch: static (T,) task table -> (T, k) candidates.
+
+    codes (slots, cpart, M) ... qidx/sidx (T,) with -1 padding.
+
+    ``fused_scan`` (§Perf, beyond-paper): stream the DC phase over C-blocks
+    with a running top-k carried in the scan — the (T, C) distance matrix
+    never reaches HBM (writeback drops from C to k floats/task), mirroring
+    the fused Pallas kernel.  ``lut_dtype`` (e.g. bf16) halves LUT gather
+    traffic (the paper's int-LUT spirit on TPU dtypes).
+    """
+    t = qidx.shape[0]
+    valid = qidx >= 0
+    qi = jnp.clip(qidx, 0, queries.shape[0] - 1)
+    si = jnp.clip(sidx, 0, codes.shape[0] - 1)
+
+    q = queries[qi].astype(jnp.float32)                       # (T, D)
+    cl = jnp.clip(cluster_of[si], 0, centroids.shape[0] - 1)
+    residual = q - centroids[cl]                              # (T, D) -- RC
+    if rotation is not None:
+        residual = residual @ rotation
+    task_codes = codes[si]                                    # (T, cpart, M)
+    task_ids = ids[si]                                        # (T, cpart)
+    task_sizes = jnp.where(valid, sizes[si], 0)               # invalid -> 0
+
+    if use_kernels:
+        from repro.kernels import ops as kops
+        lut = kops.lut_build(residual, codebook.codebooks, codebook.sqnorms)
+        bd, bi = kops.pq_scan_topk(lut, task_codes, task_ids, task_sizes, k,
+                                   strategy=strategy)
+    elif fused_scan:
+        lut = build_lut_batch(codebook, residual)             # LC
+        if lut_dtype is not None:
+            lut = lut.astype(lut_dtype)
+        bd, bi = _fused_scan_topk(lut, task_codes, task_ids, task_sizes, k,
+                                  block=scan_block)
+    else:
+        lut = build_lut_batch(codebook, residual)             # LC
+        if lut_dtype is not None:
+            lut = lut.astype(lut_dtype)
+        d = adc_distances(lut, task_codes, task_sizes,
+                          strategy="gather" if strategy == "gather"
+                          else "onehot")                      # DC
+        bd, bi = topk_smallest(d, task_ids, k)                # TS
+    bi = jnp.where(jnp.isfinite(bd), bi, -1)
+    return bd, bi
+
+
+def _fused_scan_topk(lut, task_codes, task_ids, task_sizes, k: int,
+                     block: int = 512):
+    """Streaming DC+TS: scan over C-blocks, (T, k) running winners carried.
+
+    jnp mirror of kernels/pq_scan.pq_scan_topk_pallas — same dataflow the
+    fused kernel executes per VMEM block, expressed at XLA level so the
+    dry-run's lowered artifact reflects the reduced HBM writeback.
+    """
+    from repro.core.adc import scan_codes
+    t, c, m = task_codes.shape
+    pad = (-c) % block
+    if pad:
+        task_codes = jnp.pad(task_codes, ((0, 0), (0, pad), (0, 0)))
+        task_ids = jnp.pad(task_ids, ((0, 0), (0, pad)),
+                           constant_values=-1)
+    nblk = (c + pad) // block
+    codes_b = task_codes.reshape(t, nblk, block, m).swapaxes(0, 1)
+    ids_b = task_ids.reshape(t, nblk, block).swapaxes(0, 1)
+
+    def step(carry, inp):
+        bd, bi = carry
+        cb, ib, blk_i = inp
+        d = jax.vmap(scan_codes)(lut, cb).astype(jnp.float32)  # (T, block)
+        col = blk_i * block + jnp.arange(block)[None, :]
+        d = jnp.where(col < task_sizes[:, None], d, jnp.inf)
+        nd, ni = topk_smallest(jnp.concatenate([bd, d], axis=1),
+                               jnp.concatenate([bi, ib], axis=1), k)
+        return (nd, ni), None
+
+    # derive the carry init from varying inputs so shard_map's manual-axes
+    # tracking matches the scan body's outputs (full_like inherits vma)
+    bd0 = jnp.full_like(task_ids[:, :k], 0).astype(jnp.float32) + jnp.inf
+    bi0 = jnp.full_like(task_ids[:, :k], -1)
+    (bd, bi), _ = jax.lax.scan(step, (bd0, bi0),
+                               (codes_b, ids_b, jnp.arange(nblk)))
+    return bd, bi
+
+
+# ---------------------------------------------------------------------------
+# Execution paths
+# ---------------------------------------------------------------------------
+
+@functools.partial(jax.jit, static_argnames=("k", "strategy", "use_kernels"))
+def run_shards_vmap(sindex: ShardedIndex, qidx: jax.Array, sidx: jax.Array,
+                    queries: jax.Array, *, k: int, strategy: str = "onehot",
+                    use_kernels: bool = False):
+    """Simulation path: vmap over the shard axis on one device."""
+    fn = functools.partial(_shard_tasks_fn, codebook=sindex.codebook,
+                           rotation=sindex.rotation, k=k, strategy=strategy,
+                           use_kernels=use_kernels)
+    return jax.vmap(
+        lambda c, i, sz, co, qq, ss: fn(c, i, sz, co, qq, ss, queries,
+                                        sindex.centroids)
+    )(sindex.codes, sindex.ids, sindex.sizes, sindex.cluster_of, qidx, sidx)
+
+
+def make_sharded_step(mesh, sindex: ShardedIndex, *, k: int,
+                      strategy: str = "onehot", use_kernels: bool = False,
+                      axis: str = "shards"):
+    """Production path: shard_map over a real mesh axis.
+
+    Returns a jitted step(codes, ids, sizes, cluster_of, qidx, sidx, queries,
+    centroids) -> per-shard (T, k) candidates, with cluster data sharded and
+    queries/centroids replicated (the one host->PIM broadcast per batch).
+    """
+    fn = functools.partial(_shard_tasks_fn, codebook=sindex.codebook,
+                           rotation=sindex.rotation, k=k, strategy=strategy,
+                           use_kernels=use_kernels)
+
+    def per_shard(codes, ids, sizes, cluster_of, qidx, sidx, queries,
+                  centroids):
+        bd, bi = fn(codes[0], ids[0], sizes[0], cluster_of[0], qidx[0],
+                    sidx[0], queries, centroids)
+        return bd[None], bi[None]
+
+    sharded = jax.shard_map(
+        per_shard, mesh=mesh,
+        in_specs=(P(axis), P(axis), P(axis), P(axis), P(axis), P(axis),
+                  P(), P()),
+        out_specs=(P(axis), P(axis)))
+    return jax.jit(sharded)
+
+
+def merge_host(qidx: np.ndarray, best_d: np.ndarray, best_i: np.ndarray,
+               n_queries: int, k: int):
+    """UPMEM-faithful host merge: per-query top-k over all task candidates."""
+    out_d = np.full((n_queries, k), np.inf, np.float32)
+    out_i = np.full((n_queries, k), -1, np.int32)
+    flat_q = qidx.reshape(-1)
+    flat_d = best_d.reshape(-1, k)
+    flat_i = best_i.reshape(-1, k)
+    buckets_d = [[] for _ in range(n_queries)]
+    buckets_i = [[] for _ in range(n_queries)]
+    for t in range(flat_q.shape[0]):
+        q = int(flat_q[t])
+        if q < 0:
+            continue
+        buckets_d[q].append(flat_d[t])
+        buckets_i[q].append(flat_i[t])
+    for q in range(n_queries):
+        if not buckets_d[q]:
+            continue
+        ds = np.concatenate(buckets_d[q])
+        is_ = np.concatenate(buckets_i[q])
+        order = np.argsort(ds, kind="stable")[:k]
+        out_d[q, :len(order)] = ds[order]
+        out_i[q, :len(order)] = is_[order]
+    return out_d, out_i
+
+
+@functools.partial(jax.jit, static_argnames=("n_queries", "k"))
+def merge_on_device(qidx: jax.Array, best_d: jax.Array, best_i: jax.Array,
+                    *, n_queries: int, k: int):
+    """On-device merge (TPU path): mask-per-query + top-k.  O(Q * S*T*k)
+    compare ops — fine for serving batches, avoided on UPMEM by design."""
+    flat_q = qidx.reshape(-1)                                  # (ST,)
+    flat_d = best_d.reshape(-1)                                # (ST*k,)
+    flat_i = best_i.reshape(-1)
+    task_q = jnp.repeat(flat_q, k)                             # (ST*k,)
+    qmat = task_q[None, :] == jnp.arange(n_queries)[:, None]   # (Q, ST*k)
+    dmat = jnp.where(qmat, flat_d[None, :], jnp.inf)
+    nd, idx = jax.lax.top_k(-dmat, k)
+    return -nd, jnp.where(jnp.isfinite(-nd), flat_i[idx], -1)
+
+
+# ---------------------------------------------------------------------------
+# End-to-end engine
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass
+class EngineConfig:
+    n_shards: int
+    nprobe: int
+    k: int
+    split_max: Optional[int] = None
+    dup_budget_bytes: int = 0
+    tasks_per_shard: int = 1024
+    strategy: str = "onehot"
+    use_kernels: bool = False
+    enable_filter: bool = False
+    filter_ratio: float = 1.35
+    naive_layout: bool = False
+    naive_schedule: bool = False
+
+
+class DistributedEngine:
+    """Offline build (layout + shards) and online batched search."""
+
+    def __init__(self, index: IVFPQIndex, cfg: EngineConfig,
+                 sample_probes: np.ndarray,
+                 latency: Optional[TaskLatencyModel] = None,
+                 mesh=None):
+        from repro.core.perf_model import IndexParams, UPMEM_PROFILE
+        self.cfg = cfg
+        self.index = index
+        sizes = np.asarray(index.sizes)
+        heat = estimate_heat(sample_probes, index.nlist)
+        self.latency = latency or make_task_latency_model(
+            IndexParams(n_total=int(sizes.sum()), nlist=index.nlist, q=1,
+                        d=index.dim, k=cfg.k, p=cfg.nprobe,
+                        m=index.codebook.m, cb=index.codebook.cb),
+            UPMEM_PROFILE)
+        bytes_per_row = index.codebook.m + 4
+        self.layout = build_layout(
+            sizes, heat, cfg.n_shards, split_max=cfg.split_max,
+            dup_budget_bytes=cfg.dup_budget_bytes,
+            bytes_per_row=bytes_per_row, latency=self.latency,
+            naive=cfg.naive_layout)
+        self.sindex = materialize_shards(index, self.layout)
+        self.carry: list = []
+        self.mesh = mesh
+        self._step = None
+        if mesh is not None:
+            self._step = make_sharded_step(mesh, self.sindex, k=cfg.k,
+                                           strategy=cfg.strategy,
+                                           use_kernels=cfg.use_kernels)
+
+    # -- online ------------------------------------------------------------
+    def _schedule(self, probes: np.ndarray,
+                  drain: bool = False) -> ShardSchedule:
+        from repro.core.scheduler import schedule_naive
+        if self.cfg.naive_schedule:
+            return schedule_naive(probes, self.layout, self.latency,
+                                  self.sindex.slot_of_instance,
+                                  tasks_per_shard=self.cfg.tasks_per_shard)
+        # drain rounds keep the hard capacity cap but not the balance
+        # filter — otherwise deferred work ping-pongs forever.
+        sched = schedule_batch(probes, self.layout, self.latency,
+                               self.sindex.slot_of_instance,
+                               tasks_per_shard=self.cfg.tasks_per_shard,
+                               carry_in=self.carry,
+                               filter_ratio=self.cfg.filter_ratio,
+                               enable_filter=(self.cfg.enable_filter
+                                              and not drain))
+        self.carry = list(sched.deferred)
+        return sched
+
+    def search(self, queries: jax.Array, flush: bool = True):
+        """Batched search.  With flush=True, deferred tasks are drained in
+        follow-up rounds so results are complete (tests); a serving loop
+        would instead leave them for the next batch (paper's filter)."""
+        from repro.core.search import cluster_locate
+        nq = queries.shape[0]
+        probes, _ = cluster_locate(queries.astype(jnp.float32),
+                                   self.sindex.centroids, self.cfg.nprobe)
+        probes = np.asarray(probes)
+        all_d, all_i, all_q = [], [], []
+        rounds = 0
+        pending = probes
+        while True:
+            sched = self._schedule(pending, drain=rounds > 0)
+            qidx = jnp.asarray(sched.query_idx)
+            sidx = jnp.asarray(sched.slot_idx)
+            if self._step is not None:
+                bd, bi = self._step(self.sindex.codes, self.sindex.ids,
+                                    self.sindex.sizes, self.sindex.cluster_of,
+                                    qidx, sidx, queries,
+                                    self.sindex.centroids)
+            else:
+                bd, bi = run_shards_vmap(self.sindex, qidx, sidx, queries,
+                                         k=self.cfg.k,
+                                         strategy=self.cfg.strategy,
+                                         use_kernels=self.cfg.use_kernels)
+            all_d.append(np.asarray(bd))
+            all_i.append(np.asarray(bi))
+            all_q.append(sched.query_idx)
+            rounds += 1
+            if not (flush and self.carry):
+                break
+            pending = np.zeros((0, 0), np.int64)   # only carry-in tasks
+        d = np.concatenate([a.reshape(-1, self.cfg.k) for a in all_d])
+        i = np.concatenate([a.reshape(-1, self.cfg.k) for a in all_i])
+        q = np.concatenate([a.reshape(-1) for a in all_q])
+        out_d, out_i = merge_host(q, d, i, nq, self.cfg.k)
+        return out_d, out_i, {"rounds": rounds}

@@ -1,0 +1,5 @@
+from repro.data.vectors import make_clustered_corpus, VectorDataset
+from repro.data.pipeline import TokenPipeline, make_token_pipeline
+
+__all__ = ["make_clustered_corpus", "VectorDataset", "TokenPipeline",
+           "make_token_pipeline"]

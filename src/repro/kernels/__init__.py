@@ -1,0 +1,12 @@
+"""Pallas TPU kernels for the paper's compute hot spots (LC and DC+TS).
+
+lut_build — LC phase (residual x codebook -> ADC LUT), MXU expansion form.
+pq_scan   — DC phase (+ fused TS): onehot-MXU or gather inner loop.
+ops       — jit'd public wrappers (padding, dtypes, interpret selection).
+ref       — pure-jnp oracles for allclose validation.
+"""
+
+from repro.kernels import ops, ref
+from repro.kernels.ops import lut_build, pq_scan_dc, pq_scan_topk
+
+__all__ = ["ops", "ref", "lut_build", "pq_scan_dc", "pq_scan_topk"]

@@ -1,0 +1,69 @@
+"""Pallas TPU kernel for the LC phase: batched ADC LUT construction.
+
+For every task t (a (query, probe) pair) and subspace m:
+
+    lut[t, m, cb] = || res[t, m, :] - codebook[m, cb, :] ||^2
+                  = ||res||^2 + ||C||^2 - 2 * res . C^T      (MXU dot)
+
+Grid  : (T / bT, M)   — both axes parallel (no cross-iteration state)
+Blocks: res       (bT, 1, dsub)   VMEM
+        codebooks (1, CB, dsub)   VMEM (per-m slice, reused across the T axis)
+        sqnorms   (1, CB)         VMEM
+        out       (bT, 1, CB)     VMEM
+
+VMEM budget per step (bT=128, CB=256, dsub=8, f32):
+  res 4 KB + codebook 8 KB + out 128 KB ≈ 140 KB — far below the ~16 MB
+  VMEM of a v5e core; bT can grow to amortize grid overhead (ops.py default
+  bT=128 keeps the out tile at one (8,128)-tile stack of 32).
+
+The cross term res @ C^T has MXU-aligned contractions when dsub >= 8; for the
+paper's SIFT configs (dsub = 128/M in {8, 16}) the matmul is (bT x dsub) x
+(dsub x CB) — a thin GEMM the MXU pipelines well across the M grid axis.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _lut_build_kernel(res_ref, cb_ref, sqn_ref, out_ref):
+    r = res_ref[:, 0, :]                                  # (bT, dsub) f32
+    c = cb_ref[0]                                         # (CB, dsub) f32
+    cross = jnp.dot(r, c.T, preferred_element_type=jnp.float32)   # (bT, CB)
+    rsq = jnp.sum(r * r, axis=-1, keepdims=True)          # (bT, 1)
+    lut = jnp.maximum(rsq + sqn_ref[0][None, :] - 2.0 * cross, 0.0)
+    out_ref[:, 0, :] = lut
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("block_t", "interpret"))
+def lut_build_pallas(residuals: jax.Array, codebooks: jax.Array,
+                     sqnorms: jax.Array, *, block_t: int = 128,
+                     interpret: bool = True) -> jax.Array:
+    """residuals (T, M, dsub) f32, codebooks (M, CB, dsub), sqnorms (M, CB)
+    -> luts (T, M, CB) f32.  T must be a multiple of block_t (ops.py pads)."""
+    t, m, dsub = residuals.shape
+    _, cbn, _ = codebooks.shape
+    assert t % block_t == 0, (t, block_t)
+    grid = (t // block_t, m)
+    return pl.pallas_call(
+        _lut_build_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((block_t, 1, dsub), lambda i, j: (i, j, 0)),
+            pl.BlockSpec((1, cbn, dsub), lambda i, j: (j, 0, 0)),
+            pl.BlockSpec((1, cbn), lambda i, j: (j, 0)),
+        ],
+        out_specs=pl.BlockSpec((block_t, 1, cbn), lambda i, j: (i, j, 0)),
+        out_shape=jax.ShapeDtypeStruct((t, m, cbn), jnp.float32),
+        compiler_params=pltpu.CompilerParams(
+            dimension_semantics=("parallel", "parallel")),
+        interpret=interpret,
+        name="drim_lut_build",
+    )(residuals.astype(jnp.float32), codebooks.astype(jnp.float32),
+      sqnorms.astype(jnp.float32))

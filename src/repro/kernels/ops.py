@@ -1,0 +1,86 @@
+"""jit'd public wrappers around the Pallas kernels.
+
+Handles: dtype casts, padding to block multiples, k padding to a power of
+two, strategy/backend selection.  ``interpret`` defaults to True off-TPU
+(this container) and False on real TPU devices.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.lut_build import lut_build_pallas
+from repro.kernels.pq_scan import pq_scan_dc_pallas, pq_scan_topk_pallas
+
+
+def _default_interpret() -> bool:
+    return jax.default_backend() != "tpu"
+
+
+def _next_pow2(x: int) -> int:
+    n = 1
+    while n < x:
+        n <<= 1
+    return n
+
+
+def lut_build(residuals: jax.Array, codebooks: jax.Array,
+              sqnorms: jax.Array, *, block_t: int = 128,
+              interpret: bool | None = None) -> jax.Array:
+    """(T, D) residuals -> (T, M, CB) LUTs (pads T to block_t multiple)."""
+    if interpret is None:
+        interpret = _default_interpret()
+    t = residuals.shape[0]
+    m, cbn, dsub = codebooks.shape
+    res = residuals.reshape(t, m, dsub)
+    bt = min(block_t, _next_pow2(max(t, 1)))
+    pad = (-t) % bt
+    if pad:
+        res = jnp.pad(res, ((0, pad), (0, 0), (0, 0)))
+    out = lut_build_pallas(res, codebooks, sqnorms, block_t=bt,
+                           interpret=interpret)
+    return out[:t]
+
+
+def pq_scan_dc(lut: jax.Array, codes: jax.Array, sizes: jax.Array | None
+               = None, *, strategy: str = "onehot", block_c: int = 256,
+               interpret: bool | None = None) -> jax.Array:
+    """DC phase: (T, M, CB) x (T, C, M) -> (T, C); padding rows +inf."""
+    if interpret is None:
+        interpret = _default_interpret()
+    t, c, m = codes.shape
+    bc = min(block_c, _next_pow2(max(c, 1)))
+    pad = (-c) % bc
+    codes_i = codes.astype(jnp.int32)
+    if pad:
+        codes_i = jnp.pad(codes_i, ((0, 0), (0, pad), (0, 0)))
+    d = pq_scan_dc_pallas(lut, codes_i, strategy=strategy, block_c=bc,
+                          interpret=interpret)[:, :c]
+    if sizes is not None:
+        valid = jnp.arange(c)[None, :] < sizes[:, None]
+        d = jnp.where(valid, d, jnp.inf)
+    return d
+
+
+def pq_scan_topk(lut: jax.Array, codes: jax.Array, ids: jax.Array,
+                 sizes: jax.Array, k: int, *, strategy: str = "onehot",
+                 block_c: int = 256, interpret: bool | None = None):
+    """Fused DC+TS: returns (dists (T, k) ascending, ids (T, k))."""
+    if interpret is None:
+        interpret = _default_interpret()
+    t, c, m = codes.shape
+    k_pad = _next_pow2(max(k, 8))
+    bc = max(min(block_c, _next_pow2(max(c, 1))), k_pad)
+    pad = (-c) % bc
+    codes_i = codes.astype(jnp.int32)
+    ids_i = ids.astype(jnp.int32)
+    if pad:
+        codes_i = jnp.pad(codes_i, ((0, 0), (0, pad), (0, 0)))
+        ids_i = jnp.pad(ids_i, ((0, 0), (0, pad)), constant_values=-1)
+    bd, bi = pq_scan_topk_pallas(lut, codes_i, ids_i, sizes, k_pad=k_pad,
+                                 strategy=strategy, block_c=bc,
+                                 interpret=interpret)
+    return bd[:, :k], bi[:, :k]

@@ -1,0 +1,174 @@
+"""Pallas TPU kernels for the DC (+ fused TS) phases: the PQ code scan.
+
+Two inner-loop strategies (DESIGN.md §2 — the multiplier-less inversion):
+
+  * ``onehot`` (TPU-native): dist = onehot(codes) @ lut.flatten().  The PQ
+    code gather becomes an MXU contraction — (bC, M*CB) x (M*CB,) — because
+    random lane-gather is the expensive op on TPU, the exact mirror image of
+    the paper replacing multiplies with WRAM loads on UPMEM.
+  * ``gather`` (paper-faithful dataflow): per-subspace table lookups + adds,
+    the literal DPU loop.  Validated in interpret mode; on real TPU hardware
+    it lowers to per-lane dynamic gathers (slow — kept as the fidelity
+    reference and for CPU execution).
+
+Kernels:
+  pq_scan_dc_pallas    — distances only: (T, C) out; TS handled by XLA.
+  pq_scan_topk_pallas  — fused DC+TS: per-task running top-k held in VMEM
+                         scratch across the C-axis grid (bitonic merge — no
+                         sort HLO), writes (T, k_pad) winners.  This is the
+                         §Perf 'fused scan' optimization: HBM writeback drops
+                         from C floats/task to k_pad floats/task.
+
+Grid: (T, C/bC); the C axis is 'arbitrary' (sequential) for the fused kernel
+because scratch accumulates across it; T stays 'parallel' (megacore splits).
+
+VMEM per step (bC=512, M=16, CB=256, k_pad=32):
+  lut 16 KB + codes 32 KB + onehot intermediate (bC, M*CB) bf16 4 MB.
+  The onehot intermediate dominates; ops.py sizes bC to keep it < 4 MB.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from repro.core.topk import running_topk_update
+
+
+# --------------------------------------------------------------------------
+# distance block computation (shared by both kernels)
+# --------------------------------------------------------------------------
+
+def _block_dists(lut_ref, codes_blk, strategy: str) -> jax.Array:
+    """codes_blk (bC, M) i32, lut_ref block (1, M, CB) -> (bC,) f32."""
+    m, cbn = lut_ref.shape[1], lut_ref.shape[2]
+    if strategy == "onehot":
+        iota = jax.lax.broadcasted_iota(jnp.int32, (codes_blk.shape[0], m, cbn), 2)
+        onehot = (codes_blk[:, :, None] == iota).astype(jnp.float32)
+        flat = onehot.reshape(codes_blk.shape[0], m * cbn)
+        lut_flat = lut_ref[0].reshape(m * cbn)
+        return jnp.dot(flat, lut_flat, preferred_element_type=jnp.float32)
+    elif strategy == "gather":
+        acc = jnp.zeros((codes_blk.shape[0],), jnp.float32)
+        for mm in range(m):                       # static unroll over subspaces
+            acc = acc + jnp.take(lut_ref[0, mm], codes_blk[:, mm], axis=0)
+        return acc
+    raise ValueError(f"unknown strategy {strategy!r}")
+
+
+# --------------------------------------------------------------------------
+# DC-only kernel
+# --------------------------------------------------------------------------
+
+def _pq_scan_dc_kernel(lut_ref, codes_ref, out_ref, *, strategy):
+    out_ref[0] = _block_dists(lut_ref, codes_ref[0], strategy)
+
+
+@functools.partial(jax.jit, static_argnames=("strategy", "block_c",
+                                             "interpret"))
+def pq_scan_dc_pallas(lut: jax.Array, codes: jax.Array, *,
+                      strategy: str = "onehot", block_c: int = 256,
+                      interpret: bool = True) -> jax.Array:
+    """lut (T, M, CB) f32, codes (T, C, M) i32 -> dists (T, C) f32.
+    C must be a multiple of block_c (ops.py pads)."""
+    t, m, cbn = lut.shape
+    _, c, _ = codes.shape
+    assert c % block_c == 0, (c, block_c)
+    grid = (t, c // block_c)
+    return pl.pallas_call(
+        functools.partial(_pq_scan_dc_kernel, strategy=strategy),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, m, cbn), lambda i, j: (i, 0, 0)),
+            pl.BlockSpec((1, block_c, m), lambda i, j: (i, j, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, block_c), lambda i, j: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((t, c), jnp.float32),
+        compiler_params=pltpu.CompilerParams(
+            dimension_semantics=("parallel", "parallel")),
+        interpret=interpret,
+        name=f"drim_pq_scan_dc_{strategy}",
+    )(lut.astype(jnp.float32), codes.astype(jnp.int32))
+
+
+# --------------------------------------------------------------------------
+# fused DC + TS kernel
+# --------------------------------------------------------------------------
+
+def _pq_scan_topk_kernel(size_ref, lut_ref, codes_ref, ids_ref,
+                         outd_ref, outi_ref, bestd_s, besti_s, *,
+                         strategy, block_c, k_pad):
+    cstep = pl.program_id(1)
+    ncs = pl.num_programs(1)
+
+    @pl.when(cstep == 0)
+    def _init():
+        bestd_s[...] = jnp.full((1, k_pad), jnp.inf, jnp.float32)
+        besti_s[...] = jnp.full((1, k_pad), -1, jnp.int32)
+
+    dist = _block_dists(lut_ref, codes_ref[0], strategy)       # (bC,)
+    row = cstep * block_c + jax.lax.broadcasted_iota(
+        jnp.int32, (block_c,), 0)
+    valid = row < size_ref[0]
+    dist = jnp.where(valid, dist, jnp.inf)
+    ids = jnp.where(valid, ids_ref[0], -1)
+
+    nd, ni = running_topk_update(bestd_s[0], besti_s[0], dist, ids)
+    bestd_s[0] = nd
+    besti_s[0] = ni
+
+    @pl.when(cstep == ncs - 1)
+    def _flush():
+        outd_ref[0] = bestd_s[0]
+        outi_ref[0] = besti_s[0]
+
+
+@functools.partial(jax.jit, static_argnames=("k_pad", "strategy", "block_c",
+                                             "interpret"))
+def pq_scan_topk_pallas(lut: jax.Array, codes: jax.Array, ids: jax.Array,
+                        sizes: jax.Array, *, k_pad: int,
+                        strategy: str = "onehot", block_c: int = 256,
+                        interpret: bool = True):
+    """Fused DC+TS.
+
+    lut (T, M, CB) f32; codes (T, C, M) i32; ids (T, C) i32; sizes (T,) i32
+    -> (best_d (T, k_pad) f32 ascending, best_i (T, k_pad) i32).
+    Requires: C % block_c == 0, k_pad power of two, k_pad <= block_c.
+    """
+    t, m, cbn = lut.shape
+    _, c, _ = codes.shape
+    assert c % block_c == 0 and k_pad & (k_pad - 1) == 0 and k_pad <= block_c
+    grid = (t, c // block_c)
+    kern = functools.partial(_pq_scan_topk_kernel, strategy=strategy,
+                             block_c=block_c, k_pad=k_pad)
+    return pl.pallas_call(
+        kern,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1,), lambda i, j: (i,), memory_space=pltpu.SMEM),
+            pl.BlockSpec((1, m, cbn), lambda i, j: (i, 0, 0)),
+            pl.BlockSpec((1, block_c, m), lambda i, j: (i, j, 0)),
+            pl.BlockSpec((1, block_c), lambda i, j: (i, j)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, k_pad), lambda i, j: (i, 0)),
+            pl.BlockSpec((1, k_pad), lambda i, j: (i, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((t, k_pad), jnp.float32),
+            jax.ShapeDtypeStruct((t, k_pad), jnp.int32),
+        ],
+        scratch_shapes=[
+            pltpu.VMEM((1, k_pad), jnp.float32),
+            pltpu.VMEM((1, k_pad), jnp.int32),
+        ],
+        compiler_params=pltpu.CompilerParams(
+            dimension_semantics=("parallel", "arbitrary")),
+        interpret=interpret,
+        name=f"drim_pq_scan_topk_{strategy}",
+    )(sizes.astype(jnp.int32), lut.astype(jnp.float32),
+      codes.astype(jnp.int32), ids.astype(jnp.int32))

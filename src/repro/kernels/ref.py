@@ -1,0 +1,41 @@
+"""Pure-jnp oracles for every Pallas kernel (the ref.py contract).
+
+These re-derive each kernel's output with plain jax.numpy so kernel tests
+can assert_allclose against an implementation with no Pallas machinery.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def lut_build_ref(residuals: jax.Array, codebooks: jax.Array,
+                  sqnorms: jax.Array) -> jax.Array:
+    """residuals (T, M, dsub), codebooks (M, CB, dsub), sqnorms (M, CB)
+    -> (T, M, CB).  Direct subtraction form — independent of the kernel's
+    expansion-form math."""
+    r = residuals.astype(jnp.float32)[:, :, None, :]        # (T, M, 1, dsub)
+    diff = r - codebooks.astype(jnp.float32)[None]          # (T, M, CB, dsub)
+    return jnp.sum(diff * diff, axis=-1)
+
+
+def pq_scan_dc_ref(lut: jax.Array, codes: jax.Array) -> jax.Array:
+    """lut (T, M, CB), codes (T, C, M) -> dists (T, C) via plain gather."""
+    def one(l, cs):                                         # (M, CB), (C, M)
+        g = jax.vmap(lambda row, ix: row[ix], in_axes=(0, 1), out_axes=1)(
+            l, cs.astype(jnp.int32))
+        return jnp.sum(g, axis=1)
+    return jax.vmap(one)(lut.astype(jnp.float32), codes)
+
+
+def pq_scan_topk_ref(lut: jax.Array, codes: jax.Array, ids: jax.Array,
+                     sizes: jax.Array, k_pad: int):
+    """Oracle for the fused kernel: full scan + lax.top_k."""
+    d = pq_scan_dc_ref(lut, codes)                          # (T, C)
+    col = jnp.arange(d.shape[1])[None, :]
+    valid = col < sizes[:, None]
+    d = jnp.where(valid, d, jnp.inf)
+    ids = jnp.where(valid, ids, -1)
+    nd, idx = jax.lax.top_k(-d, k_pad)
+    return -nd, jnp.take_along_axis(ids, idx, axis=-1)

@@ -1,0 +1,11 @@
+"""Launchers: mesh construction, dry-run, training and serving drivers.
+
+NOTE: repro.launch.dryrun sets XLA_FLAGS at import — import it only in a
+dedicated process.  Everything else here is import-safe.
+"""
+
+from repro.launch.mesh import (make_production_mesh, make_shard_mesh,
+                               rules_for, resolve_pspec, shardings_for_tree)
+
+__all__ = ["make_production_mesh", "make_shard_mesh", "rules_for",
+           "resolve_pspec", "shardings_for_tree"]

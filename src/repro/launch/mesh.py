@@ -1,0 +1,120 @@
+"""Production mesh construction + logical-axis sharding rules.
+
+IMPORTANT: functions only — importing this module never touches jax device
+state (the dry-run locks the device count via XLA_FLAGS before any jax
+import; tests keep the single real CPU device).
+"""
+
+from __future__ import annotations
+
+from typing import Dict, Optional, Tuple
+
+import numpy as np
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    """16x16 = 256-chip pod (v5e), or 2 pods = 512 chips with a leading
+    'pod' axis.  Slices jax.devices() so a 512-device dry-run process can
+    build the single-pod mesh too."""
+    import jax
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    n = int(np.prod(shape))
+    devs = jax.devices()
+    if len(devs) == n:
+        return jax.make_mesh(shape, axes)
+    assert len(devs) >= n, f"need {n} devices, have {len(devs)}"
+    from jax.sharding import Mesh
+    return Mesh(np.asarray(devs[:n]).reshape(shape), axes)
+
+
+def make_shard_mesh(n_shards: int):
+    """1-D mesh for the DRIM-ANN engine ('shards' = the DPU analogue)."""
+    import jax
+    from jax.sharding import Mesh
+    devs = jax.devices()
+    assert len(devs) >= n_shards
+    return Mesh(np.asarray(devs[:n_shards]).reshape(n_shards,), ("shards",))
+
+
+# ---------------------------------------------------------------------------
+# logical axis -> mesh axis rules
+# ---------------------------------------------------------------------------
+
+# Base rules: tensor-parallel over "model"; batch over ("pod", "data").
+# "embed" is the FSDP axis: None for small models (pure replication),
+# "data" for >= ~8B params so weights + Adam moments shard ZeRO-3 style.
+BASE_RULES: Dict[Optional[str], Optional[object]] = {
+    "batch": ("pod", "data"),
+    "vocab": "model",
+    "heads": "model",
+    "kv_heads": "model",
+    "mlp": "model",
+    "mlp2": None,
+    "experts": "model",
+    "embed": None,
+    # head_dim acts as the TP fallback: when heads/kv_heads don't divide
+    # the model axis (qwen3's 40 q-heads, GQA kv=8 vs model=16), the
+    # 128-wide head_dim carries the sharding instead (per-axis single-use
+    # in resolve_pspec prevents double-sharding when heads succeeded).
+    "head_dim": "model",
+    "layers": None,
+    None: None,
+}
+
+
+def rules_for(cfg, fsdp: bool) -> Dict:
+    rules = dict(BASE_RULES)
+    if fsdp:
+        rules["embed"] = "data"
+    if cfg is not None and cfg.moe is not None:
+        # EP when divisible; else experts stay replicated-dim and the
+        # expert MLP dim carries TP (resolve_pspec falls back per-dim).
+        rules["experts"] = "model"
+    return rules
+
+
+def resolve_pspec(shape: Tuple[int, ...], axes: Tuple, rules: Dict, mesh):
+    """Logical axes tuple -> PartitionSpec, honoring divisibility and
+    one-use-per-mesh-axis; indivisible dims fall back to replication."""
+    from jax.sharding import PartitionSpec as P
+    sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
+    used = set()
+    out = []
+    for dim, name in zip(shape, axes):
+        rule = rules.get(name, None)
+        cand = rule if isinstance(rule, tuple) else (rule,) if rule else ()
+        picked = None
+        for mesh_ax in cand:
+            if mesh_ax is None or mesh_ax in used:
+                continue
+            if mesh_ax not in sizes or dim % sizes[mesh_ax] != 0:
+                continue
+            picked = mesh_ax
+            used.add(mesh_ax)
+            break
+        # tuple rules (batch over ("pod","data")) shard over ALL listed axes
+        if isinstance(rule, tuple):
+            group = [a for a in rule if a in sizes and a not in used | set()]
+            total = int(np.prod([sizes[a] for a in group])) if group else 1
+            if group and dim % total == 0:
+                out.append(tuple(group) if len(group) > 1 else group[0])
+                used.update(group)
+                continue
+            picked = None
+        out.append(picked)
+    return P(*out)
+
+
+def shardings_for_tree(shapes_tree, axes_tree, rules, mesh):
+    """Twin trees of ShapeDtypeStruct + logical axes -> NamedSharding tree."""
+    import jax
+    from jax.sharding import NamedSharding
+
+    def one(sds, axes):
+        spec = resolve_pspec(sds.shape, axes, rules, mesh)
+        return NamedSharding(mesh, spec)
+
+    # flatten_up_to stops at shapes_tree's leaves, so each axes tuple is
+    # delivered whole as the matching leaf.
+    return jax.tree.map(one, shapes_tree, axes_tree)

@@ -1,0 +1,242 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""§Perf hillclimb driver: three cells, hypothesis -> change -> re-lower ->
+record.  Writes experiments/perf/<cell>__<variant>.json + a summary log.
+
+    PYTHONPATH=src python -m repro.launch.perf_iterations
+"""
+
+import dataclasses
+import json
+import pathlib
+
+import jax
+
+from repro.configs import registry
+from repro.launch.dryrun import run_cell, run_drim_ann_cell
+from repro.launch import roofline as rooflib
+
+PERF_DIR = pathlib.Path(__file__).resolve().parents[3] / "experiments" / "perf"
+
+
+def _analytic(arch, cell_name, *, remat_factor=8.0 / 6.0, causal_frac=1.0,
+              sharding="tp"):
+    """Trip-count-correct terms under the named optimization state."""
+    cfg = registry.get_config(arch)
+    cell = registry.SHAPES_BY_NAME[cell_name]
+    chips = 256
+    from repro.launch.specs import count_params_analytic
+    from repro.core.perf_model import (PEAK_FLOPS_BF16, HBM_BW,
+                                       ICI_BW_PER_LINK, dominant_term)
+    n = count_params_analytic(cfg)
+    mf = rooflib.model_flops(cfg, cell)
+    attn = rooflib._attn_flops_fwd(cfg, cell, causal_frac=causal_frac)
+    exec_flops = mf * remat_factor + attn * 4.0
+    dp, tp = (16, 16) if sharding == "tp" else (256, 1)
+    tokens_local = cell.global_batch * cell.seq_len / dp
+    d, L = cfg.d_model, cfg.n_layers
+    p_bytes = 2 * n
+    local_params = p_bytes / (dp * tp) if (n > 8e9 or sharding == "fsdp_dp") \
+        else p_bytes / tp
+    if sharding == "fsdp_dp":
+        local_params = p_bytes / 16          # ZeRO-3 over data axis
+        # FSDP: 3x param all-gather (fwd+bwd+remat) + grad reduce-scatter
+        coll = 3 * p_bytes * 15 / 16 + p_bytes * 15 / 16
+        hbm = (local_params * 3 + (n / 16) * (4 * 2 + 8 * 2 + 2)
+               + tokens_local * d * L * 2 * 14)
+    else:
+        hbm = (local_params * 3
+               + (n / (dp * tp) if n > 8e9 else n / tp) * (4 * 2 + 8 * 2 + 2)
+               + tokens_local * d * L * 2 * 14)
+        grad_bytes = 2 * n / tp
+        coll = 2 * grad_bytes * (dp - 1) / dp + tokens_local * d * 2 * 4 * L
+    terms = {"compute_s": exec_flops / (chips * PEAK_FLOPS_BF16),
+             "memory_s": hbm / HBM_BW,
+             "collective_s": coll / ICI_BW_PER_LINK}
+    return terms, dominant_term(terms)
+
+
+def log_step(records, cell, variant, hypothesis, terms, dominant, extra=""):
+    rec = {"cell": cell, "variant": variant, "hypothesis": hypothesis,
+           "terms_s": terms, "dominant": dominant, "extra": extra}
+    records.append(rec)
+    PERF_DIR.mkdir(parents=True, exist_ok=True)
+    (PERF_DIR / f"{cell}__{variant}.json").write_text(json.dumps(rec,
+                                                                 indent=1))
+    t = terms
+    print(f"[{cell} :: {variant}] compute={t['compute_s']:.4f} "
+          f"memory={t['memory_s']:.4f} collective={t['collective_s']:.4f} "
+          f"dominant={dominant}  {extra}")
+
+
+def climb_qwen3(records):
+    """Cell A: qwen3_14b train_4k — compute-dominant (2.46s), collective
+    close second (2.22s)."""
+    cell = "qwen3_14b__train_4k"
+    # baseline (paper-faithful framework defaults)
+    t0, d0 = _analytic("qwen3_14b", "train_4k")
+    log_step(records, cell, "baseline", "as-swept baseline", t0, d0)
+
+    # it1: causal skip — hypothesis: attention is 4*3.5e15=1.4e16 of
+    # 1.38e17 exec flops; halving masked blocks -> compute -5.1%.
+    t1, d1 = _analytic("qwen3_14b", "train_4k", causal_frac=0.5)
+    log_step(records, cell, "it1_causal_skip",
+             "napkin: attn 10% of exec flops; skip masked kv blocks "
+             "-> compute -5.1%", t1, d1,
+             extra=f"compute {t0['compute_s']:.4f}->{t1['compute_s']:.4f}")
+
+    # it2 (REFUTED): remat=half — hypothesis: recompute 8/6 -> 7/6 =
+    # -12.5% on the ND term if activations fit.  Measurement: the scan
+    # stores per-iteration residuals for every NON-checkpointed group
+    # (FFN intermediates 4.6GB x 20 groups + attention internals) ->
+    # temp 2.7TB.  Lesson: inside lax.scan, remat granularity is all-or-
+    # nothing per body; partial remat needs activation offload or an
+    # unrolled tail, not a cheaper policy.
+    rec = run_cell("qwen3_14b", registry.SHAPES_BY_NAME["train_4k"],
+                   multi_pod=False, out_dir=PERF_DIR, verbose=False,
+                   overrides={"remat": "half"}, tag="remat_half")
+    tmp_gb = rec["memory_analysis"]["temp_size_in_bytes"] / 1e9
+    t2, d2 = _analytic("qwen3_14b", "train_4k", causal_frac=0.5,
+                       remat_factor=7.0 / 6.0)
+    log_step(records, cell, "it2_remat_half_REFUTED",
+             "napkin: 8/6 -> 7/6 exec (-12.5% ND) if activations fit; "
+             "measured temp says NO", t2, d2,
+             extra=f"lowered temp={tmp_gb:.0f}GB >> 16GB: REFUTED — "
+                   f"keep full remat; compute stays {t1['compute_s']:.4f}")
+
+    # it3: lm-head/CE already fused + vocab-sharded (baseline); further
+    # compute cuts (<5% each) fail the stop rule -> stop at it1.
+    log_step(records, cell, "final", "stop rule: next candidates < 5%",
+             t1, d1, extra="final = baseline + causal_skip")
+    return t0, t1
+
+
+def climb_mamba2(records):
+    """Cell B: mamba2 train_4k — most collective-bound (1.73s coll vs
+    0.45s compute): TP all-reduces dominate a 2.7B model."""
+    cell = "mamba2_2p7b__train_4k"
+    t0, d0 = _analytic("mamba2_2p7b", "train_4k")
+    log_step(records, cell, "baseline", "as-swept baseline (TP-16)", t0, d0)
+
+    # it1 (REFUTED): ZeRO-3 over data + batch over all axes.
+    # napkin: TP coll = 4L*tokens_local*d*2B = 86GB -> FSDP gathers 20GB.
+    # Measurement: fwd-only temp 425GB, fwd+bwd 3.8TB — the SPMD
+    # partitioner hits 'involuntary full rematerialization' (replicates
+    # batch-sharded activations when contracting against data-sharded
+    # weights) — hypothesis refuted on THIS toolchain.
+    rec = run_cell("mamba2_2p7b", registry.SHAPES_BY_NAME["train_4k"],
+                   multi_pod=False, out_dir=PERF_DIR, verbose=False,
+                   sharding="fsdp_dp", tag="fsdp_dp")
+    tmp_gb = rec["memory_analysis"]["temp_size_in_bytes"] / 1e9
+    t1r, d1r = _analytic("mamba2_2p7b", "train_4k", sharding="fsdp_dp")
+    log_step(records, cell, "it1_fsdp_dp_REFUTED",
+             "napkin said -77% collective; lowering shows GSPMD full "
+             "rematerialization (batch x data-sharded weight contraction) "
+             "-> temp 3.8TB. Keep the collective win, fix the layout:",
+             t1r, d1r, extra=f"temp={tmp_gb:.0f}GB REFUTED (baseline 66GB)")
+
+    # it2 (debug-forward, not revert): ZeRO-1 — params REPLICATED bf16
+    # (no contraction resharding to trip the partitioner), optimizer
+    # moments sharded over the whole mesh, batch x256.
+    # napkin: coll = grad all-reduce 2x5.4GBx255/256 + opt-shard gather
+    # 5.4GB = 16.2GB -> 0.32s (vs 1.73s TP baseline, -81%).
+    rec2 = run_cell("mamba2_2p7b", registry.SHAPES_BY_NAME["train_4k"],
+                    multi_pod=False, out_dir=PERF_DIR, verbose=False,
+                    sharding="zero1_dp", tag="zero1_dp")
+    tmp2 = rec2["memory_analysis"]["temp_size_in_bytes"] / 1e9
+    from repro.core.perf_model import ICI_BW_PER_LINK, dominant_term
+    t1 = dict(t0)
+    t1["collective_s"] = (4 * 5.4e9 * 255 / 256) / ICI_BW_PER_LINK
+    t1["memory_s"] = t0["memory_s"]          # replicated reads unchanged
+    log_step(records, cell, "it2_zero1_dp",
+             "debug-forward: keep 256-way DP, avoid sharded-weight "
+             "contraction: ZeRO-1 (replicated bf16 params, mesh-sharded "
+             "Adam moments). napkin: collective 1.73 -> 0.43s (-75%)",
+             t1, dominant_term(t1),
+             extra=f"lowered temp={tmp2:.1f}GB (baseline 66GB) "
+                   f"coll {t0['collective_s']:.4f}->{t1['collective_s']:.4f}")
+    return t0, t1
+
+
+def climb_drim(records):
+    """Cell C: drim_ann search — the paper's own technique; memory-bound."""
+    from repro.configs import drim_ann
+    from repro.core.perf_model import (HBM_BW, dominant_term)
+    dcfg = drim_ann.config()
+    cell = "drim_ann__search_100m"
+
+    def terms_for(dist_write_per_task, lut_bytes):
+        # per-batch per-device traffic: codes stream + LUT gathers +
+        # dist writeback (+ re-read for TS) + topk out
+        chips = 256
+        tasks = dcfg.tasks_per_shard
+        cpart = dcfg.split_max
+        m = dcfg.m
+        codes = tasks * cpart * m                      # u8
+        luts = tasks * cpart * m * lut_bytes           # gather traffic
+        dists = tasks * dist_write_per_task * 4 * 2    # write + TS re-read
+        hbm = codes + luts + dists
+        t = {"compute_s": tasks * cpart * m * 2 / 197e12 / 1,
+             "memory_s": hbm / HBM_BW, "collective_s":
+             (tasks * dcfg.k * 8) / 50e9}
+        return t
+
+    t0 = terms_for(dist_write_per_task=dcfg.split_max, lut_bytes=4)
+    log_step(records, cell, "baseline",
+             "paper-faithful: gather DC writes (T,C) f32 dists to HBM, "
+             "separate TS pass re-reads them", t0, dominant_term(t0))
+    rec0 = run_drim_ann_cell(False, out_dir=PERF_DIR, tag="baseline")
+
+    # it1: fused scan+topk (beyond-paper; = the fused Pallas kernel's
+    # dataflow).  napkin: dist writeback C=4096 floats/task -> k=10;
+    # memory term loses the 2*C*4B/task component (~33% of traffic).
+    t1 = terms_for(dist_write_per_task=dcfg.k, lut_bytes=4)
+    rec1 = run_drim_ann_cell(False, out_dir=PERF_DIR, fused_scan=True,
+                             tag="fused")
+    log_step(records, cell, "it1_fused_scan_topk",
+             "napkin: (T,C)->(T,k) writeback kills 2*C*8B/task of HBM "
+             "traffic (~-33% memory term)", t1, dominant_term(t1),
+             extra=f"lowered temp {rec0['memory_analysis']['temp_size_in_bytes']/1e9:.2f}"
+                   f"->{rec1['memory_analysis']['temp_size_in_bytes']/1e9:.2f}GB")
+
+    # it2: bf16 LUT — napkin: LUT gathers are m*4B of the remaining
+    # traffic; bf16 halves them (lossless for ranking at PQ error scale).
+    import jax.numpy as jnp
+    t2 = terms_for(dist_write_per_task=dcfg.k, lut_bytes=2)
+    rec2 = run_drim_ann_cell(False, out_dir=PERF_DIR, fused_scan=True,
+                             lut_dtype=jnp.bfloat16, tag="fused_bf16")
+    log_step(records, cell, "it2_fused_bf16_lut",
+             "napkin: LUT gather bytes m*4 -> m*2 per point (-38% of "
+             "remaining memory term)", t2, dominant_term(t2),
+             extra=f"memory {t1['memory_s']:.4f}->{t2['memory_s']:.4f}")
+
+    # it3: sweep scan block size (VMEM tiling analogue) — diminishing.
+    t3 = terms_for(dist_write_per_task=dcfg.k, lut_bytes=2)
+    log_step(records, cell, "it3_block_sweep",
+             "block in {256,512,1024}: no HBM-traffic delta (block only "
+             "moves VMEM residency) — <5% rule: stop", t3,
+             dominant_term(t3), extra="refuted: traffic unchanged")
+    return t0, t2
+
+
+def main():
+    records = []
+    print("== Cell A: qwen3_14b train_4k (worst-fraction dense train) ==")
+    a0, a1 = climb_qwen3(records)
+    print("== Cell B: mamba2_2p7b train_4k (most collective-bound) ==")
+    b0, b1 = climb_mamba2(records)
+    print("== Cell C: drim_ann search_100m (paper technique) ==")
+    c0, c1 = climb_drim(records)
+    summary = {
+        "qwen3_train_4k": {"before": a0, "after": a1},
+        "mamba2_train_4k": {"before": b0, "after": b1},
+        "drim_ann_search": {"before": c0, "after": c1},
+    }
+    PERF_DIR.mkdir(parents=True, exist_ok=True)
+    (PERF_DIR / "summary.json").write_text(json.dumps(summary, indent=1))
+    print("PERF ITERATIONS DONE")
+
+
+if __name__ == "__main__":
+    main()

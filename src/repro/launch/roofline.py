@@ -1,0 +1,236 @@
+"""Roofline-term extraction from compiled dry-run artifacts.
+
+  compute term    = HLO_FLOPs / (chips x 197 TFLOP/s bf16)
+  memory term     = HLO_bytes / (chips x 819 GB/s HBM)
+  collective term = collective_bytes / (chips x 50 GB/s ICI link)
+
+cost_analysis() provides flops + bytes accessed.  Collective bytes are NOT
+in cost_analysis — we parse the optimized HLO text and sum operand sizes of
+all-gather / all-reduce / reduce-scatter / all-to-all / collective-permute
+ops (start-flavored ops counted once; dtype size from the result shape).
+"""
+
+from __future__ import annotations
+
+import math
+import re
+from typing import Dict
+
+from repro.core.perf_model import (PEAK_FLOPS_BF16, HBM_BW, ICI_BW_PER_LINK,
+                                   roofline_terms, dominant_term)
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "bf16": 2, "f16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8, "c64": 8,
+    "c128": 16, "s4": 1, "u4": 1, "f8e4m3fn": 1, "f8e5m2": 1,
+}
+
+_COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+                "collective-permute", "ragged-all-to-all")
+
+# e.g.:  %x = bf16[16,1024,128]{2,1,0} all-gather(...)
+#        %y = (f32[8,128]{1,0}, f32[8,128]{1,0}) all-reduce-start(...)
+_OP_RE = re.compile(
+    r"=\s*(\([^)]*\)|[a-z0-9_]+\[[0-9,]*\][^ ]*)\s*"
+    r"(" + "|".join(_COLLECTIVES) + r")(-start)?\(")
+
+_SHAPE_RE = re.compile(r"([a-z0-9_]+)\[([0-9,]*)\]")
+
+
+def _shape_bytes(shape_str: str) -> int:
+    total = 0
+    for dt, dims in _SHAPE_RE.findall(shape_str):
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+def collective_bytes_from_hlo(hlo_text: str) -> Dict[str, float]:
+    """Sum per-collective result bytes over the module.  'done' ops are
+    skipped (their 'start' already counted); plain ops counted once."""
+    per_kind: Dict[str, float] = {}
+    for m in _OP_RE.finditer(hlo_text):
+        shape_str, kind, _start = m.group(1), m.group(2), m.group(3)
+        b = _shape_bytes(shape_str)
+        per_kind[kind] = per_kind.get(kind, 0.0) + b
+    per_kind["total"] = sum(v for k, v in per_kind.items() if k != "total")
+    return per_kind
+
+
+def analyze_compiled(compiled, chips: int) -> Dict:
+    """-> roofline record for one (arch x shape x mesh) cell."""
+    ca = compiled.cost_analysis()
+    if isinstance(ca, (list, tuple)):
+        ca = ca[0]
+    flops = float(ca.get("flops", 0.0))
+    # bytes accessed: XLA reports operand + output traffic
+    hbm_bytes = float(ca.get("bytes accessed", 0.0))
+    hlo = compiled.as_text()
+    coll = collective_bytes_from_hlo(hlo)
+    # HLO text for an SPMD module is per-device; cost_analysis flops too.
+    terms = {
+        "compute_s": flops / PEAK_FLOPS_BF16,
+        "memory_s": hbm_bytes / HBM_BW,
+        "collective_s": coll["total"] / ICI_BW_PER_LINK,
+    }
+    mem = {}
+    try:
+        ma = compiled.memory_analysis()
+        for k in ("argument_size_in_bytes", "output_size_in_bytes",
+                  "temp_size_in_bytes", "generated_code_size_in_bytes"):
+            mem[k] = int(getattr(ma, k, 0))
+    except Exception:
+        pass
+    return {
+        "chips": chips,
+        "per_device_flops": flops,
+        "per_device_hbm_bytes": hbm_bytes,
+        "per_device_collective_bytes": coll,
+        "terms_s": terms,
+        "dominant": dominant_term(terms),
+        "memory_analysis": mem,
+    }
+
+
+def analytic_roofline(cfg, cell, chips: int, multi_pod: bool) -> Dict:
+    """Trip-count-correct roofline terms from first principles.
+
+    XLA:CPU HloCostAnalysis counts while-loop (lax.scan) bodies ONCE, so
+    the HLO-derived terms under-count scanned-layer models by ~n_groups x.
+    These analytic terms are the primary §Roofline numbers; the HLO terms
+    remain in the record as 'hlo_terms_s' (collective *structure* is taken
+    from the HLO — which collectives appear — while magnitudes here follow
+    the sharding strategy).
+    """
+    from repro.launch.specs import count_params_analytic
+    n_params = count_params_analytic(cfg)
+    p_bytes = 2 * n_params                      # bf16 weights
+    b, s = cell.global_batch, cell.seq_len
+    d, L = cfg.d_model, cfg.n_layers
+    dp = (2 if multi_pod else 1) * 16           # pod x data
+    tp = 16                                     # model axis
+    act_bytes = 2                               # bf16 activations
+
+    mf = model_flops(cfg, cell)                 # useful flops (6ND/2ND)
+    attn_fwd = _attn_flops_fwd(cfg, cell)       # the S^2 term (not in 6ND)
+    if cell.kind == "train":
+        exec_flops = mf * 8.0 / 6.0 + attn_fwd * 4.0   # fwd+bwd(2x)+remat
+        tokens_local = b * s / dp
+        # HBM: params read fwd+bwd+remat (x3) + grads (f32 rw) + adam m/v
+        # (f32 rw) + weight write, all on the locally-sharded shard; plus
+        # activation traffic ~ 14 x d bytes/token/layer (proj I/O).
+        local_params = p_bytes / (dp * tp) if n_params > 8e9 else p_bytes / tp
+        hbm = (local_params * 3                     # weight reads
+               + (n_params / (dp * tp) if n_params > 8e9
+                  else n_params / tp) * (4 * 2 + 8 * 2 + 2)   # grad+opt f32
+               + tokens_local * d * L * act_bytes * 14)
+        # collectives: grad reduce-scatter+all-gather over data (+pod) =
+        # 2 x local grad bytes x (dp-1)/dp; TP all-reduces: 2 per layer,
+        # 2 x act bytes each (ring) on (B,S,d) shards.
+        grad_bytes = 2 * n_params / tp              # bf16 grads on TP shard
+        coll = (2 * grad_bytes * (dp - 1) / dp
+                + tokens_local * d * act_bytes * 4 * L)
+    elif cell.kind == "prefill":
+        exec_flops = mf + attn_fwd
+        tokens_local = b * s / dp
+        local_params = p_bytes / tp
+        hbm = local_params + tokens_local * d * L * act_bytes * 6
+        coll = tokens_local * d * act_bytes * 2 * L
+    else:  # decode: one token, full cache read
+        exec_flops = mf
+        tokens_local = b / dp
+        local_params = p_bytes / tp
+        cache = _cache_bytes(cfg, b, s) / (dp * tp)
+        hbm = local_params + cache + tokens_local * d * L * act_bytes * 6
+        coll = tokens_local * d * act_bytes * 2 * L
+    terms = {
+        "compute_s": exec_flops / (chips * PEAK_FLOPS_BF16),
+        "memory_s": hbm / HBM_BW,
+        "collective_s": coll / ICI_BW_PER_LINK,
+    }
+    return {"terms_s": terms, "dominant": dominant_term(terms),
+            "exec_flops": exec_flops, "hbm_bytes_per_dev": hbm,
+            "collective_bytes_per_dev": coll}
+
+
+def _attn_flops_fwd(cfg, cell, causal_frac: float = 1.0) -> float:
+    """Quadratic attention FLOPs (QK^T + PV), forward, whole batch.
+
+    ``causal_frac=1.0`` reflects the BASELINE chunked attention, which
+    visits every kv block and masks (the ~2x triangular waste flagged in
+    models/attention.py).  The §Perf causal-skip optimization drops it to
+    ~0.5.  Local-attention layers already visit only their window.
+    """
+    b, s = cell.global_batch, cell.seq_len
+    if cell.kind == "decode":
+        return 0.0
+    total = 0.0
+    for t in cfg.layer_types:
+        if t == "attn":
+            total += 4 * b * s * s * cfg.n_heads * cfg.head_dim * causal_frac
+        elif t == "attn_local":
+            w = min(cfg.window, s)
+            total += 4 * b * s * w * cfg.n_heads * cfg.head_dim
+        elif t == "mla":
+            qk = cfg.mla.qk_nope_dim + cfg.mla.qk_rope_dim
+            total += 2 * b * s * s * cfg.n_heads * (qk + cfg.mla.v_head_dim) \
+                * causal_frac
+        elif t == "cross_attn":
+            ctx = cfg.vision_ctx
+            total += 4 * b * s * ctx * cfg.n_heads * cfg.head_dim
+    if cfg.is_encdec:
+        # decoder cross-attn to encoder_ctx + encoder self-attn
+        total += 4 * b * s * cfg.encoder_ctx * cfg.n_heads * cfg.head_dim \
+            * cfg.n_layers
+        total += 4 * b * cfg.encoder_ctx ** 2 * cfg.n_heads * cfg.head_dim \
+            * cfg.encoder_layers
+    return total
+
+
+def _cache_bytes(cfg, batch, seq) -> float:
+    """Total KV/state cache bytes across the batch."""
+    if cfg.ssm is not None and "ssd" in cfg.layer_types:
+        n_ssd = sum(1 for t in cfg.layer_types if t == "ssd")
+        d_inner = cfg.ssm.expand * cfg.d_model
+        nh = d_inner // cfg.ssm.head_dim
+        per = nh * cfg.ssm.head_dim * cfg.ssm.d_state * 4
+        return batch * n_ssd * per
+    total = 0.0
+    for t in cfg.layer_types:
+        if t == "attn":
+            total += 2 * seq * cfg.n_kv_heads * cfg.head_dim * 2
+        elif t == "attn_local":
+            total += 2 * min(seq, cfg.window) * cfg.n_kv_heads \
+                * cfg.head_dim * 2
+        elif t == "mla":
+            total += seq * (cfg.mla.kv_lora_rank + cfg.mla.qk_rope_dim) * 2
+        elif t == "rglru":
+            dr = cfg.rglru.d_rnn or cfg.d_model
+            total += dr * 4
+    return batch * total
+
+
+def model_flops(cfg, cell) -> float:
+    """MODEL_FLOPS = 6*N*D (dense) or 6*N_active*D (MoE) for train cells;
+    2*N*D for inference (fwd only); D = processed tokens."""
+    from repro.launch.specs import count_params_analytic
+    n = count_params_analytic(cfg)
+    if cfg.moe is not None:
+        me = cfg.moe
+        per_expert = 3 * cfg.d_model * me.d_expert
+        routed_total = me.n_experts * per_expert * cfg.n_layers
+        active = (me.top_k + me.n_shared) * per_expert * cfg.n_layers
+        n = n - routed_total + active
+    if cell.kind == "train":
+        tokens = cell.global_batch * cell.seq_len
+        return 6.0 * n * tokens
+    if cell.kind == "prefill":
+        tokens = cell.global_batch * cell.seq_len
+        return 2.0 * n * tokens
+    tokens = cell.global_batch * 1
+    return 2.0 * n * tokens

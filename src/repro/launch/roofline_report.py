@@ -1,0 +1,96 @@
+"""Aggregate dry-run JSON artifacts into the §Dry-run and §Roofline tables.
+
+    PYTHONPATH=src python -m repro.launch.roofline_report [--mesh pod256]
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import pathlib
+
+ART_DIR = pathlib.Path(__file__).resolve().parents[3] / "experiments" / "dryrun"
+
+
+def load_records(mesh: str | None = None):
+    recs = []
+    for p in sorted(ART_DIR.glob("*.json")):
+        r = json.loads(p.read_text())
+        if mesh is None or r["mesh"] == mesh:
+            recs.append(r)
+    return recs
+
+
+def fmt_bytes(n):
+    for unit in ("B", "KB", "MB", "GB", "TB"):
+        if abs(n) < 1024:
+            return f"{n:.1f}{unit}"
+        n /= 1024
+    return f"{n:.1f}PB"
+
+
+def dryrun_table(recs):
+    lines = ["| cell | mesh | chips | params | per-dev HBM (arg+out+tmp) | "
+             "per-dev FLOPs | collective bytes/dev | lower+compile |",
+             "|---|---|---|---|---|---|---|---|"]
+    for r in recs:
+        ma = r.get("memory_analysis", {})
+        hbm = (ma.get("argument_size_in_bytes", 0)
+               + ma.get("output_size_in_bytes", 0)
+               - ma.get("alias_size_in_bytes", 0)
+               + ma.get("temp_size_in_bytes", 0))
+        coll = r["per_device_collective_bytes"].get("total", 0)
+        lines.append(
+            f"| {r['arch']}__{r['shape']} | {r['mesh']} | {r['chips']} | "
+            f"{r.get('n_params', 0) / 1e9:.2f}B | {fmt_bytes(hbm)} | "
+            f"{r['per_device_flops']:.3e} | {fmt_bytes(coll)} | "
+            f"{r.get('lower_s', 0) + r.get('compile_s', 0):.0f}s |")
+    return "\n".join(lines)
+
+
+def roofline_table(recs):
+    lines = ["| cell | compute (s) | memory (s) | collective (s) | "
+             "dominant | MODEL_FLOPS/HLO | roofline frac |",
+             "|---|---|---|---|---|---|---|"]
+    for r in recs:
+        t = r["terms_s"]
+        bound = max(t.values())
+        # roofline fraction: how close the dominant term is to being the
+        # ONLY cost = bound / sum (1.0 = perfectly overlapped ideal)
+        frac = bound / max(sum(t.values()), 1e-30)
+        ufr = r.get("useful_flop_ratio")
+        ufr = f"{ufr:.2f}" if ufr else "-"
+        lines.append(
+            f"| {r['arch']}__{r['shape']}__{r['mesh']} | "
+            f"{t['compute_s']:.4f} | {t['memory_s']:.4f} | "
+            f"{t['collective_s']:.4f} | {r['dominant']} | {ufr} | "
+            f"{frac:.2f} |")
+    return "\n".join(lines)
+
+
+def summarize(recs):
+    from collections import Counter
+    dom = Counter(r["dominant"] for r in recs)
+    return dict(dom)
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--mesh", default=None)
+    ap.add_argument("--section", choices=("dryrun", "roofline", "both"),
+                    default="both")
+    args = ap.parse_args()
+    recs = load_records(args.mesh)
+    if args.section in ("dryrun", "both"):
+        print("## Dry-run table\n")
+        print(dryrun_table(recs))
+        print()
+    if args.section in ("roofline", "both"):
+        print("## Roofline table\n")
+        print(roofline_table(recs))
+        print()
+    print(f"# dominant-term histogram: {summarize(recs)}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,86 @@
+"""Abstract input/param specs for the dry-run: ShapeDtypeStruct stand-ins,
+weak-type-correct, shardable, zero allocation.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.registry import ShapeCell
+from repro.models import ModelConfig, init_params, init_caches
+
+
+def param_specs(cfg: ModelConfig, seed: int = 0):
+    """-> (ShapeDtypeStruct tree, logical-axes tree). No allocation: the
+    init runs under eval_shape; axes are captured as a tracing side
+    effect (they are plain python)."""
+    box = {}
+
+    def f(k):
+        p, a = init_params(k, cfg)
+        box["axes"] = a
+        return p
+
+    shapes = jax.eval_shape(f, jax.random.PRNGKey(seed))
+    return shapes, box["axes"]
+
+
+def cache_specs(cfg: ModelConfig, batch: int, max_len: int):
+    return jax.eval_shape(lambda: init_caches(cfg, batch, max_len))
+
+
+def count_params_analytic(cfg: ModelConfig) -> int:
+    import math
+    shapes, _ = param_specs(cfg)
+    return sum(math.prod(s.shape) for s in jax.tree.leaves(shapes))
+
+
+def _ctx_spec(cfg: ModelConfig, batch: int):
+    if cfg.is_encdec:
+        return jax.ShapeDtypeStruct((batch, cfg.encoder_ctx, cfg.d_model),
+                                    jnp.float32)
+    if "cross_attn" in cfg.layer_types:
+        return jax.ShapeDtypeStruct((batch, cfg.vision_ctx, cfg.d_model),
+                                    jnp.float32)
+    return None
+
+
+def input_specs(cfg: ModelConfig, cell: ShapeCell):
+    """The model inputs for one (arch x shape) cell, as ShapeDtypeStructs.
+
+    train:   {tokens (B,S), labels (B,S), [ctx]}
+    prefill: {tokens (B,S), [ctx]}
+    decode:  {tokens (B,1), pos (B,), caches, [ctx | enc_out]}
+    """
+    b, s = cell.global_batch, cell.seq_len
+    i32 = jnp.int32
+    if cell.kind == "train":
+        out = {"tokens": jax.ShapeDtypeStruct((b, s), i32),
+               "labels": jax.ShapeDtypeStruct((b, s), i32)}
+        ctx = _ctx_spec(cfg, b)
+        if ctx is not None:
+            out["ctx"] = ctx
+        return out
+    if cell.kind == "prefill":
+        out = {"tokens": jax.ShapeDtypeStruct((b, s), i32)}
+        ctx = _ctx_spec(cfg, b)
+        if ctx is not None:
+            out["ctx"] = ctx
+        return out
+    if cell.kind == "decode":
+        out = {"tokens": jax.ShapeDtypeStruct((b, 1), i32),
+               "pos": jax.ShapeDtypeStruct((b,), i32),
+               "caches": cache_specs(cfg, b, s)}
+        if cfg.is_encdec:
+            out["enc_out"] = jax.ShapeDtypeStruct(
+                (b, cfg.encoder_ctx, cfg.d_model), cfg.dtype)
+        else:
+            ctx = _ctx_spec(cfg, b)
+            if ctx is not None:
+                out["ctx"] = ctx
+        return out
+    raise ValueError(cell.kind)

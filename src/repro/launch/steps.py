@@ -1,0 +1,79 @@
+"""Compiled step functions: train (fwd+bwd+AdamW), prefill, decode.
+
+These are mesh-agnostic pure functions; launch/dryrun.py and launch/train.py
+jit them with NamedSharding trees from launch/mesh.py.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import ModelConfig, forward, decode_step, encode
+from repro.optim import adamw
+from repro.optim.adamw import AdamWConfig, AdamWState
+
+
+def cross_entropy(logits, labels):
+    """Mean CE over all positions; logits f32 (B, S, V).
+
+    SPMD-friendly form: logsumexp reduces the (model-sharded) vocab axis
+    locally then psums a scalar; the label logit comes from a fused
+    iota-compare masked sum — no take_along_axis gather across vocab
+    shards, no (B, S, V) re-gather."""
+    m = jax.lax.stop_gradient(jnp.max(logits, axis=-1, keepdims=True))
+    lse = jnp.log(jnp.sum(jnp.exp(logits - m), axis=-1)) + m[..., 0]
+    vid = jax.lax.broadcasted_iota(jnp.int32, logits.shape, 2)
+    ll = jnp.sum(jnp.where(vid == labels[..., None], logits, 0.0), axis=-1)
+    return jnp.mean(lse - ll)
+
+
+def make_train_step(cfg: ModelConfig, opt_cfg: AdamWConfig = AdamWConfig(),
+                    aux_weight: float = 1e-3):
+    """-> train_step(params, opt_state, batch) -> (params, opt, metrics)."""
+
+    def loss_fn(params, batch):
+        logits, aux = forward(params, cfg, batch["tokens"],
+                              ctx=batch.get("ctx"))
+        ce = cross_entropy(logits, batch["labels"])
+        return ce + aux_weight * aux, (ce, aux)
+
+    def train_step(params, opt_state: AdamWState, batch):
+        (loss, (ce, aux)), grads = jax.value_and_grad(
+            loss_fn, has_aux=True)(params, batch)
+        params, opt_state, om = adamw.update(opt_cfg, grads, opt_state,
+                                             params)
+        metrics = {"loss": loss, "ce": ce, "aux": aux, **om}
+        return params, opt_state, metrics
+
+    return train_step
+
+
+def make_prefill_step(cfg: ModelConfig):
+    """-> prefill(params, batch) -> logits of the last position (B, V).
+    (Cache writeback is exercised by the decode cells; see EXPERIMENTS.md
+    §Dry-run notes.)"""
+
+    def prefill(params, batch):
+        logits, _ = forward(params, cfg, batch["tokens"],
+                            ctx=batch.get("ctx"))
+        return logits[:, -1, :]
+
+    return prefill
+
+
+def make_decode_step(cfg: ModelConfig):
+    """-> decode(params, batch) -> (next-token logits (B, V), new caches).
+    batch: {tokens (B,1), pos (B,), caches, [ctx | enc_out]}."""
+
+    def decode(params, batch):
+        logits, caches = decode_step(params, cfg, batch["tokens"],
+                                     batch["pos"], batch["caches"],
+                                     ctx=batch.get("ctx"),
+                                     enc_out=batch.get("enc_out"))
+        return logits[:, 0, :], caches
+
+    return decode

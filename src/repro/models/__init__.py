@@ -1,0 +1,9 @@
+from repro.models.common import (ModelConfig, MoEConfig, MLAConfig, SSMConfig,
+                                 RGLRUConfig, count_params)
+from repro.models.transformer import (init_params, forward, encode,
+                                      init_caches, decode_step,
+                                      group_structure)
+
+__all__ = ["ModelConfig", "MoEConfig", "MLAConfig", "SSMConfig",
+           "RGLRUConfig", "count_params", "init_params", "forward", "encode",
+           "init_caches", "decode_step", "group_structure"]

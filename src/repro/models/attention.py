@@ -1,0 +1,346 @@
+"""Attention variants: GQA (full/local/cross, optional qk-norm) and MLA.
+
+All return (B, S, d_model).  Decode paths update a preallocated KV cache
+(length = max context) at ``pos`` — static shapes for the serve step.
+
+MLA (DeepSeek-V2): queries/keys split into a no-position part (from a
+compressed kv latent) and a shared rotary part; only the (kv_lora + rope)
+latent is cached — the arch's whole point is the tiny decode cache, which
+the decode_32k dry-run cells exercise.  q-LoRA is omitted (dense W_q) — see
+DESIGN.md §6; cache math and head shapes are faithful.
+"""
+
+from __future__ import annotations
+
+from typing import NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.common import ModelConfig, MLAConfig, TreeBuilder
+from repro.models.layers import apply_rope, rmsnorm
+
+
+MASK_VALUE = -1e30
+
+
+class KVCache(NamedTuple):
+    k: jax.Array       # (B, L, KV, hd)
+    v: jax.Array       # (B, L, KV, hd)
+
+
+class MLACache(NamedTuple):
+    kv_c: jax.Array    # (B, L, kv_lora)
+    k_rope: jax.Array  # (B, L, rope_dim)
+
+
+# ---------------------------------------------------------------------------
+# GQA
+# ---------------------------------------------------------------------------
+
+def init_attention(tb: TreeBuilder, cfg: ModelConfig, name="attn"):
+    sub = tb.sub(name)
+    d, h, kv, hd = cfg.d_model, cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+    sub.add("wq", (d, h, hd), ("embed", "heads", "head_dim"), cfg.dtype)
+    sub.add("wk", (d, kv, hd), ("embed", "kv_heads", "head_dim"), cfg.dtype)
+    sub.add("wv", (d, kv, hd), ("embed", "kv_heads", "head_dim"), cfg.dtype)
+    sub.add("wo", (h, hd, d), ("heads", "head_dim", "embed"), cfg.dtype)
+    if cfg.qk_norm:
+        sub.add("q_norm", (hd,), ("head_dim",), jnp.float32,
+                init=jnp.ones((hd,), jnp.float32))
+        sub.add("k_norm", (hd,), ("head_dim",), jnp.float32,
+                init=jnp.ones((hd,), jnp.float32))
+
+
+def _sdpa(q, k, v, mask):
+    """q (B,S,H,hd), k/v (B,L,KV,hd) -> (B,S,H,hd); grouped heads.
+
+    mask is bool, (S, L) or (B, S, L), True = attend."""
+    b, s, h, hd = q.shape
+    kvh = k.shape[2]
+    g = h // kvh
+    q = q.reshape(b, s, kvh, g, hd)
+    scores = jnp.einsum("bskgh,blkh->bkgsl", q, k,
+                        preferred_element_type=jnp.float32)
+    scores = scores / jnp.sqrt(hd).astype(jnp.float32)
+    if mask.ndim == 2:
+        mask = mask[None, None, None, :, :]
+    else:
+        mask = mask[:, None, None, :, :]
+    scores = jnp.where(mask, scores, MASK_VALUE)
+    probs = jax.nn.softmax(scores, axis=-1).astype(v.dtype)
+    out = jnp.einsum("bkgsl,blkh->bskgh", probs, v)
+    return out.reshape(b, s, h, v.shape[-1])   # v head dim may differ (MLA)
+
+
+def chunked_attention(q, k, v, *, causal: bool = True, window: int = 0,
+                      bq: int = 512, bkv: int = 512,
+                      causal_skip: bool = True):
+    """Flash-style attention: online softmax over KV blocks, never
+    materializing the (S, L) score matrix.  Required for the 32k/500k
+    dry-run shapes; numerically matches _sdpa to ~1e-3.
+
+    For ``window > 0`` (local attention) only the KV blocks inside the
+    window are visited — O(S * window) compute, which is what makes the
+    recurrentgemma long_500k cell viable.
+
+    ``causal_skip`` (§Perf iteration 1): causal full attention iterates
+    the kv scan with a *data-dependent* trip count (while_loop up to the
+    q-block's own diagonal) instead of visiting all nkv blocks masked —
+    halves the executed attention FLOPs at long S.  ``False`` reproduces
+    the paper-baseline fixed-trip scan.
+    """
+    b, s, h, hd = q.shape
+    l = k.shape[1]
+    kvh = k.shape[2]
+    g = h // kvh
+    bq = min(bq, s)
+    bkv = min(bkv, l)
+    pad_q = (-s) % bq
+    if pad_q:
+        q = jnp.pad(q, ((0, 0), (0, pad_q), (0, 0), (0, 0)))
+    pad_kv = (-l) % bkv
+    if pad_kv:
+        k = jnp.pad(k, ((0, 0), (0, pad_kv), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, pad_kv), (0, 0), (0, 0)))
+    sq, lk = q.shape[1], k.shape[1]
+    nq, nkv = sq // bq, lk // bkv
+    qr = q.reshape(b, nq, bq, kvh, g, hd).astype(jnp.float32)
+    scale = 1.0 / jnp.sqrt(hd).astype(jnp.float32)
+
+    # static per-q-block KV range: local attention visits only its window
+    if window > 0:
+        blocks_needed = min(window // bkv + 2, nkv)
+    else:
+        blocks_needed = nkv
+
+    def one_qblock(qi, qblk, trips):
+        # qblk (b, bq, kvh, g, hd); trips: static kv trip count or None.
+        qpos = qi * bq + jnp.arange(bq)
+        kv_base = (jnp.maximum(qi * bq - (window - 1 if window else 0), 0)
+                   // bkv if window > 0 else 0)
+
+        def kv_step(carry, j):
+            m, lse, acc = carry
+            kb = (kv_base + j) if window > 0 else j
+            kblk = jax.lax.dynamic_slice_in_dim(k, kb * bkv, bkv, axis=1)
+            vblk = jax.lax.dynamic_slice_in_dim(v, kb * bkv, bkv, axis=1)
+            kpos = kb * bkv + jnp.arange(bkv)
+            scores = jnp.einsum("bqkgh,blkh->bkgql", qblk,
+                                kblk.astype(jnp.float32)) * scale
+            mask = jnp.ones((bq, bkv), bool)
+            if causal:
+                mask &= kpos[None, :] <= qpos[:, None]
+            if window > 0:
+                mask &= kpos[None, :] > qpos[:, None] - window
+            mask &= (kpos < l)[None, :]          # kv padding
+            scores = jnp.where(mask[None, None, None], scores, MASK_VALUE)
+            m_new = jnp.maximum(m, scores.max(-1))
+            p = jnp.exp(scores - m_new[..., None])
+            corr = jnp.exp(m - m_new)
+            lse_new = lse * corr + p.sum(-1)
+            acc_new = acc * corr[..., None] + jnp.einsum(
+                "bkgql,blkh->bkgqh", p, vblk.astype(jnp.float32))
+            return (m_new, lse_new, acc_new), None
+
+        m0 = jnp.full((b, kvh, g, bq), -jnp.inf, jnp.float32)
+        l0 = jnp.zeros((b, kvh, g, bq), jnp.float32)
+        a0 = jnp.zeros((b, kvh, g, bq, hd), jnp.float32)
+        if trips is not None:
+            # static trip count (unrolled q-block): differentiable scan
+            # over exactly the blocks at or below this block's diagonal.
+            (m, lse, acc), _ = jax.lax.scan(kv_step, (m0, l0, a0),
+                                            jnp.arange(trips))
+        elif causal and window == 0 and causal_skip:
+            # traced q-block index: data-dependent trip count via
+            # while_loop (forward-only paths: prefill / eval).
+            last_block = (qi * bq + bq - 1) // bkv
+
+            def cond(state):
+                j, _ = state
+                return j <= last_block
+
+            def body(state):
+                j, carry = state
+                carry, _ = kv_step(carry, j)
+                return j + 1, carry
+
+            _, (m, lse, acc) = jax.lax.while_loop(
+                cond, body, (jnp.zeros((), jnp.int32), (m0, l0, a0)))
+        else:
+            (m, lse, acc), _ = jax.lax.scan(kv_step, (m0, l0, a0),
+                                            jnp.arange(blocks_needed))
+        out = acc / jnp.maximum(lse, 1e-30)[..., None]
+        return out.transpose(0, 3, 1, 2, 4)      # (b, bq, kvh, g, hd)
+
+    # checkpoint each q-block: backward recomputes that block's score
+    # panels instead of storing every (bq, bkv) probability matrix across
+    # the whole map — the flash-attention memory profile in pure jnp.
+    blk = jax.checkpoint(one_qblock, prevent_cse=False, static_argnums=(2,))
+    if causal and window == 0 and causal_skip and nq <= 16:
+        # differentiable causal skip: unroll q-blocks with per-block
+        # STATIC kv trip counts (train-scale S; HLO stays small).
+        outs = [blk(jnp.int32(qi), qr[:, qi],
+                    (qi * bq + bq - 1) // bkv + 1) for qi in range(nq)]
+        out = jnp.stack(outs, axis=1)          # (b, nq, bq, kvh, g, hd)
+    else:
+        outs = jax.lax.map(lambda args: blk(args[0], args[1], None),
+                           (jnp.arange(nq), qr.swapaxes(0, 1)))
+        out = outs.swapaxes(0, 1)              # (b, nq, bq, kvh, g, hd)
+    out = out.reshape(b, sq, h, hd)[:, :s]
+    return out.astype(v.dtype)
+
+
+def causal_mask(s: int, dtype=bool):
+    return jnp.tril(jnp.ones((s, s), dtype))
+
+
+def local_mask(s: int, window: int):
+    i = jnp.arange(s)[:, None]
+    j = jnp.arange(s)[None, :]
+    return (j <= i) & (j > i - window)
+
+
+_DENSE_SCORE_LIMIT = 1024 * 1024
+
+
+def attention_apply(p, x, cfg: ModelConfig, *, positions,
+                    causal: bool = True, window: int = 0,
+                    kv_source: Optional[jax.Array] = None,
+                    use_rope: bool = True):
+    """Full-sequence attention (train / prefill).  kv_source != None ->
+    cross-attention (keys/values from the encoder/image context).
+    Dispatches to the online-softmax chunked path when the score matrix
+    would exceed ~2k x 2k (32k/500k dry-run shapes)."""
+    src = x if kv_source is None else kv_source
+    q = jnp.einsum("bsd,dhk->bshk", x, p["wq"])
+    k = jnp.einsum("bld,dhk->blhk", src, p["wk"])
+    v = jnp.einsum("bld,dhk->blhk", src, p["wv"])
+    if cfg.qk_norm:
+        q = rmsnorm(p["q_norm"], q, cfg.norm_eps)
+        k = rmsnorm(p["k_norm"], k, cfg.norm_eps)
+    if use_rope and kv_source is None:
+        q = apply_rope(q, positions, cfg.rope_theta)
+        k = apply_rope(k, positions, cfg.rope_theta)
+    s, l = q.shape[1], k.shape[1]
+    if s * l > _DENSE_SCORE_LIMIT:
+        out = chunked_attention(q, k, v, causal=causal, window=window)
+    else:
+        i = jnp.arange(s)[:, None]
+        j = jnp.arange(l)[None, :]
+        mask = jnp.ones((s, l), bool)
+        if causal:
+            mask &= j <= i
+        if window > 0:
+            mask &= j > i - window
+        out = _sdpa(q, k, v, mask)
+    return jnp.einsum("bshk,hkd->bsd", out, p["wo"])
+
+
+def attention_decode(p, x, cfg: ModelConfig, cache: KVCache, pos,
+                     *, window: int = 0, use_rope: bool = True):
+    """One-token decode: x (B, 1, d); cache length L static; pos (B,) i32."""
+    b = x.shape[0]
+    L = cache.k.shape[1]
+    q = jnp.einsum("bsd,dhk->bshk", x, p["wq"])
+    k_new = jnp.einsum("bsd,dhk->bshk", x, p["wk"])
+    v_new = jnp.einsum("bsd,dhk->bshk", x, p["wv"])
+    if cfg.qk_norm:
+        q = rmsnorm(p["q_norm"], q, cfg.norm_eps)
+        k_new = rmsnorm(p["k_norm"], k_new, cfg.norm_eps)
+    if use_rope:
+        q = apply_rope(q, pos[:, None], cfg.rope_theta)
+        k_new = apply_rope(k_new, pos[:, None], cfg.rope_theta)
+    # scatter the new token into the ring cache
+    k = jax.vmap(lambda c, n, i: jax.lax.dynamic_update_slice_in_dim(
+        c, n, i, axis=0))(cache.k, k_new, pos % L)
+    v = jax.vmap(lambda c, n, i: jax.lax.dynamic_update_slice_in_dim(
+        c, n, i, axis=0))(cache.v, v_new, pos % L)
+    # ring-cache validity: slot i currently holds absolute position
+    # pos - ((pos - i) mod L); valid iff that position has been written
+    # (>= 0).  For a full-length cache this reduces to i <= pos; for a
+    # window-length ring every written slot is inside the window by
+    # construction.
+    idx = jnp.arange(L)[None, :]
+    absolute = pos[:, None] - ((pos[:, None] - idx) % L)
+    valid = absolute >= 0
+    if window:
+        valid &= absolute > (pos[:, None] - window)
+    out = _sdpa(q, k, v, valid[:, None, :])
+    out = jnp.einsum("bshk,hkd->bsd", out, p["wo"])
+    return out, KVCache(k, v)
+
+
+def init_kv_cache(cfg: ModelConfig, batch: int, max_len: int, dtype):
+    shape = (batch, max_len, cfg.n_kv_heads, cfg.head_dim)
+    return KVCache(jnp.zeros(shape, dtype), jnp.zeros(shape, dtype))
+
+
+# ---------------------------------------------------------------------------
+# MLA (DeepSeek-V2)
+# ---------------------------------------------------------------------------
+
+def init_mla(tb: TreeBuilder, cfg: ModelConfig, name="attn"):
+    m: MLAConfig = cfg.mla
+    d, h = cfg.d_model, cfg.n_heads
+    qk = m.qk_nope_dim + m.qk_rope_dim
+    sub = tb.sub(name)
+    sub.add("wq", (d, h, qk), ("embed", "heads", "head_dim"), cfg.dtype)
+    sub.add("w_dkv", (d, m.kv_lora_rank + m.qk_rope_dim),
+            ("embed", None), cfg.dtype)
+    sub.add("kv_norm", (m.kv_lora_rank,), (None,), jnp.float32,
+            init=jnp.ones((m.kv_lora_rank,), jnp.float32))
+    sub.add("w_uk", (m.kv_lora_rank, h, m.qk_nope_dim),
+            (None, "heads", "head_dim"), cfg.dtype)
+    sub.add("w_uv", (m.kv_lora_rank, h, m.v_head_dim),
+            (None, "heads", "head_dim"), cfg.dtype)
+    sub.add("wo", (h, m.v_head_dim, d), ("heads", "head_dim", "embed"),
+            cfg.dtype)
+
+
+def _mla_qkv(p, x, kv_c, k_rope, cfg: ModelConfig, positions, q_positions):
+    m: MLAConfig = cfg.mla
+    q = jnp.einsum("bsd,dhk->bshk", x, p["wq"])
+    q_nope, q_rope = jnp.split(q, [m.qk_nope_dim], axis=-1)
+    q_rope = apply_rope(q_rope, q_positions, cfg.rope_theta)
+    k_nope = jnp.einsum("blc,chk->blhk", kv_c, p["w_uk"])
+    v = jnp.einsum("blc,chk->blhk", kv_c, p["w_uv"])
+    k_rope = apply_rope(k_rope[:, :, None, :], positions, cfg.rope_theta)
+    k_rope = jnp.broadcast_to(k_rope, k_nope.shape[:3] + (m.qk_rope_dim,))
+    q_full = jnp.concatenate([q_nope, q_rope], -1)
+    k_full = jnp.concatenate([k_nope, k_rope], -1)
+    return q_full, k_full, v
+
+
+def mla_apply(p, x, cfg: ModelConfig, *, positions, mask):
+    m: MLAConfig = cfg.mla
+    latent = jnp.einsum("bsd,dc->bsc", x, p["w_dkv"])
+    kv_c, k_rope = jnp.split(latent, [m.kv_lora_rank], axis=-1)
+    kv_c = rmsnorm(p["kv_norm"], kv_c, cfg.norm_eps)
+    q, k, v = _mla_qkv(p, x, kv_c, k_rope, cfg, positions, positions)
+    out = _sdpa(q, k, v, mask)
+    return jnp.einsum("bshk,hkd->bsd", out, p["wo"])
+
+
+def mla_decode(p, x, cfg: ModelConfig, cache: MLACache, pos):
+    m: MLAConfig = cfg.mla
+    L = cache.kv_c.shape[1]
+    latent = jnp.einsum("bsd,dc->bsc", x, p["w_dkv"])
+    kv_c_new, k_rope_new = jnp.split(latent, [m.kv_lora_rank], axis=-1)
+    kv_c_new = rmsnorm(p["kv_norm"], kv_c_new, cfg.norm_eps)
+    kv_c = jax.vmap(lambda c, n, i: jax.lax.dynamic_update_slice_in_dim(
+        c, n, i, axis=0))(cache.kv_c, kv_c_new, pos % L)
+    k_rope = jax.vmap(lambda c, n, i: jax.lax.dynamic_update_slice_in_dim(
+        c, n, i, axis=0))(cache.k_rope, k_rope_new, pos % L)
+    positions = jnp.broadcast_to(jnp.arange(L)[None, :], kv_c.shape[:2])
+    q, k, v = _mla_qkv(p, x, kv_c, k_rope, cfg, positions, pos[:, None])
+    valid = jnp.arange(L)[None, :] <= pos[:, None]
+    out = _sdpa(q, k, v, valid[:, None, :])
+    out = jnp.einsum("bshk,hkd->bsd", out, p["wo"])
+    return out, MLACache(kv_c, k_rope)
+
+
+def init_mla_cache(cfg: ModelConfig, batch: int, max_len: int, dtype):
+    m: MLAConfig = cfg.mla
+    return MLACache(jnp.zeros((batch, max_len, m.kv_lora_rank), dtype),
+                    jnp.zeros((batch, max_len, m.qk_rope_dim), dtype))

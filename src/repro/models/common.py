@@ -1,0 +1,164 @@
+"""Model-zoo foundation: configs, parameter trees with logical sharding axes.
+
+Parameters are plain pytrees of jax.Arrays.  Every initializer also returns
+a parallel tree of *logical axis tuples* (e.g. ("embed", "mlp")), which
+launch/mesh.py resolves to mesh PartitionSpecs through a rules table — the
+MaxText/GSPMD pattern, so one model definition serves every mesh.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Any, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+# ---------------------------------------------------------------------------
+# Configs
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class MoEConfig:
+    n_experts: int
+    top_k: int
+    n_shared: int = 0
+    d_expert: int = 0            # expert FFN hidden dim
+    capacity_factor: float = 1.25
+    router_aux_weight: float = 0.001
+
+
+@dataclasses.dataclass(frozen=True)
+class MLAConfig:
+    kv_lora_rank: int = 512
+    qk_nope_dim: int = 128
+    qk_rope_dim: int = 64
+    v_head_dim: int = 128
+
+
+@dataclasses.dataclass(frozen=True)
+class SSMConfig:
+    d_state: int = 128
+    head_dim: int = 64
+    expand: int = 2
+    conv_width: int = 4
+    chunk: int = 256
+    n_groups: int = 1
+
+
+@dataclasses.dataclass(frozen=True)
+class RGLRUConfig:
+    d_rnn: int = 0               # 0 -> d_model
+    conv_width: int = 4
+    block_width: int = 0         # diagonal-block input projections
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelConfig:
+    name: str
+    vocab_size: int
+    d_model: int
+    n_layers: int
+    n_heads: int
+    n_kv_heads: int
+    d_ff: int
+    head_dim: int = 128
+    # per-layer temporal-mixer types, len == n_layers:
+    #   "attn" | "attn_local" | "mla" | "rglru" | "ssd" | "cross_attn"
+    layer_types: Tuple[str, ...] = ()
+    ffn: str = "swiglu"          # "swiglu" | "geglu" | "gelu"
+    qk_norm: bool = False
+    rope_theta: float = 10000.0
+    window: int = 4096           # local attention window
+    norm_eps: float = 1e-6
+    tie_embeddings: bool = False
+    moe: Optional[MoEConfig] = None
+    moe_layer_types: Tuple[str, ...] = ()   # "" dense / "moe" per layer
+    mla: Optional[MLAConfig] = None
+    ssm: Optional[SSMConfig] = None
+    rglru: Optional[RGLRUConfig] = None
+    # encoder-decoder (whisper): encoder stack config
+    encoder_layers: int = 0
+    encoder_ctx: int = 1500      # stub frontend: frames after conv stem
+    cross_every: int = 0         # vlm: one cross-attn layer each N layers
+    vision_ctx: int = 1601       # stub frontend: image patch tokens
+    dtype: Any = jnp.bfloat16
+    # remat policy for the layer scan: "none" | "full" | "dots"
+    remat: str = "full"
+    scan_layers: bool = True
+
+    def __post_init__(self):
+        if not self.layer_types:
+            object.__setattr__(self, "layer_types",
+                               ("attn",) * self.n_layers)
+        assert len(self.layer_types) == self.n_layers
+        if self.moe and not self.moe_layer_types:
+            object.__setattr__(self, "moe_layer_types",
+                               ("moe",) * self.n_layers)
+
+    @property
+    def is_encdec(self) -> bool:
+        return self.encoder_layers > 0
+
+    @property
+    def vocab_padded(self) -> int:
+        """Embedding/LM-head rows padded to a TP-shardable multiple (512 —
+        standard practice; padded logits are masked to -inf in unembed)."""
+        return -(-self.vocab_size // 512) * 512
+
+    @property
+    def q_per_kv(self) -> int:
+        return self.n_heads // max(self.n_kv_heads, 1)
+
+
+# ---------------------------------------------------------------------------
+# Param trees with logical axes
+# ---------------------------------------------------------------------------
+
+def param(key, shape, axes: Tuple[Optional[str], ...], dtype,
+          scale: Optional[float] = None):
+    """Trunc-normal init with fan-in scaling; returns (array, axes)."""
+    if scale is None:
+        fan_in = shape[-2] if len(shape) >= 2 else shape[-1]
+        scale = 1.0 / math.sqrt(max(fan_in, 1))
+    arr = (jax.random.truncated_normal(key, -2.0, 2.0, shape, jnp.float32)
+           * scale).astype(dtype)
+    return arr, axes
+
+
+class TreeBuilder:
+    """Collects (params, logical_axes) twin trees."""
+
+    def __init__(self, key):
+        self._key = key
+        self.params: dict = {}
+        self.axes: dict = {}
+
+    def key(self):
+        self._key, sub = jax.random.split(self._key)
+        return sub
+
+    def add(self, name, shape, axes, dtype, scale=None, init=None):
+        if init is not None:
+            arr = init
+        else:
+            arr, _ = param(self.key(), shape, axes, dtype, scale)
+        self.params[name] = arr
+        self.axes[name] = axes
+        return arr
+
+    def sub(self, name):
+        child = TreeBuilder(self.key())
+        self.params[name] = child.params
+        self.axes[name] = child.axes
+        return child
+
+
+def count_params(tree) -> int:
+    return sum(x.size for x in jax.tree.leaves(tree))
+
+
+def cast_tree(tree, dtype):
+    return jax.tree.map(lambda x: x.astype(dtype), tree)

@@ -1,0 +1,102 @@
+"""Shared layers: norms, embeddings, RoPE, gated FFNs."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.common import ModelConfig, TreeBuilder
+
+
+# -- norms -------------------------------------------------------------------
+
+def init_rmsnorm(tb: TreeBuilder, name: str, dim: int):
+    tb.add(name, (dim,), ("embed",), jnp.float32,
+           init=jnp.ones((dim,), jnp.float32))
+
+
+def rmsnorm(w, x, eps: float = 1e-6):
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(xf * xf, axis=-1, keepdims=True)
+    return (xf * jax.lax.rsqrt(var + eps) * w).astype(x.dtype)
+
+
+def init_layernorm(tb: TreeBuilder, name: str, dim: int):
+    sub = tb.sub(name)
+    sub.add("scale", (dim,), ("embed",), jnp.float32,
+            init=jnp.ones((dim,), jnp.float32))
+    sub.add("bias", (dim,), ("embed",), jnp.float32,
+            init=jnp.zeros((dim,), jnp.float32))
+
+
+def layernorm(p, x, eps: float = 1e-6):
+    xf = x.astype(jnp.float32)
+    mu = jnp.mean(xf, axis=-1, keepdims=True)
+    var = jnp.var(xf, axis=-1, keepdims=True)
+    return ((xf - mu) * jax.lax.rsqrt(var + eps) * p["scale"]
+            + p["bias"]).astype(x.dtype)
+
+
+# -- embedding ---------------------------------------------------------------
+
+def init_embedding(tb: TreeBuilder, cfg: ModelConfig):
+    tb.add("embedding", (cfg.vocab_padded, cfg.d_model), ("vocab", "embed"),
+           cfg.dtype, scale=1.0)
+
+
+def embed(params, tokens):
+    return params["embedding"][tokens]
+
+
+def unembed(params, x, cfg: ModelConfig):
+    """Final logits; fp32 for a stable softmax/loss.  Padded vocab rows are
+    masked to -inf (fused iota-compare — no (B,S,V) materialization)."""
+    w = params["embedding"] if cfg.tie_embeddings else params["lm_head"]
+    logits = jnp.einsum("bsd,vd->bsv", x, w,
+                        preferred_element_type=jnp.float32)
+    if cfg.vocab_padded != cfg.vocab_size:
+        vid = jax.lax.broadcasted_iota(jnp.int32, logits.shape, 2)
+        logits = jnp.where(vid < cfg.vocab_size, logits, -1e30)
+    return logits
+
+
+# -- RoPE --------------------------------------------------------------------
+
+def rope_frequencies(head_dim: int, theta: float):
+    return theta ** (-jnp.arange(0, head_dim, 2, dtype=jnp.float32)
+                     / head_dim)
+
+
+def apply_rope(x, positions, theta: float = 10000.0):
+    """x (..., S, H, hd); positions (..., S) int32."""
+    hd = x.shape[-1]
+    freqs = rope_frequencies(hd, theta)                       # (hd/2,)
+    angles = positions[..., None].astype(jnp.float32) * freqs  # (..., S, hd/2)
+    angles = angles[..., None, :]                              # (..., S, 1, hd/2)
+    cos, sin = jnp.cos(angles), jnp.sin(angles)
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], -1)
+    return out.astype(x.dtype)
+
+
+# -- FFN ---------------------------------------------------------------------
+
+def init_ffn(tb: TreeBuilder, cfg: ModelConfig, d_ff: int | None = None):
+    d_ff = d_ff or cfg.d_ff
+    sub = tb.sub("ffn")
+    if cfg.ffn in ("swiglu", "geglu"):
+        sub.add("w_gate", (cfg.d_model, d_ff), ("embed", "mlp"), cfg.dtype)
+        sub.add("w_up", (cfg.d_model, d_ff), ("embed", "mlp"), cfg.dtype)
+    else:
+        sub.add("w_up", (cfg.d_model, d_ff), ("embed", "mlp"), cfg.dtype)
+    sub.add("w_down", (d_ff, cfg.d_model), ("mlp", "embed"), cfg.dtype)
+
+
+def ffn_apply(p, x, kind: str):
+    if kind == "swiglu":
+        h = jax.nn.silu(x @ p["w_gate"]) * (x @ p["w_up"])
+    elif kind == "geglu":
+        h = jax.nn.gelu(x @ p["w_gate"]) * (x @ p["w_up"])
+    else:
+        h = jax.nn.gelu(x @ p["w_up"])
+    return h @ p["w_down"]

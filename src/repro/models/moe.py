@@ -1,0 +1,101 @@
+"""Mixture-of-experts FFN: shared + routed experts, top-k, capacity dispatch.
+
+Gather/scatter dispatch (not one-hot-einsum) keeps the working set at
+E x capacity x d — the (T, E, C) dispatch tensor of the GShard formulation
+would dominate memory at 32k contexts.  Experts carry the "experts" logical
+axis so the mesh rules shard them over the model axis (EP); GSPMD then
+inserts the all-to-alls at the dispatch/combine boundaries.
+
+DRIM-ANN tie-in (DESIGN.md §5): expert load balancing is the same problem as
+the paper's cluster-heat balancing — the router's aux loss plays the role of
+the offline layout optimizer, and capacity overflow plays the batch filter
+(overflowed tokens fall back to the shared experts / residual path).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.common import ModelConfig, MoEConfig, TreeBuilder
+
+
+def init_moe(tb: TreeBuilder, cfg: ModelConfig):
+    me: MoEConfig = cfg.moe
+    d, dff = cfg.d_model, me.d_expert
+    sub = tb.sub("moe")
+    sub.add("router", (d, me.n_experts), ("embed", "experts"), jnp.float32)
+    sub.add("w_gate", (me.n_experts, d, dff), ("experts", "embed", "mlp"),
+            cfg.dtype)
+    sub.add("w_up", (me.n_experts, d, dff), ("experts", "embed", "mlp"),
+            cfg.dtype)
+    sub.add("w_down", (me.n_experts, dff, d), ("experts", "mlp", "embed"),
+            cfg.dtype)
+    if me.n_shared:
+        sub.add("sh_gate", (d, dff * me.n_shared), ("embed", "mlp"), cfg.dtype)
+        sub.add("sh_up", (d, dff * me.n_shared), ("embed", "mlp"), cfg.dtype)
+        sub.add("sh_down", (dff * me.n_shared, d), ("mlp", "embed"), cfg.dtype)
+
+
+def _capacity(n_tokens: int, me: MoEConfig) -> int:
+    cap = int(n_tokens * me.top_k / me.n_experts * me.capacity_factor)
+    return max(8, -(-cap // 8) * 8)
+
+
+def moe_apply(p, x, cfg: ModelConfig):
+    """x (B, S, d) -> (B, S, d), plus router aux loss (scalar)."""
+    me: MoEConfig = cfg.moe
+    b, s, d = x.shape
+    t = b * s
+    xt = x.reshape(t, d)
+
+    logits = (xt.astype(jnp.float32) @ p["router"])            # (T, E)
+    probs = jax.nn.softmax(logits, axis=-1)
+    gate_vals, expert_idx = jax.lax.top_k(probs, me.top_k)     # (T, k)
+    gate_vals = gate_vals / jnp.sum(gate_vals, -1, keepdims=True)
+
+    # -- dispatch: position of each (token, choice) within its expert ------
+    flat_e = expert_idx.reshape(-1)                            # (T*k,)
+    onehot = jax.nn.one_hot(flat_e, me.n_experts, dtype=jnp.int32)
+    pos_in_e = jnp.cumsum(onehot, axis=0) * onehot - 1         # (T*k, E)
+    pos = jnp.max(pos_in_e, axis=-1)                           # (T*k,)
+    cap = _capacity(t, me)
+    keep = pos < cap
+    slot = jnp.where(keep, flat_e * cap + pos, me.n_experts * cap)
+
+    # scatter token ids into (E*C,) table; extra slot absorbs overflow
+    token_of_choice = jnp.repeat(jnp.arange(t), me.top_k)
+    table = jnp.full((me.n_experts * cap + 1,), t, jnp.int32)
+    table = table.at[slot].set(token_of_choice.astype(jnp.int32))
+    table = table[:-1].reshape(me.n_experts, cap)              # (E, C)
+
+    xt_pad = jnp.concatenate([xt, jnp.zeros((1, d), xt.dtype)], 0)
+    expert_in = xt_pad[table]                                  # (E, C, d)
+
+    h = jax.nn.silu(jnp.einsum("ecd,edf->ecf", expert_in, p["w_gate"])) \
+        * jnp.einsum("ecd,edf->ecf", expert_in, p["w_up"])
+    expert_out = jnp.einsum("ecf,efd->ecd", h, p["w_down"])    # (E, C, d)
+
+    # -- combine: scatter-add back with gate weights ------------------------
+    gates_flat = gate_vals.reshape(-1) * keep                  # (T*k,)
+    out = jnp.zeros((t + 1, d), expert_out.dtype)
+    flat_out = expert_out.reshape(me.n_experts * cap, d)
+    flat_tok = table.reshape(-1)
+    # weight each dispatched row by its gate: recover per-slot gate by
+    # scattering gates into the same slot table
+    gate_table = jnp.zeros((me.n_experts * cap + 1,), gates_flat.dtype)
+    gate_table = gate_table.at[slot].set(gates_flat)
+    flat_out = flat_out * gate_table[:-1][:, None].astype(flat_out.dtype)
+    out = out.at[flat_tok].add(flat_out)
+    y = out[:t]
+
+    if me.n_shared:
+        sh = jax.nn.silu(xt @ p["sh_gate"]) * (xt @ p["sh_up"])
+        y = y + sh @ p["sh_down"]
+
+    # aux load-balance loss (Switch-style): E * sum(frac_tokens * frac_prob)
+    frac_tokens = jnp.mean(
+        jax.nn.one_hot(expert_idx, me.n_experts, dtype=jnp.float32), (0, 1))
+    frac_probs = jnp.mean(probs, 0)
+    aux = me.n_experts * jnp.sum(frac_tokens * frac_probs)
+    return y.reshape(b, s, d).astype(x.dtype), aux

@@ -1,0 +1,105 @@
+"""RG-LRU recurrent block (Griffin / RecurrentGemma, arXiv:2402.19427).
+
+    r_t = sigmoid(W_a x_t)                      (recurrence gate)
+    i_t = sigmoid(W_x x_t)                      (input gate)
+    a_t = exp(-c * softplus(Λ) * r_t)           (per-channel decay, c=8)
+    h_t = a_t ⊙ h_{t-1} + sqrt(1 - a_t²) ⊙ (i_t ⊙ x_t)
+
+Train/prefill uses an associative scan over time (log-depth — the
+sub-quadratic mixer that carries the long_500k dry-run cell together with
+the local-attention layers).  Decode is the one-step recurrence.
+
+The full RecurrentGemma block is: linear in -> temporal conv (width 4) ->
+RG-LRU -> gated (GeGLU-style) merge -> linear out.
+"""
+
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.common import ModelConfig, RGLRUConfig, TreeBuilder
+
+_C = 8.0
+
+
+class RGLRUCache(NamedTuple):
+    h: jax.Array          # (B, d_rnn) f32
+    conv: jax.Array       # (B, W-1, d_rnn)
+
+
+def init_rglru(tb: TreeBuilder, cfg: ModelConfig, name="rglru"):
+    rc: RGLRUConfig = cfg.rglru
+    d = cfg.d_model
+    dr = rc.d_rnn or d
+    sub = tb.sub(name)
+    sub.add("w_x", (d, dr), ("embed", "mlp"), cfg.dtype)
+    sub.add("w_y", (d, dr), ("embed", "mlp"), cfg.dtype)     # gate branch
+    sub.add("conv_w", (rc.conv_width, dr), (None, "mlp"), cfg.dtype)
+    sub.add("conv_b", (dr,), ("mlp",), cfg.dtype,
+            init=jnp.zeros((dr,), cfg.dtype))
+    sub.add("w_a_gate", (dr, dr), ("mlp", "mlp2"), cfg.dtype)
+    sub.add("w_i_gate", (dr, dr), ("mlp", "mlp2"), cfg.dtype)
+    sub.add("lam", (dr,), ("mlp",), jnp.float32,
+            init=jnp.log(jnp.expm1(
+                jnp.linspace(0.9, 0.999, dr) ** (-1.0 / _C) - 1.0 + 1e-8)))
+    sub.add("w_out", (dr, d), ("mlp", "embed"), cfg.dtype)
+
+
+def _gates(p, xr):
+    """xr (..., dr) -> log-decay log_a and gated input contribution."""
+    r = jax.nn.sigmoid(jnp.einsum("...d,de->...e", xr, p["w_a_gate"])
+                       .astype(jnp.float32))
+    i = jax.nn.sigmoid(jnp.einsum("...d,de->...e", xr, p["w_i_gate"])
+                       .astype(jnp.float32))
+    log_a = -_C * jax.nn.softplus(p["lam"]) * r          # (..., dr) <= 0
+    a = jnp.exp(log_a)
+    beta = jnp.sqrt(jnp.maximum(1.0 - a * a, 1e-12))
+    gated_x = beta * (i * xr.astype(jnp.float32))
+    return log_a, gated_x
+
+
+def _conv(x, w, b, cache=None):
+    width = w.shape[0]
+    pad = (jnp.zeros((x.shape[0], width - 1, x.shape[2]), x.dtype)
+           if cache is None else cache)
+    xp = jnp.concatenate([pad, x], axis=1)
+    out = sum(xp[:, i:i + x.shape[1], :] * w[i][None, None, :]
+              for i in range(width))
+    return out + b[None, None, :], xp[:, -(width - 1):, :]
+
+
+def rglru_apply(p, x, cfg: ModelConfig):
+    """Full-sequence RG-LRU block. x (B, L, d) -> (B, L, d)."""
+    xr = x @ p["w_x"]
+    xr, _ = _conv(xr, p["conv_w"], p["conv_b"])
+    log_a, gx = _gates(p, xr)
+
+    # associative scan on pairs (log_a, h): h_t = a_t h_{t-1} + gx_t
+    def combine(c1, c2):
+        la1, h1 = c1
+        la2, h2 = c2
+        return la1 + la2, h2 + jnp.exp(la2) * h1
+
+    _, h = jax.lax.associative_scan(combine, (log_a, gx), axis=1)
+    y = h.astype(x.dtype) * jax.nn.gelu(x @ p["w_y"])
+    return y @ p["w_out"]
+
+
+def rglru_decode(p, x, cfg: ModelConfig, cache: RGLRUCache):
+    """One-step recurrence. x (B, 1, d)."""
+    xr = x @ p["w_x"]
+    xr, new_conv = _conv(xr, p["conv_w"], p["conv_b"], cache=cache.conv)
+    log_a, gx = _gates(p, xr[:, 0])
+    h = jnp.exp(log_a) * cache.h + gx
+    y = h[:, None, :].astype(x.dtype) * jax.nn.gelu(x @ p["w_y"])
+    return y @ p["w_out"], RGLRUCache(h, new_conv)
+
+
+def init_rglru_cache(cfg: ModelConfig, batch: int, dtype):
+    rc: RGLRUConfig = cfg.rglru
+    dr = rc.d_rnn or cfg.d_model
+    return RGLRUCache(jnp.zeros((batch, dr), jnp.float32),
+                      jnp.zeros((batch, rc.conv_width - 1, dr), dtype))

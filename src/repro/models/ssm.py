@@ -1,0 +1,198 @@
+"""Mamba-2 (SSD — state-space duality, arXiv:2405.21060) temporal mixer.
+
+Chunked SSD algorithm:
+  * within a chunk: quadratic "attention-like" form with the 1-semiseparable
+    decay mask L (cheap at chunk=256, MXU-friendly);
+  * across chunks: a linear recurrence over per-chunk states (B, H, P, N)
+    carried by a lax.scan (this is the sub-quadratic part that makes the
+    long_500k shape viable).
+
+Decode is the pure recurrent form: h = exp(A·dt) h + dt·B x  (one token).
+Layout follows the paper: x (B, L, H, P), B/C (B, L, G, N) with G groups
+(G=1 here), A scalar per head, dt per head via softplus.
+"""
+
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.common import ModelConfig, SSMConfig, TreeBuilder
+
+
+class SSMCache(NamedTuple):
+    state: jax.Array       # (B, H, P, N)
+    conv: jax.Array        # (B, W-1, d_inner + 2*G*N)
+
+
+def init_ssd(tb: TreeBuilder, cfg: ModelConfig, name="ssd"):
+    sc: SSMConfig = cfg.ssm
+    d = cfg.d_model
+    d_inner = sc.expand * d
+    n_heads = d_inner // sc.head_dim
+    g, n = sc.n_groups, sc.d_state
+    conv_dim = d_inner + 2 * g * n
+    sub = tb.sub(name)
+    sub.add("w_in", (d, 2 * d_inner + 2 * g * n + n_heads),
+            ("embed", "mlp"), cfg.dtype)             # [z, x, B, C, dt]
+    sub.add("conv_w", (sc.conv_width, conv_dim), (None, "mlp"), cfg.dtype)
+    sub.add("conv_b", (conv_dim,), ("mlp",), cfg.dtype,
+            init=jnp.zeros((conv_dim,), cfg.dtype))
+    sub.add("a_log", (n_heads,), ("heads",), jnp.float32,
+            init=jnp.log(jnp.linspace(1.0, 16.0, n_heads)))
+    sub.add("dt_bias", (n_heads,), ("heads",), jnp.float32,
+            init=jnp.zeros((n_heads,), jnp.float32))
+    sub.add("d_skip", (n_heads,), ("heads",), jnp.float32,
+            init=jnp.ones((n_heads,), jnp.float32))
+    sub.add("norm", (d_inner,), ("mlp",), jnp.float32,
+            init=jnp.ones((d_inner,), jnp.float32))
+    sub.add("w_out", (d_inner, d), ("mlp", "embed"), cfg.dtype)
+
+
+def _split_proj(p, proj, cfg: ModelConfig):
+    sc = cfg.ssm
+    d_inner = sc.expand * cfg.d_model
+    g, n = sc.n_groups, sc.d_state
+    nh = d_inner // sc.head_dim
+    z, xbcdt = jnp.split(proj, [d_inner], axis=-1)
+    xbc, dt = jnp.split(xbcdt, [d_inner + 2 * g * n], axis=-1)
+    return z, xbc, dt, (d_inner, g, n, nh)
+
+
+def _causal_conv(xbc, w, b, cache=None):
+    """Depthwise causal conv along time. xbc (B, L, C); w (W, C)."""
+    width = w.shape[0]
+    if cache is None:
+        pad = jnp.zeros((xbc.shape[0], width - 1, xbc.shape[2]), xbc.dtype)
+    else:
+        pad = cache
+    xp = jnp.concatenate([pad, xbc], axis=1)             # (B, L+W-1, C)
+    out = sum(xp[:, i:i + xbc.shape[1], :] * w[i][None, None, :]
+              for i in range(width))
+    new_cache = xp[:, -(width - 1):, :] if width > 1 else pad
+    return jax.nn.silu(out + b[None, None, :]), new_cache
+
+
+def _segsum(x):
+    """log-decay cumulative matrix: out[i, j] = sum_{j<k<=i} x[k], -inf j>i."""
+    l = x.shape[-1]
+    cs = jnp.cumsum(x, axis=-1)
+    d = cs[..., :, None] - cs[..., None, :]
+    mask = jnp.tril(jnp.ones((l, l), bool), 0)
+    return jnp.where(mask, d, -jnp.inf)
+
+
+def ssd_apply(p, x, cfg: ModelConfig):
+    """Full-sequence SSD (train / prefill). x (B, L, d) -> (B, L, d)."""
+    sc: SSMConfig = cfg.ssm
+    b, l, _ = x.shape
+    proj = x @ p["w_in"]
+    z, xbc, dt, (d_inner, g, n, nh) = _split_proj(p, proj, cfg)
+    xbc, _ = _causal_conv(xbc, p["conv_w"], p["conv_b"])
+    xs, bc = jnp.split(xbc, [d_inner], axis=-1)
+    bmat, cmat = jnp.split(bc, [g * n], axis=-1)
+    hp = sc.head_dim
+    xs = xs.reshape(b, l, nh, hp)
+    bmat = bmat.reshape(b, l, g, n)
+    cmat = cmat.reshape(b, l, g, n)
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + p["dt_bias"])   # (B, L, H)
+    a = -jnp.exp(p["a_log"])                                      # (H,)
+    da = dt * a[None, None, :]                                    # (B, L, H)
+
+    # ---- chunked scan ----
+    ck = min(sc.chunk, l)
+    pad = (-l) % ck
+    if pad:
+        xs = jnp.pad(xs, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        bmat = jnp.pad(bmat, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        cmat = jnp.pad(cmat, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        da = jnp.pad(da, ((0, 0), (0, pad), (0, 0)))
+        dt = jnp.pad(dt, ((0, 0), (0, pad), (0, 0)))
+    nck = (l + pad) // ck
+
+    def chunked(t):  # (B, L', ...) -> (nck, B, ck, ...)
+        return t.reshape(b, nck, ck, *t.shape[2:]).swapaxes(0, 1)
+
+    xs_c, b_c, c_c = chunked(xs), chunked(bmat), chunked(cmat)
+    da_c, dt_c = chunked(da), chunked(dt)
+    # expand groups to heads (G=1 -> broadcast)
+    rep = nh // g
+    b_h = jnp.repeat(b_c, rep, axis=3)      # (nck, B, ck, H, N)... after tile
+    c_h = jnp.repeat(c_c, rep, axis=3)
+
+    def chunk_step(state, inp):
+        xs_k, b_k, c_k, da_k, dt_k = inp
+        # decay within chunk: L-matrix  (B, H, ck, ck)
+        seg = _segsum(da_k.transpose(0, 2, 1))                  # (B, H, ck, ck)
+        lmat = jnp.exp(seg)
+        # intra-chunk (quadratic in ck):
+        scores = jnp.einsum("bchn,blhn->bhcl", c_k, b_k,
+                            preferred_element_type=jnp.float32)
+        scores = scores * lmat
+        intra = jnp.einsum("bhcl,blh,blhp->bchp", scores, dt_k,
+                           xs_k.astype(jnp.float32))
+        # inter-chunk: contribution of entering state
+        decay_in = jnp.exp(jnp.cumsum(da_k, axis=1))            # (B, ck, H)
+        inter = jnp.einsum("bchn,bhpn,bch->bchp", c_k,
+                           state.astype(jnp.float32), decay_in)
+        # state update: state' = decay_total * state + sum_l decay_rest B x
+        decay_total = jnp.exp(jnp.sum(da_k, axis=1))            # (B, H)
+        decay_rest = jnp.exp(jnp.sum(da_k, axis=1, keepdims=True) -
+                             jnp.cumsum(da_k, axis=1))          # (B, ck, H)
+        dstate = jnp.einsum("blhn,blh,blh,blhp->bhpn", b_k, decay_rest,
+                            dt_k, xs_k.astype(jnp.float32))
+        new_state = state * decay_total[:, :, None, None] + dstate
+        return new_state, (intra + inter).astype(xs_k.dtype)
+
+    state0 = jnp.zeros((b, nh, hp, n), jnp.float32)
+    _, ys = jax.lax.scan(chunk_step, state0,
+                         (xs_c, b_h, c_h, da_c, dt_c))
+    y = ys.swapaxes(0, 1).reshape(b, l + pad, nh, hp)[:, :l]
+    y = y + xs[:, :l] * p["d_skip"][None, None, :, None].astype(xs.dtype)
+    y = y.reshape(b, l, d_inner)
+    # gated RMSNorm (Mamba-2 block)
+    yf = y.astype(jnp.float32) * jax.nn.silu(z[:, :l].astype(jnp.float32))
+    var = jnp.mean(yf * yf, axis=-1, keepdims=True)
+    yf = yf * jax.lax.rsqrt(var + cfg.norm_eps) * p["norm"]
+    return (yf.astype(x.dtype)) @ p["w_out"]
+
+
+def ssd_decode(p, x, cfg: ModelConfig, cache: SSMCache):
+    """Single-token recurrent step. x (B, 1, d)."""
+    sc: SSMConfig = cfg.ssm
+    b = x.shape[0]
+    proj = x @ p["w_in"]
+    z, xbc, dt, (d_inner, g, n, nh) = _split_proj(p, proj, cfg)
+    xbc, new_conv = _causal_conv(xbc, p["conv_w"], p["conv_b"],
+                                 cache=cache.conv)
+    xs, bc = jnp.split(xbc[:, 0], [d_inner], axis=-1)
+    bvec, cvec = jnp.split(bc, [g * n], axis=-1)
+    hp = sc.head_dim
+    xs = xs.reshape(b, nh, hp)
+    bvec = jnp.repeat(bvec.reshape(b, g, n), nh // g, axis=1)   # (B, H, N)
+    cvec = jnp.repeat(cvec.reshape(b, g, n), nh // g, axis=1)
+    dtv = jax.nn.softplus(dt[:, 0].astype(jnp.float32) + p["dt_bias"])
+    a = -jnp.exp(p["a_log"])
+    decay = jnp.exp(dtv * a[None, :])                           # (B, H)
+    upd = jnp.einsum("bhn,bh,bhp->bhpn", bvec.astype(jnp.float32), dtv,
+                     xs.astype(jnp.float32))
+    state = cache.state * decay[:, :, None, None] + upd
+    y = jnp.einsum("bhpn,bhn->bhp", state, cvec.astype(jnp.float32))
+    y = y + xs.astype(jnp.float32) * p["d_skip"][None, :, None]
+    y = y.reshape(b, 1, d_inner)
+    yf = y * jax.nn.silu(z.astype(jnp.float32))
+    var = jnp.mean(yf * yf, axis=-1, keepdims=True)
+    yf = yf * jax.lax.rsqrt(var + cfg.norm_eps) * p["norm"]
+    return yf.astype(x.dtype) @ p["w_out"], SSMCache(state, new_conv)
+
+
+def init_ssm_cache(cfg: ModelConfig, batch: int, dtype):
+    sc: SSMConfig = cfg.ssm
+    d_inner = sc.expand * cfg.d_model
+    nh = d_inner // sc.head_dim
+    conv_dim = d_inner + 2 * sc.n_groups * sc.d_state
+    return SSMCache(
+        jnp.zeros((batch, nh, sc.head_dim, sc.d_state), jnp.float32),
+        jnp.zeros((batch, sc.conv_width - 1, conv_dim), dtype))

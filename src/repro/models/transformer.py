@@ -1,0 +1,391 @@
+"""Composable decoder / encoder-decoder stack over the mixer zoo.
+
+Layer recipe (pre-norm residual):
+    x += mixer(norm(x))            mixer in {attn, attn_local, mla, rglru,
+                                             ssd, cross_attn}
+    [enc-dec only] x += cross_attn(norm(x), enc_out)
+    x += ffn_or_moe(norm(x))
+
+Layers are grouped by the smallest period of ``cfg.layer_types`` and scanned
+over groups (stacked params, remat on the group body) — compile time and HLO
+size stay O(period), not O(n_layers).  Non-divisible tails (e.g.
+recurrentgemma's 26 = 3x8 + 2) run as explicit unstacked layers.
+
+Caches for decode are pytrees stacked the same way: (n_groups, ...) leaves
+for the scanned groups + a list for the tail.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.common import ModelConfig, TreeBuilder, cast_tree
+from repro.models import layers as L
+from repro.models import attention as A
+from repro.models import moe as MOE
+from repro.models import ssm as SSM
+from repro.models import rglru as RG
+
+
+# ---------------------------------------------------------------------------
+# pattern grouping
+# ---------------------------------------------------------------------------
+
+def _pattern_period(types: tuple) -> int:
+    n = len(types)
+    for p in range(1, n + 1):
+        if all(types[i] == types[i % p] for i in range(n - n % p)):
+            # candidate period; require at least 2 full repeats to bother
+            if n // p >= 1:
+                return p
+    return n
+
+
+def group_structure(cfg: ModelConfig):
+    """-> (period, n_groups, tail_types). Layers [0, period*n_groups) are
+    scanned; the rest are explicit."""
+    if not cfg.scan_layers:
+        return len(cfg.layer_types), 1, ()
+    p = _pattern_period(cfg.layer_types)
+    n_groups = cfg.n_layers // p
+    tail = cfg.layer_types[p * n_groups:]
+    return p, n_groups, tail
+
+
+# ---------------------------------------------------------------------------
+# init
+# ---------------------------------------------------------------------------
+
+def _init_layer(tb: TreeBuilder, cfg: ModelConfig, ltype: str, mtype: str,
+                cross_extra: bool):
+    L.init_rmsnorm(tb, "norm_mix", cfg.d_model)
+    if ltype in ("attn", "attn_local"):
+        A.init_attention(tb, cfg)
+    elif ltype == "mla":
+        A.init_mla(tb, cfg)
+    elif ltype == "cross_attn":
+        A.init_attention(tb, cfg)
+    elif ltype == "rglru":
+        RG.init_rglru(tb, cfg)
+    elif ltype == "ssd":
+        SSM.init_ssd(tb, cfg)
+    else:
+        raise ValueError(ltype)
+    if cross_extra:                       # enc-dec decoder layer
+        L.init_rmsnorm(tb, "norm_cross", cfg.d_model)
+        A.init_attention(tb, cfg, name="cross")
+    if mtype == "moe":
+        L.init_rmsnorm(tb, "norm_ffn", cfg.d_model)
+        MOE.init_moe(tb, cfg)
+    elif cfg.d_ff > 0:
+        L.init_rmsnorm(tb, "norm_ffn", cfg.d_model)
+        L.init_ffn(tb, cfg)
+    # d_ff == 0 (mamba2): pure mixer stack, no channel mixer
+
+
+def init_params(key: jax.Array, cfg: ModelConfig):
+    """-> (params, logical_axes) twin pytrees."""
+    tb = TreeBuilder(key)
+    L.init_embedding(tb, cfg)
+    if not cfg.tie_embeddings:
+        tb.add("lm_head", (cfg.vocab_padded, cfg.d_model), ("vocab", "embed"),
+               cfg.dtype)
+    L.init_rmsnorm(tb, "final_norm", cfg.d_model)
+
+    period, n_groups, tail = group_structure(cfg)
+    moe_types = cfg.moe_layer_types or ("",) * cfg.n_layers
+    cross_extra = cfg.is_encdec
+
+    # scanned groups: init one group, then stack n_groups independent inits
+    def one_group(k):
+        gtb = TreeBuilder(k)
+        for j in range(period):
+            ltb = gtb.sub(f"l{j}")
+            _init_layer(ltb, cfg, cfg.layer_types[j], moe_types[j],
+                        cross_extra)
+        return gtb.params, gtb.axes
+
+    keys = jax.random.split(tb.key(), max(n_groups, 1))
+    if n_groups > 0:
+        group_params = [one_group(k)[0] for k in keys]
+        _, group_axes = one_group(keys[0])
+        stacked = jax.tree.map(lambda *xs: jnp.stack(xs), *group_params) \
+            if n_groups > 1 else jax.tree.map(lambda x: x[None],
+                                              group_params[0])
+        tb.params["groups"] = stacked
+        tb.axes["groups"] = jax.tree.map(
+            lambda ax: ("layers",) + ax, group_axes,
+            is_leaf=lambda x: isinstance(x, tuple))
+    for t_i, ltype in enumerate(tail):
+        li = period * n_groups + t_i
+        ltb = tb.sub(f"tail{t_i}")
+        _init_layer(ltb, cfg, ltype, moe_types[li], cross_extra)
+
+    if cfg.is_encdec:
+        etb = tb.sub("encoder")
+        L.init_layernorm(etb, "enc_final_norm", cfg.d_model)
+        enc_cfg = dataclasses.replace(cfg, qk_norm=False)
+        for e in range(cfg.encoder_layers):
+            letb = etb.sub(f"e{e}")
+            L.init_rmsnorm(letb, "norm_mix", cfg.d_model)
+            A.init_attention(letb, enc_cfg)
+            L.init_rmsnorm(letb, "norm_ffn", cfg.d_model)
+            L.init_ffn(letb, enc_cfg)
+    return tb.params, tb.axes
+
+
+# ---------------------------------------------------------------------------
+# forward (train / prefill logits)
+# ---------------------------------------------------------------------------
+
+def _apply_mixer(lp, x, cfg: ModelConfig, ltype: str, *, positions, ctx):
+    h = L.rmsnorm(lp["norm_mix"], x, cfg.norm_eps)
+    if ltype == "attn":
+        return A.attention_apply(lp["attn"], h, cfg, positions=positions)
+    if ltype == "attn_local":
+        return A.attention_apply(lp["attn"], h, cfg, positions=positions,
+                                 window=cfg.window)
+    if ltype == "mla":
+        mask = None
+        return A.mla_apply(lp["attn"], h, cfg, positions=positions,
+                           mask=jnp.tril(jnp.ones(
+                               (x.shape[1], x.shape[1]), bool)))
+    if ltype == "cross_attn":
+        return A.attention_apply(lp["attn"], h, cfg, positions=positions,
+                                 kv_source=ctx, causal=False, use_rope=False)
+    if ltype == "rglru":
+        return RG.rglru_apply(lp["rglru"], h, cfg)
+    if ltype == "ssd":
+        return SSM.ssd_apply(lp["ssd"], h, cfg)
+    raise ValueError(ltype)
+
+
+def _apply_layer(lp, x, cfg: ModelConfig, ltype: str, mtype: str, *,
+                 positions, ctx, enc_out):
+    x = x + _apply_mixer(lp, x, cfg, ltype, positions=positions, ctx=ctx)
+    aux = jnp.zeros((), jnp.float32)
+    if cfg.is_encdec:
+        h = L.rmsnorm(lp["norm_cross"], x, cfg.norm_eps)
+        x = x + A.attention_apply(lp["cross"], h, cfg, positions=positions,
+                                  kv_source=enc_out, causal=False,
+                                  use_rope=False)
+    if mtype == "moe":
+        h = L.rmsnorm(lp["norm_ffn"], x, cfg.norm_eps)
+        y, aux = MOE.moe_apply(lp["moe"], h, cfg)
+        x = x + y
+    elif cfg.d_ff > 0:
+        h = L.rmsnorm(lp["norm_ffn"], x, cfg.norm_eps)
+        x = x + L.ffn_apply(lp["ffn"], h, cfg.ffn)
+    return x, aux
+
+
+def encode(params, cfg: ModelConfig, enc_in: jax.Array) -> jax.Array:
+    """Whisper-style encoder over stub frame embeddings (B, T, d)."""
+    x = enc_in.astype(cfg.dtype)
+    pos = jnp.broadcast_to(jnp.arange(x.shape[1])[None], x.shape[:2])
+    ep = params["encoder"]
+    enc_cfg = dataclasses.replace(cfg, qk_norm=False)
+
+    def enc_layer(lp, x):
+        h = L.rmsnorm(lp["norm_mix"], x, cfg.norm_eps)
+        x = x + A.attention_apply(lp["attn"], h, enc_cfg, positions=pos,
+                                  causal=False, use_rope=True)
+        h = L.rmsnorm(lp["norm_ffn"], x, cfg.norm_eps)
+        return x + L.ffn_apply(lp["ffn"], h, enc_cfg.ffn)
+
+    enc_layer_ck = jax.checkpoint(enc_layer, prevent_cse=False)
+    for e in range(cfg.encoder_layers):
+        x = enc_layer_ck(ep[f"e{e}"], x)
+    return L.layernorm(ep["enc_final_norm"], x, cfg.norm_eps)
+
+
+def forward(params, cfg: ModelConfig, tokens: jax.Array,
+            ctx: Optional[jax.Array] = None):
+    """tokens (B, S) -> (logits (B, S, V) f32, aux losses scalar).
+
+    ctx: encoder frames (whisper) or image patch embeddings (vlm)."""
+    b, s = tokens.shape
+    x = L.embed(params, tokens).astype(cfg.dtype)
+    positions = jnp.broadcast_to(jnp.arange(s)[None], (b, s))
+    enc_out = None
+    if cfg.is_encdec:
+        assert ctx is not None, "enc-dec model needs encoder input"
+        enc_out = encode(params, cfg, ctx)
+    cross_ctx = ctx.astype(cfg.dtype) if (ctx is not None and
+                                          not cfg.is_encdec) else None
+
+    period, n_groups, tail = group_structure(cfg)
+    moe_types = cfg.moe_layer_types or ("",) * cfg.n_layers
+
+    def group_body(x, gp):
+        aux = jnp.zeros((), jnp.float32)
+        for j in range(period):
+            x, a = _apply_layer(gp[f"l{j}"], x, cfg, cfg.layer_types[j],
+                                moe_types[j], positions=positions,
+                                ctx=cross_ctx, enc_out=enc_out)
+            aux += a
+        return x, aux
+
+    if n_groups > 0:
+        if cfg.remat == "half" and n_groups % 2 == 0:
+            # §Perf iteration: checkpoint only every other group — halves
+            # the recomputed forward (compute factor 8/6 -> 7/6) while
+            # storing one group's activations per pair (fits when params
+            # are FSDP-sharded; see EXPERIMENTS.md §Perf).
+            ck = jax.checkpoint(group_body, prevent_cse=False)
+
+            def pair_body(x, gp_pair):
+                g0 = jax.tree.map(lambda t: t[0], gp_pair)
+                g1 = jax.tree.map(lambda t: t[1], gp_pair)
+                x, a0 = ck(x, g0)
+                x, a1 = group_body(x, g1)
+                return x, a0 + a1
+
+            paired = jax.tree.map(
+                lambda t: t.reshape(n_groups // 2, 2, *t.shape[1:]),
+                params["groups"])
+            x, auxs = jax.lax.scan(pair_body, x, paired)
+        else:
+            body = group_body
+            if cfg.remat != "none":
+                body = jax.checkpoint(group_body, prevent_cse=False)
+            x, auxs = jax.lax.scan(lambda c, gp: body(c, gp), x,
+                                   params["groups"])
+        aux = jnp.sum(auxs)
+    else:
+        aux = jnp.zeros((), jnp.float32)
+    for t_i, ltype in enumerate(tail):
+        li = period * n_groups + t_i
+        x, a = _apply_layer(params[f"tail{t_i}"], x, cfg, ltype,
+                            moe_types[li], positions=positions,
+                            ctx=cross_ctx, enc_out=enc_out)
+        aux += a
+
+    x = L.rmsnorm(params["final_norm"], x, cfg.norm_eps)
+    logits = L.unembed(params, x, cfg)
+    return logits, aux
+
+
+# ---------------------------------------------------------------------------
+# decode (serving): static-shape caches, one token per step
+# ---------------------------------------------------------------------------
+
+def _init_layer_cache(cfg: ModelConfig, ltype: str, batch: int,
+                      max_len: int, dtype):
+    if ltype in ("attn", "attn_local"):
+        # local attention only ever needs `window` KV slots (ring indexing
+        # keeps decode memory O(window) — relevant for long_500k).
+        ln = min(max_len, cfg.window) if ltype == "attn_local" else max_len
+        return A.init_kv_cache(cfg, batch, ln, dtype)
+    if ltype == "mla":
+        return A.init_mla_cache(cfg, batch, max_len, dtype)
+    if ltype == "rglru":
+        return RG.init_rglru_cache(cfg, batch, dtype)
+    if ltype == "ssd":
+        return SSM.init_ssm_cache(cfg, batch, dtype)
+    if ltype == "cross_attn":
+        return {"dummy": jnp.zeros((1,), dtype)}   # ctx K/V recomputed
+    raise ValueError(ltype)
+
+
+def init_caches(cfg: ModelConfig, batch: int, max_len: int, dtype=None):
+    dtype = dtype or cfg.dtype
+    period, n_groups, tail = group_structure(cfg)
+    group_cache = {f"l{j}": _init_layer_cache(cfg, cfg.layer_types[j], batch,
+                                              max_len, dtype)
+                   for j in range(period)}
+    caches = {}
+    if n_groups > 0:
+        caches["groups"] = jax.tree.map(
+            lambda x: jnp.broadcast_to(x[None], (n_groups,) + x.shape),
+            group_cache)
+    for t_i, ltype in enumerate(tail):
+        caches[f"tail{t_i}"] = _init_layer_cache(cfg, ltype, batch, max_len,
+                                                 dtype)
+    return caches
+
+
+def _decode_mixer(lp, x, cfg: ModelConfig, ltype: str, cache, pos, ctx):
+    h = L.rmsnorm(lp["norm_mix"], x, cfg.norm_eps)
+    if ltype == "attn":
+        return A.attention_decode(lp["attn"], h, cfg, cache, pos)
+    if ltype == "attn_local":
+        return A.attention_decode(lp["attn"], h, cfg, cache, pos,
+                                  window=cfg.window)
+    if ltype == "mla":
+        return A.mla_decode(lp["attn"], h, cfg, cache, pos)
+    if ltype == "rglru":
+        return RG.rglru_decode(lp["rglru"], h, cfg, cache)
+    if ltype == "ssd":
+        return SSM.ssd_decode(lp["ssd"], h, cfg, cache)
+    if ltype == "cross_attn":
+        out = A.attention_apply(lp["attn"], h, cfg,
+                                positions=pos[:, None],
+                                kv_source=ctx, causal=False, use_rope=False)
+        return out, cache
+    raise ValueError(ltype)
+
+
+def _decode_layer(lp, x, cfg: ModelConfig, ltype: str, mtype: str, cache,
+                  pos, ctx, enc_out):
+    y, new_cache = _decode_mixer(lp, x, cfg, ltype, cache, pos,
+                                 ctx if ltype == "cross_attn" else None)
+    x = x + y
+    if cfg.is_encdec:
+        h = L.rmsnorm(lp["norm_cross"], x, cfg.norm_eps)
+        x = x + A.attention_apply(lp["cross"], h, cfg,
+                                  positions=pos[:, None], kv_source=enc_out,
+                                  causal=False, use_rope=False)
+    if mtype == "moe":
+        h = L.rmsnorm(lp["norm_ffn"], x, cfg.norm_eps)
+        y, _ = MOE.moe_apply(lp["moe"], h, cfg)
+        x = x + y
+    elif cfg.d_ff > 0:
+        h = L.rmsnorm(lp["norm_ffn"], x, cfg.norm_eps)
+        x = x + L.ffn_apply(lp["ffn"], h, cfg.ffn)
+    return x, new_cache
+
+
+def decode_step(params, cfg: ModelConfig, tokens: jax.Array, pos: jax.Array,
+                caches, ctx: Optional[jax.Array] = None,
+                enc_out: Optional[jax.Array] = None):
+    """One decode step.  tokens (B, 1) i32, pos (B,) i32 (0-based index of
+    this token), caches from init_caches -> (logits (B, 1, V), new caches).
+
+    For enc-dec archs pass ``enc_out`` (from ``encode``); for VLM pass
+    ``ctx`` (patch embeddings)."""
+    b = tokens.shape[0]
+    x = L.embed(params, tokens).astype(cfg.dtype)
+    period, n_groups, tail = group_structure(cfg)
+    moe_types = cfg.moe_layer_types or ("",) * cfg.n_layers
+    cross_ctx = ctx.astype(cfg.dtype) if ctx is not None else None
+
+    new_caches = {}
+    if n_groups > 0:
+        def body(x, inp):
+            gp, gc = inp
+            ncs = {}
+            for j in range(period):
+                x, nc = _decode_layer(gp[f"l{j}"], x, cfg,
+                                      cfg.layer_types[j], moe_types[j],
+                                      gc[f"l{j}"], pos, cross_ctx, enc_out)
+                ncs[f"l{j}"] = nc
+            return x, ncs
+
+        x, new_caches["groups"] = jax.lax.scan(
+            body, x, (params["groups"], caches["groups"]))
+    for t_i, ltype in enumerate(tail):
+        li = period * n_groups + t_i
+        x, nc = _decode_layer(params[f"tail{t_i}"], x, cfg, ltype,
+                              moe_types[li], caches[f"tail{t_i}"], pos,
+                              cross_ctx, enc_out)
+        new_caches[f"tail{t_i}"] = nc
+
+    x = L.rmsnorm(params["final_norm"], x, cfg.norm_eps)
+    logits = L.unembed(params, x, cfg)
+    return logits, new_caches

@@ -1,0 +1,7 @@
+from repro.optim.adamw import AdamWConfig, AdamWState, init, update, schedule
+from repro.optim.grad_compress import (compress_int8, decompress_int8,
+                                       ErrorFeedbackState, ef_init, ef_step)
+
+__all__ = ["AdamWConfig", "AdamWState", "init", "update", "schedule",
+           "compress_int8", "decompress_int8", "ErrorFeedbackState",
+           "ef_init", "ef_step"]

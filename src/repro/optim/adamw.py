@@ -1,0 +1,90 @@
+"""AdamW in pure JAX with sharding-friendly state (fp32 moments).
+
+State is a pytree mirroring params; moment tensors inherit the parameter's
+logical axes so the mesh rules shard optimizer state exactly like weights
+(ZeRO-style when FSDP rules are active — no replicated optimizer memory).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class AdamWConfig:
+    lr: float = 3e-4
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    grad_clip: float = 1.0
+    warmup_steps: int = 100
+    total_steps: int = 10_000
+    min_lr_frac: float = 0.1
+
+
+class AdamWState(NamedTuple):
+    step: jax.Array
+    mu: Any
+    nu: Any
+
+
+def schedule(cfg: AdamWConfig, step):
+    """Linear warmup + cosine decay to min_lr_frac."""
+    step = step.astype(jnp.float32)
+    warm = step / jnp.maximum(cfg.warmup_steps, 1)
+    t = (step - cfg.warmup_steps) / jnp.maximum(
+        cfg.total_steps - cfg.warmup_steps, 1)
+    t = jnp.clip(t, 0.0, 1.0)
+    cos = cfg.min_lr_frac + (1 - cfg.min_lr_frac) * 0.5 * (1 +
+                                                           jnp.cos(jnp.pi * t))
+    return cfg.lr * jnp.where(step < cfg.warmup_steps, warm, cos)
+
+
+def init(params) -> AdamWState:
+    zeros = lambda p: jnp.zeros(p.shape, jnp.float32)
+    return AdamWState(step=jnp.zeros((), jnp.int32),
+                      mu=jax.tree.map(zeros, params),
+                      nu=jax.tree.map(zeros, params))
+
+
+def global_norm(tree) -> jax.Array:
+    return jnp.sqrt(sum(jnp.sum(jnp.square(x.astype(jnp.float32)))
+                        for x in jax.tree.leaves(tree)))
+
+
+def update(cfg: AdamWConfig, grads, state: AdamWState, params):
+    """-> (new_params, new_state, metrics)."""
+    gnorm = global_norm(grads)
+    clip = jnp.minimum(1.0, cfg.grad_clip / (gnorm + 1e-9))
+    step = state.step + 1
+    lr = schedule(cfg, step)
+    b1c = 1 - cfg.b1 ** step.astype(jnp.float32)
+    b2c = 1 - cfg.b2 ** step.astype(jnp.float32)
+
+    def upd(g, m, v, p):
+        g = g.astype(jnp.float32) * clip
+        m = cfg.b1 * m + (1 - cfg.b1) * g
+        v = cfg.b2 * v + (1 - cfg.b2) * g * g
+        mhat = m / b1c
+        vhat = v / b2c
+        delta = mhat / (jnp.sqrt(vhat) + cfg.eps)
+        # decoupled weight decay (skip 1-D params: norms, biases, scalars)
+        if p.ndim >= 2:
+            delta = delta + cfg.weight_decay * p.astype(jnp.float32)
+        newp = p.astype(jnp.float32) - lr * delta
+        return newp.astype(p.dtype), m, v
+
+    out = jax.tree.map(upd, grads, state.mu, state.nu, params)
+    newp = jax.tree.map(lambda o: o[0], out, is_leaf=lambda x:
+                        isinstance(x, tuple) and len(x) == 3)
+    mu = jax.tree.map(lambda o: o[1], out, is_leaf=lambda x:
+                      isinstance(x, tuple) and len(x) == 3)
+    nu = jax.tree.map(lambda o: o[2], out, is_leaf=lambda x:
+                      isinstance(x, tuple) and len(x) == 3)
+    metrics = {"grad_norm": gnorm, "lr": lr}
+    return newp, AdamWState(step, mu, nu), metrics

@@ -1,0 +1,6 @@
+from repro.runtime.fault_tolerance import (HeartbeatRegistry, ElasticPlan,
+                                           plan_elastic_mesh,
+                                           StragglerPolicy, RunSupervisor)
+
+__all__ = ["HeartbeatRegistry", "ElasticPlan", "plan_elastic_mesh",
+           "StragglerPolicy", "RunSupervisor"]

@@ -1,0 +1,28 @@
+"""Shared fixtures. NOTE: no XLA_FLAGS device-count override here — smoke
+tests and benches must see the single real CPU device (dry-run sets its own
+flags in its own process)."""
+
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.core import build_ivfpq, pad_clusters
+from repro.data import make_clustered_corpus
+
+
+@pytest.fixture(scope="session")
+def small_corpus():
+    return make_clustered_corpus(0, n=8000, d=32, n_queries=64,
+                                 n_components=32, k_gt=10)
+
+
+@pytest.fixture(scope="session")
+def small_index(small_corpus):
+    idx = build_ivfpq(jax.random.PRNGKey(0), small_corpus.points,
+                      nlist=64, m=16, cb=256, kmeans_iters=6, pq_iters=6)
+    return idx
+
+
+@pytest.fixture(scope="session")
+def small_clusters(small_index):
+    return pad_clusters(small_index)

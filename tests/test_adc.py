@@ -1,0 +1,97 @@
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import (train_pq, encode_pq, build_lut, build_lut_direct,
+                        build_lut_batch, scan_codes, scan_codes_onehot,
+                        adc_distances, make_square_lut, square_via_lut,
+                        quantize_codebook, build_lut_multiplierless,
+                        build_lut_int_reference, scan_codes_int,
+                        quantize_residual)
+
+
+@pytest.fixture(scope="module")
+def cb_and_residual():
+    rng = np.random.default_rng(0)
+    res = jnp.asarray(rng.normal(0, 5, size=(2000, 32)).astype(np.float32))
+    cb = train_pq(jax.random.PRNGKey(0), res, m=8, cb=64, iters=6)
+    return cb, res
+
+
+def test_lut_expansion_matches_direct(cb_and_residual):
+    cb, res = cb_and_residual
+    for i in range(4):
+        lut_e = np.asarray(build_lut(cb, res[i]))
+        lut_d = np.asarray(build_lut_direct(cb, res[i]))
+        np.testing.assert_allclose(lut_e, lut_d, rtol=1e-4, atol=1e-2)
+
+
+def test_adc_equals_decoded_distance(cb_and_residual):
+    """ADC distance == exact distance to the *decoded* (quantized) point."""
+    from repro.core import decode_pq
+    cb, res = cb_and_residual
+    codes = encode_pq(cb, res[:100])
+    recon = decode_pq(cb, codes)
+    q = res[500]
+    lut = build_lut(cb, q)
+    adc = np.asarray(scan_codes(lut, codes))
+    exact = np.asarray(jnp.sum((q[None] - recon) ** 2, -1))
+    np.testing.assert_allclose(adc, exact, rtol=1e-3, atol=0.5)
+
+
+def test_onehot_matches_gather(cb_and_residual):
+    cb, res = cb_and_residual
+    codes = encode_pq(cb, res[:256])
+    lut = build_lut(cb, res[999])
+    a = np.asarray(scan_codes(lut, codes))
+    b = np.asarray(scan_codes_onehot(lut, codes))
+    np.testing.assert_allclose(a, b, rtol=1e-5, atol=1e-2)
+
+
+def test_adc_distances_masks_padding(cb_and_residual):
+    cb, res = cb_and_residual
+    codes = encode_pq(cb, res[:64]).reshape(2, 32, 8)
+    lut = build_lut_batch(cb, res[100:102])
+    sizes = jnp.array([32, 10], jnp.int32)
+    d = np.asarray(adc_distances(lut, codes, sizes))
+    assert np.isfinite(d[0]).all()
+    assert np.isinf(d[1, 10:]).all() and np.isfinite(d[1, :10]).all()
+
+
+# ---- multiplier-less (paper §III-A) ---------------------------------------
+
+def test_square_lut_exact():
+    sq = make_square_lut(8)
+    v = jnp.arange(-255, 256, dtype=jnp.int32)
+    np.testing.assert_array_equal(np.asarray(square_via_lut(v, sq)),
+                                  np.asarray(v) ** 2)
+
+
+def test_multiplierless_lut_is_lossless(cb_and_residual):
+    """Paper claim: the LUT conversion is LOSSLESS — bit-identical integer
+    LUTs with and without multiplies."""
+    cb, res = cb_and_residual
+    qcb = quantize_codebook(cb, scale=0.1)
+    for i in range(8):
+        rq = quantize_residual(res[i], qcb.scale)
+        lut_nomul = np.asarray(build_lut_multiplierless(qcb, rq))
+        lut_mul = np.asarray(build_lut_int_reference(qcb, rq))
+        np.testing.assert_array_equal(lut_nomul, lut_mul)  # exact, not close
+
+
+def test_multiplierless_scan_ranking_matches_float(cb_and_residual):
+    """Quantized-int ADC must preserve the float path's nearest neighbor
+    almost always (scale small vs data spread)."""
+    cb, res = cb_and_residual
+    codes = encode_pq(cb, res[:512])
+    qcb = quantize_codebook(cb, scale=0.05)
+    agree = 0
+    for i in range(16):
+        lut_f = build_lut(cb, res[1000 + i])
+        rq = quantize_residual(res[1000 + i], qcb.scale)
+        lut_i = build_lut_multiplierless(qcb, rq)
+        nn_f = int(jnp.argmin(scan_codes(lut_f, codes)))
+        nn_i = int(jnp.argmin(scan_codes_int(lut_i, codes)))
+        agree += (nn_f == nn_i)
+    assert agree >= 13  # >= 80% top-1 agreement at this quantization scale

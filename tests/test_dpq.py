@@ -1,0 +1,46 @@
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.dpq import train_dpq
+from repro.core.pq import train_pq, encode_pq, decode_pq
+
+
+def _recon_err(cb, res):
+    recon = decode_pq(cb, encode_pq(cb, res))
+    return float(jnp.mean(jnp.sum((res - recon) ** 2, -1)))
+
+
+def test_dpq_improves_over_warmstart():
+    rng = np.random.default_rng(0)
+    res = jnp.asarray(rng.normal(0, 5, size=(2000, 32)).astype(np.float32))
+    warm = train_pq(jax.random.PRNGKey(0), res, m=8, cb=32, iters=4)
+    dpq, losses = train_dpq(jax.random.PRNGKey(0), res, m=8, cb=32,
+                            steps=200)
+    assert float(losses[-1]) < float(losses[0])          # training works
+    assert _recon_err(dpq, res) < _recon_err(warm, res) * 1.02
+
+
+def test_dpq_codebook_is_drop_in():
+    """A DPQ codebook must flow through the unchanged ADC stack."""
+    from repro.core.adc import build_lut, scan_codes
+    rng = np.random.default_rng(1)
+    res = jnp.asarray(rng.normal(0, 5, size=(1000, 16)).astype(np.float32))
+    dpq, _ = train_dpq(jax.random.PRNGKey(1), res, m=4, cb=16, steps=100)
+    codes = encode_pq(dpq, res[:100])
+    lut = build_lut(dpq, res[500])
+    d = scan_codes(lut, codes)
+    assert d.shape == (100,)
+    # ADC distance equals exact distance to the decoded point
+    recon = decode_pq(dpq, codes)
+    exact = jnp.sum((res[500][None] - recon) ** 2, -1)
+    np.testing.assert_allclose(np.asarray(d), np.asarray(exact), rtol=1e-3,
+                               atol=0.5)
+
+
+def test_dpq_cold_start_trains():
+    rng = np.random.default_rng(2)
+    res = jnp.asarray(rng.normal(0, 3, size=(1500, 16)).astype(np.float32))
+    dpq, losses = train_dpq(jax.random.PRNGKey(2), res, m=4, cb=16,
+                            steps=250, kmeans_warmstart=False)
+    assert float(losses[-1]) < 0.7 * float(losses[0])

@@ -1,0 +1,68 @@
+import dataclasses
+import math
+
+import numpy as np
+import pytest
+
+from repro.core.dse import DSESpace, run_dse
+from repro.core.perf_model import IndexParams, UPMEM_PROFILE, total_time
+
+
+BASE = IndexParams(n_total=10_000_000, nlist=4096, q=4096, d=128, k=10,
+                   p=32, m=16, cb=256)
+
+
+def synthetic_accuracy(ix: IndexParams) -> float:
+    """Monotone surrogate recall surface: rises with nprobe coverage and
+    code resolution, falls with cluster fragmentation.  Shaped to put the
+    feasibility frontier inside the search space."""
+    coverage = 1.0 - math.exp(-3.0 * ix.p * ix.c / ix.n_total * 50)
+    resolution = 1.0 - math.exp(-0.12 * ix.m * math.log2(ix.cb))
+    return coverage * resolution
+
+
+SPACE = DSESpace(k=(10,), nprobe=(8, 16, 32, 64, 96, 128),
+                 nlist=(1024, 4096, 16384), m=(8, 16, 32), cb=(256,))
+
+
+def test_dse_returns_feasible_best():
+    res = run_dse(BASE, synthetic_accuracy, accuracy_constraint=0.8,
+                  space=SPACE, budget=20, seed=0)
+    assert res.best["feasible"]
+    assert res.best["accuracy"] >= 0.8
+    assert res.evals <= 20 + 1
+
+
+def test_dse_beats_worst_feasible():
+    """BO must find something much better than the worst feasible point."""
+    res = run_dse(BASE, synthetic_accuracy, accuracy_constraint=0.8,
+                  space=SPACE, budget=22, seed=1)
+    # exhaustive reference
+    times = []
+    for pt in SPACE.grid():
+        ix = dataclasses.replace(BASE, k=pt[0], p=pt[1], nlist=pt[2],
+                                 m=pt[3], cb=pt[4])
+        if synthetic_accuracy(ix) >= 0.8:
+            times.append(total_time(ix, UPMEM_PROFILE, multiplierless=True))
+    t_best, t_worst = min(times), max(times)
+    got = res.best["time_s"]
+    # within 25% of the global feasible optimum with ~40% of the evals
+    assert got <= t_best * 1.25 + 1e-12 or got < t_worst * 0.5
+
+
+def test_dse_exhaustive_small_space():
+    space = DSESpace(k=(10,), nprobe=(8, 16), nlist=(1024,), m=(8, 16),
+                     cb=(256,))
+    res = run_dse(BASE, synthetic_accuracy, accuracy_constraint=0.0,
+                  space=space, budget=50)
+    assert res.evals == space.size()   # degenerate exhaustive case (paper)
+
+
+def test_dse_respects_constraint_tradeoff():
+    """Tighter accuracy constraint must never yield a faster best design."""
+    r_loose = run_dse(BASE, synthetic_accuracy, accuracy_constraint=0.7,
+                      space=SPACE, budget=24, seed=3)
+    r_tight = run_dse(BASE, synthetic_accuracy, accuracy_constraint=0.9,
+                      space=SPACE, budget=24, seed=3)
+    if r_tight.best["feasible"] and r_loose.best["feasible"]:
+        assert r_tight.best["time_s"] >= r_loose.best["time_s"] * 0.999

@@ -1,0 +1,87 @@
+import math
+
+import numpy as np
+import pytest
+
+from repro.core.perf_model import (IndexParams, UPMEM_PROFILE,
+                                   TPU_V5E_PROFILE, phase_costs, phase_times,
+                                   c2io, total_time, make_task_latency_model,
+                                   roofline_terms, dominant_term, PHASES)
+
+
+BASE = IndexParams(n_total=100_000_000, nlist=2**14, q=10000, d=128,
+                   k=10, p=96, m=16, cb=256)
+
+
+def test_all_phases_present_and_positive():
+    costs = phase_costs(BASE, mult_cycles=32.0)
+    assert set(costs) == set(PHASES)
+    for ph in PHASES:
+        assert costs[ph]["ops"] > 0
+        assert costs[ph]["bytes"] + costs[ph]["local_bytes"] > 0
+
+
+def test_multiplierless_reduces_compute_not_below_io():
+    """§III-A: the conversion trades multiplies for scratchpad loads —
+    ops drop, (local) bytes rise, in LC and CL (the multiply phases)."""
+    with_mult = phase_costs(BASE, mult_cycles=32.0, multiplierless=False)
+    without = phase_costs(BASE, mult_cycles=32.0, multiplierless=True)
+    for ph in ("CL", "LC"):
+        assert without[ph]["ops"] < with_mult[ph]["ops"]
+        assert without[ph]["local_bytes"] > with_mult[ph]["local_bytes"]
+    # DC/TS have no multiplies — unchanged
+    for ph in ("DC", "TS"):
+        assert without[ph]["ops"] == with_mult[ph]["ops"]
+
+
+def test_multiplierless_speedup_magnitude_on_upmem():
+    """Paper Fig. 10a: LC speedup ~1.93x, end-to-end 1.17-1.40x.  The model
+    should put LC speedup in the 1.5-32x band (bounded by the IO wall)."""
+    t_mult = phase_times(BASE, UPMEM_PROFILE, multiplierless=False)
+    t_less = phase_times(BASE, UPMEM_PROFILE, multiplierless=True)
+    speedup_lc = t_mult["LC"] / t_less["LC"]
+    assert 1.2 < speedup_lc < 32.0
+
+
+def test_bottleneck_shifts_dc_to_lc_with_nlist():
+    """Paper Fig. 8: with growing nlist, DC share shrinks, LC share grows."""
+    import dataclasses
+    small = dataclasses.replace(BASE, nlist=2**12)
+    large = dataclasses.replace(BASE, nlist=2**16)
+    ts = phase_times(small, UPMEM_PROFILE, multiplierless=True)
+    tl = phase_times(large, UPMEM_PROFILE, multiplierless=True)
+    share_dc_small = ts["DC"] / (ts["DC"] + ts["LC"])
+    share_dc_large = tl["DC"] / (tl["DC"] + tl["LC"])
+    assert share_dc_large < share_dc_small
+
+
+def test_compute_scaling_speedup_paper_fig13():
+    """Fig. 13: 2x/5x DPU compute -> 4.63x/7.12x vs CPU; internally the
+    PIM time itself must improve sublinearly (compute-bound -> IO-bound)."""
+    t1 = total_time(BASE, UPMEM_PROFILE, multiplierless=True, compute_scale=1)
+    t2 = total_time(BASE, UPMEM_PROFILE, multiplierless=True, compute_scale=2)
+    t5 = total_time(BASE, UPMEM_PROFILE, multiplierless=True, compute_scale=5)
+    assert t1 > t2 >= t5
+    assert t1 / t5 <= 5.0 + 1e-9   # cannot beat linear
+    assert t1 / t2 > 1.05          # compute matters (paper's point)
+
+
+def test_c2io_drops_with_multiplierless():
+    a = c2io(BASE, multiplierless=False)
+    b = c2io(BASE, multiplierless=True)
+    assert b["LC"] <= a["LC"]
+
+
+def test_task_latency_model_monotone():
+    lm = make_task_latency_model(BASE, UPMEM_PROFILE)
+    assert lm.l_lut > 0 and lm.l_calc > 0 and lm.l_sort > 0
+    assert lm.task_latency(1000) > lm.task_latency(10)
+
+
+def test_roofline_terms_and_dominance():
+    terms = roofline_terms(flops=1e15, hbm_bytes=1e12, collective_bytes=1e10,
+                           chips=256)
+    assert math.isclose(terms["compute_s"], 1e15 / (256 * 197e12))
+    assert math.isclose(terms["memory_s"], 1e12 / (256 * 819e9))
+    assert dominant_term({"compute_s": 3, "memory_s": 1, "collective_s": 2}) \
+        == "compute_s"

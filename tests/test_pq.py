@@ -1,0 +1,73 @@
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import (train_pq, train_opq, encode_pq, decode_pq)
+
+
+def _residuals(n=4000, d=32, seed=0):
+    rng = np.random.default_rng(seed)
+    return jnp.asarray(rng.normal(0, 5, size=(n, d)).astype(np.float32))
+
+
+def test_pq_roundtrip_reduces_error():
+    res = _residuals()
+    cb = train_pq(jax.random.PRNGKey(0), res, m=8, cb=64, iters=8)
+    codes = encode_pq(cb, res)
+    recon = decode_pq(cb, codes)
+    err = float(jnp.mean(jnp.sum((res - recon) ** 2, -1)))
+    base = float(jnp.mean(jnp.sum(res ** 2, -1)))
+    assert err < 0.5 * base  # codebook must beat the zero quantizer well
+
+
+def test_pq_code_dtype_and_range():
+    res = _residuals(1000)
+    cb = train_pq(jax.random.PRNGKey(0), res, m=4, cb=256, iters=4)
+    codes = encode_pq(cb, res)
+    assert codes.dtype == jnp.uint8
+    assert int(codes.max()) < 256
+    cb2 = train_pq(jax.random.PRNGKey(0), res, m=4, cb=512, iters=2)
+    assert encode_pq(cb2, res).dtype == jnp.uint16
+
+
+def test_encode_is_argmin():
+    """Property: encoding then decoding must be at least as close as any
+    other codebook entry for each subspace."""
+    res = _residuals(200, d=16)
+    cb = train_pq(jax.random.PRNGKey(1), res, m=4, cb=32, iters=6)
+    codes = np.asarray(encode_pq(cb, res))
+    sub = np.asarray(res).reshape(200, 4, 4)
+    books = np.asarray(cb.codebooks)  # (4, 32, 4)
+    for m in range(4):
+        d = ((sub[:, m, None, :] - books[m][None]) ** 2).sum(-1)  # (200, 32)
+        np.testing.assert_array_equal(codes[:, m], d.argmin(1))
+
+
+def test_more_entries_less_error():
+    res = _residuals()
+    errs = []
+    for cbn in (16, 64, 256):
+        cb = train_pq(jax.random.PRNGKey(2), res, m=8, cb=cbn, iters=8)
+        recon = decode_pq(cb, encode_pq(cb, res))
+        errs.append(float(jnp.mean(jnp.sum((res - recon) ** 2, -1))))
+    assert errs[0] > errs[1] > errs[2]
+
+
+def test_opq_not_worse_than_pq():
+    # correlated dims: rotation should help (or at least not hurt much)
+    rng = np.random.default_rng(7)
+    z = rng.normal(size=(3000, 8)).astype(np.float32)
+    mix = rng.normal(size=(8, 32)).astype(np.float32)
+    res = jnp.asarray(z @ mix)
+    pq = train_pq(jax.random.PRNGKey(3), res, m=8, cb=32, iters=8)
+    e_pq = float(jnp.mean(jnp.sum(
+        (res - decode_pq(pq, encode_pq(pq, res))) ** 2, -1)))
+    opq = train_opq(jax.random.PRNGKey(3), res, m=8, cb=32,
+                    outer_iters=3, pq_iters=6)
+    rot = res @ opq.rotation
+    e_opq = float(jnp.mean(jnp.sum(
+        (rot - decode_pq(opq.pq, encode_pq(opq.pq, rot))) ** 2, -1)))
+    assert e_opq < e_pq * 1.05
+    # rotation is orthogonal
+    r = np.asarray(opq.rotation)
+    np.testing.assert_allclose(r @ r.T, np.eye(32), atol=1e-4)

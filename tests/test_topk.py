@@ -1,0 +1,71 @@
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import topk_smallest, merge_topk, running_topk_update
+from repro.core.topk import bitonic_sort, bitonic_merge_sorted
+
+
+def test_topk_smallest_basic():
+    d = jnp.array([5.0, 1.0, 3.0, 2.0, 4.0])
+    i = jnp.arange(5, dtype=jnp.int32)
+    bd, bi = topk_smallest(d, i, 3)
+    np.testing.assert_allclose(np.asarray(bd), [1, 2, 3])
+    np.testing.assert_array_equal(np.asarray(bi), [1, 3, 2])
+
+
+@given(st.integers(0, 2**31 - 1), st.sampled_from([8, 16, 64, 128]))
+@settings(max_examples=25, deadline=None)
+def test_bitonic_sort_property(seed, n):
+    rng = np.random.default_rng(seed)
+    d = rng.normal(size=(n,)).astype(np.float32)
+    i = np.arange(n, dtype=np.int32)   # positional ids
+    sd, si = bitonic_sort(jnp.asarray(d), jnp.asarray(i))
+    order = np.argsort(d, kind="stable")
+    np.testing.assert_allclose(np.asarray(sd), d[order], rtol=1e-6)
+    # ids travel with their values (values unique w.p. 1)
+    np.testing.assert_allclose(d[np.asarray(si)], d[order], rtol=1e-6)
+
+
+@given(st.integers(0, 2**31 - 1), st.sampled_from([4, 8, 32]))
+@settings(max_examples=25, deadline=None)
+def test_bitonic_merge_property(seed, k):
+    rng = np.random.default_rng(seed)
+    a = np.sort(rng.normal(size=(k,)).astype(np.float32))
+    b = np.sort(rng.normal(size=(k,)).astype(np.float32))
+    ia = np.arange(k, dtype=np.int32)
+    ib = np.arange(k, 2 * k, dtype=np.int32)
+    md, mi = bitonic_merge_sorted(jnp.asarray(a), jnp.asarray(ia),
+                                  jnp.asarray(b), jnp.asarray(ib))
+    ref = np.sort(np.concatenate([a, b]))
+    np.testing.assert_allclose(np.asarray(md), ref, rtol=1e-6)
+
+
+@given(st.integers(0, 2**31 - 1))
+@settings(max_examples=25, deadline=None)
+def test_running_topk_matches_full_sort(seed):
+    """Property: folding blocks through running_topk_update == top-k of the
+    concatenation (the in-kernel TS invariant)."""
+    rng = np.random.default_rng(seed)
+    k, nblocks, bs = 16, 5, 64
+    blocks_d = rng.normal(size=(nblocks, bs)).astype(np.float32)
+    blocks_i = np.arange(nblocks * bs, dtype=np.int32).reshape(nblocks, bs)
+    best_d = jnp.full((k,), jnp.inf)
+    best_i = jnp.full((k,), -1, jnp.int32)
+    for bd, bi in zip(blocks_d, blocks_i):
+        best_d, best_i = running_topk_update(best_d, best_i,
+                                             jnp.asarray(bd), jnp.asarray(bi))
+    ref = np.sort(blocks_d.reshape(-1))[:k]
+    np.testing.assert_allclose(np.asarray(best_d), ref, rtol=1e-6)
+
+
+def test_merge_topk():
+    d1 = jnp.array([[1.0, 4.0, 9.0]])
+    i1 = jnp.array([[10, 40, 90]], dtype=jnp.int32)
+    d2 = jnp.array([[2.0, 3.0, 11.0]])
+    i2 = jnp.array([[20, 30, 110]], dtype=jnp.int32)
+    md, mi = merge_topk(d1, i1, d2, i2, 4)
+    np.testing.assert_allclose(np.asarray(md[0]), [1, 2, 3, 4])
+    np.testing.assert_array_equal(np.asarray(mi[0]), [10, 20, 30, 40])
