@@ -1,0 +1,98 @@
+"""Online serving bench: latency/throughput vs offered load and policy.
+
+  serve/load{q}        — Poisson arrivals at q QPS through the runtime:
+                         p50/p99 latency, achieved QPS, batch occupancy.
+  serve/policy_*       — bucket-policy ablation at fixed load: a single
+                         padded shape vs pow2 buckets (padding waste vs
+                         compile count).
+  serve/cache_*        — skewed (Zipf) stream with the hot-cluster LUT
+                         cache on vs off: hit rate and p50 effect.
+
+All timings are measured engine wall-clock charged onto a virtual-clock
+arrival trace (single-server model), so queueing delay appears as load
+approaches capacity.
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+from benchmarks.common import corpus_and_index, row
+from repro.core import SearchParams
+from repro.runtime import (HotClusterLUTCache, LocalEngine, ServingConfig,
+                           ServingRuntime)
+
+
+def _poisson_stream(queries, n_requests, qps, rng, skew=None):
+    """(t, query) arrivals; ``skew`` = Zipf exponent over the query pool."""
+    gaps = rng.exponential(1.0 / qps, size=n_requests)
+    times = np.cumsum(gaps)
+    if skew is None:
+        picks = rng.integers(0, len(queries), size=n_requests)
+    else:
+        ranks = np.arange(1, len(queries) + 1, dtype=np.float64)
+        pmf = ranks ** -skew
+        pmf /= pmf.sum()
+        picks = rng.choice(len(queries), size=n_requests, p=pmf)
+    return [(float(times[i]), queries[picks[i]]) for i in range(n_requests)]
+
+
+def _serve(engine, stream, d, cfg):
+    rt = ServingRuntime(engine, cfg)
+    rt.warmup(d)
+    rt.run_stream(stream)
+    return rt.metrics()
+
+
+def run(quick: bool = False):
+    out = []
+    n_requests = 64 if quick else 512
+    ds, idx, clusters = (corpus_and_index(n=8000, d=32, nlist=64, m=8,
+                                          n_queries=64)
+                         if quick else corpus_and_index())
+    queries = np.asarray(ds.queries)
+    d = queries.shape[1]
+    params = SearchParams(nprobe=8, k=10)
+    engine = LocalEngine(idx, clusters, params)
+    rng = np.random.default_rng(0)
+
+    # -- throughput vs offered load ---------------------------------------
+    loads = [200] if quick else [200, 1000, 5000]
+    for qps in loads:
+        m = _serve(engine, _poisson_stream(queries, n_requests, qps, rng),
+                   d, ServingConfig(buckets=(1, 2, 4, 8, 16, 32),
+                                    max_wait_s=2e-3))
+        out.append(row(
+            f"serve/load{qps}", m["p99_ms"] * 1e-3,
+            f"p50_ms={m['p50_ms']:.2f}_qps={m['qps']:.0f}"
+            f"_occ={m['avg_batch_occupancy']:.2f}"
+            f"_batches={m['batches']}"))
+
+    # -- bucket policy ablation -------------------------------------------
+    policies = {"single32": (32,), "pow2": (1, 2, 4, 8, 16, 32),
+                "coarse": (8, 32)}
+    for name, buckets in policies.items():
+        m = _serve(engine,
+                   _poisson_stream(queries, n_requests, loads[-1], rng),
+                   d, ServingConfig(buckets=buckets, max_wait_s=2e-3))
+        out.append(row(
+            f"serve/policy_{name}", m["p99_ms"] * 1e-3,
+            f"p50_ms={m['p50_ms']:.2f}_pad={m['pad_fraction']:.2f}"
+            f"_shapes={len(buckets)}"))
+
+    # -- hot-cluster LUT cache on a skewed stream -------------------------
+    pool = queries[:32]
+    for name, cache in (("off", None),
+                        ("on", HotClusterLUTCache(capacity=4096))):
+        eng = LocalEngine(idx, clusters, params, lut_cache=cache)
+        m = _serve(eng,
+                   _poisson_stream(pool, n_requests, loads[-1], rng,
+                                   skew=1.2),
+                   d, ServingConfig(buckets=(1, 2, 4, 8, 16, 32),
+                                    max_wait_s=2e-3))
+        hit = (m.get("lut_cache", {}).get("hit_rate", 0.0)
+               if cache else 0.0)
+        out.append(row(
+            f"serve/cache_{name}", m["p99_ms"] * 1e-3,
+            f"p50_ms={m['p50_ms']:.2f}_hit_rate={hit:.2f}"))
+    return out

@@ -19,7 +19,7 @@ def main() -> None:
     from benchmarks import (bench_recall, bench_e2e, bench_breakdown,
                             bench_multiplierless, bench_perfmodel,
                             bench_loadbalance, bench_scaling, bench_kernels,
-                            bench_dse)
+                            bench_dse, bench_serving)
     benches = {
         "recall": bench_recall,            # §V-A accuracy constraint
         "e2e": bench_e2e,                  # Fig. 6/7
@@ -30,6 +30,7 @@ def main() -> None:
         "scaling": bench_scaling,          # Fig. 13
         "kernels": bench_kernels,          # Pallas micro-benches
         "dse": bench_dse,                  # §III-C
+        "serving": bench_serving,          # online micro-batching runtime
     }
     if args.only:
         names = args.only.split(",")

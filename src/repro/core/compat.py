@@ -1,0 +1,14 @@
+"""JAX version compatibility shims for core engine symbols.
+
+``shard_map`` graduated from ``jax.experimental`` to the public ``jax``
+namespace; resolve whichever this install provides so both the engine
+and the launch tooling import on either version.  (Pallas-specific
+shims live in ``repro.kernels.compat``.)
+"""
+
+import jax
+
+try:                                  # public API in newer jax
+    shard_map = jax.shard_map
+except AttributeError:                # older jax: experimental namespace
+    from jax.experimental.shard_map import shard_map  # noqa: F401

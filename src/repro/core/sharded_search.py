@@ -32,6 +32,8 @@ import jax.numpy as jnp
 import numpy as np
 from jax.sharding import PartitionSpec as P
 
+from repro.core.compat import shard_map
+
 from repro.core.ivf import IVFPQIndex, PaddedClusters
 from repro.core.pq import PQCodebook
 from repro.core.adc import build_lut_batch, adc_distances
@@ -237,7 +239,7 @@ def make_sharded_step(mesh, sindex: ShardedIndex, *, k: int,
                     sidx[0], queries, centroids)
         return bd[None], bi[None]
 
-    sharded = jax.shard_map(
+    sharded = shard_map(
         per_shard, mesh=mesh,
         in_specs=(P(axis), P(axis), P(axis), P(axis), P(axis), P(axis),
                   P(), P()),

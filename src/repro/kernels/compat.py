@@ -1,0 +1,10 @@
+"""JAX version compatibility shims for Pallas TPU symbols.
+
+``TPUCompilerParams`` was renamed to ``CompilerParams`` in newer JAX;
+resolve whichever this install provides so the kernels import on both.
+"""
+
+from jax.experimental.pallas import tpu as pltpu
+
+CompilerParams = getattr(pltpu, "CompilerParams", None) \
+    or getattr(pltpu, "TPUCompilerParams")

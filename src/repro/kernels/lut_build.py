@@ -28,7 +28,8 @@ import functools
 import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
-from jax.experimental.pallas import tpu as pltpu
+
+from repro.kernels.compat import CompilerParams
 
 
 def _lut_build_kernel(res_ref, cb_ref, sqn_ref, out_ref):
@@ -61,7 +62,7 @@ def lut_build_pallas(residuals: jax.Array, codebooks: jax.Array,
         ],
         out_specs=pl.BlockSpec((block_t, 1, cbn), lambda i, j: (i, j, 0)),
         out_shape=jax.ShapeDtypeStruct((t, m, cbn), jnp.float32),
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=CompilerParams(
             dimension_semantics=("parallel", "parallel")),
         interpret=interpret,
         name="drim_lut_build",

@@ -36,6 +36,8 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from repro.kernels.compat import CompilerParams
+
 from repro.core.topk import running_topk_update
 
 
@@ -88,7 +90,7 @@ def pq_scan_dc_pallas(lut: jax.Array, codes: jax.Array, *,
         ],
         out_specs=pl.BlockSpec((1, block_c), lambda i, j: (i, j)),
         out_shape=jax.ShapeDtypeStruct((t, c), jnp.float32),
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=CompilerParams(
             dimension_semantics=("parallel", "parallel")),
         interpret=interpret,
         name=f"drim_pq_scan_dc_{strategy}",
@@ -166,7 +168,7 @@ def pq_scan_topk_pallas(lut: jax.Array, codes: jax.Array, ids: jax.Array,
             pltpu.VMEM((1, k_pad), jnp.float32),
             pltpu.VMEM((1, k_pad), jnp.int32),
         ],
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=CompilerParams(
             dimension_semantics=("parallel", "arbitrary")),
         interpret=interpret,
         name=f"drim_pq_scan_topk_{strategy}",

@@ -218,7 +218,8 @@ def run_drim_ann_cell(multi_pod: bool, out_dir: pathlib.Path = ART_DIR,
                                  lut_dtype=lut_dtype)
         return bd[None], bi[None]
 
-    smap = jax.shard_map(
+    from repro.core.compat import shard_map
+    smap = shard_map(
         search_step, mesh=mesh,
         in_specs=(P(shard_axes), P(shard_axes), P(shard_axes), P(shard_axes),
                   P(shard_axes), P(shard_axes), P(), P(), P(), P()),

@@ -65,22 +65,28 @@ def train_loop(cfg, *, steps: int, global_batch: int, seq_len: int,
 
     history = []
     t0 = time.time()
-    for step in range(step0, steps):
-        if fail_at_step is not None and step == fail_at_step:
-            raise RuntimeError(f"injected failure at step {step}")
-        batch = pipe.batch_at(step)
-        batch = {k: jnp.asarray(v) for k, v in batch.items()}
-        ctx = ctx_for(step)
-        if ctx is not None:
-            batch["ctx"] = ctx
-        params, opt_state, metrics = step_fn(params, opt_state, batch)
-        history.append({k: float(v) for k, v in metrics.items()})
-        if step % log_every == 0:
-            print(f"[train] step {step} loss {history[-1]['loss']:.4f} "
-                  f"({time.time() - t0:.1f}s)")
-        if ckpt and (step + 1) % ckpt_every == 0:
-            ckpt.save(step + 1, (params, opt_state),
-                      extra={"step": step + 1}, blocking=False)
+    try:
+        for step in range(step0, steps):
+            if fail_at_step is not None and step == fail_at_step:
+                raise RuntimeError(f"injected failure at step {step}")
+            batch = pipe.batch_at(step)
+            batch = {k: jnp.asarray(v) for k, v in batch.items()}
+            ctx = ctx_for(step)
+            if ctx is not None:
+                batch["ctx"] = ctx
+            params, opt_state, metrics = step_fn(params, opt_state, batch)
+            history.append({k: float(v) for k, v in metrics.items()})
+            if step % log_every == 0:
+                print(f"[train] step {step} loss {history[-1]['loss']:.4f} "
+                      f"({time.time() - t0:.1f}s)")
+            if ckpt and (step + 1) % ckpt_every == 0:
+                ckpt.save(step + 1, (params, opt_state),
+                          extra={"step": step + 1}, blocking=False)
+    finally:
+        # an in-flight async save must land even when the loop dies —
+        # the daemon writer thread would otherwise race a restart
+        if ckpt:
+            ckpt.wait()
     if ckpt:
         ckpt.save(steps, (params, opt_state), extra={"step": steps},
                   blocking=True)

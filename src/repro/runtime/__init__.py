@@ -1,6 +1,18 @@
 from repro.runtime.fault_tolerance import (HeartbeatRegistry, ElasticPlan,
                                            plan_elastic_mesh,
                                            StragglerPolicy, RunSupervisor)
+from repro.runtime.batching import (BucketPolicy, MicroBatch, MicroBatcher,
+                                    Request)
+from repro.runtime.cache import (CacheStats, HotClusterLUTCache, LRUCache,
+                                 query_hash_bucket)
+from repro.runtime.serving import (LocalEngine, SearchEngine, ServingConfig,
+                                   ServingRuntime, ServingStats,
+                                   ShardedEngine)
 
 __all__ = ["HeartbeatRegistry", "ElasticPlan", "plan_elastic_mesh",
-           "StragglerPolicy", "RunSupervisor"]
+           "StragglerPolicy", "RunSupervisor",
+           "BucketPolicy", "MicroBatch", "MicroBatcher", "Request",
+           "CacheStats", "HotClusterLUTCache", "LRUCache",
+           "query_hash_bucket",
+           "LocalEngine", "SearchEngine", "ServingConfig", "ServingRuntime",
+           "ServingStats", "ShardedEngine"]

@@ -1,0 +1,181 @@
+"""Dynamic micro-batching for the online serving runtime.
+
+Online ANNS traffic (recommendation, RAG — the paper's motivating
+workloads, §I) arrives as a stream of single queries, but the engine
+wants batches: one host→PIM broadcast per batch (§IV) and one ``jax.jit``
+compilation per *batch shape*.  The batcher coalesces requests into
+fixed-shape micro-batches drawn from a small set of padded batch-size
+buckets so the engine compiles once per bucket instead of once per
+observed batch size.
+
+Flush policy (both knobs in :class:`MicroBatcher`):
+
+  * flush-on-full      — queue depth reached ``max_batch``;
+  * flush-on-deadline  — the oldest queued request has waited
+    ``max_wait_s`` (bounds tail latency under light load).
+
+All timestamps are passed in explicitly (``now``), so the batcher is
+deterministic under a virtual clock — tests and the simulation driver in
+``serving.py`` exploit this.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from collections import deque
+from typing import Deque, List, Optional
+
+import numpy as np
+
+
+class BucketPolicy:
+    """A small sorted set of allowed (padded) batch sizes.
+
+    ``bucket_for(n)`` returns the smallest bucket >= n (clamped to the
+    largest bucket).  Fewer buckets => fewer jit compilations but more
+    padding waste; the serving bench sweeps this trade-off.
+    """
+
+    def __init__(self, buckets):
+        bs = sorted({int(b) for b in buckets})
+        if not bs or bs[0] < 1:
+            raise ValueError(f"buckets must be positive ints, got {buckets}")
+        self.buckets = tuple(bs)
+
+    @classmethod
+    def pow2(cls, max_batch: int) -> "BucketPolicy":
+        """1, 2, 4, ... up to (and including) max_batch."""
+        bs = []
+        b = 1
+        while b < max_batch:
+            bs.append(b)
+            b *= 2
+        bs.append(max_batch)
+        return cls(bs)
+
+    @classmethod
+    def single(cls, batch: int) -> "BucketPolicy":
+        """One fixed shape — maximal padding, minimal compilation."""
+        return cls([batch])
+
+    @property
+    def max_batch(self) -> int:
+        return self.buckets[-1]
+
+    def bucket_for(self, n: int) -> int:
+        for b in self.buckets:
+            if b >= n:
+                return b
+        return self.buckets[-1]
+
+    def __repr__(self):
+        return f"BucketPolicy{self.buckets}"
+
+
+@dataclasses.dataclass
+class Request:
+    """One in-flight query.  Result fields are stamped at completion."""
+    req_id: int
+    query: np.ndarray            # (D,) float32
+    t_arrival: float
+    # stamped by the runtime when the batch it rode in completes:
+    dists: Optional[np.ndarray] = None    # (k,)
+    ids: Optional[np.ndarray] = None      # (k,)
+    t_done: Optional[float] = None
+    bucket: Optional[int] = None          # padded batch shape it rode in
+
+    @property
+    def done(self) -> bool:
+        return self.ids is not None
+
+    @property
+    def latency_s(self) -> float:
+        if self.t_done is None:
+            raise RuntimeError(f"request {self.req_id} not served yet")
+        return self.t_done - self.t_arrival
+
+
+@dataclasses.dataclass
+class MicroBatch:
+    """A flushed, padded batch ready for the engine."""
+    requests: List[Request]      # the n_valid real requests, queue order
+    queries: np.ndarray          # (bucket, D) — rows >= n_valid are zero pad
+    bucket: int
+    reason: str                  # "full" | "deadline" | "drain"
+    t_flush: float
+
+    @property
+    def n_valid(self) -> int:
+        return len(self.requests)
+
+
+class MicroBatcher:
+    """Request queue + bucketed flush policy (no engine knowledge)."""
+
+    def __init__(self, policy: BucketPolicy, max_wait_s: float = 2e-3,
+                 max_batch: Optional[int] = None):
+        self.policy = policy
+        self.max_wait_s = float(max_wait_s)
+        self.max_batch = int(max_batch or policy.max_batch)
+        if self.max_batch > policy.max_batch:
+            raise ValueError("max_batch exceeds largest bucket")
+        self._queue: Deque[Request] = deque()
+        self._next_id = 0
+        # counters for the serving stats
+        self.n_submitted = 0
+        self.flushes = {"full": 0, "deadline": 0, "drain": 0}
+        self.padded_slots = 0
+        self.valid_slots = 0
+
+    # -- queue side --------------------------------------------------------
+    def submit(self, query: np.ndarray, now: float) -> Request:
+        req = Request(self._next_id, np.asarray(query, np.float32),
+                      float(now))
+        self._next_id += 1
+        self.n_submitted += 1
+        self._queue.append(req)
+        return req
+
+    @property
+    def depth(self) -> int:
+        return len(self._queue)
+
+    def next_deadline(self) -> Optional[float]:
+        """Virtual time at which the oldest request must flush."""
+        if not self._queue:
+            return None
+        return self._queue[0].t_arrival + self.max_wait_s
+
+    # -- flush side --------------------------------------------------------
+    def ready(self, now: float) -> Optional[str]:
+        if not self._queue:
+            return None
+        if len(self._queue) >= self.max_batch:
+            return "full"
+        if now >= self.next_deadline():
+            return "deadline"
+        return None
+
+    def poll(self, now: float, drain: bool = False) -> Optional[MicroBatch]:
+        """Flush one micro-batch if policy (or ``drain``) says so."""
+        reason = self.ready(now)
+        if reason is None:
+            if not (drain and self._queue):
+                return None
+            reason = "drain"
+        take = min(len(self._queue), self.max_batch)
+        reqs = [self._queue.popleft() for _ in range(take)]
+        bucket = self.policy.bucket_for(take)
+        d = reqs[0].query.shape[0]
+        queries = np.zeros((bucket, d), np.float32)
+        for i, r in enumerate(reqs):
+            queries[i] = r.query
+            r.bucket = bucket
+        self.flushes[reason] += 1
+        self.valid_slots += take
+        self.padded_slots += bucket - take
+        return MicroBatch(reqs, queries, bucket, reason, float(now))
+
+    def flush(self, now: float) -> Optional[MicroBatch]:
+        """Unconditional flush of whatever is queued (end of stream)."""
+        return self.poll(now, drain=True)

@@ -1,0 +1,135 @@
+"""Hot-cluster LUT caching for skewed online query streams.
+
+The paper's load balancer exists because real query streams are skewed:
+a few hot clusters absorb most probes (§IV).  The same skew makes the LC
+phase redundant online — near-duplicate queries probing the same hot
+cluster rebuild near-identical (M, CB) LUTs.  This module provides an
+LRU cache keyed on ``(cluster id, query hash bucket)`` so a repeat hit
+skips LC for that (query, cluster) pair entirely.
+
+Query hash buckets: with ``granularity=None`` (default) the key is the
+hash of the exact f32 query bytes — only true repeats hit, and served
+results stay bit-identical to the uncached path.  A positive
+``granularity`` g quantizes the query to a grid of cell size g before
+hashing, so *near*-duplicates also hit at the cost of an approximation
+error bounded by the grid (knob for the serving bench).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import hashlib
+from collections import OrderedDict
+from typing import Any, Hashable, Optional
+
+import numpy as np
+
+
+@dataclasses.dataclass
+class CacheStats:
+    hits: int = 0
+    misses: int = 0
+    inserts: int = 0
+    evictions: int = 0
+
+    @property
+    def lookups(self) -> int:
+        return self.hits + self.misses
+
+    @property
+    def hit_rate(self) -> float:
+        return self.hits / self.lookups if self.lookups else 0.0
+
+    def as_dict(self) -> dict:
+        return {"hits": self.hits, "misses": self.misses,
+                "inserts": self.inserts, "evictions": self.evictions,
+                "hit_rate": round(self.hit_rate, 4)}
+
+
+class LRUCache:
+    """Plain LRU over hashable keys with hit/miss/eviction accounting."""
+
+    def __init__(self, capacity: int):
+        if capacity < 1:
+            raise ValueError("capacity must be >= 1")
+        self.capacity = int(capacity)
+        self._od: "OrderedDict[Hashable, Any]" = OrderedDict()
+        self.stats = CacheStats()
+
+    def __len__(self) -> int:
+        return len(self._od)
+
+    def __contains__(self, key) -> bool:
+        return key in self._od
+
+    def get(self, key) -> Optional[Any]:
+        v = self._od.get(key)
+        if v is None:
+            self.stats.misses += 1
+            return None
+        self._od.move_to_end(key)
+        self.stats.hits += 1
+        return v
+
+    def put(self, key, value) -> None:
+        if key in self._od:
+            self._od.move_to_end(key)
+            self._od[key] = value
+            return
+        self._od[key] = value
+        self.stats.inserts += 1
+        while len(self._od) > self.capacity:
+            self._od.popitem(last=False)
+            self.stats.evictions += 1
+
+
+def query_hash_bucket(query: np.ndarray,
+                      granularity: Optional[float] = None) -> int:
+    """Stable 64-bit bucket id for a query vector (optionally quantized)."""
+    q = np.ascontiguousarray(query, np.float32)
+    if granularity is not None:
+        q = np.round(q / np.float32(granularity)).astype(np.int64)
+        q = np.ascontiguousarray(q)
+    digest = hashlib.blake2b(q.tobytes(), digest_size=8).digest()
+    return int.from_bytes(digest, "little")
+
+
+class HotClusterLUTCache:
+    """LRU of per-(cluster, query-bucket) LC outputs — (M, CB) f32 LUTs.
+
+    A full LUT is M*CB*4 bytes (16 KiB at M=16, CB=256); ``capacity`` is
+    an entry count, so budget ~capacity * 16 KiB of host memory.
+    """
+
+    def __init__(self, capacity: int = 4096,
+                 granularity: Optional[float] = None):
+        self._lru = LRUCache(capacity)
+        self.granularity = granularity
+
+    @property
+    def stats(self) -> CacheStats:
+        return self._lru.stats
+
+    def bucket_of(self, query: np.ndarray) -> int:
+        """Hash a query once; reuse the bucket across its nprobe keys."""
+        return query_hash_bucket(query, self.granularity)
+
+    def key(self, cluster_id: int, query: np.ndarray):
+        return (int(cluster_id), self.bucket_of(query))
+
+    def get(self, cluster_id: int, query: np.ndarray):
+        return self._lru.get(self.key(cluster_id, query))
+
+    def get_by_bucket(self, cluster_id: int, bucket: int):
+        return self._lru.get((int(cluster_id), bucket))
+
+    def put(self, cluster_id: int, query: np.ndarray,
+            lut: np.ndarray) -> None:
+        self._lru.put(self.key(cluster_id, query), lut)
+
+    def put_by_bucket(self, cluster_id: int, bucket: int,
+                      lut: np.ndarray) -> None:
+        self._lru.put((int(cluster_id), bucket), lut)
+
+    def __len__(self) -> int:
+        return len(self._lru)

@@ -1,0 +1,410 @@
+"""Online serving runtime: micro-batched streaming search over the engine.
+
+Glues three pieces together:
+
+  * :mod:`repro.runtime.batching` — coalesces single-query requests into
+    fixed-shape padded micro-batches (bucketed so jit compiles once per
+    bucket), flushing on deadline or on a full batch;
+  * an engine behind the :class:`SearchEngine` protocol — either the
+    single-device pipeline (:class:`LocalEngine` around
+    ``core.search.search_ivfpq``, optionally with the hot-cluster LUT
+    cache skipping redundant LC work) or the distributed one
+    (:class:`ShardedEngine` around ``core.sharded_search``);
+  * :class:`ServingRuntime` — submit/step online API plus a
+    virtual-clock stream simulator with latency/throughput
+    instrumentation (p50/p99, queue depth, batch occupancy, cache hit
+    rate).
+
+Every engine op is row-wise per query, so a request's result is
+independent of which micro-batch it rode in — de-padded served results
+match a direct batched ``search()`` call exactly (asserted in tests and
+``examples/rag_serving.py``).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+import time
+from typing import List, Optional, Protocol, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.adc import adc_distances, build_lut_batch
+from repro.core.ivf import IVFPQIndex, PaddedClusters
+from repro.core.search import SearchParams, cluster_locate, search_ivfpq
+from repro.core.topk import topk_smallest
+from repro.runtime.batching import (BucketPolicy, MicroBatch, MicroBatcher,
+                                    Request)
+from repro.runtime.cache import HotClusterLUTCache
+
+
+class SearchEngine(Protocol):
+    """What the runtime needs from an engine: fixed k, batched search."""
+
+    k: int
+
+    def search_batch(self, queries: np.ndarray,
+                     n_valid: Optional[int] = None
+                     ) -> Tuple[np.ndarray, np.ndarray]:
+        """(B, D) f32 -> ((B, k) dists, (B, k) ids), row-wise per query.
+
+        ``n_valid``: rows >= n_valid are batch padding — engines may
+        skip caching/accounting for them (results for those rows are
+        discarded by the caller)."""
+        ...
+
+
+# ---------------------------------------------------------------------------
+# Engine adapters
+# ---------------------------------------------------------------------------
+
+@functools.partial(jax.jit, static_argnames=("nprobe",))
+def _cl_rc(queries, centroids, rotation, *, nprobe: int):
+    """CL + RC for the cached path: (Q, D) -> probes (Q, P), flat residuals
+    (Q*P, D).  Jitted per bucket shape like the main pipeline."""
+    probes, _ = cluster_locate(queries, centroids, nprobe)
+    residual = queries[:, None, :] - centroids[probes]
+    if rotation is not None:
+        residual = residual @ rotation
+    return probes, residual.reshape(probes.shape[0] * probes.shape[1], -1)
+
+
+@functools.partial(jax.jit, static_argnames=("k", "strategy", "nprobe"))
+def _dc_ts(lut, flat_probes, clusters: PaddedClusters, *, k: int,
+           strategy: str, nprobe: int):
+    """DC + TS over cache-assembled LUTs: (Q*P, M, CB) -> (Q, k) x2."""
+    codes = clusters.codes[flat_probes]
+    ids = clusters.ids[flat_probes]
+    sizes = clusters.sizes[flat_probes]
+    dists = adc_distances(
+        lut, codes, sizes,
+        strategy="gather" if strategy == "gather" else "onehot")
+    nq = lut.shape[0] // nprobe
+    cand_d = dists.reshape(nq, nprobe * clusters.cmax)
+    cand_i = ids.reshape(nq, nprobe * clusters.cmax)
+    return topk_smallest(cand_d, cand_i, k)
+
+
+class LocalEngine:
+    """Single-device five-phase pipeline behind the serving protocol.
+
+    With ``lut_cache`` set, the LC phase consults the hot-cluster LUT
+    cache per (query, probed cluster) pair and only computes LUTs for
+    misses (one batched ``build_lut_batch`` over the miss rows); RC/DC/TS
+    are unchanged, so at exact granularity results are bit-identical to
+    the uncached path.
+    """
+
+    def __init__(self, index: IVFPQIndex, clusters: PaddedClusters,
+                 params: SearchParams,
+                 lut_cache: Optional[HotClusterLUTCache] = None):
+        self.index = index
+        self.clusters = clusters
+        self.params = params
+        self.lut_cache = lut_cache
+        self.k = params.k
+
+    def search_batch(self, queries: np.ndarray,
+                     n_valid: Optional[int] = None
+                     ) -> Tuple[np.ndarray, np.ndarray]:
+        if self.lut_cache is None:
+            d, i = search_ivfpq(self.index, self.clusters,
+                                jnp.asarray(queries, jnp.float32),
+                                self.params)
+            return np.asarray(d), np.asarray(i)
+        return self._search_cached(np.asarray(queries, np.float32),
+                                   n_valid)
+
+    def precompile_lc(self, max_rows: int) -> None:
+        """Compile the cached path's miss-batch LC shapes (pow2 up to
+        ``max_rows``) ahead of traffic — a first-seen miss count would
+        otherwise pay its XLA compile mid-stream."""
+        cb = self.index.codebook
+        # the miss path pads to the NEXT pow2, so cover that shape too
+        max_rows = 1 << (max(max_rows, 1) - 1).bit_length()
+        s = 1
+        while s <= max_rows:
+            # numpy source so the host->device convert for this shape is
+            # also compiled, not just the LUT build itself
+            zeros = np.zeros((s, cb.m * cb.dsub), np.float32)
+            build_lut_batch(cb, jnp.asarray(zeros))
+            s *= 2
+
+    def _search_cached(self, queries: np.ndarray,
+                       n_valid: Optional[int] = None):
+        """CL/RC and DC/TS jitted (once per bucket shape); LC goes through
+        the cache host-side, batching LUT construction over miss rows.
+        Padding rows (>= n_valid) bypass the cache entirely — they must
+        not occupy LRU slots or distort hit-rate accounting."""
+        p = self.params
+        probes, flat_res = _cl_rc(jnp.asarray(queries), self.index.centroids,
+                                  self.index.rotation, nprobe=p.nprobe)
+        probes_np = np.asarray(probes)                     # (Q, P)
+        nq, npr = probes_np.shape
+        flat_probes = probes_np.reshape(-1)
+        n_valid_q = n_valid if n_valid is not None else nq
+        valid_rows = n_valid_q * npr
+        # one hash per (valid) query, reused across its nprobe cache keys
+        buckets = [self.lut_cache.bucket_of(queries[qi])
+                   for qi in range(n_valid_q)]
+
+        luts: List[Optional[np.ndarray]] = [None] * (nq * npr)
+        miss_rows: List[int] = []
+        for t in range(nq * npr):
+            if t >= valid_rows:                # pad row: compute, don't cache
+                miss_rows.append(t)
+                continue
+            hit = self.lut_cache.get_by_bucket(flat_probes[t],
+                                               buckets[t // npr])
+            if hit is None:
+                miss_rows.append(t)
+            else:
+                luts[t] = hit
+        if miss_rows:
+            # Gather miss rows host-side and pad the batch to a power of
+            # two: build_lut_batch (like any jax op) compiles per shape,
+            # and miss counts vary per batch — without bucketing them
+            # (and keeping the variable-size gather in numpy), every new
+            # count pays a fresh XLA compile that stalls the serving loop.
+            nmiss = len(miss_rows)
+            mpad = 1 << (nmiss - 1).bit_length()
+            flat_res_np = np.asarray(flat_res)
+            miss = np.zeros((mpad, flat_res_np.shape[1]), np.float32)
+            miss[:nmiss] = flat_res_np[miss_rows]
+            fresh = np.asarray(build_lut_batch(self.index.codebook,
+                                               jnp.asarray(miss)))[:nmiss]
+            for j, t in enumerate(miss_rows):
+                luts[t] = fresh[j]
+                if t < valid_rows:             # pad rows never enter the LRU
+                    self.lut_cache.put_by_bucket(flat_probes[t],
+                                                 buckets[t // npr], fresh[j])
+        lut = jnp.asarray(np.stack(luts))                  # (QP, M, CB)
+        bd, bi = _dc_ts(lut, jnp.asarray(flat_probes), self.clusters,
+                        k=p.k, strategy=p.strategy, nprobe=npr)
+        return np.asarray(bd), np.asarray(bi)
+
+
+class ShardedEngine:
+    """``core.sharded_search.DistributedEngine`` behind the protocol.
+
+    ``search(flush=True)`` drains deferred tasks, so each batch returns
+    complete results; per-query merge makes rows independent of batch
+    composition, which is what the de-padding invariant needs.
+    """
+
+    def __init__(self, engine):
+        self.engine = engine
+        self.k = engine.cfg.k
+
+    def search_batch(self, queries: np.ndarray,
+                     n_valid: Optional[int] = None
+                     ) -> Tuple[np.ndarray, np.ndarray]:
+        d, i, _info = self.engine.search(jnp.asarray(queries, jnp.float32))
+        return np.asarray(d), np.asarray(i)
+
+
+# ---------------------------------------------------------------------------
+# Instrumentation
+# ---------------------------------------------------------------------------
+
+def _percentile(xs: Sequence[float], pct: float) -> float:
+    if not xs:
+        return float("nan")
+    return float(np.percentile(np.asarray(xs, np.float64), pct))
+
+
+@dataclasses.dataclass
+class BatchRecord:
+    bucket: int
+    n_valid: int
+    reason: str
+    service_s: float
+    t_flush: float
+
+
+class ServingStats:
+    """Per-request latency + per-batch occupancy/service accounting."""
+
+    def __init__(self):
+        self.latencies_s: List[float] = []
+        self.batches: List[BatchRecord] = []
+        self.queue_depths: List[int] = []
+        self.t_first_arrival: Optional[float] = None
+        self.t_last_done: Optional[float] = None
+
+    def record_arrival(self, req: Request, depth: int) -> None:
+        if self.t_first_arrival is None:
+            self.t_first_arrival = req.t_arrival
+        self.queue_depths.append(depth)
+
+    def record_batch(self, batch: MicroBatch, service_s: float) -> None:
+        self.batches.append(BatchRecord(batch.bucket, batch.n_valid,
+                                        batch.reason, service_s,
+                                        batch.t_flush))
+
+    def record_done(self, req: Request) -> None:
+        self.latencies_s.append(req.latency_s)
+        if self.t_last_done is None or req.t_done > self.t_last_done:
+            self.t_last_done = req.t_done
+
+    def summary(self) -> dict:
+        n = len(self.latencies_s)
+        span = ((self.t_last_done - self.t_first_arrival)
+                if n and self.t_last_done is not None else 0.0)
+        slots = sum(b.bucket for b in self.batches)
+        valid = sum(b.n_valid for b in self.batches)
+        reasons = {"full": 0, "deadline": 0, "drain": 0}
+        for b in self.batches:
+            reasons[b.reason] += 1
+        return {
+            "requests": n,
+            "batches": len(self.batches),
+            "p50_ms": _percentile(self.latencies_s, 50) * 1e3,
+            "p99_ms": _percentile(self.latencies_s, 99) * 1e3,
+            "mean_ms": (float(np.mean(self.latencies_s)) * 1e3
+                        if n else float("nan")),
+            "qps": n / span if span > 0 else float("nan"),
+            "avg_batch_occupancy": valid / slots if slots else float("nan"),
+            "pad_fraction": (slots - valid) / slots if slots else 0.0,
+            "mean_queue_depth": (float(np.mean(self.queue_depths))
+                                 if self.queue_depths else 0.0),
+            "max_queue_depth": (max(self.queue_depths)
+                                if self.queue_depths else 0),
+            "flushes": reasons,
+        }
+
+
+# ---------------------------------------------------------------------------
+# Runtime
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass
+class ServingConfig:
+    """Bucket-policy and flush knobs (see README §serving)."""
+    buckets: Tuple[int, ...] = (1, 2, 4, 8, 16, 32)
+    max_wait_s: float = 2e-3          # deadline flush bound
+    max_batch: Optional[int] = None   # default: largest bucket
+
+    def make_batcher(self) -> MicroBatcher:
+        return MicroBatcher(BucketPolicy(self.buckets),
+                            max_wait_s=self.max_wait_s,
+                            max_batch=self.max_batch)
+
+
+class ServingRuntime:
+    """Single-server online loop: submit -> micro-batch -> engine -> depad.
+
+    Two usage modes:
+      * online:  ``submit(q, now)`` + ``step(now)`` under a caller clock;
+      * offline: ``run_stream([(t, q), ...])`` replays a timestamped
+        arrival trace on a virtual clock, charging each batch its real
+        measured engine service time — honest p50/p99 vs offered load.
+    """
+
+    def __init__(self, engine: SearchEngine,
+                 config: Optional[ServingConfig] = None):
+        self.engine = engine
+        self.config = config or ServingConfig()
+        self.batcher = self.config.make_batcher()
+        self.stats = ServingStats()
+
+    def warmup(self, d: int) -> None:
+        """Compile every bucket shape once (zero queries) so the first
+        real batch per bucket isn't charged jit time.  A throwaway LUT
+        cache stands in for the real one so warmup exercises the cached
+        code path without polluting entries or stats."""
+        cache = getattr(self.engine, "lut_cache", None)
+        if cache is not None:
+            self.engine.lut_cache = HotClusterLUTCache(
+                capacity=len(self.batcher.policy.buckets) * 64,
+                granularity=cache.granularity)
+        try:
+            for b in self.batcher.policy.buckets:
+                self.engine.search_batch(np.zeros((b, d), np.float32))
+            precompile = getattr(self.engine, "precompile_lc", None)
+            if cache is not None and precompile is not None:
+                nprobe = getattr(getattr(self.engine, "params", None),
+                                 "nprobe", 1)
+                precompile(self.batcher.policy.max_batch * nprobe)
+        finally:
+            if cache is not None:
+                self.engine.lut_cache = cache
+
+    # -- online API --------------------------------------------------------
+    def submit(self, query: np.ndarray, now: float) -> Request:
+        req = self.batcher.submit(query, now)
+        self.stats.record_arrival(req, self.batcher.depth)
+        return req
+
+    def step(self, now: float, drain: bool = False) -> List[Request]:
+        """Flush + serve every batch the policy releases at time ``now``."""
+        done: List[Request] = []
+        while True:
+            batch = self.batcher.poll(now, drain=drain)
+            if batch is None:
+                return done
+            done.extend(self._serve(batch, t_start=now))
+
+    def _serve(self, batch: MicroBatch, t_start: float) -> List[Request]:
+        t0 = time.perf_counter()
+        d, i = self.engine.search_batch(batch.queries,
+                                        n_valid=batch.n_valid)
+        service_s = time.perf_counter() - t0
+        self.stats.record_batch(batch, service_s)
+        t_done = t_start + service_s
+        for row, req in enumerate(batch.requests):   # de-pad: rows [0, n)
+            req.dists = np.asarray(d[row])
+            req.ids = np.asarray(i[row])
+            req.t_done = t_done
+            self.stats.record_done(req)
+        return batch.requests
+
+    # -- offline simulation ------------------------------------------------
+    def run_stream(self, arrivals: Sequence[Tuple[float, np.ndarray]]
+                   ) -> List[Request]:
+        """Replay (t_arrival, query) pairs; returns requests in order.
+
+        Single-server discrete-event model: a batch flushed at t starts
+        service at max(t, server_free) and occupies the server for its
+        measured wall-clock engine time, so queueing delay shows up in
+        the latency percentiles as offered load approaches capacity.
+        """
+        reqs: List[Request] = []
+        server_free = 0.0
+
+        def serve_at(batch: MicroBatch) -> None:
+            nonlocal server_free
+            start = max(batch.t_flush, server_free)
+            served = self._serve(batch, t_start=start)
+            server_free = served[0].t_done
+        for t, query in sorted(arrivals, key=lambda a: a[0]):
+            while True:   # fire deadline flushes that precede this arrival
+                ddl = self.batcher.next_deadline()
+                if ddl is None or ddl > t:
+                    break
+                batch = self.batcher.poll(ddl)
+                if batch is None:
+                    break
+                serve_at(batch)
+            reqs.append(self.submit(query, now=t))
+            batch = self.batcher.poll(t)             # flush-on-full
+            if batch is not None:
+                serve_at(batch)
+        while self.batcher.depth:                    # end-of-stream drain
+            ddl = self.batcher.next_deadline()
+            batch = self.batcher.poll(ddl, drain=True)
+            serve_at(batch)
+        return reqs
+
+    # -- metrics -----------------------------------------------------------
+    def metrics(self) -> dict:
+        out = self.stats.summary()
+        cache = getattr(self.engine, "lut_cache", None)
+        if cache is not None:
+            out["lut_cache"] = dict(cache.stats.as_dict(),
+                                    entries=len(cache),
+                                    granularity=cache.granularity)
+        return out

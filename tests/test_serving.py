@@ -1,0 +1,239 @@
+"""Serving runtime: bucket policy, flush policy, de-padding identity vs
+direct search, LUT-cache accounting, and the sharded-engine adapter."""
+
+import numpy as np
+import pytest
+
+from repro.core import SearchParams
+from repro.runtime import (BucketPolicy, HotClusterLUTCache, LocalEngine,
+                           LRUCache, MicroBatcher, ServingConfig,
+                           ServingRuntime, ShardedEngine)
+
+
+@pytest.fixture(scope="module")
+def engine(small_index, small_clusters):
+    return LocalEngine(small_index, small_clusters,
+                       SearchParams(nprobe=8, k=10, query_chunk=32))
+
+
+# ---------------------------------------------------------------------------
+# Bucket policy
+# ---------------------------------------------------------------------------
+
+def test_bucket_selection():
+    pol = BucketPolicy([8, 1, 4, 2])          # unsorted input is fine
+    assert pol.buckets == (1, 2, 4, 8)
+    assert pol.bucket_for(1) == 1
+    assert pol.bucket_for(3) == 4
+    assert pol.bucket_for(8) == 8
+    assert pol.bucket_for(99) == 8            # clamped to max
+    assert BucketPolicy.pow2(32).buckets == (1, 2, 4, 8, 16, 32)
+    assert BucketPolicy.pow2(24).buckets == (1, 2, 4, 8, 16, 24)
+    assert BucketPolicy.single(16).buckets == (16,)
+    with pytest.raises(ValueError):
+        BucketPolicy([0, 4])
+
+
+# ---------------------------------------------------------------------------
+# Flush policy
+# ---------------------------------------------------------------------------
+
+def _mk_batcher(max_wait=1e-3, buckets=(1, 2, 4, 8)):
+    return MicroBatcher(BucketPolicy(buckets), max_wait_s=max_wait)
+
+
+def test_flush_on_full():
+    b = _mk_batcher()
+    for i in range(8):
+        b.submit(np.full(4, i, np.float32), now=0.0)
+    assert b.depth == 8
+    batch = b.poll(now=0.0)                   # full before any deadline
+    assert batch is not None and batch.reason == "full"
+    assert batch.bucket == 8 and batch.n_valid == 8
+    assert b.depth == 0
+    assert b.flushes == {"full": 1, "deadline": 0, "drain": 0}
+
+
+def test_flush_on_deadline_and_padding():
+    b = _mk_batcher(max_wait=1e-3)
+    for i in range(3):
+        b.submit(np.full(4, i + 1, np.float32), now=i * 1e-4)
+    assert b.poll(now=5e-4) is None           # neither full nor expired
+    assert b.next_deadline() == pytest.approx(1e-3)
+    batch = b.poll(now=1e-3)
+    assert batch.reason == "deadline"
+    assert batch.bucket == 4 and batch.n_valid == 3
+    # padded tail rows are zeros, valid rows are the submitted queries
+    assert (batch.queries[3] == 0).all()
+    assert (batch.queries[:3] == np.arange(1, 4)[:, None]).all()
+    assert b.padded_slots == 1 and b.valid_slots == 3
+
+
+def test_drain_flush():
+    b = _mk_batcher()
+    b.submit(np.zeros(4, np.float32), now=0.0)
+    assert b.poll(now=0.0) is None
+    batch = b.poll(now=0.0, drain=True)
+    assert batch is not None and batch.reason == "drain"
+    assert batch.bucket == 1 and b.depth == 0
+
+
+# ---------------------------------------------------------------------------
+# LRU accounting
+# ---------------------------------------------------------------------------
+
+def test_lru_cache_accounting():
+    c = LRUCache(capacity=2)
+    assert c.get("a") is None                 # miss
+    c.put("a", 1)
+    c.put("b", 2)
+    assert c.get("a") == 1                    # hit, refreshes recency
+    c.put("c", 3)                             # evicts "b" (LRU)
+    assert "b" not in c and "a" in c and "c" in c
+    assert c.stats.hits == 1 and c.stats.misses == 1
+    assert c.stats.inserts == 3 and c.stats.evictions == 1
+    assert c.stats.hit_rate == pytest.approx(0.5)
+
+
+def test_hot_cluster_cache_keys():
+    cache = HotClusterLUTCache(capacity=8)
+    q = np.ones(16, np.float32)
+    assert cache.key(3, q) == cache.key(3, q.copy())
+    assert cache.key(3, q) != cache.key(4, q)         # cluster id in key
+    assert cache.key(3, q) != cache.key(3, 2 * q)     # query in key
+    # coarse granularity buckets near-duplicates together
+    coarse = HotClusterLUTCache(capacity=8, granularity=0.5)
+    assert coarse.key(3, q) == coarse.key(3, q + 0.01)
+
+
+# ---------------------------------------------------------------------------
+# End-to-end: runtime vs direct search
+# ---------------------------------------------------------------------------
+
+def test_depadding_bit_identical(engine, small_corpus):
+    """A stream of single-query requests served through micro-batches must
+    be bit-identical to one direct batched search() call."""
+    queries = np.asarray(small_corpus.queries[:13])
+    rt = ServingRuntime(engine, ServingConfig(buckets=(1, 2, 4, 8),
+                                              max_wait_s=1e-3))
+    reqs = rt.run_stream([(i * 3e-4, queries[i])
+                          for i in range(len(queries))])
+    assert all(r.done for r in reqs)
+    direct_d, direct_i = engine.search_batch(queries)
+    np.testing.assert_array_equal(np.stack([r.ids for r in reqs]), direct_i)
+    np.testing.assert_array_equal(np.stack([r.dists for r in reqs]),
+                                  direct_d)
+    m = rt.metrics()
+    assert m["requests"] == 13
+    assert m["batches"] == sum(m["flushes"].values())
+    assert np.isfinite(m["p50_ms"]) and m["p99_ms"] >= m["p50_ms"]
+
+
+def test_cached_engine_matches_uncached(engine, small_index, small_clusters,
+                                        small_corpus):
+    """Exact-granularity LUT cache: same results, and a repeated stream is
+    served entirely from cache (hit accounting checks out)."""
+    queries = np.asarray(small_corpus.queries[:8])
+    cache = HotClusterLUTCache(capacity=512)
+    cached = LocalEngine(small_index, small_clusters, engine.params,
+                         lut_cache=cache)
+    d1, i1 = cached.search_batch(queries)
+    d0, i0 = engine.search_batch(queries)
+    np.testing.assert_array_equal(i1, i0)
+    np.testing.assert_allclose(d1, d0, rtol=1e-5, atol=1e-5)
+    nprobe = engine.params.nprobe
+    assert cache.stats.misses == len(queries) * nprobe
+    assert cache.stats.hits == 0
+    d2, i2 = cached.search_batch(queries)       # all (q, cluster) pairs hit
+    assert cache.stats.hits == len(queries) * nprobe
+    np.testing.assert_array_equal(np.asarray(i2), np.asarray(i1))
+    np.testing.assert_array_equal(np.asarray(d2), np.asarray(d1))
+
+
+def test_cache_eviction_under_pressure(engine, small_index, small_clusters,
+                                       small_corpus):
+    """Capacity smaller than the working set must evict, not grow."""
+    queries = np.asarray(small_corpus.queries[:8])
+    cache = HotClusterLUTCache(capacity=4)
+    cached = LocalEngine(small_index, small_clusters, engine.params,
+                         lut_cache=cache)
+    cached.search_batch(queries)
+    assert len(cache) <= 4
+    assert cache.stats.evictions > 0
+
+
+def test_runtime_with_cache_end_to_end(engine, small_index, small_clusters,
+                                       small_corpus):
+    """Skewed stream (every query repeated) through the runtime: second
+    occurrence of each query hits the cache; results stay identical."""
+    queries = np.asarray(small_corpus.queries[:6])
+    cache = HotClusterLUTCache(capacity=512)
+    cached = LocalEngine(small_index, small_clusters, engine.params,
+                         lut_cache=cache)
+    rt = ServingRuntime(cached, ServingConfig(buckets=(1, 2, 4),
+                                              max_wait_s=1e-4))
+    stream = [(i * 1e-3, queries[i % len(queries)]) for i in range(12)]
+    reqs = rt.run_stream(stream)
+    direct_d, direct_i = engine.search_batch(queries)
+    for i, r in enumerate(reqs):
+        np.testing.assert_array_equal(r.ids, direct_i[i % len(queries)])
+    m = rt.metrics()
+    assert m["lut_cache"]["hits"] >= 6 * engine.params.nprobe
+    assert 0.0 < m["lut_cache"]["hit_rate"] <= 0.5
+
+
+def test_pad_rows_bypass_cache(engine, small_index, small_clusters,
+                               small_corpus):
+    """Zero-padded batch rows must not occupy LRU slots or count as
+    hits/misses — only the n_valid real queries touch the cache."""
+    queries = np.asarray(small_corpus.queries[:8])
+    cache = HotClusterLUTCache(capacity=512)
+    cached = LocalEngine(small_index, small_clusters, engine.params,
+                         lut_cache=cache)
+    rt = ServingRuntime(cached, ServingConfig(buckets=(4,), max_wait_s=1e-4))
+    # distinct queries, one per deadline-flushed batch: 3 pad rows each
+    reqs = rt.run_stream([(i * 1e-3, queries[i]) for i in range(8)])
+    nprobe = engine.params.nprobe
+    assert cache.stats.lookups == 8 * nprobe        # pad rows never looked up
+    assert cache.stats.hits == 0                    # no repeats -> no hits
+    assert len(cache) == cache.stats.inserts == 8 * nprobe
+    direct_d, direct_i = engine.search_batch(queries)
+    np.testing.assert_array_equal(np.stack([r.ids for r in reqs]), direct_i)
+
+
+def test_online_submit_step(engine, small_corpus):
+    """Manual-clock online API: nothing served before a flush trigger."""
+    queries = np.asarray(small_corpus.queries[:3])
+    rt = ServingRuntime(engine, ServingConfig(buckets=(4,), max_wait_s=1e-2))
+    for i in range(3):
+        rt.submit(queries[i], now=0.0)
+    assert rt.step(now=5e-3) == []              # deadline not reached
+    done = rt.step(now=1e-2)                    # deadline flush
+    assert [r.req_id for r in done] == [0, 1, 2]
+    direct_d, direct_i = engine.search_batch(queries)
+    np.testing.assert_array_equal(np.stack([r.ids for r in done]), direct_i)
+
+
+def test_sharded_engine_adapter(small_index, small_corpus):
+    """DistributedEngine behind the protocol: served == direct."""
+    import jax.numpy as jnp
+    from repro.core import cluster_locate
+    from repro.core.sharded_search import DistributedEngine, EngineConfig
+
+    queries = np.asarray(small_corpus.queries[:5])
+    probes, _ = cluster_locate(jnp.asarray(small_corpus.queries,
+                                           jnp.float32),
+                               small_index.centroids, 8)
+    eng = DistributedEngine(
+        small_index,
+        EngineConfig(n_shards=4, nprobe=8, k=10, tasks_per_shard=512),
+        np.asarray(probes))
+    adapter = ShardedEngine(eng)
+    direct_d, direct_i = adapter.search_batch(queries)
+    rt = ServingRuntime(adapter, ServingConfig(buckets=(2, 4),
+                                               max_wait_s=1e-3))
+    reqs = rt.run_stream([(i * 1e-4, queries[i])
+                          for i in range(len(queries))])
+    np.testing.assert_array_equal(np.stack([r.ids for r in reqs]), direct_i)
+    np.testing.assert_array_equal(np.stack([r.dists for r in reqs]),
+                                  direct_d)
