@@ -6,21 +6,31 @@
                          padded shape vs pow2 buckets (padding waste vs
                          compile count).
   serve/cache_*        — skewed (Zipf) stream with the hot-cluster LUT
-                         cache on vs off: hit rate and p50 effect.
+                         cache on vs off: hit rate and p50 effect
+                         (LocalEngine).
+  serve/sharded_*      — the distributed engine on the same Zipf stream:
+                         v1 = the PR 1 baseline (no cache, one static
+                         tasks_per_shard); v2 = heat-aware LUT cache +
+                         per-bucket task-table tuning.  v2's hit rate
+                         and smaller compiled task tables should beat
+                         v1 on both p50 and p99.
 
 All timings are measured engine wall-clock charged onto a virtual-clock
 arrival trace (single-server model), so queueing delay appears as load
-approaches capacity.
+approaches capacity.  See docs/benchmarks.md for how to read the output.
 """
 
 from __future__ import annotations
 
+import jax.numpy as jnp
 import numpy as np
 
 from benchmarks.common import corpus_and_index, row
-from repro.core import SearchParams
-from repro.runtime import (HotClusterLUTCache, LocalEngine, ServingConfig,
-                           ServingRuntime)
+from repro.core import SearchParams, cluster_locate
+from repro.core.sharded_search import DistributedEngine, EngineConfig
+from repro.runtime import (HeatAwareAdmission, HotClusterLUTCache,
+                           LocalEngine, OnlineHeatEstimator, ServingConfig,
+                           ServingRuntime, ShardedEngine)
 
 
 def _poisson_stream(queries, n_requests, qps, rng, skew=None):
@@ -95,4 +105,30 @@ def run(quick: bool = False):
         out.append(row(
             f"serve/cache_{name}", m["p99_ms"] * 1e-3,
             f"p50_ms={m['p50_ms']:.2f}_hit_rate={hit:.2f}"))
+
+    # -- sharded engine: PR 1 baseline vs heat-aware serving v2 -----------
+    sample, _ = cluster_locate(jnp.asarray(queries, jnp.float32),
+                               idx.centroids, 8)
+    sample = np.asarray(sample)
+    cfg = EngineConfig(n_shards=4 if quick else 8, nprobe=8, k=10,
+                       tasks_per_shard=512, strategy="gather",
+                       dup_budget_bytes=1 << 18)
+    sharded_cfg = ServingConfig(buckets=(8, 32), max_wait_s=2e-3)
+    # one shared stream so v1 vs v2 is a controlled A/B
+    sharded_stream = _poisson_stream(pool, n_requests, loads[-1], rng,
+                                     skew=1.2)
+    for name in ("v1", "v2"):
+        eng = DistributedEngine(idx, cfg, sample)
+        if name == "v2":
+            est = OnlineHeatEstimator(idx.nlist, seed=eng.heat)
+            eng.heat_estimator = est
+            eng.lut_cache = HotClusterLUTCache(
+                capacity=4096, admission=HeatAwareAdmission(est))
+            eng.tasks_controller = eng.make_tasks_controller()
+        m = _serve(ShardedEngine(eng), sharded_stream, d, sharded_cfg)
+        hit = m.get("lut_cache", {}).get("hit_rate", 0.0)
+        out.append(row(
+            f"serve/sharded_{name}", m["p99_ms"] * 1e-3,
+            f"p50_ms={m['p50_ms']:.2f}_hit_rate={hit:.2f}"
+            f"_batches={m['batches']}"))
     return out

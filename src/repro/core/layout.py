@@ -7,10 +7,26 @@ Observations driving the design (paper §IV-B):
   3. random placement piles hot clusters onto one DPU -> ALLOCATE greedily
      by accumulated heat (lowest-heat bin first).
 
-"Heat" = expected access frequency, estimated by running CL over a sample
-query set (the paper does exactly this).  All of this is host-side, runs
-once offline, and produces a static per-shard layout — the only thing the
-online path does is pick replicas (scheduler.py).
+"Heat" = expected access frequency in units of *cluster accesses per
+query*, estimated by running CL over a sample query set (the paper does
+exactly this; ``estimate_heat``).  Online, the serving runtime refreshes
+the same vector from served traffic (``runtime.cache.OnlineHeatEstimator``
+— identical units, so it can re-drive ``build_layout`` via
+``DistributedEngine.refresh_layout``).
+
+All of this is host-side and produces a static per-shard layout — the
+only things the online path does are pick replicas (scheduler.py) and,
+optionally, re-run this optimizer every ``relayout_every`` batches.
+
+Shapes and invariants:
+  * ``sizes``/``heat`` are (nlist,) over *original* cluster ids; layouts
+    never renumber clusters, so LUT-cache keys and search results are
+    layout-independent (tests assert re-layout preserves results);
+  * split parts of a cluster are disjoint row ranges covering it exactly;
+    replicas of a part carry ``heat / n_replicas`` each and avoid sharing
+    a shard (they exist to parallelize);
+  * ``Layout.shard_of`` is (n_instances,) -> shard id; ``stats`` reports
+    predicted per-shard load (heat x Eq. 15 task latency, seconds).
 
 The same optimizer drives 2,560 UPMEM DPUs or a 256-chip TPU pod: bins are
 abstract shards.

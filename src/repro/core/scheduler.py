@@ -11,6 +11,22 @@ Online path, per batch:
 
 The output is a static-shape per-shard task table (padded) that shard_map
 consumes directly — no dynamic shapes inside the compiled search step.
+
+Shapes and units: ``probe_lists`` (Q, P) i32 original cluster ids;
+``query_idx``/``slot_idx`` (n_shards, tasks_per_shard) i32 with -1
+padding (slot = shard-local row in the materialized instance tensors);
+``predicted_load`` (n_shards,) seconds under the Eq. 15 latency model.
+
+``tasks_per_shard`` fixes the compiled step's shape: one distinct width
+= one XLA compile.  A single global width wastes compute on padding for
+small batches and overflows (deferring work into drain rounds) for
+large ones — serving tunes it per batch-size bucket via
+``runtime.batching.TasksPerShardController``.
+
+Invariants: every non-deferred (q, cluster) probe appears as exactly one
+task per split part (one replica chosen); deferred tasks are returned as
+(query, cluster, part) triples and re-expanded by the next batch, so a
+flush-draining caller always ends with complete results.
 """
 
 from __future__ import annotations

@@ -19,6 +19,32 @@ The final per-query merge is host-side by default — faithful to UPMEM's
 mandatory DPU->host synchronization (§II-B: DPUs cannot exchange results).
 On TPU the merge could stay on-device; ``merge_on_device`` implements it
 with a segment-top-k for moderate batch sizes and is used by the dry-run.
+
+Serving-v2 additions (PR 2): the engine optionally takes
+
+  * ``lut_cache`` — a :class:`repro.runtime.cache.HotClusterLUTCache`.
+    LUTs are then assembled host-side once per (query, probed cluster)
+    pair into a replicated bank of shape (Q*nprobe, M, CB) f32 and the
+    shard step (``_shard_tasks_lut_fn``) runs DC+TS only, gathering each
+    task's LUT by index.  Split parts and replicas of a cluster share
+    one LUT (the uncached per-task path recomputes it per part), and
+    cache hits skip LC entirely;
+  * ``heat_estimator`` — an :class:`repro.runtime.cache.OnlineHeatEstimator`
+    fed each batch's CL output; with ``cfg.relayout_every > 0`` the
+    refreshed heat periodically re-drives ``build_layout`` (split /
+    duplicate / allocate) via :meth:`DistributedEngine.refresh_layout`;
+  * ``tasks_controller`` — a
+    :class:`repro.runtime.batching.TasksPerShardController` choosing the
+    static task-table width per batch size instead of one global
+    ``cfg.tasks_per_shard``.
+
+Shapes and units throughout: queries (Q, D) f32; probes (Q, P) i32
+cluster ids; task tables (S, T) i32 with -1 padding; candidate outputs
+(S, T, k); heat is expected cluster accesses per query; all latencies
+seconds.  Invariants: served results are independent of batch
+composition (per-query merge), identical across the vmap and shard_map
+paths, and — at exact cache granularity — bit-identical with the LUT
+cache on or off (asserted in tests/test_serving_v2.py).
 """
 
 from __future__ import annotations
@@ -247,6 +273,88 @@ def make_sharded_step(mesh, sindex: ShardedIndex, *, k: int,
     return jax.jit(sharded)
 
 
+@jax.jit
+def miss_residuals(miss_queries: jax.Array, centroids: jax.Array,
+                   crows: jax.Array, rotation: Optional[jax.Array]):
+    """RC for cache-miss (query, cluster) pairs only: rotated residuals
+    (R, D) f32 for ``miss_queries[r] - centroids[crows[r]]`` — the cached
+    path's LC input.  Queries are gathered host-side and padded to a
+    power of two, so the compiled shape depends only on the miss count
+    (precompile_lc can warm every shape) and hit rows never pay the
+    rotation matmul."""
+    residual = miss_queries.astype(jnp.float32) - centroids[crows]
+    if rotation is not None:
+        residual = residual @ rotation
+    return residual
+
+
+def _shard_tasks_lut_fn(codes, ids, sizes, qidx, sidx, lidx, lut_bank, *,
+                        k: int, strategy: str, use_kernels: bool):
+    """One shard's batch with LUTs precomputed host-side: DC + TS only.
+
+    Same task-table contract as ``_shard_tasks_fn`` (qidx/sidx (T,) with
+    -1 padding) plus ``lidx`` (T,) indexing each task's LUT in the
+    replicated ``lut_bank`` (Q*P, M, CB).  Skipping RC+LC here is what
+    the LUT cache buys the sharded path; DC/TS are byte-for-byte the
+    same ops as the uncached step, so results are bit-identical.
+
+    ``lidx == -1`` marks a task with no bank row (a carried-over task
+    whose cluster is absent from this batch's probe lists under
+    flush=False): it must be invalidated, not scored against row 0."""
+    valid = (qidx >= 0) & (lidx >= 0)
+    si = jnp.clip(sidx, 0, codes.shape[0] - 1)
+    li = jnp.clip(lidx, 0, lut_bank.shape[0] - 1)
+    lut = lut_bank[li]                                        # (T, M, CB)
+    task_codes = codes[si]                                    # (T, cpart, M)
+    task_ids = ids[si]                                        # (T, cpart)
+    task_sizes = jnp.where(valid, sizes[si], 0)               # invalid -> 0
+    if use_kernels:
+        from repro.kernels import ops as kops
+        bd, bi = kops.pq_scan_topk(lut, task_codes, task_ids, task_sizes, k,
+                                   strategy=strategy)
+    else:
+        d = adc_distances(lut, task_codes, task_sizes,
+                          strategy="gather" if strategy == "gather"
+                          else "onehot")                      # DC
+        bd, bi = topk_smallest(d, task_ids, k)                # TS
+    bi = jnp.where(jnp.isfinite(bd), bi, -1)
+    return bd, bi
+
+
+@functools.partial(jax.jit, static_argnames=("k", "strategy", "use_kernels"))
+def run_shards_vmap_lut(sindex: ShardedIndex, qidx: jax.Array,
+                        sidx: jax.Array, lidx: jax.Array,
+                        lut_bank: jax.Array, *, k: int,
+                        strategy: str = "onehot",
+                        use_kernels: bool = False):
+    """Simulation path for the cached step: vmap over the shard axis with
+    the LUT bank replicated (the host->PIM LUT broadcast)."""
+    return jax.vmap(
+        lambda c, i, sz, qq, ss, ll: _shard_tasks_lut_fn(
+            c, i, sz, qq, ss, ll, lut_bank, k=k, strategy=strategy,
+            use_kernels=use_kernels)
+    )(sindex.codes, sindex.ids, sindex.sizes, qidx, sidx, lidx)
+
+
+def make_sharded_step_lut(mesh, sindex: ShardedIndex, *, k: int,
+                          strategy: str = "onehot",
+                          use_kernels: bool = False, axis: str = "shards"):
+    """Production path for the cached step: shard_map with task tables
+    sharded and the LUT bank replicated alongside queries/centroids."""
+    def per_shard(codes, ids, sizes, qidx, sidx, lidx, lut_bank):
+        bd, bi = _shard_tasks_lut_fn(codes[0], ids[0], sizes[0], qidx[0],
+                                     sidx[0], lidx[0], lut_bank, k=k,
+                                     strategy=strategy,
+                                     use_kernels=use_kernels)
+        return bd[None], bi[None]
+
+    sharded = shard_map(
+        per_shard, mesh=mesh,
+        in_specs=(P(axis), P(axis), P(axis), P(axis), P(axis), P(axis), P()),
+        out_specs=(P(axis), P(axis)))
+    return jax.jit(sharded)
+
+
 def merge_host(qidx: np.ndarray, best_d: np.ndarray, best_i: np.ndarray,
                n_queries: int, k: int):
     """UPMEM-faithful host merge: per-query top-k over all task candidates."""
@@ -307,53 +415,173 @@ class EngineConfig:
     filter_ratio: float = 1.35
     naive_layout: bool = False
     naive_schedule: bool = False
+    # serving v2: batches between heat-driven re-layouts (0 = never;
+    # requires a heat_estimator on the engine)
+    relayout_every: int = 0
 
 
 class DistributedEngine:
-    """Offline build (layout + shards) and online batched search."""
+    """Offline build (layout + shards) and online batched search.
+
+    Optional serving-v2 collaborators (see module docstring):
+    ``lut_cache`` (skip LC on hits), ``heat_estimator`` (online heat +
+    periodic re-layout), ``tasks_controller`` (per-batch-size task-table
+    width).  All default to None, which reproduces the PR 1 engine
+    exactly.
+    """
 
     def __init__(self, index: IVFPQIndex, cfg: EngineConfig,
                  sample_probes: np.ndarray,
                  latency: Optional[TaskLatencyModel] = None,
-                 mesh=None):
+                 mesh=None, lut_cache=None, heat_estimator=None,
+                 tasks_controller=None):
         from repro.core.perf_model import IndexParams, UPMEM_PROFILE
         self.cfg = cfg
         self.index = index
+        self.heat = estimate_heat(sample_probes, index.nlist)
         sizes = np.asarray(index.sizes)
-        heat = estimate_heat(sample_probes, index.nlist)
         self.latency = latency or make_task_latency_model(
             IndexParams(n_total=int(sizes.sum()), nlist=index.nlist, q=1,
                         d=index.dim, k=cfg.k, p=cfg.nprobe,
                         m=index.codebook.m, cb=index.codebook.cb),
             UPMEM_PROFILE)
-        bytes_per_row = index.codebook.m + 4
-        self.layout = build_layout(
-            sizes, heat, cfg.n_shards, split_max=cfg.split_max,
-            dup_budget_bytes=cfg.dup_budget_bytes,
-            bytes_per_row=bytes_per_row, latency=self.latency,
-            naive=cfg.naive_layout)
-        self.sindex = materialize_shards(index, self.layout)
-        self.carry: list = []
         self.mesh = mesh
+        self.lut_cache = lut_cache
+        self.heat_estimator = heat_estimator
+        self.tasks_controller = tasks_controller
+        self.batches_served = 0
+        self.relayouts = 0
+        self._build(self.heat)
+
+    def _build(self, heat: np.ndarray) -> None:
+        """(Re)materialize layout, shard tensors, and compiled steps from a
+        heat vector.  Cluster ids — and therefore LUT-cache keys — are
+        stable across rebuilds; only placement changes."""
+        sizes = np.asarray(self.index.sizes)
+        bytes_per_row = self.index.codebook.m + 4
+        self.layout = build_layout(
+            sizes, heat, self.cfg.n_shards, split_max=self.cfg.split_max,
+            dup_budget_bytes=self.cfg.dup_budget_bytes,
+            bytes_per_row=bytes_per_row, latency=self.latency,
+            naive=self.cfg.naive_layout)
+        self.sindex = materialize_shards(self.index, self.layout)
+        self._cluster_of_host = np.asarray(self.sindex.cluster_of)
+        self.carry: list = []
         self._step = None
-        if mesh is not None:
-            self._step = make_sharded_step(mesh, self.sindex, k=cfg.k,
-                                           strategy=cfg.strategy,
-                                           use_kernels=cfg.use_kernels)
+        self._step_lut = None
+        if self.mesh is not None:
+            self._step = make_sharded_step(self.mesh, self.sindex,
+                                           k=self.cfg.k,
+                                           strategy=self.cfg.strategy,
+                                           use_kernels=self.cfg.use_kernels)
+            self._step_lut = make_sharded_step_lut(
+                self.mesh, self.sindex, k=self.cfg.k,
+                strategy=self.cfg.strategy,
+                use_kernels=self.cfg.use_kernels)
+
+    # -- serving-v2 hooks --------------------------------------------------
+    @property
+    def nprobe(self) -> int:
+        return self.cfg.nprobe
+
+    def refresh_layout(self, heat: Optional[np.ndarray] = None) -> dict:
+        """Re-run split/duplicate/allocate with refreshed heat (§IV-C fed
+        by the online estimator) and rematerialize the shard tensors.
+
+        Results are placement-independent (tests assert it), so this is
+        safe mid-stream; the cost is one materialize + step recompile.
+        Deferred-task carry is dropped — callers re-issue via flush
+        rounds.  Returns before/after predicted-imbalance stats."""
+        if heat is None:
+            if self.heat_estimator is None:
+                raise ValueError("refresh_layout needs heat or an estimator")
+            heat = self.heat_estimator.heat()
+        before = self.layout.stats(self.latency)["imbalance"]
+        self.heat = np.asarray(heat, np.float64)
+        self._build(self.heat)
+        self.relayouts += 1
+        if self.tasks_controller is not None:
+            # re-price the width prediction: split decisions (and so
+            # tasks/query) may have changed with the new heat
+            self.tasks_controller.retune(*self._layout_task_stats())
+        after = self.layout.stats(self.latency)["imbalance"]
+        return {"imbalance_before": before, "imbalance_after": after}
+
+    def _layout_task_stats(self):
+        """(tasks_per_query, mean_task_s) of the CURRENT layout: expected
+        tasks/query = nprobe x heat-weighted mean split parts per probed
+        cluster; mean_task_s is the Eq. 15 latency of a mean-size
+        instance.  Recomputed after every re-layout."""
+        parts = np.zeros(self.index.nlist, np.float64)
+        mean_size = 0.0
+        n0 = 0
+        for inst in self.layout.instances:
+            if inst.replica == 0:
+                parts[inst.cluster] += 1.0
+                mean_size += inst.size
+                n0 += 1
+        mean_size /= max(n0, 1)
+        w = np.maximum(self.heat, 0.0)
+        mean_parts = (float((parts * w).sum() / w.sum()) if w.sum() > 0
+                      else float(parts.mean()))
+        return (self.cfg.nprobe * max(mean_parts, 1.0),
+                self.latency.task_latency(mean_size))
+
+    def make_tasks_controller(self, headroom: float = 1.5, floor: int = 16,
+                              max_shard_time_s: Optional[float] = None):
+        """Build a perf-model-driven TasksPerShardController for this
+        layout (see ``_layout_task_stats`` for the pricing)."""
+        from repro.runtime.batching import TasksPerShardController
+        tasks_per_query, mean_task_s = self._layout_task_stats()
+        return TasksPerShardController(
+            self.cfg.n_shards, tasks_per_query,
+            headroom=headroom, floor=floor, cap=self.cfg.tasks_per_shard,
+            mean_task_s=mean_task_s, max_shard_time_s=max_shard_time_s)
+
+    def precompile_lc(self, max_rows: int) -> None:
+        """Compile the cached path's miss-batch shapes (pow2 up to
+        ``max_rows``) ahead of traffic — both the LUT build and the
+        miss-residual RC, whose compiled shapes depend only on the padded
+        miss count.  Same contract as LocalEngine.precompile_lc."""
+        from repro.runtime.cache import precompile_lut_shapes
+        precompile_lut_shapes(self.index.codebook, max_rows)
+        max_rows = 1 << (max(max_rows, 1) - 1).bit_length()
+        s = 1
+        while s <= max_rows:
+            miss_residuals(jnp.asarray(np.zeros((s, self.index.dim),
+                                                np.float32)),
+                           self.sindex.centroids,
+                           jnp.asarray(np.zeros(s, np.int32)),
+                           self.sindex.rotation)
+            s *= 2
+
+    def serving_info(self) -> dict:
+        """Engine-side counters surfaced in ServingRuntime.metrics()."""
+        info = {"batches": self.batches_served,
+                "relayouts": self.relayouts,
+                "tasks_per_shard": self.cfg.tasks_per_shard}
+        if self.tasks_controller is not None:
+            info["tasks_controller"] = self.tasks_controller.summary()
+        if self.heat_estimator is not None:
+            info["heat_batches"] = self.heat_estimator.batches_observed
+        return info
 
     # -- online ------------------------------------------------------------
     def _schedule(self, probes: np.ndarray,
+                  tasks_per_shard: Optional[int] = None,
                   drain: bool = False) -> ShardSchedule:
         from repro.core.scheduler import schedule_naive
+        if tasks_per_shard is None:
+            tasks_per_shard = self.cfg.tasks_per_shard
         if self.cfg.naive_schedule:
             return schedule_naive(probes, self.layout, self.latency,
                                   self.sindex.slot_of_instance,
-                                  tasks_per_shard=self.cfg.tasks_per_shard)
+                                  tasks_per_shard=tasks_per_shard)
         # drain rounds keep the hard capacity cap but not the balance
         # filter — otherwise deferred work ping-pongs forever.
         sched = schedule_batch(probes, self.layout, self.latency,
                                self.sindex.slot_of_instance,
-                               tasks_per_shard=self.cfg.tasks_per_shard,
+                               tasks_per_shard=tasks_per_shard,
                                carry_in=self.carry,
                                filter_ratio=self.cfg.filter_ratio,
                                enable_filter=(self.cfg.enable_filter
@@ -361,23 +589,117 @@ class DistributedEngine:
         self.carry = list(sched.deferred)
         return sched
 
-    def search(self, queries: jax.Array, flush: bool = True):
+    def _lut_bank(self, queries_np: np.ndarray, probes: np.ndarray,
+                  n_valid: int) -> jax.Array:
+        """Assemble the (Q*P, M, CB) LUT bank through the cache.
+
+        One LUT per (query, probed cluster) pair — split parts and
+        replicas share it.  Pad rows (>= n_valid) are computed but never
+        looked up or inserted, so they cannot distort hit accounting or
+        occupy cache slots.  RC+LC run only over the miss rows (hit rows
+        skip even the rotation matmul), padded to the next power of two
+        so serving sees a bounded set of compiled shapes."""
+        from repro.runtime.cache import lut_fill_misses, lut_miss_scan
+        cache = self.lut_cache
+        nq, npr = probes.shape
+        flat_probes = probes.reshape(-1)
+        buckets = [cache.bucket_of(queries_np[qi]) for qi in range(n_valid)]
+        luts, miss_rows = lut_miss_scan(cache, flat_probes, buckets, npr,
+                                        nq * npr)
+        if miss_rows:
+            nmiss = len(miss_rows)
+            mpad = 1 << (nmiss - 1).bit_length()
+            miss_q = np.zeros((mpad, queries_np.shape[1]), np.float32)
+            miss_q[:nmiss] = queries_np[[t // npr for t in miss_rows]]
+            crows = np.zeros(mpad, np.int32)
+            crows[:nmiss] = flat_probes[miss_rows]
+            # residuals stay on device, already pow2-padded —
+            # lut_fill_misses feeds them to the LC build as-is
+            res = miss_residuals(jnp.asarray(miss_q), self.sindex.centroids,
+                                 jnp.asarray(crows), self.sindex.rotation)
+            lut_fill_misses(cache, self.index.codebook, luts, miss_rows,
+                            flat_probes, buckets, npr, res)
+        return jnp.asarray(np.stack(luts))
+
+    def _probe_posmap(self, probes: np.ndarray) -> np.ndarray:
+        """(nq, nlist) position of each cluster in its query's probe list
+        (-1 absent).  Built once per batch — every drain round reuses it."""
+        nq, npr = probes.shape
+        posmap = np.full((max(nq, 1), self.index.nlist), -1, np.int64)
+        if nq:
+            posmap[np.arange(nq)[:, None], probes] = np.arange(npr)[None, :]
+        return posmap
+
+    def _lut_idx(self, sched: ShardSchedule, posmap: np.ndarray,
+                 nprobe: int) -> np.ndarray:
+        """Map the schedule's (S, T) tasks to LUT-bank rows: task (q, slot)
+        -> q * nprobe + position of slot's cluster in probes[q].  -1 marks
+        tasks with no bank row (invalid, or a flush=False carry-over whose
+        cluster this batch didn't probe) — the step masks them out."""
+        qi = sched.query_idx
+        si = sched.slot_idx
+        s_rows = np.arange(qi.shape[0])[:, None]
+        cl = self._cluster_of_host[s_rows, np.clip(si, 0, None)]
+        pos = posmap[np.clip(qi, 0, None), np.clip(cl, 0, None)]
+        lidx = qi.astype(np.int64) * nprobe + pos
+        return np.where((qi >= 0) & (pos >= 0), lidx, -1).astype(np.int32)
+
+    def search(self, queries: jax.Array, flush: bool = True,
+               n_valid: Optional[int] = None):
         """Batched search.  With flush=True, deferred tasks are drained in
         follow-up rounds so results are complete (tests); a serving loop
-        would instead leave them for the next batch (paper's filter)."""
+        would instead leave them for the next batch (paper's filter).
+
+        ``n_valid``: rows >= n_valid are serving-batch padding — excluded
+        from heat observation and LUT-cache population (their results are
+        discarded by the caller)."""
         from repro.core.search import cluster_locate
         nq = queries.shape[0]
+        nv = nq if n_valid is None else min(n_valid, nq)
         probes, _ = cluster_locate(queries.astype(jnp.float32),
                                    self.sindex.centroids, self.cfg.nprobe)
         probes = np.asarray(probes)
+        if nv > 0:      # all-padding warmup batches don't count as traffic
+            if self.heat_estimator is not None:
+                self.heat_estimator.observe(probes[:nv])
+            self.batches_served += 1
+            if (self.cfg.relayout_every > 0
+                    and self.heat_estimator is not None
+                    and self.batches_served % self.cfg.relayout_every == 0):
+                self.refresh_layout()
+        tps = (self.tasks_controller.tasks_for(nq)
+               if self.tasks_controller is not None
+               else self.cfg.tasks_per_shard)
+        bank = (self._lut_bank(np.asarray(queries, np.float32), probes, nv)
+                if self.lut_cache is not None else None)
+        posmap = self._probe_posmap(probes) if bank is not None else None
         all_d, all_i, all_q = [], [], []
         rounds = 0
         pending = probes
         while True:
-            sched = self._schedule(pending, drain=rounds > 0)
+            sched = self._schedule(pending, tps, drain=rounds > 0)
+            if rounds == 0 and nv > 0 and self.tasks_controller is not None:
+                # nv == 0 is warmup traffic: its degenerate all-equal
+                # queries must not teach the controller fake overflows
+                full = bool((sched.n_tasks >= tps).any())
+                self.tasks_controller.observe(
+                    nq, len(sched.deferred) if full else 0)
             qidx = jnp.asarray(sched.query_idx)
             sidx = jnp.asarray(sched.slot_idx)
-            if self._step is not None:
+            if bank is not None:
+                lidx = jnp.asarray(self._lut_idx(sched, posmap,
+                                                 self.cfg.nprobe))
+                if self._step_lut is not None:
+                    bd, bi = self._step_lut(self.sindex.codes,
+                                            self.sindex.ids,
+                                            self.sindex.sizes, qidx, sidx,
+                                            lidx, bank)
+                else:
+                    bd, bi = run_shards_vmap_lut(
+                        self.sindex, qidx, sidx, lidx, bank, k=self.cfg.k,
+                        strategy=self.cfg.strategy,
+                        use_kernels=self.cfg.use_kernels)
+            elif self._step is not None:
                 bd, bi = self._step(self.sindex.codes, self.sindex.ids,
                                     self.sindex.sizes, self.sindex.cluster_of,
                                     qidx, sidx, queries,

@@ -2,8 +2,10 @@ from repro.runtime.fault_tolerance import (HeartbeatRegistry, ElasticPlan,
                                            plan_elastic_mesh,
                                            StragglerPolicy, RunSupervisor)
 from repro.runtime.batching import (BucketPolicy, MicroBatch, MicroBatcher,
-                                    Request)
-from repro.runtime.cache import (CacheStats, HotClusterLUTCache, LRUCache,
+                                    Request, TasksPerShardController)
+from repro.runtime.cache import (AdmissionPolicy, CacheStats,
+                                 HeatAwareAdmission, HotClusterLUTCache,
+                                 LRUCache, OnlineHeatEstimator,
                                  query_hash_bucket)
 from repro.runtime.serving import (LocalEngine, SearchEngine, ServingConfig,
                                    ServingRuntime, ServingStats,
@@ -12,7 +14,9 @@ from repro.runtime.serving import (LocalEngine, SearchEngine, ServingConfig,
 __all__ = ["HeartbeatRegistry", "ElasticPlan", "plan_elastic_mesh",
            "StragglerPolicy", "RunSupervisor",
            "BucketPolicy", "MicroBatch", "MicroBatcher", "Request",
-           "CacheStats", "HotClusterLUTCache", "LRUCache",
+           "TasksPerShardController",
+           "AdmissionPolicy", "CacheStats", "HeatAwareAdmission",
+           "HotClusterLUTCache", "LRUCache", "OnlineHeatEstimator",
            "query_hash_bucket",
            "LocalEngine", "SearchEngine", "ServingConfig", "ServingRuntime",
            "ServingStats", "ShardedEngine"]

@@ -3,9 +3,20 @@
 The paper's load balancer exists because real query streams are skewed:
 a few hot clusters absorb most probes (§IV).  The same skew makes the LC
 phase redundant online — near-duplicate queries probing the same hot
-cluster rebuild near-identical (M, CB) LUTs.  This module provides an
-LRU cache keyed on ``(cluster id, query hash bucket)`` so a repeat hit
-skips LC for that (query, cluster) pair entirely.
+cluster rebuild near-identical (M, CB) LUTs.  This module provides the
+cache that lets a repeat hit skip LC for that (query, cluster) pair
+entirely, plus the heat machinery that makes admission skew-aware:
+
+  * :class:`LRUCache` / :class:`HotClusterLUTCache` — bounded cache keyed
+    on ``(cluster id, query hash bucket)`` holding (M, CB) f32 LUTs;
+  * :class:`OnlineHeatEstimator` — exponentially-decayed per-cluster
+    probe counts fed from the served stream; units match
+    ``layout.estimate_heat`` (expected accesses per query), so the same
+    vector seeds offline layout and online admission;
+  * :class:`HeatAwareAdmission` — replaces pure-LRU victim selection:
+    evict the *coldest-cluster* entry from an LRU-tail sample, and
+    reject inserts whose cluster is colder than that victim (cold scan
+    traffic can no longer flush hot clusters out of the cache).
 
 Query hash buckets: with ``granularity=None`` (default) the key is the
 hash of the exact f32 query bytes — only true repeats hit, and served
@@ -13,6 +24,12 @@ results stay bit-identical to the uncached path.  A positive
 ``granularity`` g quantizes the query to a grid of cell size g before
 hashing, so *near*-duplicates also hit at the cost of an approximation
 error bounded by the grid (knob for the serving bench).
+
+Invariants:
+  * ``len(cache) <= capacity`` always (admission can only shrink churn);
+  * with ``admission=None`` behaviour is exactly the PR 1 LRU;
+  * with all-zero heat, :class:`HeatAwareAdmission` degrades to LRU
+    (ties admit and evict the oldest sampled entry).
 """
 
 from __future__ import annotations
@@ -20,7 +37,7 @@ from __future__ import annotations
 import dataclasses
 import hashlib
 from collections import OrderedDict
-from typing import Any, Hashable, Optional
+from typing import Any, Hashable, Optional, Sequence
 
 import numpy as np
 
@@ -31,6 +48,7 @@ class CacheStats:
     misses: int = 0
     inserts: int = 0
     evictions: int = 0
+    rejects: int = 0      # admission-denied inserts (heat-aware policy)
 
     @property
     def lookups(self) -> int:
@@ -43,16 +61,115 @@ class CacheStats:
     def as_dict(self) -> dict:
         return {"hits": self.hits, "misses": self.misses,
                 "inserts": self.inserts, "evictions": self.evictions,
+                "rejects": self.rejects,
                 "hit_rate": round(self.hit_rate, 4)}
 
 
-class LRUCache:
-    """Plain LRU over hashable keys with hit/miss/eviction accounting."""
+class AdmissionPolicy:
+    """Victim selection + admission gate for a full cache.
 
-    def __init__(self, capacity: int):
+    ``pick_victim(candidate_key, sample)`` returns the key to evict from
+    ``sample`` (ordered oldest-first), or ``None`` to reject the insert.
+    The default policy is plain LRU: always evict the oldest, never
+    reject.
+    """
+
+    def pick_victim(self, candidate_key: Hashable,
+                    sample: Sequence[Hashable]) -> Optional[Hashable]:
+        return sample[0]
+
+
+class OnlineHeatEstimator:
+    """Per-cluster heat refreshed online from the served probe stream.
+
+    Maintains exponentially-decayed probe counts: each ``observe`` call
+    (one served batch) decays history by ``0.5 ** (1 / halflife_batches)``
+    and adds the batch's probe histogram.  ``heat()`` normalizes by the
+    equally-decayed query count, so the output unit is *expected accesses
+    per query* — identical to ``layout.estimate_heat``, which means the
+    same vector can seed :func:`repro.core.layout.build_layout` for
+    periodic re-layout.
+
+    ``seed`` (optional, from the offline sample) is weighted as
+    ``seed_weight`` queries' worth of evidence, so cold-start admission
+    is sane before real traffic accumulates.
+    """
+
+    def __init__(self, nlist: int, halflife_batches: float = 64.0,
+                 seed: Optional[np.ndarray] = None,
+                 seed_weight: float = 32.0):
+        if halflife_batches <= 0:
+            raise ValueError("halflife_batches must be positive")
+        self.nlist = int(nlist)
+        self.decay = 0.5 ** (1.0 / float(halflife_batches))
+        self._counts = np.zeros(self.nlist, np.float64)
+        self._queries = 0.0
+        self.batches_observed = 0
+        if seed is not None:
+            seed = np.asarray(seed, np.float64)
+            if seed.shape != (self.nlist,):
+                raise ValueError(f"seed shape {seed.shape} != ({nlist},)")
+            self._counts = seed * seed_weight
+            self._queries = float(seed_weight)
+
+    def observe(self, probe_lists: np.ndarray) -> None:
+        """Fold one batch's CL output (Q, P) int cluster ids into the
+        decayed counts.  Caller must pre-slice padding rows away."""
+        probe_lists = np.asarray(probe_lists)
+        if probe_lists.size == 0:
+            return
+        self._counts *= self.decay
+        self._queries *= self.decay
+        self._counts += np.bincount(probe_lists.reshape(-1).astype(np.int64),
+                                    minlength=self.nlist)[:self.nlist]
+        self._queries += probe_lists.shape[0]
+        self.batches_observed += 1
+
+    def heat(self) -> np.ndarray:
+        """(nlist,) expected accesses/query — ``estimate_heat`` units."""
+        return self._counts / max(self._queries, 1e-12)
+
+    def heat_of(self, cluster_id: int) -> float:
+        return float(self._counts[int(cluster_id)] /
+                     max(self._queries, 1e-12))
+
+
+class HeatAwareAdmission(AdmissionPolicy):
+    """Heat-aware admission for :class:`HotClusterLUTCache`.
+
+    On a full cache, sample the ``sample_size`` least-recently-used
+    entries, score each by its cluster's current heat, and evict the
+    coldest (oldest wins ties).  The candidate is admitted only if its
+    cluster is at least as hot as that victim; otherwise the insert is
+    *rejected* (counted in ``stats.rejects``) and the cache is left
+    untouched — one-off cold probes cannot displace hot-cluster LUTs.
+    """
+
+    def __init__(self, estimator: OnlineHeatEstimator, sample_size: int = 8):
+        self.estimator = estimator
+        self.sample_size = int(sample_size)
+
+    def pick_victim(self, candidate_key, sample):
+        heat = self.estimator.heat_of
+        victim = min(sample, key=lambda k: heat(k[0]))
+        if heat(candidate_key[0]) < heat(victim[0]):
+            return None                       # reject: colder than everyone
+        return victim
+
+
+class LRUCache:
+    """Bounded cache over hashable keys with hit/miss/eviction accounting.
+
+    Recency order is LRU; when full, victim selection is delegated to the
+    optional :class:`AdmissionPolicy` (default: evict oldest, admit all).
+    """
+
+    def __init__(self, capacity: int,
+                 admission: Optional[AdmissionPolicy] = None):
         if capacity < 1:
             raise ValueError("capacity must be >= 1")
         self.capacity = int(capacity)
+        self.admission = admission
         self._od: "OrderedDict[Hashable, Any]" = OrderedDict()
         self.stats = CacheStats()
 
@@ -71,16 +188,28 @@ class LRUCache:
         self.stats.hits += 1
         return v
 
-    def put(self, key, value) -> None:
+    def put(self, key, value) -> bool:
+        """Insert (or refresh) ``key``.  Returns False iff the admission
+        policy rejected the insert on a full cache."""
         if key in self._od:
             self._od.move_to_end(key)
             self._od[key] = value
-            return
+            return True
+        if self.admission is not None and len(self._od) >= self.capacity:
+            n = min(getattr(self.admission, "sample_size", 8), len(self._od))
+            sample = [k for k, _ in zip(self._od, range(n))]  # oldest first
+            victim = self.admission.pick_victim(key, sample)
+            if victim is None:
+                self.stats.rejects += 1
+                return False
+            del self._od[victim]
+            self.stats.evictions += 1
         self._od[key] = value
         self.stats.inserts += 1
         while len(self._od) > self.capacity:
             self._od.popitem(last=False)
             self.stats.evictions += 1
+        return True
 
 
 def query_hash_bucket(query: np.ndarray,
@@ -94,21 +223,113 @@ def query_hash_bucket(query: np.ndarray,
     return int.from_bytes(digest, "little")
 
 
+# ---------------------------------------------------------------------------
+# Shared cached-LC assembly: both engines (LocalEngine._search_cached and
+# DistributedEngine._lut_bank) scan the cache per (cluster, query-bucket)
+# key, batch-build the misses padded to a power of two, and insert only
+# valid rows — one implementation so pad-guard/pow2/accounting fixes land
+# in one place.
+# ---------------------------------------------------------------------------
+
+def lut_miss_scan(cache: "HotClusterLUTCache", flat_probes: np.ndarray,
+                  buckets: Sequence[int], nprobe: int, n_rows: int):
+    """Look up rows 0..n_rows-1 (row t = pair (t // nprobe, probe t)).
+
+    ``buckets`` holds one query-hash per *valid* query; rows of queries
+    beyond ``len(buckets)`` are serving padding — they are returned as
+    misses without touching the cache (no lookup, no stats).
+    Returns (luts, miss_rows): luts[t] is the cached (M, CB) LUT or None.
+    """
+    luts = [None] * n_rows
+    miss_rows = []
+    for t in range(n_rows):
+        qi = t // nprobe
+        if qi >= len(buckets):                 # pad row: compute, don't cache
+            miss_rows.append(t)
+            continue
+        hit = cache.get_by_bucket(flat_probes[t], buckets[qi])
+        if hit is None:
+            miss_rows.append(t)
+        else:
+            luts[t] = hit
+    return luts, miss_rows
+
+
+def lut_fill_misses(cache: "HotClusterLUTCache", codebook, luts,
+                    miss_rows, flat_probes: np.ndarray,
+                    buckets: Sequence[int], nprobe: int,
+                    residuals: np.ndarray) -> None:
+    """Build the missing LUTs in one batched LC and insert valid rows.
+
+    ``residuals`` rows align with ``miss_rows``: either (nmiss, D) host
+    rows — padded here to the next power of two — or an already
+    pow2-padded (mpad, D) array (host or device), used as-is so callers
+    that computed residuals on device skip a host round trip.  Bounding
+    the LC batch to pow2 shapes keeps the compiled-shape set small (a
+    first-seen miss count would otherwise pay its XLA compile
+    mid-stream); pad rows of the *serving batch* (query index >=
+    len(buckets)) never enter the cache."""
+    import jax.numpy as jnp
+    from repro.core.adc import build_lut_batch
+    nmiss = len(miss_rows)
+    if nmiss == 0:
+        return
+    mpad = 1 << (nmiss - 1).bit_length()
+    if residuals.shape[0] == mpad:
+        miss = jnp.asarray(residuals)
+    else:
+        host = np.zeros((mpad, residuals.shape[1]), np.float32)
+        host[:nmiss] = residuals
+        miss = jnp.asarray(host)
+    fresh = np.asarray(build_lut_batch(codebook, miss))[:nmiss]
+    for j, t in enumerate(miss_rows):
+        luts[t] = fresh[j]
+        qi = t // nprobe
+        if qi < len(buckets):
+            cache.put_by_bucket(flat_probes[t], buckets[qi], fresh[j])
+
+
+def precompile_lut_shapes(codebook, max_rows: int) -> None:
+    """Compile the miss-batch LC shapes (pow2 up to ``max_rows``) ahead of
+    traffic — shared by both engines' ``precompile_lc``."""
+    import jax.numpy as jnp
+    from repro.core.adc import build_lut_batch
+    max_rows = 1 << (max(max_rows, 1) - 1).bit_length()
+    s = 1
+    while s <= max_rows:
+        # numpy source so the host->device convert for this shape is
+        # also compiled, not just the LUT build itself
+        zeros = np.zeros((s, codebook.m * codebook.dsub), np.float32)
+        build_lut_batch(codebook, jnp.asarray(zeros))
+        s *= 2
+
+
 class HotClusterLUTCache:
-    """LRU of per-(cluster, query-bucket) LC outputs — (M, CB) f32 LUTs.
+    """Cache of per-(cluster, query-bucket) LC outputs — (M, CB) f32 LUTs.
 
     A full LUT is M*CB*4 bytes (16 KiB at M=16, CB=256); ``capacity`` is
     an entry count, so budget ~capacity * 16 KiB of host memory.
+
+    ``admission`` switches victim selection from pure LRU to a policy —
+    in practice :class:`HeatAwareAdmission` wired to the engine's
+    :class:`OnlineHeatEstimator` — without changing keys or lookup:
+    hit/miss behaviour and stored values are policy-independent, so
+    exact-granularity served results stay bit-identical either way.
     """
 
     def __init__(self, capacity: int = 4096,
-                 granularity: Optional[float] = None):
-        self._lru = LRUCache(capacity)
+                 granularity: Optional[float] = None,
+                 admission: Optional[AdmissionPolicy] = None):
+        self._lru = LRUCache(capacity, admission=admission)
         self.granularity = granularity
 
     @property
     def stats(self) -> CacheStats:
         return self._lru.stats
+
+    @property
+    def admission(self) -> Optional[AdmissionPolicy]:
+        return self._lru.admission
 
     def bucket_of(self, query: np.ndarray) -> int:
         """Hash a query once; reuse the bucket across its nprobe keys."""

@@ -7,18 +7,33 @@ Glues three pieces together:
     bucket), flushing on deadline or on a full batch;
   * an engine behind the :class:`SearchEngine` protocol — either the
     single-device pipeline (:class:`LocalEngine` around
-    ``core.search.search_ivfpq``, optionally with the hot-cluster LUT
-    cache skipping redundant LC work) or the distributed one
-    (:class:`ShardedEngine` around ``core.sharded_search``);
+    ``core.search.search_ivfpq``) or the distributed one
+    (:class:`ShardedEngine` around ``core.sharded_search``), both
+    optionally backed by the hot-cluster LUT cache
+    (:mod:`repro.runtime.cache`) that skips redundant LC work on skewed
+    streams;
   * :class:`ServingRuntime` — submit/step online API plus a
     virtual-clock stream simulator with latency/throughput
     instrumentation (p50/p99, queue depth, batch occupancy, cache hit
     rate).
 
-Every engine op is row-wise per query, so a request's result is
-independent of which micro-batch it rode in — de-padded served results
-match a direct batched ``search()`` call exactly (asserted in tests and
-``examples/rag_serving.py``).
+Units and shapes: timestamps and latencies are seconds on the caller's
+clock (the simulator uses a virtual clock and charges real measured
+engine time); queries are (D,) f32 per request, batched to (bucket, D);
+results per request are ((k,) f32 distances, (k,) i32 ids).
+
+Invariants:
+  * every engine op is row-wise per query, so a request's result is
+    independent of which micro-batch it rode in — de-padded served
+    results match a direct batched ``search()`` call exactly (asserted
+    in tests and ``examples/rag_serving.py``), including with the LUT
+    cache enabled at exact granularity;
+  * padding rows (``row >= n_valid``) never reach the LUT cache or the
+    sharded engine's heat estimator — occupancy metrics and admission
+    see only real traffic;
+  * ``warmup`` compiles every bucket shape (and the sharded engine's
+    per-bucket task-table shapes) without polluting cache entries, cache
+    stats, or heat counts.
 """
 
 from __future__ import annotations
@@ -32,13 +47,14 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core.adc import adc_distances, build_lut_batch
+from repro.core.adc import adc_distances
 from repro.core.ivf import IVFPQIndex, PaddedClusters
 from repro.core.search import SearchParams, cluster_locate, search_ivfpq
 from repro.core.topk import topk_smallest
 from repro.runtime.batching import (BucketPolicy, MicroBatch, MicroBatcher,
                                     Request)
-from repro.runtime.cache import HotClusterLUTCache
+from repro.runtime.cache import (HotClusterLUTCache, lut_fill_misses,
+                                 lut_miss_scan, precompile_lut_shapes)
 
 
 class SearchEngine(Protocol):
@@ -122,23 +138,15 @@ class LocalEngine:
         """Compile the cached path's miss-batch LC shapes (pow2 up to
         ``max_rows``) ahead of traffic — a first-seen miss count would
         otherwise pay its XLA compile mid-stream."""
-        cb = self.index.codebook
-        # the miss path pads to the NEXT pow2, so cover that shape too
-        max_rows = 1 << (max(max_rows, 1) - 1).bit_length()
-        s = 1
-        while s <= max_rows:
-            # numpy source so the host->device convert for this shape is
-            # also compiled, not just the LUT build itself
-            zeros = np.zeros((s, cb.m * cb.dsub), np.float32)
-            build_lut_batch(cb, jnp.asarray(zeros))
-            s *= 2
+        precompile_lut_shapes(self.index.codebook, max_rows)
 
     def _search_cached(self, queries: np.ndarray,
                        n_valid: Optional[int] = None):
         """CL/RC and DC/TS jitted (once per bucket shape); LC goes through
-        the cache host-side, batching LUT construction over miss rows.
-        Padding rows (>= n_valid) bypass the cache entirely — they must
-        not occupy LRU slots or distort hit-rate accounting."""
+        the cache host-side (``cache.lut_miss_scan``/``lut_fill_misses``),
+        batching LUT construction over miss rows.  Padding rows
+        (>= n_valid) bypass the cache entirely — they must not occupy LRU
+        slots or distort hit-rate accounting."""
         p = self.params
         probes, flat_res = _cl_rc(jnp.asarray(queries), self.index.centroids,
                                   self.index.rotation, nprobe=p.nprobe)
@@ -146,41 +154,16 @@ class LocalEngine:
         nq, npr = probes_np.shape
         flat_probes = probes_np.reshape(-1)
         n_valid_q = n_valid if n_valid is not None else nq
-        valid_rows = n_valid_q * npr
         # one hash per (valid) query, reused across its nprobe cache keys
         buckets = [self.lut_cache.bucket_of(queries[qi])
                    for qi in range(n_valid_q)]
-
-        luts: List[Optional[np.ndarray]] = [None] * (nq * npr)
-        miss_rows: List[int] = []
-        for t in range(nq * npr):
-            if t >= valid_rows:                # pad row: compute, don't cache
-                miss_rows.append(t)
-                continue
-            hit = self.lut_cache.get_by_bucket(flat_probes[t],
-                                               buckets[t // npr])
-            if hit is None:
-                miss_rows.append(t)
-            else:
-                luts[t] = hit
+        luts, miss_rows = lut_miss_scan(self.lut_cache, flat_probes,
+                                        buckets, npr, nq * npr)
         if miss_rows:
-            # Gather miss rows host-side and pad the batch to a power of
-            # two: build_lut_batch (like any jax op) compiles per shape,
-            # and miss counts vary per batch — without bucketing them
-            # (and keeping the variable-size gather in numpy), every new
-            # count pays a fresh XLA compile that stalls the serving loop.
-            nmiss = len(miss_rows)
-            mpad = 1 << (nmiss - 1).bit_length()
             flat_res_np = np.asarray(flat_res)
-            miss = np.zeros((mpad, flat_res_np.shape[1]), np.float32)
-            miss[:nmiss] = flat_res_np[miss_rows]
-            fresh = np.asarray(build_lut_batch(self.index.codebook,
-                                               jnp.asarray(miss)))[:nmiss]
-            for j, t in enumerate(miss_rows):
-                luts[t] = fresh[j]
-                if t < valid_rows:             # pad rows never enter the LRU
-                    self.lut_cache.put_by_bucket(flat_probes[t],
-                                                 buckets[t // npr], fresh[j])
+            lut_fill_misses(self.lut_cache, self.index.codebook, luts,
+                            miss_rows, flat_probes, buckets, npr,
+                            flat_res_np[miss_rows])
         lut = jnp.asarray(np.stack(luts))                  # (QP, M, CB)
         bd, bi = _dc_ts(lut, jnp.asarray(flat_probes), self.clusters,
                         k=p.k, strategy=p.strategy, nprobe=npr)
@@ -193,16 +176,40 @@ class ShardedEngine:
     ``search(flush=True)`` drains deferred tasks, so each batch returns
     complete results; per-query merge makes rows independent of batch
     composition, which is what the de-padding invariant needs.
+
+    The serving-v2 collaborators live on the wrapped engine; this adapter
+    only forwards them (``lut_cache`` as a settable property so warmup's
+    throwaway-cache swap reaches the engine, ``n_valid`` so padding rows
+    stay out of the cache and the heat estimator).
     """
 
     def __init__(self, engine):
         self.engine = engine
         self.k = engine.cfg.k
 
+    @property
+    def lut_cache(self):
+        return self.engine.lut_cache
+
+    @lut_cache.setter
+    def lut_cache(self, cache):
+        self.engine.lut_cache = cache
+
+    @property
+    def nprobe(self) -> int:
+        return self.engine.cfg.nprobe
+
+    def precompile_lc(self, max_rows: int) -> None:
+        self.engine.precompile_lc(max_rows)
+
+    def serving_info(self) -> dict:
+        return self.engine.serving_info()
+
     def search_batch(self, queries: np.ndarray,
                      n_valid: Optional[int] = None
                      ) -> Tuple[np.ndarray, np.ndarray]:
-        d, i, _info = self.engine.search(jnp.asarray(queries, jnp.float32))
+        d, i, _info = self.engine.search(jnp.asarray(queries, jnp.float32),
+                                         n_valid=n_valid)
         return np.asarray(d), np.asarray(i)
 
 
@@ -313,9 +320,11 @@ class ServingRuntime:
 
     def warmup(self, d: int) -> None:
         """Compile every bucket shape once (zero queries) so the first
-        real batch per bucket isn't charged jit time.  A throwaway LUT
-        cache stands in for the real one so warmup exercises the cached
-        code path without polluting entries or stats."""
+        real batch per bucket isn't charged jit time.  Warmup batches are
+        all-padding (``n_valid=0``) so they never touch the cache or the
+        heat estimator; a throwaway LUT cache additionally stands in for
+        the real one so engines that ignore ``n_valid`` still can't
+        pollute entries or stats."""
         cache = getattr(self.engine, "lut_cache", None)
         if cache is not None:
             self.engine.lut_cache = HotClusterLUTCache(
@@ -323,11 +332,13 @@ class ServingRuntime:
                 granularity=cache.granularity)
         try:
             for b in self.batcher.policy.buckets:
-                self.engine.search_batch(np.zeros((b, d), np.float32))
+                self.engine.search_batch(np.zeros((b, d), np.float32),
+                                         n_valid=0)
             precompile = getattr(self.engine, "precompile_lc", None)
             if cache is not None and precompile is not None:
-                nprobe = getattr(getattr(self.engine, "params", None),
-                                 "nprobe", 1)
+                nprobe = (getattr(self.engine, "nprobe", None)
+                          or getattr(getattr(self.engine, "params", None),
+                                     "nprobe", 1))
                 precompile(self.batcher.policy.max_batch * nprobe)
         finally:
             if cache is not None:
@@ -407,4 +418,7 @@ class ServingRuntime:
             out["lut_cache"] = dict(cache.stats.as_dict(),
                                     entries=len(cache),
                                     granularity=cache.granularity)
+        info = getattr(self.engine, "serving_info", None)
+        if info is not None:
+            out["engine"] = info()
         return out

@@ -1,0 +1,300 @@
+"""Sharded serving v2: LUT cache inside the sharded path, heat-aware
+admission vs LRU, online heat + re-layout, per-bucket tasks_per_shard."""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import cluster_locate
+from repro.core.sharded_search import DistributedEngine, EngineConfig
+from repro.runtime import (HeatAwareAdmission, HotClusterLUTCache,
+                           OnlineHeatEstimator, ServingConfig,
+                           ServingRuntime, ShardedEngine,
+                           TasksPerShardController)
+
+NPROBE = 8
+
+
+@pytest.fixture(scope="module")
+def sample_probes(small_index, small_corpus):
+    probes, _ = cluster_locate(small_corpus.queries.astype(jnp.float32),
+                               small_index.centroids, NPROBE)
+    return np.asarray(probes)
+
+
+def _engine(small_index, sample_probes, **kw):
+    cfg = EngineConfig(n_shards=4, nprobe=NPROBE, k=10, tasks_per_shard=512,
+                       strategy="gather", dup_budget_bytes=1 << 17,
+                       **{k: v for k, v in kw.items()
+                          if k in EngineConfig.__dataclass_fields__})
+    extra = {k: v for k, v in kw.items()
+             if k not in EngineConfig.__dataclass_fields__}
+    return DistributedEngine(small_index, cfg, sample_probes, **extra)
+
+
+# ---------------------------------------------------------------------------
+# Online heat estimation
+# ---------------------------------------------------------------------------
+
+def test_heat_estimator_units_match_offline():
+    """heat() is expected accesses/query — same unit as estimate_heat."""
+    from repro.core.layout import estimate_heat
+    probes = np.array([[0, 1], [0, 2], [0, 1]])
+    est = OnlineHeatEstimator(nlist=4, halflife_batches=1e9)  # ~no decay
+    est.observe(probes)
+    np.testing.assert_allclose(est.heat(), estimate_heat(probes, 4),
+                               rtol=1e-9)
+    assert est.heat_of(0) == pytest.approx(1.0)
+
+
+def test_heat_estimator_decay_tracks_shift():
+    """After the stream shifts, decayed heat must re-rank clusters."""
+    est = OnlineHeatEstimator(nlist=8, halflife_batches=2.0)
+    for _ in range(16):
+        est.observe(np.full((4, 2), 0))            # cluster 0 hot
+    assert est.heat_of(0) > est.heat_of(7)
+    for _ in range(16):
+        est.observe(np.full((4, 2), 7))            # traffic shifts to 7
+    assert est.heat_of(7) > est.heat_of(0)
+    assert est.batches_observed == 32
+
+
+def test_heat_estimator_seeded_cold_start():
+    seed = np.zeros(8)
+    seed[3] = 2.0
+    est = OnlineHeatEstimator(nlist=8, seed=seed)
+    assert est.heat_of(3) == pytest.approx(2.0)    # offline heat preserved
+    assert est.heat_of(0) == 0.0
+
+
+# ---------------------------------------------------------------------------
+# Heat-aware admission vs plain LRU
+# ---------------------------------------------------------------------------
+
+def _replay(cache, accesses):
+    hits = 0
+    for cluster, bucket in accesses:
+        if cache.get_by_bucket(cluster, bucket) is not None:
+            hits += 1
+        else:
+            cache.put_by_bucket(cluster, bucket, np.zeros(1, np.float32))
+    return hits
+
+
+def _skewed_accesses(rounds=20):
+    """8 recurring hot keys (clusters 0–3) interleaved with a one-off cold
+    scan (clusters 4+, fresh bucket each time) — classic LRU poison."""
+    acc, cold = [], 0
+    for _ in range(rounds):
+        for h in range(8):
+            acc.append((h % 4, h // 4))
+        for _ in range(4):
+            acc.append((4 + cold % 28, 10_000 + cold))
+            cold += 1
+    return acc
+
+
+def test_heat_admission_beats_lru_on_skewed_stream():
+    heat = np.full(32, 0.01)
+    heat[:4] = 4.0
+    est = OnlineHeatEstimator(nlist=32, seed=heat)
+    acc = _skewed_accesses()
+    lru = HotClusterLUTCache(capacity=8)
+    aware = HotClusterLUTCache(capacity=8,
+                               admission=HeatAwareAdmission(est))
+    hits_lru = _replay(lru, acc)
+    hits_aware = _replay(aware, acc)
+    # cold scan inserts are rejected, hot entries survive every round
+    assert hits_aware > hits_lru
+    assert aware.stats.rejects > 0
+    assert aware.stats.hit_rate > 0.5
+    assert len(aware) <= 8 and len(lru) <= 8
+
+
+def test_heat_admission_degrades_to_lru_on_flat_heat():
+    """All-equal heat: ties admit, evict the oldest — plain LRU behaviour."""
+    est = OnlineHeatEstimator(nlist=8)                  # all-zero heat
+    aware = HotClusterLUTCache(capacity=2,
+                               admission=HeatAwareAdmission(est))
+    aware.put_by_bucket(0, 0, np.zeros(1))
+    aware.put_by_bucket(1, 0, np.zeros(1))
+    aware.put_by_bucket(2, 0, np.zeros(1))              # evicts (0, 0)
+    assert aware.stats.rejects == 0
+    assert aware.get_by_bucket(0, 0) is None
+    assert aware.get_by_bucket(2, 0) is not None
+
+
+# ---------------------------------------------------------------------------
+# LUT cache inside the sharded path
+# ---------------------------------------------------------------------------
+
+def test_sharded_cache_matches_uncached(small_index, small_corpus,
+                                        sample_probes):
+    """Cache on vs off: same neighbors, distances to float round-off; a
+    repeated batch is served fully from cache and is bit-identical."""
+    queries = jnp.asarray(small_corpus.queries[:8], jnp.float32)
+    plain = _engine(small_index, sample_probes)
+    cache = HotClusterLUTCache(capacity=2048)
+    cached = _engine(small_index, sample_probes, lut_cache=cache)
+    d0, i0, _ = plain.search(queries)
+    d1, i1, _ = cached.search(queries)
+    np.testing.assert_array_equal(i1, i0)
+    np.testing.assert_allclose(d1, d0, rtol=1e-5, atol=1e-5)
+    assert cache.stats.misses == 8 * NPROBE and cache.stats.hits == 0
+    d2, i2, _ = cached.search(queries)          # every (q, cluster) pair hits
+    assert cache.stats.hits == 8 * NPROBE
+    np.testing.assert_array_equal(i2, i1)
+    np.testing.assert_array_equal(d2, d1)
+
+
+def test_sharded_served_with_cache_matches_direct(small_index, small_corpus,
+                                                  sample_probes):
+    """Skewed stream through the runtime over the sharded engine with the
+    cache on: served results == direct batched search, and repeats hit."""
+    queries = np.asarray(small_corpus.queries[:6])
+    cache = HotClusterLUTCache(capacity=2048)
+    adapter = ShardedEngine(_engine(small_index, sample_probes,
+                                    lut_cache=cache))
+    direct_d, direct_i = adapter.search_batch(queries)
+    rt = ServingRuntime(adapter, ServingConfig(buckets=(1, 2, 4),
+                                               max_wait_s=1e-4))
+    rt.warmup(queries.shape[1])
+    stream = [(i * 1e-3, queries[i % len(queries)]) for i in range(12)]
+    reqs = rt.run_stream(stream)
+    for i, r in enumerate(reqs):
+        np.testing.assert_array_equal(r.ids, direct_i[i % len(queries)])
+    m = rt.metrics()
+    assert m["lut_cache"]["hits"] >= 6 * NPROBE
+    # +1: the direct search_batch() reference call above is also a batch
+    assert m["engine"]["batches"] == len(rt.stats.batches) + 1
+
+
+def test_pad_rows_bypass_sharded_cache_and_heat(small_index, small_corpus,
+                                                sample_probes):
+    """Serving padding must not reach the cache or the heat estimator."""
+    queries = np.asarray(small_corpus.queries[:6])
+    est = OnlineHeatEstimator(small_index.nlist)
+    cache = HotClusterLUTCache(capacity=2048,
+                               admission=HeatAwareAdmission(est))
+    adapter = ShardedEngine(_engine(small_index, sample_probes,
+                                    lut_cache=cache, heat_estimator=est))
+    rt = ServingRuntime(adapter, ServingConfig(buckets=(4,), max_wait_s=1e-4))
+    rt.warmup(queries.shape[1])
+    assert est.batches_observed == 0                 # warmup is all padding
+    assert cache.stats.lookups == 0 and len(cache) == 0
+    # one valid request per deadline-flushed batch of 4 -> 3 pad rows each
+    reqs = rt.run_stream([(i * 1e-3, queries[i]) for i in range(6)])
+    assert cache.stats.lookups == 6 * NPROBE         # pads never looked up
+    assert est.batches_observed == 6
+    direct_d, direct_i = adapter.search_batch(queries)
+    np.testing.assert_array_equal(np.stack([r.ids for r in reqs]), direct_i)
+
+
+def test_lut_step_masks_bankless_tasks(small_index, sample_probes):
+    """A task with lidx == -1 (a flush=False carry-over whose cluster this
+    batch didn't probe) must be invalidated — never scored against bank
+    row 0."""
+    import jax.numpy as jnp2
+    from repro.core.sharded_search import run_shards_vmap_lut
+    eng = _engine(small_index, sample_probes)
+    s = eng.sindex.n_shards
+    qidx = jnp2.zeros((s, 4), jnp2.int32)              # "valid" query 0
+    sidx = jnp2.zeros((s, 4), jnp2.int32)              # real slot
+    lidx = jnp2.full((s, 4), -1, jnp2.int32)           # ...but no bank row
+    bank = jnp2.zeros((1, small_index.codebook.m, small_index.codebook.cb),
+                      jnp2.float32)
+    bd, bi = run_shards_vmap_lut(eng.sindex, qidx, sidx, lidx, bank,
+                                 k=eng.cfg.k, strategy="gather")
+    assert bool(jnp2.all(jnp2.isinf(bd))) and bool(jnp2.all(bi == -1))
+
+
+# ---------------------------------------------------------------------------
+# Per-bucket tasks_per_shard tuning
+# ---------------------------------------------------------------------------
+
+def test_tasks_controller_widths_and_adaptation():
+    ctrl = TasksPerShardController(n_shards=4, tasks_per_query=8.0,
+                                   headroom=1.5, floor=4, cap=256)
+    assert ctrl.tasks_for(1) == 4                    # floor
+    assert ctrl.tasks_for(32) == 128                 # pow2(ceil(96))
+    assert ctrl.tasks_for(10_000) == 256             # capped at static width
+    ctrl.observe(32, n_deferred=5)                   # hard-cap overflow
+    assert ctrl.tasks_for(32) == 256
+    ctrl.observe(10_000, n_deferred=5)               # already at cap: no-op
+    assert ctrl.overflows == 1
+    assert ctrl.summary()["boosted"] == {32: 256}
+    # perf-model latency budget caps the width independently
+    timed = TasksPerShardController(n_shards=4, tasks_per_query=8.0,
+                                    floor=4, cap=256, mean_task_s=1e-3,
+                                    max_shard_time_s=8e-3)
+    assert timed.tasks_for(1024) == 8
+    # overflow boosts are inert (and bounded) while the budget cap binds
+    for _ in range(100):
+        timed.observe(1024, n_deferred=3)
+    assert timed.tasks_for(1024) == 8 and timed.overflows == 0
+    # retune re-prices the prediction after a re-layout
+    ctrl.retune(tasks_per_query=16.0)
+    assert ctrl.tasks_for(1) == 8                    # was 4 at tpq=8
+
+
+def test_tasks_controller_never_degrades(small_index, small_corpus,
+                                         sample_probes):
+    """Tuned widths must shrink the static table without changing results
+    or adding drain rounds."""
+    queries = jnp.asarray(small_corpus.queries[:16], jnp.float32)
+    static = _engine(small_index, sample_probes)
+    tuned = _engine(small_index, sample_probes)
+    tuned.tasks_controller = tuned.make_tasks_controller()
+    width = tuned.tasks_controller.tasks_for(16)
+    assert width <= static.cfg.tasks_per_shard
+    d0, i0, info0 = static.search(queries)
+    d1, i1, info1 = tuned.search(queries)
+    np.testing.assert_allclose(np.sort(d1, axis=1), np.sort(d0, axis=1),
+                               rtol=1e-5, atol=1e-5)
+    for q in range(i0.shape[0]):                     # same neighbor sets
+        assert set(i1[q].tolist()) == set(i0[q].tolist())
+    assert info1["rounds"] <= info0["rounds"] + 1
+    assert tuned.tasks_controller.overflows == 0
+
+
+# ---------------------------------------------------------------------------
+# Heat-driven re-layout
+# ---------------------------------------------------------------------------
+
+def test_refresh_layout_preserves_results(small_index, small_corpus,
+                                          sample_probes):
+    """Re-layout changes placement, never results; carry is reset and the
+    relayout counter advances."""
+    queries = jnp.asarray(small_corpus.queries[:8], jnp.float32)
+    est = OnlineHeatEstimator(small_index.nlist)
+    eng = _engine(small_index, sample_probes, heat_estimator=est)
+    d0, i0, _ = eng.search(queries)
+    # observe a strongly shifted stream, then re-layout from it
+    hot = np.asarray(sample_probes[:8])
+    for _ in range(8):
+        est.observe(hot)
+    stats = eng.refresh_layout()
+    assert eng.relayouts == 1 and eng.carry == []
+    assert np.isfinite(stats["imbalance_after"])
+    d1, i1, _ = eng.search(queries)
+    np.testing.assert_allclose(np.sort(d1, axis=1), np.sort(d0, axis=1),
+                               rtol=1e-5, atol=1e-5)
+    for q in range(i0.shape[0]):
+        assert set(i1[q].tolist()) == set(i0[q].tolist())
+
+
+def test_periodic_relayout_in_serving(small_index, small_corpus,
+                                      sample_probes):
+    """relayout_every triggers mid-stream and served results still match
+    a direct search."""
+    queries = np.asarray(small_corpus.queries[:4])
+    est = OnlineHeatEstimator(small_index.nlist)
+    adapter = ShardedEngine(_engine(small_index, sample_probes,
+                                    relayout_every=3, heat_estimator=est))
+    direct_d, direct_i = adapter.search_batch(queries)
+    rt = ServingRuntime(adapter, ServingConfig(buckets=(1, 2),
+                                               max_wait_s=1e-4))
+    reqs = rt.run_stream([(i * 1e-3, queries[i % 4]) for i in range(8)])
+    assert adapter.engine.relayouts >= 1
+    for i, r in enumerate(reqs):
+        assert set(r.ids.tolist()) == set(direct_i[i % 4].tolist())

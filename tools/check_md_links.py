@@ -1,0 +1,94 @@
+#!/usr/bin/env python
+"""Offline markdown link checker for the docs job.
+
+Usage: python tools/check_md_links.py README.md docs [more files/dirs...]
+
+Checks every relative ``[text](target)`` link in the given markdown
+files (directories are walked for ``*.md``): the target file must exist
+relative to the file containing the link, and a ``#fragment`` pointing
+into a markdown file must match a heading's GitHub-style anchor.
+External (``http(s)://``, ``mailto:``) links are skipped — CI has no
+network, and their rot is not doc/API drift.
+
+Exit code 0 iff every link resolves; broken links are listed one per
+line as ``file:line: target``.
+"""
+
+from __future__ import annotations
+
+import re
+import sys
+from pathlib import Path
+
+LINK_RE = re.compile(r"\[[^\]]*\]\(([^)\s]+)\)")
+HEADING_RE = re.compile(r"^#{1,6}\s+(.*)$")
+
+
+def github_anchor(heading: str) -> str:
+    """GitHub's heading -> anchor slug (lowercase, spaces -> dashes,
+    punctuation dropped)."""
+    text = re.sub(r"[`*_]", "", heading.strip())
+    text = re.sub(r"[^\w\- ]", "", text.lower())
+    return text.replace(" ", "-")
+
+
+def anchors_of(md_file: Path) -> set:
+    out = set()
+    for line in md_file.read_text(encoding="utf-8").splitlines():
+        m = HEADING_RE.match(line)
+        if m:
+            out.add(github_anchor(m.group(1)))
+    return out
+
+
+def collect_md(paths) -> list:
+    files = []
+    for p in map(Path, paths):
+        if p.is_dir():
+            files.extend(sorted(p.rglob("*.md")))
+        elif p.suffix == ".md":
+            files.append(p)
+        else:
+            print(f"warning: skipping non-markdown arg {p}", file=sys.stderr)
+    return files
+
+
+def check(files) -> list:
+    broken = []
+    for md in files:
+        for lineno, line in enumerate(
+                md.read_text(encoding="utf-8").splitlines(), 1):
+            for target in LINK_RE.findall(line):
+                if re.match(r"^[a-z][a-z0-9+.-]*:", target):   # scheme
+                    continue
+                path_part, _, frag = target.partition("#")
+                dest = (md.parent / path_part).resolve() if path_part else md
+                if not dest.exists():
+                    broken.append(f"{md}:{lineno}: {target}")
+                    continue
+                if frag and dest.suffix == ".md":
+                    if github_anchor(frag) not in anchors_of(dest):
+                        broken.append(f"{md}:{lineno}: {target} "
+                                      f"(missing anchor)")
+    return broken
+
+
+def main() -> int:
+    args = sys.argv[1:]
+    if not args:
+        print(__doc__)
+        return 2
+    files = collect_md(args)
+    if not files:
+        print("no markdown files found", file=sys.stderr)
+        return 2
+    broken = check(files)
+    for b in broken:
+        print(b)
+    print(f"checked {len(files)} files: "
+          f"{'OK' if not broken else f'{len(broken)} broken links'}")
+    return 1 if broken else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())
