@@ -14,6 +14,12 @@
                          per-bucket task-table tuning.  v2's hit rate
                          and smaller compiled task tables should beat
                          v1 on both p50 and p99.
+  serve/cluster_*      — the service tier: replicas x router policy on
+                         one shared Zipf stream through AnnService.
+                         Cache-aware routing keeps hot probe sets on the
+                         replica that already cached them, so its
+                         aggregate LUT hit rate should beat round-robin
+                         at equal replica count.
 
 All timings are measured engine wall-clock charged onto a virtual-clock
 arrival trace (single-server model), so queueing delay appears as load
@@ -28,23 +34,11 @@ import numpy as np
 from benchmarks.common import corpus_and_index, row
 from repro.core import SearchParams, cluster_locate
 from repro.core.sharded_search import DistributedEngine, EngineConfig
+# the shared trace model: Poisson arrivals, Zipf-by-rank query popularity
+from repro.data import make_query_stream as _poisson_stream
 from repro.runtime import (HeatAwareAdmission, HotClusterLUTCache,
                            LocalEngine, OnlineHeatEstimator, ServingConfig,
                            ServingRuntime, ShardedEngine)
-
-
-def _poisson_stream(queries, n_requests, qps, rng, skew=None):
-    """(t, query) arrivals; ``skew`` = Zipf exponent over the query pool."""
-    gaps = rng.exponential(1.0 / qps, size=n_requests)
-    times = np.cumsum(gaps)
-    if skew is None:
-        picks = rng.integers(0, len(queries), size=n_requests)
-    else:
-        ranks = np.arange(1, len(queries) + 1, dtype=np.float64)
-        pmf = ranks ** -skew
-        pmf /= pmf.sum()
-        picks = rng.choice(len(queries), size=n_requests, p=pmf)
-    return [(float(times[i]), queries[picks[i]]) for i in range(n_requests)]
 
 
 def _serve(engine, stream, d, cfg):
@@ -131,4 +125,25 @@ def run(quick: bool = False):
             f"serve/sharded_{name}", m["p99_ms"] * 1e-3,
             f"p50_ms={m['p50_ms']:.2f}_hit_rate={hit:.2f}"
             f"_batches={m['batches']}"))
+
+    # -- service tier: replicas x router policy through AnnService --------
+    from repro.service import AnnService, ServiceSpec
+    cluster_stream = _poisson_stream(pool, n_requests, loads[-1], rng,
+                                     skew=1.2)
+    for nrep, policy in ((1, "round_robin"), (3, "round_robin"),
+                         (3, "least_queue"), (3, "cache_aware")):
+        spec = ServiceSpec(engine="local", replicas=nrep, router=policy,
+                           nprobe=8, k=10, cache_capacity=1024,
+                           buckets=(1, 2, 4, 8), max_wait_s=2e-3)
+        svc = AnnService.build(spec, index=idx)
+        svc.warmup()
+        svc.stream(cluster_stream)
+        st = svc.stats()
+        agg = st["aggregate"]
+        out.append(row(
+            f"serve/cluster_r{nrep}_{policy}", agg["p99_ms"] * 1e-3,
+            f"p50_ms={agg['p50_ms']:.2f}"
+            f"_hit_rate={agg.get('lut_hit_rate', 0.0):.2f}"
+            f"_picks={'/'.join(str(p) for p in st['router']['picks'])}"))
+        svc.shutdown()
     return out

@@ -1,12 +1,13 @@
-"""RAG serving end to end: a *stream* of single-query requests flows
-through the online serving runtime (micro-batching + hot-cluster LUT
-cache) into the distributed DRIM-ANN engine, and the retrieved documents
-feed an LM's decode loop — the paper's motivating application (§I).
+"""RAG serving end to end through the service layer: one ServiceSpec
+stands up the whole retrieval tier — sharded DRIM-ANN engines, LUT
+caches, micro-batching runtimes, a cache-aware multi-replica router —
+and a *stream* of single-query requests flows through it into an LM's
+decode loop, the paper's motivating application (§I).
 
-Pipeline: query stream -> micro-batcher (bucketed, deadline-flushed)
--> sharded ANNS top-k -> de-padded per-request results (verified
-identical to a direct batched search) -> retrieved vectors become
-prefix context embeddings -> batched LM decode continues the prompt.
+Pipeline: ServiceSpec -> AnnService.build -> routed query stream ->
+per-replica micro-batches -> sharded ANNS top-k -> de-padded per-request
+results (verified against a direct batched search) -> retrieved vectors
+become prefix context embeddings -> batched LM decode.
 
     PYTHONPATH=src python examples/rag_serving.py
 """
@@ -16,58 +17,50 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.configs import registry
-from repro.core import (SearchParams, build_ivfpq, cluster_locate,
-                        pad_clusters)
-from repro.core.sharded_search import DistributedEngine, EngineConfig
 from repro.data import make_clustered_corpus
 from repro.launch.serve import generate
 from repro.models import init_params
-from repro.runtime import (HotClusterLUTCache, LocalEngine, ServingConfig,
-                           ServingRuntime, ShardedEngine)
+from repro.service import AnnService, IndexSpec, ServiceSpec
 
 
 def main():
-    # --- retrieval tier: DRIM-ANN over a document-embedding corpus -------
+    # --- one spec for the whole retrieval tier ---------------------------
     d_embed = 32
     n_queries = 8
     ds = make_clustered_corpus(seed=0, n=10_000, d=d_embed,
                                n_queries=n_queries, n_components=16)
-    index = build_ivfpq(jax.random.PRNGKey(0), ds.points, nlist=32, m=8,
-                        cb=64)
-    probes, _ = cluster_locate(ds.queries.astype(jnp.float32),
-                               index.centroids, 8)
-    eng = DistributedEngine(
-        index, EngineConfig(n_shards=4, nprobe=8, k=4, tasks_per_shard=256,
-                            strategy="gather"), np.asarray(probes))
+    spec = ServiceSpec(
+        engine="sharded", replicas=2, router="cache_aware",
+        nprobe=8, k=4, strategy="gather",
+        index=IndexSpec(nlist=32, m=8, cb=64),
+        n_shards=4, tasks_per_shard=256,
+        buckets=(1, 2, 4), max_wait_s=1e-3,
+        cache_capacity=1024)
+    svc = AnnService.build(spec, points=ds.points, sample_queries=ds.queries)
+    svc.warmup()                          # compile each bucket shape once
 
-    # --- online serving: stream single-query requests through the -------
-    # micro-batcher into the sharded engine (one jit shape per bucket)
-    runtime = ServingRuntime(
-        ShardedEngine(eng),
-        ServingConfig(buckets=(1, 2, 4), max_wait_s=1e-3))
+    # --- stream single-query requests through the router -----------------
     queries = np.asarray(ds.queries, np.float32)
-    runtime.warmup(d_embed)               # compile each bucket shape once
-    stream = [(i * 4e-4, queries[i]) for i in range(n_queries)]  # 2.5k QPS
-    requests = runtime.run_stream(stream)
-    doc_ids = np.stack([r.ids for r in requests])
+    stream = [(i * 4e-4, queries[i % n_queries])
+              for i in range(2 * n_queries)]            # each query repeats
+    requests = svc.stream(stream)
+    doc_ids = np.stack([r.ids for r in requests[:n_queries]])
 
-    # served results must match one direct batched engine call exactly
-    direct_d, direct_i, _ = eng.search(ds.queries)
-    assert np.array_equal(doc_ids, direct_i), "serving != direct search"
-    m = runtime.metrics()
-    print(f"served {m['requests']} requests in {m['batches']} micro-batches"
-          f" (flushes: {m['flushes']})")
-    print(f"latency p50={m['p50_ms']:.2f}ms p99={m['p99_ms']:.2f}ms"
-          f" qps={m['qps']:.0f} occupancy={m['avg_batch_occupancy']:.2f}")
+    # served results must match a direct batched search per query
+    # (neighbor sets: the sharded merge may permute equal-distance ties)
+    direct_d, direct_i = svc.search(queries)
+    for i, r in enumerate(requests):
+        assert set(r.ids.tolist()) == set(direct_i[i % n_queries].tolist()), \
+            "serving != direct search"
+    st = svc.stats()
+    agg, rt = st["aggregate"], st["router"]
+    print(f"served {agg['requests']} requests over {svc.n_replicas} "
+          f"replicas in {agg['batches']} micro-batches "
+          f"(router={rt['policy']} picks={rt['picks']})")
+    print(f"latency p50={agg['p50_ms']:.2f}ms p99={agg['p99_ms']:.2f}ms"
+          f" qps={agg['qps']:.0f}"
+          f" lut_hit_rate={agg.get('lut_hit_rate', 0.0):.2f}")
     print("retrieved doc ids per query:", doc_ids.tolist())
-
-    # --- hot-cluster cache: repeat traffic skips LC work -----------------
-    cached = LocalEngine(index, pad_clusters(index),
-                         SearchParams(nprobe=8, k=4, strategy="gather"),
-                         lut_cache=HotClusterLUTCache(capacity=1024))
-    cached.search_batch(queries)          # cold pass fills the cache
-    cached.search_batch(queries)          # repeat traffic hits
-    print("LUT cache after repeat pass:", cached.lut_cache.stats.as_dict())
 
     # --- generation tier: vision-style cross-attn LM over retrieved ctx --
     cfg = registry.get_config("llama32_vision_11b", smoke=True)
@@ -84,7 +77,8 @@ def main():
                                  cfg.vocab_size)
     toks = generate(cfg, params, prompts, gen_len=12, ctx=ctx)
     print("generated token ids (first query):", toks[0].tolist())
-    print("RAG pipeline OK: streamed retrieval -> cross-attended generation")
+    print("RAG pipeline OK: routed streaming retrieval -> generation")
+    svc.shutdown()
 
 
 if __name__ == "__main__":

@@ -32,7 +32,10 @@ Serving-v2 additions (PR 2): the engine optionally takes
   * ``heat_estimator`` — an :class:`repro.runtime.cache.OnlineHeatEstimator`
     fed each batch's CL output; with ``cfg.relayout_every > 0`` the
     refreshed heat periodically re-drives ``build_layout`` (split /
-    duplicate / allocate) via :meth:`DistributedEngine.refresh_layout`;
+    duplicate / allocate).  Re-layout is double-buffered:
+    :meth:`DistributedEngine.prepare_layout` builds the next placement
+    while the current one keeps serving, :meth:`swap_layout` installs it
+    atomically between batches (:meth:`refresh_layout` = both in one);
   * ``tasks_controller`` — a
     :class:`repro.runtime.batching.TasksPerShardController` choosing the
     static task-table width per batch size instead of one global
@@ -51,6 +54,7 @@ from __future__ import annotations
 
 import dataclasses
 import functools
+import threading
 from typing import NamedTuple, Optional
 
 import jax
@@ -420,6 +424,18 @@ class EngineConfig:
     relayout_every: int = 0
 
 
+class _Placement(NamedTuple):
+    """One fully-materialized placement: layout + shard tensors + steps.
+
+    Built off to the side by :meth:`DistributedEngine.prepare_layout`
+    (double buffering) and installed atomically by ``swap_layout``."""
+    layout: Layout
+    sindex: ShardedIndex
+    cluster_of_host: np.ndarray
+    step: Optional[object]
+    step_lut: Optional[object]
+
+
 class DistributedEngine:
     """Offline build (layout + shards) and online batched search.
 
@@ -451,54 +467,94 @@ class DistributedEngine:
         self.tasks_controller = tasks_controller
         self.batches_served = 0
         self.relayouts = 0
+        self._pending: Optional[_Placement] = None
+        self._pending_heat: Optional[np.ndarray] = None
+        self._swap_on_next_batch = False
+        self._relayout_thread: Optional[threading.Thread] = None
+        self._relayout_error: Optional[BaseException] = None
         self._build(self.heat)
 
-    def _build(self, heat: np.ndarray) -> None:
-        """(Re)materialize layout, shard tensors, and compiled steps from a
-        heat vector.  Cluster ids — and therefore LUT-cache keys — are
-        stable across rebuilds; only placement changes."""
+    def _materialize(self, heat: np.ndarray) -> _Placement:
+        """Build a placement from a heat vector without touching serving
+        state.  Cluster ids — and therefore LUT-cache keys — are stable
+        across rebuilds; only placement changes."""
         sizes = np.asarray(self.index.sizes)
         bytes_per_row = self.index.codebook.m + 4
-        self.layout = build_layout(
+        layout = build_layout(
             sizes, heat, self.cfg.n_shards, split_max=self.cfg.split_max,
             dup_budget_bytes=self.cfg.dup_budget_bytes,
             bytes_per_row=bytes_per_row, latency=self.latency,
             naive=self.cfg.naive_layout)
-        self.sindex = materialize_shards(self.index, self.layout)
-        self._cluster_of_host = np.asarray(self.sindex.cluster_of)
-        self.carry: list = []
-        self._step = None
-        self._step_lut = None
+        sindex = materialize_shards(self.index, layout)
+        step = step_lut = None
         if self.mesh is not None:
-            self._step = make_sharded_step(self.mesh, self.sindex,
-                                           k=self.cfg.k,
-                                           strategy=self.cfg.strategy,
-                                           use_kernels=self.cfg.use_kernels)
-            self._step_lut = make_sharded_step_lut(
-                self.mesh, self.sindex, k=self.cfg.k,
-                strategy=self.cfg.strategy,
+            step = make_sharded_step(self.mesh, sindex, k=self.cfg.k,
+                                     strategy=self.cfg.strategy,
+                                     use_kernels=self.cfg.use_kernels)
+            step_lut = make_sharded_step_lut(
+                self.mesh, sindex, k=self.cfg.k, strategy=self.cfg.strategy,
                 use_kernels=self.cfg.use_kernels)
+        return _Placement(layout, sindex, np.asarray(sindex.cluster_of),
+                          step, step_lut)
+
+    def _install(self, placement: _Placement) -> None:
+        """Point the serving path at ``placement``.  Deferred-task carry
+        is dropped — callers re-issue via flush rounds."""
+        self.layout = placement.layout
+        self.sindex = placement.sindex
+        self._cluster_of_host = placement.cluster_of_host
+        self.carry: list = []
+        self._step = placement.step
+        self._step_lut = placement.step_lut
+
+    def _build(self, heat: np.ndarray) -> None:
+        self._install(self._materialize(heat))
 
     # -- serving-v2 hooks --------------------------------------------------
     @property
     def nprobe(self) -> int:
         return self.cfg.nprobe
 
-    def refresh_layout(self, heat: Optional[np.ndarray] = None) -> dict:
-        """Re-run split/duplicate/allocate with refreshed heat (§IV-C fed
-        by the online estimator) and rematerialize the shard tensors.
+    def prepare_layout(self, heat: Optional[np.ndarray] = None) -> dict:
+        """Double-buffered re-layout, phase 1: re-run split/duplicate/
+        allocate with refreshed heat (§IV-C fed by the online estimator)
+        and materialize the NEXT placement's shard tensors off to the
+        side, while the CURRENT placement keeps serving.
 
-        Results are placement-independent (tests assert it), so this is
-        safe mid-stream; the cost is one materialize + step recompile.
-        Deferred-task carry is dropped — callers re-issue via flush
-        rounds.  Returns before/after predicted-imbalance stats."""
+        Nothing observable changes until :meth:`swap_layout`; the
+        expensive materialize (and, on a mesh, the step rebuild) is thus
+        amortized outside the serving path instead of stalling the batch
+        that triggered it.  Calling again overwrites the pending
+        placement.  Returns predicted imbalance of current vs pending."""
+        self._sync_relayout_thread()       # a live background rebuild may
+        self._swap_on_next_batch = False   # not race or resurrect pending
         if heat is None:
             if self.heat_estimator is None:
-                raise ValueError("refresh_layout needs heat or an estimator")
+                raise ValueError("prepare_layout needs heat or an estimator")
             heat = self.heat_estimator.heat()
+        self._pending_heat = np.asarray(heat, np.float64)
+        self._pending = self._materialize(self._pending_heat)
+        return {"imbalance_current": self.layout.stats(
+                    self.latency)["imbalance"],
+                "imbalance_pending": self._pending.layout.stats(
+                    self.latency)["imbalance"]}
+
+    def swap_layout(self) -> dict:
+        """Double-buffered re-layout, phase 2: atomically install the
+        placement built by :meth:`prepare_layout` — an O(1) pointer swap
+        between batches (results are placement-independent, tests assert
+        it).  Deferred-task carry is dropped — callers re-issue via
+        flush rounds.  Returns before/after predicted-imbalance stats."""
+        self._sync_relayout_thread()       # complete an in-flight rebuild
+        if self._pending is None:
+            raise ValueError("swap_layout: no pending placement "
+                             "(call prepare_layout first)")
         before = self.layout.stats(self.latency)["imbalance"]
-        self.heat = np.asarray(heat, np.float64)
-        self._build(self.heat)
+        self.heat = self._pending_heat
+        self._install(self._pending)
+        self._pending = None
+        self._pending_heat = None
+        self._swap_on_next_batch = False
         self.relayouts += 1
         if self.tasks_controller is not None:
             # re-price the width prediction: split decisions (and so
@@ -506,6 +562,56 @@ class DistributedEngine:
             self.tasks_controller.retune(*self._layout_task_stats())
         after = self.layout.stats(self.latency)["imbalance"]
         return {"imbalance_before": before, "imbalance_after": after}
+
+    def refresh_layout(self, heat: Optional[np.ndarray] = None) -> dict:
+        """prepare_layout + swap_layout in one synchronous call (the
+        pre-double-buffering API, kept for direct callers)."""
+        self.prepare_layout(heat)
+        return self.swap_layout()
+
+    def _sync_relayout_thread(self) -> None:
+        """Join an in-flight background rebuild (so the pending pair is
+        consistent and cannot be re-written after this returns) and
+        surface any error it hit."""
+        t = self._relayout_thread
+        if t is not None:
+            t.join()
+            self._relayout_thread = None
+            if self._relayout_error is not None:
+                err, self._relayout_error = self._relayout_error, None
+                raise err
+
+    def _begin_prepare_async(self) -> None:
+        """Periodic-relayout trigger: snapshot the estimator's heat on
+        the serving thread, then build the next placement on a
+        background thread so it overlaps the triggering batch's own
+        scan/merge work.  ``_join_pending_relayout`` (next batch start)
+        joins and swaps."""
+        self._sync_relayout_thread()       # never two rebuilds in flight
+        heat = np.asarray(self.heat_estimator.heat(), np.float64)
+
+        def build():
+            try:
+                pending = self._materialize(heat)
+            except BaseException as e:           # surfaced at join
+                self._relayout_error = e
+                return
+            self._pending_heat = heat
+            self._pending = pending
+
+        self._relayout_thread = threading.Thread(target=build, daemon=True)
+        self._relayout_thread.start()
+
+    def _join_pending_relayout(self) -> None:
+        try:
+            self._sync_relayout_thread()
+        except BaseException:
+            self._swap_on_next_batch = False
+            raise
+        if self._pending is not None:
+            self.swap_layout()
+        else:
+            self._swap_on_next_batch = False
 
     def _layout_task_stats(self):
         """(tasks_per_query, mean_task_s) of the CURRENT layout: expected
@@ -559,6 +665,7 @@ class DistributedEngine:
         """Engine-side counters surfaced in ServingRuntime.metrics()."""
         info = {"batches": self.batches_served,
                 "relayouts": self.relayouts,
+                "pending_relayout": self._pending is not None,
                 "tasks_per_shard": self.cfg.tasks_per_shard}
         if self.tasks_controller is not None:
             info["tasks_controller"] = self.tasks_controller.summary()
@@ -654,6 +761,12 @@ class DistributedEngine:
         from heat observation and LUT-cache population (their results are
         discarded by the caller)."""
         from repro.core.search import cluster_locate
+        # a pending periodic re-layout swaps in between batches: the
+        # rebuild ran on a background thread concurrently with the
+        # triggering batch's own scan/merge, and this batch starts on the
+        # new placement after a join (usually free) + O(1) swap
+        if self._swap_on_next_batch:
+            self._join_pending_relayout()
         nq = queries.shape[0]
         nv = nq if n_valid is None else min(n_valid, nq)
         probes, _ = cluster_locate(queries.astype(jnp.float32),
@@ -666,7 +779,11 @@ class DistributedEngine:
             if (self.cfg.relayout_every > 0
                     and self.heat_estimator is not None
                     and self.batches_served % self.cfg.relayout_every == 0):
-                self.refresh_layout()
+                # double-buffer: build the next placement on a background
+                # thread while this batch is served on the current one;
+                # the swap happens at the start of the next batch
+                self._begin_prepare_async()
+                self._swap_on_next_batch = True
         tps = (self.tasks_controller.tasks_for(nq)
                if self.tasks_controller is not None
                else self.cfg.tasks_per_shard)

@@ -1,5 +1,6 @@
 from repro.data.vectors import make_clustered_corpus, VectorDataset
 from repro.data.pipeline import TokenPipeline, make_token_pipeline
+from repro.data.streams import make_query_stream
 
 __all__ = ["make_clustered_corpus", "VectorDataset", "TokenPipeline",
-           "make_token_pipeline"]
+           "make_token_pipeline", "make_query_stream"]

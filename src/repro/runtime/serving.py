@@ -38,9 +38,12 @@ Invariants:
 
 from __future__ import annotations
 
+import contextlib
 import dataclasses
 import functools
+import threading
 import time
+import warnings
 from typing import List, Optional, Protocol, Sequence, Tuple
 
 import jax
@@ -55,6 +58,43 @@ from repro.runtime.batching import (BucketPolicy, MicroBatch, MicroBatcher,
                                     Request)
 from repro.runtime.cache import (HotClusterLUTCache, lut_fill_misses,
                                  lut_miss_scan, precompile_lut_shapes)
+
+
+# ---------------------------------------------------------------------------
+# Deprecation shims: direct construction of the engine adapters and the
+# runtime still works but the supported front door is the service layer
+# (repro.service.AnnService built from a ServiceSpec).  Each class warns
+# once per process; the service layer builds inside
+# ``service_construction()`` and never warns.
+# ---------------------------------------------------------------------------
+
+_DEPRECATION_WARNED: set = set()
+_SUPPRESS_DEPRECATION = threading.local()
+
+
+@contextlib.contextmanager
+def service_construction():
+    """Mark constructions issued by the service layer (no deprecation
+    warning).  Re-entrant and thread-local."""
+    prev = getattr(_SUPPRESS_DEPRECATION, "on", False)
+    _SUPPRESS_DEPRECATION.on = True
+    try:
+        yield
+    finally:
+        _SUPPRESS_DEPRECATION.on = prev
+
+
+def _warn_direct_use(name: str) -> None:
+    if getattr(_SUPPRESS_DEPRECATION, "on", False):
+        return
+    if name in _DEPRECATION_WARNED:
+        return
+    _DEPRECATION_WARNED.add(name)
+    warnings.warn(
+        f"Direct {name}(...) construction is deprecated; build through "
+        f"repro.service.AnnService (AnnService.build(ServiceSpec(...))), "
+        f"which owns the engine/runtime lifecycle. The old constructor "
+        f"keeps working.", DeprecationWarning, stacklevel=3)
 
 
 class SearchEngine(Protocol):
@@ -117,6 +157,7 @@ class LocalEngine:
     def __init__(self, index: IVFPQIndex, clusters: PaddedClusters,
                  params: SearchParams,
                  lut_cache: Optional[HotClusterLUTCache] = None):
+        _warn_direct_use("LocalEngine")
         self.index = index
         self.clusters = clusters
         self.params = params
@@ -184,6 +225,7 @@ class ShardedEngine:
     """
 
     def __init__(self, engine):
+        _warn_direct_use("ShardedEngine")
         self.engine = engine
         self.k = engine.cfg.k
 
@@ -313,6 +355,7 @@ class ServingRuntime:
 
     def __init__(self, engine: SearchEngine,
                  config: Optional[ServingConfig] = None):
+        _warn_direct_use("ServingRuntime")
         self.engine = engine
         self.config = config or ServingConfig()
         self.batcher = self.config.make_batcher()
@@ -358,6 +401,15 @@ class ServingRuntime:
             if batch is None:
                 return done
             done.extend(self._serve(batch, t_start=now))
+
+    def serve_flushed(self, batch: MicroBatch,
+                      t_start: float) -> List[Request]:
+        """Serve an already-flushed batch at virtual time ``t_start``.
+
+        Public hook for external stream drivers (the multi-replica router
+        in :mod:`repro.service` replays one arrival trace across several
+        runtimes, each with its own server-free clock)."""
+        return self._serve(batch, t_start=t_start)
 
     def _serve(self, batch: MicroBatch, t_start: float) -> List[Request]:
         t0 = time.perf_counter()

@@ -1,0 +1,18 @@
+"""repro.service — the service-layer API over the DRIM-ANN engines.
+
+One validated config (:class:`ServiceSpec`), one facade
+(:class:`AnnService`) owning the whole lifecycle (build -> warmup ->
+submit/search/stream -> stats -> shutdown), and a multi-replica
+:class:`Router` with round-robin, least-queue, and cache-aware policies.
+``python -m repro.service --selftest`` runs an end-to-end smoke.
+"""
+
+from repro.service.router import (CacheAwarePolicy, LeastQueuePolicy,
+                                  RoundRobinPolicy, Router, RoutingPolicy,
+                                  make_policy)
+from repro.service.service import AnnService, Replica
+from repro.service.spec import IndexSpec, ServiceSpec
+
+__all__ = ["AnnService", "Replica", "IndexSpec", "ServiceSpec",
+           "Router", "RoutingPolicy", "RoundRobinPolicy",
+           "LeastQueuePolicy", "CacheAwarePolicy", "make_policy"]

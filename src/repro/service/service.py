@@ -1,0 +1,329 @@
+"""AnnService: the one front door to the DRIM-ANN serving stack.
+
+Everything between "I have vectors" and "I get neighbors under latency
+metrics" lives behind this facade:
+
+    spec = ServiceSpec(engine="sharded", replicas=3, router="cache_aware",
+                       cache_capacity=4096, nprobe=8, k=10)
+    svc = AnnService.build(spec, points)        # index + engines + runtimes
+    svc.warmup()                                # compile every bucket shape
+    d, i = svc.search(queries)                  # synchronous batch
+    reqs = svc.stream([(t0, q0), (t1, q1)])     # virtual-clock replay
+    svc.stats()                                 # per-replica + aggregate
+    svc.shutdown()
+
+Internally the service owns N identical replicas — each an engine
+(``LocalEngine`` over ``search_ivfpq`` or ``ShardedEngine`` over the
+UPMEM-style ``DistributedEngine``) with its *own* hot-cluster LUT cache
+and heat estimator, behind its own ``ServingRuntime`` micro-batcher —
+and a :class:`~repro.service.router.Router` that assigns every incoming
+query to one replica.  Replicas share the index (and, for the local
+engine, the padded cluster tensors), so results are routing-independent.
+
+``stream`` generalizes ``ServingRuntime.run_stream`` to the replica
+fleet: one global arrival trace is replayed on a virtual clock, each
+replica keeps its own server-free time, and deadline flushes fire in
+global time order — so queueing shows up honestly per replica and the
+aggregate p50/p99/QPS roll up over the whole fleet.
+
+Invariants (pinned in tests/test_service.py):
+  * 1 replica, local engine, no cache: ``search`` is exactly
+    ``search_ivfpq`` (same call, bit-identical);
+  * per-query neighbor sets are identical across replica counts and
+    router policies;
+  * serving-batch padding rows never reach the router's heat estimators
+    (the router routes *requests*; padding is created downstream).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import List, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.ivf import IVFPQIndex, build_ivfpq, pad_clusters
+from repro.core.search import SearchParams, cluster_locate
+from repro.core.sharded_search import DistributedEngine, EngineConfig
+from repro.runtime.batching import MicroBatch, Request
+from repro.runtime.cache import (HeatAwareAdmission, HotClusterLUTCache,
+                                 OnlineHeatEstimator)
+from repro.runtime.serving import (LocalEngine, ServingConfig, ServingRuntime,
+                                   ShardedEngine, _percentile,
+                                   service_construction)
+from repro.service.router import Router, make_policy
+from repro.service.spec import ServiceSpec
+
+
+@dataclasses.dataclass
+class Replica:
+    """One engine + runtime lane of the service."""
+    runtime: ServingRuntime
+    engine: object                     # LocalEngine | ShardedEngine adapter
+    core: object                       # LocalEngine | DistributedEngine
+    cache: Optional[HotClusterLUTCache]
+    heat_estimator: Optional[OnlineHeatEstimator]
+
+    @property
+    def queue_depth(self) -> int:
+        return self.runtime.batcher.depth
+
+
+class AnnService:
+    """Facade over index + replicas + router + serving runtimes.
+
+    Build with :meth:`build`; the constructor itself is wiring-only and
+    takes already-constructed parts.
+    """
+
+    def __init__(self, spec: ServiceSpec, index: IVFPQIndex,
+                 replicas: Sequence[Replica], router: Router):
+        self.spec = spec
+        self.index = index
+        self.replicas: List[Replica] = list(replicas)
+        self.router = router
+        self._batch_rr = 0
+        self._closed = False
+
+    # -- construction ------------------------------------------------------
+    @classmethod
+    def build(cls, spec: ServiceSpec, points=None, *,
+              index: Optional[IVFPQIndex] = None,
+              sample_queries=None) -> "AnnService":
+        """Stand up the whole service from a validated spec.
+
+        Either ``points`` (index built per ``spec.index``) or a prebuilt
+        ``index`` must be given.  ``sample_queries`` seeds the sharded
+        engine's heat estimate (falls back to a slice of the corpus)."""
+        spec.validate()
+        if index is None:
+            if points is None:
+                raise ValueError("AnnService.build needs points or index")
+            index = build_ivfpq(
+                jax.random.PRNGKey(spec.index.seed), points,
+                nlist=spec.index.nlist, m=spec.index.m, cb=spec.index.cb,
+                kmeans_iters=spec.index.kmeans_iters,
+                pq_iters=spec.index.pq_iters, opq=spec.index.opq,
+                train_sample=spec.index.train_sample)
+
+        sample_probes = None
+        if spec.engine == "sharded":
+            sample = sample_queries
+            if sample is None:
+                if points is None:
+                    raise ValueError("sharded engine needs sample_queries "
+                                     "(or points to fall back on) for the "
+                                     "heat estimate")
+                sample = np.asarray(points)[:min(256, len(points))]
+            probes, _ = cluster_locate(
+                jnp.asarray(np.asarray(sample, np.float32)),
+                index.centroids, spec.nprobe)
+            sample_probes = np.asarray(probes)
+
+        clusters = (pad_clusters(index) if spec.engine == "local" else None)
+        serving_cfg = ServingConfig(buckets=tuple(spec.buckets),
+                                    max_wait_s=spec.max_wait_s)
+        replicas: List[Replica] = []
+        with service_construction():
+            for _ in range(spec.replicas):
+                replicas.append(cls._build_replica(
+                    spec, index, clusters, sample_probes, serving_cfg))
+
+        policy = make_policy(
+            spec.router, nlist=index.nlist, n_replicas=spec.replicas,
+            halflife_batches=spec.router_halflife_batches)
+
+        def probe_fn(q: np.ndarray) -> np.ndarray:
+            p, _ = cluster_locate(
+                jnp.asarray(np.asarray(q, np.float32)[None]),
+                index.centroids, spec.nprobe)
+            return np.asarray(p)[0]
+
+        router = Router(policy, spec.replicas,
+                        depth_fn=lambda r: replicas[r].queue_depth,
+                        probe_fn=probe_fn)
+        return cls(spec, index, replicas, router)
+
+    @staticmethod
+    def _build_replica(spec: ServiceSpec, index: IVFPQIndex, clusters,
+                       sample_probes, serving_cfg: ServingConfig) -> Replica:
+        if spec.engine == "local":
+            cache = None
+            if spec.cache_capacity > 0:
+                cache = HotClusterLUTCache(
+                    capacity=spec.cache_capacity,
+                    granularity=spec.cache_granularity)
+            core = LocalEngine(index, clusters,
+                               SearchParams(nprobe=spec.nprobe, k=spec.k,
+                                            strategy=spec.strategy),
+                               lut_cache=cache)
+            return Replica(ServingRuntime(core, serving_cfg), core, core,
+                           cache, None)
+        est = None
+        if spec.heat_aware_admission or spec.relayout_every > 0:
+            from repro.core.layout import estimate_heat
+            est = OnlineHeatEstimator(
+                index.nlist, seed=estimate_heat(sample_probes, index.nlist))
+        cache = None
+        if spec.cache_capacity > 0:
+            cache = HotClusterLUTCache(
+                capacity=spec.cache_capacity,
+                granularity=spec.cache_granularity,
+                admission=(HeatAwareAdmission(est)
+                           if spec.heat_aware_admission else None))
+        cfg_kwargs = dict(n_shards=spec.n_shards, nprobe=spec.nprobe,
+                          k=spec.k, split_max=spec.split_max,
+                          dup_budget_bytes=spec.dup_budget_bytes,
+                          tasks_per_shard=spec.tasks_per_shard,
+                          strategy=spec.strategy,
+                          relayout_every=spec.relayout_every)
+        cfg_kwargs.update(dict(spec.engine_overrides or {}))
+        core = DistributedEngine(index, EngineConfig(**cfg_kwargs),
+                                 sample_probes, lut_cache=cache,
+                                 heat_estimator=est)
+        if spec.tune_tasks_per_shard:
+            core.tasks_controller = core.make_tasks_controller()
+        adapter = ShardedEngine(core)
+        return Replica(ServingRuntime(adapter, serving_cfg), adapter, core,
+                       cache, est)
+
+    # -- lifecycle ---------------------------------------------------------
+    @property
+    def n_replicas(self) -> int:
+        return len(self.replicas)
+
+    def core_engine(self, replica: int = 0):
+        """The underlying engine (LocalEngine / DistributedEngine) of one
+        replica — for layout stats, scheduler inspection, ablations."""
+        return self.replicas[replica].core
+
+    def _check_open(self) -> None:
+        if self._closed:
+            raise RuntimeError("AnnService is shut down")
+
+    def warmup(self) -> None:
+        """Compile every bucket shape on every replica (all-padding
+        batches: no cache, heat, or router state is touched)."""
+        self._check_open()
+        for rep in self.replicas:
+            rep.runtime.warmup(self.index.dim)
+
+    def shutdown(self) -> dict:
+        """Close the service (subsequent calls raise) and return final
+        stats."""
+        out = self.stats()
+        self._closed = True
+        return out
+
+    # -- synchronous batch API ---------------------------------------------
+    def search(self, queries) -> Tuple[np.ndarray, np.ndarray]:
+        """One batched search, bypassing the micro-batcher (offline /
+        bulk callers).  Batches rotate over replicas round-robin; results
+        are replica-independent.  With 1 replica, a local engine, and no
+        cache this is exactly ``search_ivfpq``."""
+        self._check_open()
+        r = self._batch_rr % self.n_replicas
+        self._batch_rr += 1
+        return self.replicas[r].engine.search_batch(
+            np.asarray(queries, np.float32))
+
+    # -- online API ---------------------------------------------------------
+    def submit(self, query, now: float) -> Request:
+        """Route one query and enqueue it on the chosen replica's
+        micro-batcher.  Returns the live Request (stamped when served)."""
+        self._check_open()
+        q = np.asarray(query, np.float32)
+        r = self.router.route(q)
+        return self.replicas[r].runtime.submit(q, now)
+
+    def step(self, now: float, drain: bool = False) -> List[Request]:
+        """Advance every replica's flush policy to time ``now``."""
+        self._check_open()
+        done: List[Request] = []
+        for rep in self.replicas:
+            done.extend(rep.runtime.step(now, drain=drain))
+        return done
+
+    # -- offline stream simulation ------------------------------------------
+    def stream(self, arrivals: Sequence[Tuple[float, np.ndarray]]
+               ) -> List[Request]:
+        """Replay (t_arrival, query) pairs across the replica fleet.
+
+        Multi-server discrete-event model: arrivals are routed in time
+        order, each replica serves its own flushed batches on its own
+        server-free clock (measured engine wall-clock charged onto the
+        virtual timeline), and deadline flushes fire in global time
+        order.  Returns requests in arrival order."""
+        self._check_open()
+        reqs: List[Request] = []
+        free = [0.0] * self.n_replicas
+
+        def serve(r: int, batch: MicroBatch) -> None:
+            start = max(batch.t_flush, free[r])
+            served = self.replicas[r].runtime.serve_flushed(batch,
+                                                            t_start=start)
+            free[r] = served[0].t_done
+
+        def fire_deadlines(until: Optional[float] = None) -> None:
+            while True:
+                pend = [(rep.runtime.batcher.next_deadline(), ri)
+                        for ri, rep in enumerate(self.replicas)]
+                pend = [(d, ri) for d, ri in pend if d is not None]
+                if not pend:
+                    return
+                ddl, ri = min(pend)
+                if until is not None and ddl > until:
+                    return
+                batch = self.replicas[ri].runtime.batcher.poll(ddl)
+                if batch is None:
+                    return
+                serve(ri, batch)
+
+        for t, query in sorted(arrivals, key=lambda a: a[0]):
+            fire_deadlines(until=t)
+            q = np.asarray(query, np.float32)
+            r = self.router.route(q)
+            reqs.append(self.replicas[r].runtime.submit(q, now=t))
+            batch = self.replicas[r].runtime.batcher.poll(t)  # flush-on-full
+            if batch is not None:
+                serve(r, batch)
+        for ri, rep in enumerate(self.replicas):              # drain
+            b = rep.runtime.batcher
+            while b.depth:
+                batch = b.poll(b.next_deadline(), drain=True)
+                serve(ri, batch)
+        return reqs
+
+    # -- metrics -------------------------------------------------------------
+    def stats(self) -> dict:
+        """Per-replica runtime metrics plus fleet-level rollup: aggregate
+        p50/p99 over all served requests, QPS over the global span,
+        summed LUT-cache hit rate, and the router's pick counts."""
+        per = [rep.runtime.metrics() for rep in self.replicas]
+        lat: List[float] = []
+        t0s, t1s = [], []
+        hits = lookups = 0
+        for rep in self.replicas:
+            s = rep.runtime.stats
+            lat.extend(s.latencies_s)
+            if s.t_first_arrival is not None:
+                t0s.append(s.t_first_arrival)
+            if s.t_last_done is not None:
+                t1s.append(s.t_last_done)
+            if rep.cache is not None:
+                hits += rep.cache.stats.hits
+                lookups += rep.cache.stats.lookups
+        span = (max(t1s) - min(t0s)) if t0s and t1s else 0.0
+        agg = {
+            "requests": len(lat),
+            "batches": sum(m["batches"] for m in per),
+            "p50_ms": _percentile(lat, 50) * 1e3,
+            "p99_ms": _percentile(lat, 99) * 1e3,
+            "qps": len(lat) / span if span > 0 else float("nan"),
+        }
+        if lookups:
+            agg["lut_hit_rate"] = hits / lookups
+        return {"aggregate": agg, "router": self.router.stats(),
+                "replicas": per}

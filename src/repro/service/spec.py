@@ -1,0 +1,182 @@
+"""Declarative service configuration: one validated config for the whole
+DRIM-ANN serving stack.
+
+A :class:`ServiceSpec` names everything `AnnService.build` needs to stand
+up a service — index construction parameters (:class:`IndexSpec`), search
+parameters, engine kind (local five-phase pipeline or the UPMEM-style
+sharded engine), replica count and router policy, serving-runtime knobs
+(batch buckets, deadline), and the cache/heat/relayout policy — replacing
+the four separate config objects (``SearchParams``, ``EngineConfig``,
+``ServingConfig``, cache kwargs) a caller previously had to thread by
+hand.
+
+Validation is eager and total: ``validate()`` (called by
+``AnnService.build``) raises ``ValueError`` naming the offending field,
+so a mis-wired spec fails at build time, not mid-stream.
+
+Everything is plain data — no engines are constructed here — so specs
+are cheap to sweep in benchmarks and trivially printable/loggable.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Mapping, Optional, Tuple
+
+_ENGINES = ("local", "sharded")
+_ROUTERS = ("round_robin", "least_queue", "cache_aware")
+
+
+@dataclasses.dataclass(frozen=True)
+class IndexSpec:
+    """How to build the IVF-PQ index from a points array
+    (``core.ivf.build_ivfpq`` parameters)."""
+    nlist: int = 64
+    m: int = 16
+    cb: int = 256
+    kmeans_iters: int = 12
+    pq_iters: int = 12
+    opq: bool = False
+    train_sample: Optional[int] = None
+    seed: int = 0
+
+    def validate(self) -> "IndexSpec":
+        if self.nlist < 1:
+            raise ValueError(f"IndexSpec.nlist must be >= 1, got {self.nlist}")
+        if self.m < 1:
+            raise ValueError(f"IndexSpec.m must be >= 1, got {self.m}")
+        if self.cb < 2:
+            raise ValueError(f"IndexSpec.cb must be >= 2, got {self.cb}")
+        return self
+
+
+@dataclasses.dataclass(frozen=True)
+class ServiceSpec:
+    """Everything AnnService needs, in one place.
+
+    Groups (see README §service for the full knob list):
+      * search:  ``nprobe``/``k``/``strategy`` (``SearchParams`` /
+        ``EngineConfig`` fields);
+      * engine:  ``engine`` kind plus the sharded-only knobs
+        (``n_shards``, ``tasks_per_shard``, ``dup_budget_bytes``,
+        ``split_max``, ``relayout_every``, ``tune_tasks_per_shard``) and
+        the ``engine_overrides`` escape hatch (extra ``EngineConfig``
+        fields, e.g. ``naive_layout`` for ablations);
+      * replicas/routing: ``replicas`` engine+runtime copies behind a
+        ``router`` policy (round_robin | least_queue | cache_aware);
+      * serving: ``buckets``/``max_wait_s`` (``ServingConfig`` fields);
+      * cache/heat: ``cache_capacity`` (> 0 enables the per-replica
+        hot-cluster LUT cache), ``cache_granularity``,
+        ``heat_aware_admission`` (sharded only: per-replica
+        ``OnlineHeatEstimator`` + ``HeatAwareAdmission``, fed by the
+        engine's CL output).
+    """
+
+    # -- index build (used when AnnService.build is given raw points) ------
+    index: IndexSpec = dataclasses.field(default_factory=IndexSpec)
+
+    # -- search parameters -------------------------------------------------
+    nprobe: int = 8
+    k: int = 10
+    strategy: str = "gather"
+
+    # -- engine tier -------------------------------------------------------
+    engine: str = "local"                  # "local" | "sharded"
+    n_shards: int = 8
+    tasks_per_shard: int = 1024
+    dup_budget_bytes: int = 0
+    split_max: Optional[int] = None
+    relayout_every: int = 0                # sharded only; 0 = never
+    tune_tasks_per_shard: bool = False     # sharded only
+    engine_overrides: Optional[Mapping] = None   # extra EngineConfig fields
+
+    # -- replicas + routing ------------------------------------------------
+    replicas: int = 1
+    router: str = "round_robin"   # "round_robin" | "least_queue" | "cache_aware"
+    router_halflife_batches: float = 64.0  # cache_aware heat decay
+
+    # -- serving runtime ---------------------------------------------------
+    buckets: Tuple[int, ...] = (1, 2, 4, 8, 16, 32)
+    max_wait_s: float = 2e-3
+
+    # -- cache / heat ------------------------------------------------------
+    cache_capacity: int = 0                # 0 = no LUT cache
+    cache_granularity: Optional[float] = None
+    heat_aware_admission: bool = False
+
+    def validate(self) -> "ServiceSpec":
+        self.index.validate()
+        if self.engine not in _ENGINES:
+            raise ValueError(f"ServiceSpec.engine must be one of {_ENGINES}, "
+                             f"got {self.engine!r}")
+        if self.router not in _ROUTERS:
+            raise ValueError(f"ServiceSpec.router must be one of {_ROUTERS}, "
+                             f"got {self.router!r}")
+        if self.replicas < 1:
+            raise ValueError(f"ServiceSpec.replicas must be >= 1, "
+                             f"got {self.replicas}")
+        if self.nprobe < 1 or self.k < 1:
+            raise ValueError("ServiceSpec.nprobe and .k must be >= 1, got "
+                             f"nprobe={self.nprobe} k={self.k}")
+        if self.strategy not in ("gather", "onehot"):
+            raise ValueError(f"ServiceSpec.strategy must be 'gather' or "
+                             f"'onehot', got {self.strategy!r}")
+        if not self.buckets or any(int(b) < 1 for b in self.buckets):
+            raise ValueError(f"ServiceSpec.buckets must be non-empty "
+                             f"positive ints, got {self.buckets}")
+        if self.max_wait_s <= 0:
+            raise ValueError(f"ServiceSpec.max_wait_s must be positive, "
+                             f"got {self.max_wait_s}")
+        if self.cache_capacity < 0:
+            raise ValueError(f"ServiceSpec.cache_capacity must be >= 0, "
+                             f"got {self.cache_capacity}")
+        if (self.cache_granularity is not None
+                and self.cache_granularity <= 0):
+            raise ValueError(f"ServiceSpec.cache_granularity must be None "
+                             f"or positive, got {self.cache_granularity}")
+        if self.heat_aware_admission and self.cache_capacity == 0:
+            raise ValueError("ServiceSpec.heat_aware_admission needs "
+                             "cache_capacity > 0")
+        if self.router_halflife_batches <= 0:
+            raise ValueError("ServiceSpec.router_halflife_batches must be "
+                             f"positive, got {self.router_halflife_batches}")
+        if self.engine != "sharded":
+            # these all hang off the sharded engine's online heat loop
+            for knob in ("relayout_every", "tune_tasks_per_shard",
+                         "heat_aware_admission"):
+                if getattr(self, knob):
+                    raise ValueError(f"ServiceSpec.{knob} requires "
+                                     f"engine='sharded'")
+            if self.engine_overrides:
+                raise ValueError("ServiceSpec.engine_overrides requires "
+                                 "engine='sharded'")
+        else:
+            if self.n_shards < 1:
+                raise ValueError(f"ServiceSpec.n_shards must be >= 1, "
+                                 f"got {self.n_shards}")
+            if self.tasks_per_shard < 1:
+                raise ValueError(f"ServiceSpec.tasks_per_shard must be >= 1,"
+                                 f" got {self.tasks_per_shard}")
+            if self.engine_overrides:
+                from repro.core.sharded_search import EngineConfig
+                known = set(EngineConfig.__dataclass_fields__)
+                bad = set(self.engine_overrides) - known
+                if bad:
+                    raise ValueError(f"ServiceSpec.engine_overrides has "
+                                     f"unknown EngineConfig fields: "
+                                     f"{sorted(bad)}")
+                # fields that exist on both ServiceSpec and EngineConfig
+                # must be set on the spec: an override would bypass the
+                # build-time wiring keyed on the spec value (e.g.
+                # relayout_every gates the heat estimator)
+                shadowed = (set(self.engine_overrides) & known
+                            & set(self.__dataclass_fields__))
+                if shadowed:
+                    raise ValueError(f"ServiceSpec.engine_overrides may "
+                                     f"not shadow spec fields "
+                                     f"{sorted(shadowed)}; set them on "
+                                     f"the ServiceSpec directly")
+        if self.relayout_every < 0:
+            raise ValueError(f"ServiceSpec.relayout_every must be >= 0, "
+                             f"got {self.relayout_every}")
+        return self

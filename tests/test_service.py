@@ -1,0 +1,309 @@
+"""Service layer: ServiceSpec validation, AnnService facade identity,
+multi-replica router (result invariance, cache-aware hit rate, padding
+isolation), deprecation shims, and double-buffered re-layout."""
+
+import warnings
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import SearchParams, cluster_locate, search_ivfpq
+from repro.core.sharded_search import DistributedEngine, EngineConfig
+from repro.runtime import serving as serving_mod
+from repro.runtime import (LocalEngine, ServingConfig, ServingRuntime,
+                           ShardedEngine)
+from repro.service import AnnService, ServiceSpec
+
+NPROBE = 8
+
+
+@pytest.fixture(scope="module")
+def sample_probes(small_index, small_corpus):
+    probes, _ = cluster_locate(small_corpus.queries.astype(jnp.float32),
+                               small_index.centroids, NPROBE)
+    return np.asarray(probes)
+
+
+def _zipf_stream(queries, n_requests, seed=0, gap=3e-4, skew=1.2):
+    from repro.data import make_query_stream
+    return make_query_stream(queries, n_requests, qps=1.0 / gap, seed=seed,
+                             skew=skew, poisson=False)
+
+
+# ---------------------------------------------------------------------------
+# Spec validation
+# ---------------------------------------------------------------------------
+
+def test_spec_validation_errors():
+    assert ServiceSpec().validate() is not None          # defaults are sane
+    with pytest.raises(ValueError, match="engine"):
+        ServiceSpec(engine="weird").validate()
+    with pytest.raises(ValueError, match="router"):
+        ServiceSpec(router="nope").validate()
+    with pytest.raises(ValueError, match="replicas"):
+        ServiceSpec(replicas=0).validate()
+    with pytest.raises(ValueError, match="buckets"):
+        ServiceSpec(buckets=()).validate()
+    with pytest.raises(ValueError, match="max_wait_s"):
+        ServiceSpec(max_wait_s=0.0).validate()
+    with pytest.raises(ValueError, match="heat_aware_admission"):
+        ServiceSpec(engine="sharded", heat_aware_admission=True,
+                    cache_capacity=0).validate()
+    with pytest.raises(ValueError, match="sharded"):
+        ServiceSpec(engine="local", relayout_every=3).validate()
+    with pytest.raises(ValueError, match="sharded"):
+        ServiceSpec(engine="local", heat_aware_admission=True,
+                    cache_capacity=64).validate()
+    with pytest.raises(ValueError, match="engine_overrides"):
+        ServiceSpec(engine="sharded",
+                    engine_overrides={"bogus": 1}).validate()
+    # overrides may not shadow spec fields (they'd bypass build wiring,
+    # e.g. relayout_every gates the heat estimator)
+    with pytest.raises(ValueError, match="shadow"):
+        ServiceSpec(engine="sharded",
+                    engine_overrides={"relayout_every": 8}).validate()
+    # a valid sharded override passes
+    ServiceSpec(engine="sharded",
+                engine_overrides={"naive_layout": True}).validate()
+
+
+def test_build_requires_points_or_index():
+    with pytest.raises(ValueError, match="points or index"):
+        AnnService.build(ServiceSpec())
+
+
+# ---------------------------------------------------------------------------
+# Facade identity (acceptance: 1 replica == direct search_ivfpq)
+# ---------------------------------------------------------------------------
+
+def test_one_replica_matches_search_ivfpq(small_index, small_clusters,
+                                          small_corpus):
+    queries = np.asarray(small_corpus.queries[:16], np.float32)
+    svc = AnnService.build(
+        ServiceSpec(engine="local", replicas=1, nprobe=NPROBE, k=10),
+        index=small_index)
+    d_s, i_s = svc.search(queries)
+    d_d, i_d = search_ivfpq(small_index, small_clusters,
+                            jnp.asarray(queries),
+                            SearchParams(nprobe=NPROBE, k=10))
+    np.testing.assert_array_equal(i_s, np.asarray(i_d))
+    np.testing.assert_allclose(d_s, np.asarray(d_d), rtol=1e-5)
+    # streamed single-query requests match the same direct call
+    reqs = svc.stream([(i * 3e-4, queries[i]) for i in range(8)])
+    np.testing.assert_array_equal(np.stack([r.ids for r in reqs]),
+                                  np.asarray(i_d)[:8])
+    svc.shutdown()
+
+
+# ---------------------------------------------------------------------------
+# Router: result invariance, cache-aware hit rate, padding isolation
+# ---------------------------------------------------------------------------
+
+def test_neighbor_sets_invariant_across_replicas_and_policies(small_index,
+                                                              small_corpus):
+    """Same stream, 1 vs 3 replicas, all router policies: per-query
+    neighbor sets must be identical (routing can never change results)."""
+    queries = np.asarray(small_corpus.queries[:8], np.float32)
+    stream = [(i * 3e-4, queries[i % 8]) for i in range(24)]
+    results = {}
+    for nrep, policy in ((1, "round_robin"), (3, "round_robin"),
+                         (3, "least_queue"), (3, "cache_aware")):
+        svc = AnnService.build(
+            ServiceSpec(engine="local", replicas=nrep, router=policy,
+                        nprobe=NPROBE, k=10, cache_capacity=512,
+                        buckets=(1, 2, 4), max_wait_s=1e-3),
+            index=small_index)
+        svc.warmup()
+        reqs = svc.stream(stream)
+        results[(nrep, policy)] = [frozenset(r.ids.tolist()) for r in reqs]
+        st = svc.stats()
+        assert sum(st["router"]["picks"]) == len(stream)
+        svc.shutdown()
+    base = results[(1, "round_robin")]
+    for key, sets_ in results.items():
+        assert sets_ == base, f"{key} changed served neighbor sets"
+
+
+def test_cache_aware_beats_round_robin_hit_rate(small_index, small_corpus):
+    """Zipf stream over 3 replicas: affinity routing must beat blind
+    rotation on aggregate LUT hit rate (acceptance criterion)."""
+    queries = np.asarray(small_corpus.queries[:8], np.float32)
+    stream = _zipf_stream(queries, 48)
+    rates = {}
+    for policy in ("round_robin", "cache_aware"):
+        svc = AnnService.build(
+            ServiceSpec(engine="local", replicas=3, router=policy,
+                        nprobe=NPROBE, k=10, cache_capacity=4096,
+                        buckets=(1, 2, 4), max_wait_s=1e-3),
+            index=small_index)
+        svc.warmup()
+        svc.stream(stream)
+        rates[policy] = svc.stats()["aggregate"]["lut_hit_rate"]
+        if policy == "cache_aware":
+            # bounded load: affinity must not collapse the fleet
+            assert min(svc.router.picks) > 0, svc.router.picks
+        svc.shutdown()
+    assert rates["cache_aware"] > rates["round_robin"]
+
+
+def test_padding_never_touches_routing_heat(small_index, small_corpus):
+    """Serving-batch padding rows are created inside each replica's
+    micro-batcher, strictly after routing — the router's per-replica heat
+    estimators see exactly one probe list per real request and nothing
+    from warmup."""
+    queries = np.asarray(small_corpus.queries[:6], np.float32)
+    svc = AnnService.build(
+        ServiceSpec(engine="local", replicas=2, router="cache_aware",
+                    nprobe=NPROBE, k=10, cache_capacity=512,
+                    buckets=(4,), max_wait_s=1e-4),
+        index=small_index)
+    svc.warmup()
+    ests = svc.router.policy.estimators
+    assert all(e.batches_observed == 0 for e in ests)   # warmup invisible
+    # spaced arrivals: every batch is 1 valid row + 3 padding rows
+    svc.stream([(i * 1e-3, queries[i]) for i in range(6)])
+    assert sum(svc.router.picks) == 6
+    for picks, est in zip(svc.router.picks, ests):
+        assert est.batches_observed == picks            # one obs per request
+    svc.shutdown()
+
+
+def test_online_submit_step_and_shutdown(small_index, small_corpus):
+    queries = np.asarray(small_corpus.queries[:4], np.float32)
+    svc = AnnService.build(
+        ServiceSpec(engine="local", replicas=2, router="least_queue",
+                    nprobe=NPROBE, k=10, buckets=(2,), max_wait_s=1e-2),
+        index=small_index)
+    svc.warmup()
+    for i in range(4):
+        svc.submit(queries[i], now=0.0)
+    done = svc.step(now=0.0)          # both replicas' buckets are full
+    assert len(done) == 4
+    assert svc.router.picks == [2, 2]                   # ties rotate
+    direct_d, direct_i = svc.search(queries)
+    for r in done:
+        qi = int(np.argmax((queries == r.query).all(axis=1)))
+        np.testing.assert_array_equal(r.ids, direct_i[qi])
+    st = svc.shutdown()
+    assert st["aggregate"]["requests"] == 4
+    with pytest.raises(RuntimeError, match="shut down"):
+        svc.search(queries)
+    with pytest.raises(RuntimeError, match="shut down"):
+        svc.submit(queries[0], now=1.0)
+
+
+def test_sharded_service_stream_matches_direct(small_index, small_corpus):
+    """The whole serving-v2 kit behind the facade: sharded replicas with
+    heat-aware caches, tuned task tables, cache-aware routing."""
+    svc = AnnService.build(
+        ServiceSpec(engine="sharded", replicas=2, router="cache_aware",
+                    nprobe=NPROBE, k=10, n_shards=4, tasks_per_shard=512,
+                    cache_capacity=1024, heat_aware_admission=True,
+                    tune_tasks_per_shard=True, buckets=(1, 2),
+                    max_wait_s=1e-4),
+        index=small_index, sample_queries=small_corpus.queries)
+    svc.warmup()
+    queries = np.asarray(small_corpus.queries[:4], np.float32)
+    direct_d, direct_i = svc.search(queries)
+    reqs = svc.stream([(i * 1e-3, queries[i % 4]) for i in range(8)])
+    for i, r in enumerate(reqs):
+        assert set(r.ids.tolist()) == set(direct_i[i % 4].tolist())
+    assert isinstance(svc.core_engine(), DistributedEngine)
+    svc.shutdown()
+
+
+# ---------------------------------------------------------------------------
+# Deprecation shims
+# ---------------------------------------------------------------------------
+
+def _deprecations(rec):
+    return [w for w in rec if issubclass(w.category, DeprecationWarning)]
+
+
+def test_direct_construction_warns_once(small_index, small_clusters,
+                                        sample_probes):
+    serving_mod._DEPRECATION_WARNED.clear()
+    params = SearchParams(nprobe=4, k=5)
+    with pytest.warns(DeprecationWarning, match="LocalEngine"):
+        eng = LocalEngine(small_index, small_clusters, params)
+    with pytest.warns(DeprecationWarning, match="ServingRuntime"):
+        ServingRuntime(eng, ServingConfig(buckets=(1,)))
+    sharded = DistributedEngine(
+        small_index, EngineConfig(n_shards=4, nprobe=NPROBE, k=10),
+        sample_probes)
+    with pytest.warns(DeprecationWarning, match="ShardedEngine"):
+        ShardedEngine(sharded)
+    # second constructions are silent — the warning fires once per class
+    with warnings.catch_warnings(record=True) as rec:
+        warnings.simplefilter("always")
+        eng2 = LocalEngine(small_index, small_clusters, params)
+        ServingRuntime(eng2, ServingConfig(buckets=(1,)))
+        ShardedEngine(sharded)
+    assert not _deprecations(rec)
+
+
+def test_service_construction_does_not_warn(small_index):
+    serving_mod._DEPRECATION_WARNED.clear()
+    with warnings.catch_warnings(record=True) as rec:
+        warnings.simplefilter("always")
+        svc = AnnService.build(
+            ServiceSpec(engine="local", replicas=2, nprobe=4, k=5),
+            index=small_index)
+    assert not _deprecations(rec)
+    svc.shutdown()
+    serving_mod._DEPRECATION_WARNED.clear()     # leave a clean slate
+
+
+# ---------------------------------------------------------------------------
+# Fragile call sites: _schedule keeps its positional/kwarg contract
+# ---------------------------------------------------------------------------
+
+def test_schedule_tasks_per_shard_stays_optional_kwarg(small_index,
+                                                       sample_probes):
+    eng = DistributedEngine(
+        small_index,
+        EngineConfig(n_shards=4, nprobe=NPROBE, k=10, tasks_per_shard=512),
+        sample_probes)
+    sched1 = eng._schedule(sample_probes[:4])          # positional, default
+    eng.carry = []
+    assert sched1.query_idx.shape == (4, 512)
+    sched2 = eng._schedule(sample_probes[:4], tasks_per_shard=64)
+    eng.carry = []
+    assert sched2.query_idx.shape == (4, 64)
+
+
+# ---------------------------------------------------------------------------
+# Double-buffered re-layout
+# ---------------------------------------------------------------------------
+
+def test_prepare_swap_results_identical(small_index, small_corpus,
+                                        sample_probes):
+    """prepare_layout builds the next placement without touching serving;
+    swap_layout installs it atomically; results never change."""
+    queries = jnp.asarray(small_corpus.queries[:8], jnp.float32)
+    eng = DistributedEngine(
+        small_index,
+        EngineConfig(n_shards=4, nprobe=NPROBE, k=10, tasks_per_shard=512,
+                     dup_budget_bytes=1 << 17),
+        sample_probes)
+    d0, i0, _ = eng.search(queries)
+    old_sindex = eng.sindex
+    heat = np.full(small_index.nlist, 0.01)
+    heat[:4] = 5.0                                     # shifted traffic
+    info = eng.prepare_layout(heat)
+    assert np.isfinite(info["imbalance_pending"])
+    assert eng.sindex is old_sindex and eng.relayouts == 0
+    d1, i1, _ = eng.search(queries)                    # still old placement
+    np.testing.assert_array_equal(i1, i0)
+    np.testing.assert_array_equal(d1, d0)
+    stats = eng.swap_layout()
+    assert eng.relayouts == 1 and eng.sindex is not old_sindex
+    assert np.isfinite(stats["imbalance_after"])
+    d2, i2, _ = eng.search(queries)                    # new placement
+    np.testing.assert_allclose(np.sort(d2, axis=1), np.sort(d0, axis=1),
+                               rtol=1e-5, atol=1e-5)
+    for q in range(i0.shape[0]):
+        assert set(i2[q].tolist()) == set(i0[q].tolist())
+    with pytest.raises(ValueError, match="no pending"):
+        eng.swap_layout()                              # nothing left to swap
