@@ -24,6 +24,7 @@ def run(quick: bool = False):
     clusters32 = pad_clusters(idx32)
     out = []
     reached = None
+    max_drop = 0.0
     for m, idx, clusters in ((16, idx16, clusters16), (32, idx32,
                                                        clusters32)):
         for nprobe in (2, 8, 32):
@@ -36,7 +37,19 @@ def run(quick: bool = False):
             out.append(row(f"recall/m={m}_nprobe={nprobe}",
                            t / ds.queries.shape[0],
                            f"recall@10={r:.3f}"))
+            # quantized-LUT fast path: same config, uint8 tables — the
+            # paper-bar claim is recall parity (drop <= 0.01), so the u8
+            # row carries its drop vs the f32 row above
+            pq = p._replace(lut_dtype="uint8")
+            _, ids_q = search_ivfpq(idx, clusters, ds.queries, pq)
+            rq = float(recall_at_k(ids_q, ds.groundtruth))
+            max_drop = max(max_drop, r - rq)
+            out.append(row(f"recall/m={m}_nprobe={nprobe}_u8", 0.0,
+                           f"recall@10={rq:.3f}_drop={r - rq:.4f}"))
     out.append(row("recall/constraint", 0.0,
                    f"recall>=0.8_first_at_m,nprobe={reached}"))
+    out.append(row("recall/u8_parity", 0.0,
+                   f"max_drop={max_drop:.4f}_bound=0.01"))
     assert reached is not None, "engine never reaches the paper's 0.8 bar"
+    assert max_drop <= 0.01, f"u8 recall drop {max_drop} exceeds 0.01"
     return out

@@ -8,6 +8,12 @@
   serve/cache_*        — skewed (Zipf) stream with the hot-cluster LUT
                          cache on vs off: hit rate and p50 effect
                          (LocalEngine).
+  serve/cacheB_*       — same Zipf stream at a FIXED cache byte budget,
+                         f32 vs uint8 LUT entries: the quantized path
+                         holds ~4x the entries (16 KiB -> ~4 KiB per
+                         LUT at M=16, CB=256), so its hit rate — and
+                         hit-rate-adjusted effective capacity — should
+                         beat f32 at equal bytes.
   serve/sharded_*      — the distributed engine on the same Zipf stream:
                          v1 = the PR 1 baseline (no cache, one static
                          tasks_per_shard); v2 = heat-aware LUT cache +
@@ -99,6 +105,32 @@ def run(quick: bool = False):
         out.append(row(
             f"serve/cache_{name}", m["p99_ms"] * 1e-3,
             f"p50_ms={m['p50_ms']:.2f}_hit_rate={hit:.2f}"))
+
+    # -- quantized LUTs: f32 vs uint8 at a fixed cache byte budget --------
+    # budget = 48 f32 entries' worth of bytes; uint8 fits ~4x the entries,
+    # so on the same skewed stream its hit rate (and effective capacity =
+    # entries x hit-rate gain) should win at equal bytes
+    f32_entry = idx.codebook.m * idx.codebook.cb * 4
+    budget = 48 * f32_entry
+    for dtype in ("f32", "uint8"):
+        cache = HotClusterLUTCache(capacity=None, capacity_bytes=budget,
+                                   lut_dtype=dtype)
+        eng = LocalEngine(idx, clusters,
+                          SearchParams(nprobe=8, k=10, lut_dtype=dtype),
+                          lut_cache=cache)
+        m = _serve(eng,
+                   _poisson_stream(pool, n_requests, loads[-1], rng,
+                                   skew=1.2),
+                   d, ServingConfig(buckets=(1, 2, 4, 8, 16, 32),
+                                    max_wait_s=2e-3))
+        cstats = m.get("lut_cache", {})
+        out.append(row(
+            f"serve/cacheB_{'u8' if dtype == 'uint8' else dtype}",
+            m["p99_ms"] * 1e-3,
+            f"p50_ms={m['p50_ms']:.2f}"
+            f"_hit_rate={cstats.get('hit_rate', 0.0):.2f}"
+            f"_entries={cstats.get('entries', 0)}"
+            f"_budget_kib={budget >> 10}"))
 
     # -- sharded engine: PR 1 baseline vs heat-aware serving v2 -----------
     sample, _ = cluster_locate(jnp.asarray(queries, jnp.float32),

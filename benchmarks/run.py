@@ -1,12 +1,26 @@
 # One function per paper table/figure. Prints ``name,us_per_call,derived``
-# CSV rows.  ``python -m benchmarks.run [--quick]``.
+# CSV rows.  ``python -m benchmarks.run [--quick] [--json PATH]``.
+#
+# ``--json PATH`` additionally writes the suite results as JSON — the
+# start of a tracked perf trajectory (CI uploads BENCH_quick.json as a
+# non-blocking artifact).  Schema: a list of suite objects
+#   {"suite": str, "rows": [{"name": str, "ms": float, "note": str}],
+#    "meta": {"elapsed_s": float, "quick": bool, "backend": str,
+#             "error": str | absent}}
 
 from __future__ import annotations
 
 import argparse
+import json
 import sys
 import time
 import traceback
+
+
+def _parse_row(line: str) -> dict:
+    """'name,us_per_call,derived' CSV row -> {name, ms, note}."""
+    name, us, note = line.split(",", 2)
+    return {"name": name, "ms": float(us) / 1e3, "note": note}
 
 
 def main() -> None:
@@ -14,6 +28,8 @@ def main() -> None:
     ap.add_argument("--quick", action="store_true")
     ap.add_argument("--only", default=None,
                     help="comma-separated bench names")
+    ap.add_argument("--json", default=None, metavar="PATH",
+                    help="also write suite results as JSON")
     args = ap.parse_args()
 
     from benchmarks import (bench_recall, bench_e2e, bench_breakdown,
@@ -36,17 +52,35 @@ def main() -> None:
         names = args.only.split(",")
         benches = {k: v for k, v in benches.items() if k in names}
 
+    import jax
+    backend = jax.default_backend()
+
     print("name,us_per_call,derived")
     failures = []
+    suites = []
     for name, mod in benches.items():
         t0 = time.time()
+        rows = []
+        err = None
         try:
             for line in mod.run(quick=args.quick):
                 print(line, flush=True)
+                rows.append(_parse_row(line))
         except Exception as e:
             traceback.print_exc()
-            failures.append((name, repr(e)))
-        print(f"# [{name}] {time.time() - t0:.1f}s", flush=True)
+            err = repr(e)
+            failures.append((name, err))
+        elapsed = time.time() - t0
+        print(f"# [{name}] {elapsed:.1f}s", flush=True)
+        meta = {"elapsed_s": round(elapsed, 3), "quick": args.quick,
+                "backend": backend}
+        if err is not None:
+            meta["error"] = err
+        suites.append({"suite": name, "rows": rows, "meta": meta})
+    if args.json:
+        with open(args.json, "w") as f:
+            json.dump(suites, f, indent=1)
+        print(f"# wrote {args.json} ({len(suites)} suites)", flush=True)
     if failures:
         print(f"# FAILURES: {failures}", file=sys.stderr)
         sys.exit(1)

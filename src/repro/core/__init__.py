@@ -8,7 +8,11 @@ from repro.core.pq import (PQCodebook, OPQCodebook, train_pq, train_opq,
                            encode_pq, decode_pq)
 from repro.core.ivf import IVFPQIndex, PaddedClusters, build_ivfpq, pad_clusters
 from repro.core.adc import (build_lut, build_lut_batch, build_lut_direct,
-                            scan_codes, scan_codes_onehot, adc_distances)
+                            scan_codes, scan_codes_onehot, adc_distances,
+                            QuantizedLUT, quantize_lut, dequantize_lut,
+                            scan_codes_quantized,
+                            scan_codes_onehot_quantized,
+                            adc_distances_quantized)
 from repro.core.multiplierless import (make_square_lut, square_via_lut,
                                        quantize_codebook,
                                        build_lut_multiplierless,
@@ -26,6 +30,9 @@ __all__ = [
     "IVFPQIndex", "PaddedClusters", "build_ivfpq", "pad_clusters",
     "build_lut", "build_lut_batch", "build_lut_direct", "scan_codes",
     "scan_codes_onehot", "adc_distances",
+    "QuantizedLUT", "quantize_lut", "dequantize_lut",
+    "scan_codes_quantized", "scan_codes_onehot_quantized",
+    "adc_distances_quantized",
     "make_square_lut", "square_via_lut", "quantize_codebook",
     "build_lut_multiplierless", "build_lut_int_reference", "scan_codes_int",
     "quantize_residual",

@@ -8,9 +8,28 @@ Phase glossary (paper §II-A):
   RC  residual = query - centroid                      (per (q, probe) pair)
   LC  lut[m, cb] = || residual_m - codebook[m, cb] ||^2
   DC  dist[i]   = sum_m lut[m, codes[i, m]]
+
+Quantized-LUT fast path: the paper's core move is replacing arithmetic
+with lookup tables sized to the weak compute next to memory; carrying
+those tables as f32 wastes the very bandwidth the substitution saves.
+:func:`quantize_lut` compresses each (M, CB) LUT to uint8 with a
+per-subspace affine transform ``lut ~ lut_q * scale_m + bias_m``, so
+
+    dist = sum_m lut[m, code_m]
+         ~ sum_m scale_m * lut_q[m, code_m]  +  sum_m bias_m
+
+— the DC phase accumulates small integers per subspace and applies M
+scales plus one constant at the end.  The absolute error per subspace is
+bounded by ``scale_m / 2`` (half a quantization step), so per-distance
+error is ``sum_m scale_m / 2`` — a fixed offset-ish perturbation that
+preserves top-k ordering well enough for recall parity (asserted in
+tests/test_quantized.py).  Traffic per LUT drops 4x: 16 KiB -> 4 KiB +
+2*M floats at M=16, CB=256.
 """
 
 from __future__ import annotations
+
+from typing import NamedTuple
 
 import jax
 import jax.numpy as jnp
@@ -80,6 +99,100 @@ def adc_distances(lut: jax.Array, codes: jax.Array, sizes: jax.Array | None
     """
     fn = scan_codes if strategy == "gather" else scan_codes_onehot
     d = jax.vmap(fn)(lut, codes)
+    if sizes is not None:
+        valid = jnp.arange(codes.shape[1])[None, :] < sizes[:, None]
+        d = jnp.where(valid, d, jnp.inf)
+    return d
+
+
+# --------------------------------------------------------------------------
+# Quantized-LUT path (uint8 + per-(task, subspace) affine scales)
+# --------------------------------------------------------------------------
+
+class QuantizedLUT(NamedTuple):
+    """A uint8 LUT with per-subspace affine dequantization parameters.
+
+    Shapes carry an optional leading task axis:
+      lut_q  (..., M, CB)  uint8 — quantized table entries
+      scale  (..., M)      f32   — per-subspace step, (max - min) / 255
+      bias   (..., M)      f32   — per-subspace minimum
+
+    ``dequantize_lut`` recovers ``lut_q * scale + bias``; a degenerate
+    subspace (max == min) stores scale=1 with all-zero codes so the
+    roundtrip is exact there.
+    """
+    lut_q: jax.Array
+    scale: jax.Array
+    bias: jax.Array
+
+
+def quantize_lut(lut: jax.Array) -> QuantizedLUT:
+    """Affine uint8 quantization over the CB axis, per (task, subspace).
+
+    lut (..., M, CB) f32 -> QuantizedLUT.  Every subspace gets its own
+    [min, max] range, so hot subspaces with wide distance spread don't
+    steal resolution from tight ones (the per-task part of 'per-(task,
+    subspace)' falls out of the leading batch axes).
+    """
+    lut = lut.astype(jnp.float32)
+    lo = jnp.min(lut, axis=-1)                                # (..., M)
+    hi = jnp.max(lut, axis=-1)
+    scale = jnp.where(hi > lo, (hi - lo) / 255.0, 1.0)
+    q = jnp.round((lut - lo[..., None]) / scale[..., None])
+    lut_q = jnp.clip(q, 0.0, 255.0).astype(jnp.uint8)
+    return QuantizedLUT(lut_q, scale, lo)
+
+
+def dequantize_lut(qlut: QuantizedLUT) -> jax.Array:
+    """(..., M, CB) f32 reconstruction — the reference the quantized scan
+    is validated against (max error scale/2 per entry)."""
+    return (qlut.lut_q.astype(jnp.float32) * qlut.scale[..., None]
+            + qlut.bias[..., None])
+
+
+def scan_codes_quantized(qlut: QuantizedLUT, codes: jax.Array) -> jax.Array:
+    """Quantized DC via gather: per subspace, gather the uint8 entry and
+    accumulate ``scale_m * entry``; one shared ``sum_m bias_m`` at the end.
+
+    Bit-identical to ``scan_codes(dequantize_lut(qlut), codes)`` up to f32
+    summation order (integers <= 255 are exact in f32).
+    """
+    gathered = jax.vmap(lambda l, c: l[c], in_axes=(0, 1), out_axes=1)(
+        qlut.lut_q, codes.astype(jnp.int32))                  # (C, M) u8
+    acc = gathered.astype(jnp.float32) @ qlut.scale           # (C,)
+    return acc + jnp.sum(qlut.bias)
+
+
+def scan_codes_onehot_quantized(qlut: QuantizedLUT,
+                                codes: jax.Array) -> jax.Array:
+    """Quantized DC via one-hot MXU contraction — the uint8 mirror of
+    ``scan_codes_onehot``.
+
+    The onehot operand is built in bf16 (0/1 exact) and contracted
+    against the uint8 table as bf16 (integers <= 255 are exact in bf16's
+    8-bit significand), accumulating in f32 — so the (C, M*CB) onehot
+    intermediate, the VMEM-dominating tensor of the DC phase, shrinks 2x
+    while the LUT operand shrinks 4x.  Per-subspace accumulators (M, C)
+    then take one tiny (M,) x (M, C) scale contraction.
+    """
+    m, cbn = qlut.lut_q.shape
+    onehot = jax.nn.one_hot(codes.astype(jnp.int32), cbn,
+                            dtype=jnp.bfloat16)               # (C, M, CB)
+    acc = jax.lax.dot_general(
+        onehot, qlut.lut_q.astype(jnp.bfloat16),
+        dimension_numbers=(((2,), (1,)), ((1,), (0,))),
+        preferred_element_type=jnp.float32)                   # (M, C)
+    return qlut.scale @ acc + jnp.sum(qlut.bias)
+
+
+def adc_distances_quantized(qlut: QuantizedLUT, codes: jax.Array,
+                            sizes: jax.Array | None = None,
+                            strategy: str = "gather") -> jax.Array:
+    """Batched quantized DC — drop-in for :func:`adc_distances` with a
+    (T,)-batched :class:`QuantizedLUT` instead of the f32 (T, M, CB)."""
+    fn = (scan_codes_quantized if strategy == "gather"
+          else scan_codes_onehot_quantized)
+    d = jax.vmap(fn)(qlut, codes)
     if sizes is not None:
         valid = jnp.arange(codes.shape[1])[None, :] < sizes[:, None]
         d = jnp.where(valid, d, jnp.inf)

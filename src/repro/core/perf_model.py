@@ -104,6 +104,19 @@ class IndexParams:
         return self.n_total / self.nlist
 
 
+def lut_width_bytes(lut_dtype: str) -> int:
+    """Bytes per LUT entry for an engine ``lut_dtype`` — the knob that
+    feeds :class:`IndexParams.b_lut` so phase costs, Eq. 15 task
+    latencies, and C2IO all price the quantized path's real traffic
+    (per-subspace scale/bias amortize to < 1% of the table and are
+    ignored, matching the paper's word-granularity accounting)."""
+    if lut_dtype == "f32":
+        return 4
+    if lut_dtype == "uint8":
+        return 1
+    raise ValueError(f"unknown lut_dtype {lut_dtype!r}")
+
+
 def _log2(x: float) -> float:
     return math.log2(max(x, 2.0))
 

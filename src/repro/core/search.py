@@ -21,7 +21,8 @@ import jax.numpy as jnp
 
 from repro.core.kmeans import l2_sq
 from repro.core.ivf import IVFPQIndex, PaddedClusters
-from repro.core.adc import build_lut_batch, adc_distances
+from repro.core.adc import (build_lut_batch, adc_distances,
+                            adc_distances_quantized, quantize_lut)
 from repro.core.topk import topk_smallest
 
 
@@ -31,6 +32,7 @@ class SearchParams(NamedTuple):
     strategy: str = "gather"        # "gather" | "onehot" for the DC phase
     query_chunk: int = 256          # queries per scan step
     use_kernels: bool = False       # route LC/DC through Pallas kernels
+    lut_dtype: str = "f32"          # "f32" | "uint8" quantized-LUT fast path
 
 
 def cluster_locate(queries: jax.Array, centroids: jax.Array, nprobe: int):
@@ -55,17 +57,25 @@ def _search_chunk(queries, centroids, codebook, clusters: PaddedClusters,
     codes = clusters.codes[flat_probes]                           # (QcP, C, M)
     ids = clusters.ids[flat_probes]                               # (QcP, C)
     sizes = clusters.sizes[flat_probes]                           # (QcP,)
+    quantized = params.lut_dtype == "uint8"
     if params.use_kernels:
         from repro.kernels import ops as kops
-        lut = kops.lut_build(flat_res, codebook.codebooks,
-                             codebook.sqnorms)                    # (QcP, M, CB)
+        if quantized:                     # LC with fused quantize epilogue
+            lut = kops.lut_build_q(flat_res, codebook.codebooks,
+                                   codebook.sqnorms)
+        else:
+            lut = kops.lut_build(flat_res, codebook.codebooks,
+                                 codebook.sqnorms)                # (QcP, M, CB)
         dists = kops.pq_scan_dc(lut, codes, sizes,
                                 strategy=params.strategy)
     else:
         lut = build_lut_batch(codebook, flat_res)
-        dists = adc_distances(
-            lut, codes, sizes,
-            strategy="gather" if params.strategy == "gather" else "onehot")
+        strat = "gather" if params.strategy == "gather" else "onehot"
+        if quantized:
+            dists = adc_distances_quantized(quantize_lut(lut), codes, sizes,
+                                            strat)
+        else:
+            dists = adc_distances(lut, codes, sizes, strat)
     # TS: per query over all probed candidates
     cand_d = dists.reshape(qc, p * clusters.cmax)
     cand_i = ids.reshape(qc, p * clusters.cmax)

@@ -66,8 +66,11 @@ from repro.core.compat import shard_map
 
 from repro.core.ivf import IVFPQIndex, PaddedClusters
 from repro.core.pq import PQCodebook
-from repro.core.adc import build_lut_batch, adc_distances
+from repro.core.adc import (QuantizedLUT, adc_distances,
+                            adc_distances_quantized, build_lut_batch,
+                            quantize_lut)
 from repro.core.topk import topk_smallest
+from repro.util import next_pow2
 from repro.core.layout import Layout, build_layout, estimate_heat
 from repro.core.scheduler import ShardSchedule, schedule_batch
 from repro.core.perf_model import TaskLatencyModel, make_task_latency_model
@@ -146,7 +149,7 @@ def _shard_tasks_fn(codes, ids, sizes, cluster_of, qidx, sidx, queries,
                     centroids, codebook: PQCodebook, rotation, *, k: int,
                     strategy: str, use_kernels: bool,
                     fused_scan: bool = False, lut_dtype=None,
-                    scan_block: int = 512):
+                    scan_block: int = 512, quantize: bool = False):
     """One shard's batch: static (T,) task table -> (T, k) candidates.
 
     codes (slots, cpart, M) ... qidx/sidx (T,) with -1 padding.
@@ -155,7 +158,10 @@ def _shard_tasks_fn(codes, ids, sizes, cluster_of, qidx, sidx, queries,
     with a running top-k carried in the scan — the (T, C) distance matrix
     never reaches HBM (writeback drops from C to k floats/task), mirroring
     the fused Pallas kernel.  ``lut_dtype`` (e.g. bf16) halves LUT gather
-    traffic (the paper's int-LUT spirit on TPU dtypes).
+    traffic (the paper's int-LUT spirit on TPU dtypes) on the fused-scan
+    path only; ``quantize`` is the full uint8 fast path
+    (``EngineConfig.lut_dtype="uint8"``): LC gains the affine-quantize
+    epilogue and DC scans uint8 entries with per-subspace scales.
     """
     t = qidx.shape[0]
     valid = qidx >= 0
@@ -173,7 +179,12 @@ def _shard_tasks_fn(codes, ids, sizes, cluster_of, qidx, sidx, queries,
 
     if use_kernels:
         from repro.kernels import ops as kops
-        lut = kops.lut_build(residual, codebook.codebooks, codebook.sqnorms)
+        if quantize:
+            lut = kops.lut_build_q(residual, codebook.codebooks,
+                                   codebook.sqnorms)
+        else:
+            lut = kops.lut_build(residual, codebook.codebooks,
+                                 codebook.sqnorms)
         bd, bi = kops.pq_scan_topk(lut, task_codes, task_ids, task_sizes, k,
                                    strategy=strategy)
     elif fused_scan:
@@ -186,9 +197,12 @@ def _shard_tasks_fn(codes, ids, sizes, cluster_of, qidx, sidx, queries,
         lut = build_lut_batch(codebook, residual)             # LC
         if lut_dtype is not None:
             lut = lut.astype(lut_dtype)
-        d = adc_distances(lut, task_codes, task_sizes,
-                          strategy="gather" if strategy == "gather"
-                          else "onehot")                      # DC
+        strat = "gather" if strategy == "gather" else "onehot"
+        if quantize:
+            d = adc_distances_quantized(quantize_lut(lut), task_codes,
+                                        task_sizes, strat)    # DC (u8)
+        else:
+            d = adc_distances(lut, task_codes, task_sizes, strat)   # DC
         bd, bi = topk_smallest(d, task_ids, k)                # TS
     bi = jnp.where(jnp.isfinite(bd), bi, -1)
     return bd, bi
@@ -236,14 +250,15 @@ def _fused_scan_topk(lut, task_codes, task_ids, task_sizes, k: int,
 # Execution paths
 # ---------------------------------------------------------------------------
 
-@functools.partial(jax.jit, static_argnames=("k", "strategy", "use_kernels"))
+@functools.partial(jax.jit, static_argnames=("k", "strategy", "use_kernels",
+                                             "quantize"))
 def run_shards_vmap(sindex: ShardedIndex, qidx: jax.Array, sidx: jax.Array,
                     queries: jax.Array, *, k: int, strategy: str = "onehot",
-                    use_kernels: bool = False):
+                    use_kernels: bool = False, quantize: bool = False):
     """Simulation path: vmap over the shard axis on one device."""
     fn = functools.partial(_shard_tasks_fn, codebook=sindex.codebook,
                            rotation=sindex.rotation, k=k, strategy=strategy,
-                           use_kernels=use_kernels)
+                           use_kernels=use_kernels, quantize=quantize)
     return jax.vmap(
         lambda c, i, sz, co, qq, ss: fn(c, i, sz, co, qq, ss, queries,
                                         sindex.centroids)
@@ -252,7 +267,7 @@ def run_shards_vmap(sindex: ShardedIndex, qidx: jax.Array, sidx: jax.Array,
 
 def make_sharded_step(mesh, sindex: ShardedIndex, *, k: int,
                       strategy: str = "onehot", use_kernels: bool = False,
-                      axis: str = "shards"):
+                      quantize: bool = False, axis: str = "shards"):
     """Production path: shard_map over a real mesh axis.
 
     Returns a jitted step(codes, ids, sizes, cluster_of, qidx, sidx, queries,
@@ -261,7 +276,7 @@ def make_sharded_step(mesh, sindex: ShardedIndex, *, k: int,
     """
     fn = functools.partial(_shard_tasks_fn, codebook=sindex.codebook,
                            rotation=sindex.rotation, k=k, strategy=strategy,
-                           use_kernels=use_kernels)
+                           use_kernels=use_kernels, quantize=quantize)
 
     def per_shard(codes, ids, sizes, cluster_of, qidx, sidx, queries,
                   centroids):
@@ -298,17 +313,22 @@ def _shard_tasks_lut_fn(codes, ids, sizes, qidx, sidx, lidx, lut_bank, *,
 
     Same task-table contract as ``_shard_tasks_fn`` (qidx/sidx (T,) with
     -1 padding) plus ``lidx`` (T,) indexing each task's LUT in the
-    replicated ``lut_bank`` (Q*P, M, CB).  Skipping RC+LC here is what
-    the LUT cache buys the sharded path; DC/TS are byte-for-byte the
-    same ops as the uncached step, so results are bit-identical.
+    replicated ``lut_bank`` — the f32 (Q*P, M, CB) array, or a
+    (Q*P,)-batched :class:`QuantizedLUT` when the cache runs uint8 (the
+    replicated broadcast then ships ~4x fewer bytes).  Skipping RC+LC
+    here is what the LUT cache buys the sharded path; DC/TS are
+    byte-for-byte the same ops as the uncached step, so results are
+    bit-identical per dtype.
 
     ``lidx == -1`` marks a task with no bank row (a carried-over task
     whose cluster is absent from this batch's probe lists under
     flush=False): it must be invalidated, not scored against row 0."""
+    quantized = isinstance(lut_bank, QuantizedLUT)
+    n_rows = (lut_bank.lut_q if quantized else lut_bank).shape[0]
     valid = (qidx >= 0) & (lidx >= 0)
     si = jnp.clip(sidx, 0, codes.shape[0] - 1)
-    li = jnp.clip(lidx, 0, lut_bank.shape[0] - 1)
-    lut = lut_bank[li]                                        # (T, M, CB)
+    li = jnp.clip(lidx, 0, n_rows - 1)
+    lut = jax.tree.map(lambda a: a[li], lut_bank)             # (T, ...) rows
     task_codes = codes[si]                                    # (T, cpart, M)
     task_ids = ids[si]                                        # (T, cpart)
     task_sizes = jnp.where(valid, sizes[si], 0)               # invalid -> 0
@@ -317,9 +337,11 @@ def _shard_tasks_lut_fn(codes, ids, sizes, qidx, sidx, lidx, lut_bank, *,
         bd, bi = kops.pq_scan_topk(lut, task_codes, task_ids, task_sizes, k,
                                    strategy=strategy)
     else:
-        d = adc_distances(lut, task_codes, task_sizes,
-                          strategy="gather" if strategy == "gather"
-                          else "onehot")                      # DC
+        strat = "gather" if strategy == "gather" else "onehot"
+        if quantized:
+            d = adc_distances_quantized(lut, task_codes, task_sizes, strat)
+        else:
+            d = adc_distances(lut, task_codes, task_sizes, strat)   # DC
         bd, bi = topk_smallest(d, task_ids, k)                # TS
     bi = jnp.where(jnp.isfinite(bd), bi, -1)
     return bd, bi
@@ -422,6 +444,10 @@ class EngineConfig:
     # serving v2: batches between heat-driven re-layouts (0 = never;
     # requires a heat_estimator on the engine)
     relayout_every: int = 0
+    # quantized-LUT fast path: "uint8" quantizes LUTs per (task, subspace)
+    # end to end — LC epilogue, DC scan, the replicated cached-path bank,
+    # and the perf model's byte pricing (b_lut 4 -> 1)
+    lut_dtype: str = "f32"
 
 
 class _Placement(NamedTuple):
@@ -451,16 +477,30 @@ class DistributedEngine:
                  latency: Optional[TaskLatencyModel] = None,
                  mesh=None, lut_cache=None, heat_estimator=None,
                  tasks_controller=None):
-        from repro.core.perf_model import IndexParams, UPMEM_PROFILE
+        from repro.core.perf_model import (IndexParams, UPMEM_PROFILE,
+                                           lut_width_bytes)
+        if cfg.lut_dtype not in ("f32", "uint8"):
+            raise ValueError(f"EngineConfig.lut_dtype must be 'f32' or "
+                             f"'uint8', got {cfg.lut_dtype!r}")
         self.cfg = cfg
         self.index = index
         self.heat = estimate_heat(sample_probes, index.nlist)
         sizes = np.asarray(index.sizes)
+        # quantized LUTs shrink every b_lut-priced byte term (DC gathers +
+        # result writes, LC table writes), so the Eq. 15 latencies behind
+        # TasksPerShardController and c2io see the real traffic
         self.latency = latency or make_task_latency_model(
             IndexParams(n_total=int(sizes.sum()), nlist=index.nlist, q=1,
                         d=index.dim, k=cfg.k, p=cfg.nprobe,
-                        m=index.codebook.m, cb=index.codebook.cb),
+                        m=index.codebook.m, cb=index.codebook.cb,
+                        b_lut=lut_width_bytes(cfg.lut_dtype)),
             UPMEM_PROFILE)
+        if (lut_cache is not None
+                and getattr(lut_cache, "lut_dtype", "f32") != cfg.lut_dtype):
+            raise ValueError(
+                f"lut_cache.lut_dtype={lut_cache.lut_dtype!r} disagrees "
+                f"with EngineConfig.lut_dtype={cfg.lut_dtype!r}; cached "
+                f"and uncached scans must run the same dtype")
         self.mesh = mesh
         self.lut_cache = lut_cache
         self.heat_estimator = heat_estimator
@@ -490,7 +530,8 @@ class DistributedEngine:
         if self.mesh is not None:
             step = make_sharded_step(self.mesh, sindex, k=self.cfg.k,
                                      strategy=self.cfg.strategy,
-                                     use_kernels=self.cfg.use_kernels)
+                                     use_kernels=self.cfg.use_kernels,
+                                     quantize=self.cfg.lut_dtype == "uint8")
             step_lut = make_sharded_step_lut(
                 self.mesh, sindex, k=self.cfg.k, strategy=self.cfg.strategy,
                 use_kernels=self.cfg.use_kernels)
@@ -650,8 +691,9 @@ class DistributedEngine:
         miss-residual RC, whose compiled shapes depend only on the padded
         miss count.  Same contract as LocalEngine.precompile_lc."""
         from repro.runtime.cache import precompile_lut_shapes
-        precompile_lut_shapes(self.index.codebook, max_rows)
-        max_rows = 1 << (max(max_rows, 1) - 1).bit_length()
+        precompile_lut_shapes(self.index.codebook, max_rows,
+                              lut_dtype=self.cfg.lut_dtype)
+        max_rows = next_pow2(max_rows)
         s = 1
         while s <= max_rows:
             miss_residuals(jnp.asarray(np.zeros((s, self.index.dim),
@@ -697,8 +739,10 @@ class DistributedEngine:
         return sched
 
     def _lut_bank(self, queries_np: np.ndarray, probes: np.ndarray,
-                  n_valid: int) -> jax.Array:
-        """Assemble the (Q*P, M, CB) LUT bank through the cache.
+                  n_valid: int):
+        """Assemble the per-(query, probed cluster) LUT bank through the
+        cache: (Q*P, M, CB) f32, or a (Q*P,)-batched QuantizedLUT when
+        the cache runs uint8 (~4x less replicated broadcast traffic).
 
         One LUT per (query, probed cluster) pair — split parts and
         replicas share it.  Pad rows (>= n_valid) are computed but never
@@ -706,7 +750,8 @@ class DistributedEngine:
         occupy cache slots.  RC+LC run only over the miss rows (hit rows
         skip even the rotation matmul), padded to the next power of two
         so serving sees a bounded set of compiled shapes."""
-        from repro.runtime.cache import lut_fill_misses, lut_miss_scan
+        from repro.runtime.cache import (lut_fill_misses, lut_miss_scan,
+                                         stack_lut_bank)
         cache = self.lut_cache
         nq, npr = probes.shape
         flat_probes = probes.reshape(-1)
@@ -715,7 +760,7 @@ class DistributedEngine:
                                         nq * npr)
         if miss_rows:
             nmiss = len(miss_rows)
-            mpad = 1 << (nmiss - 1).bit_length()
+            mpad = next_pow2(nmiss)
             miss_q = np.zeros((mpad, queries_np.shape[1]), np.float32)
             miss_q[:nmiss] = queries_np[[t // npr for t in miss_rows]]
             crows = np.zeros(mpad, np.int32)
@@ -726,7 +771,7 @@ class DistributedEngine:
                                  jnp.asarray(crows), self.sindex.rotation)
             lut_fill_misses(cache, self.index.codebook, luts, miss_rows,
                             flat_probes, buckets, npr, res)
-        return jnp.asarray(np.stack(luts))
+        return stack_lut_bank(luts)
 
     def _probe_posmap(self, probes: np.ndarray) -> np.ndarray:
         """(nq, nlist) position of each cluster in its query's probe list
@@ -822,10 +867,11 @@ class DistributedEngine:
                                     qidx, sidx, queries,
                                     self.sindex.centroids)
             else:
-                bd, bi = run_shards_vmap(self.sindex, qidx, sidx, queries,
-                                         k=self.cfg.k,
-                                         strategy=self.cfg.strategy,
-                                         use_kernels=self.cfg.use_kernels)
+                bd, bi = run_shards_vmap(
+                    self.sindex, qidx, sidx, queries, k=self.cfg.k,
+                    strategy=self.cfg.strategy,
+                    use_kernels=self.cfg.use_kernels,
+                    quantize=self.cfg.lut_dtype == "uint8")
             all_d.append(np.asarray(bd))
             all_i.append(np.asarray(bi))
             all_q.append(sched.query_idx)

@@ -7,6 +7,8 @@ ref       — pure-jnp oracles for allclose validation.
 """
 
 from repro.kernels import ops, ref
-from repro.kernels.ops import lut_build, pq_scan_dc, pq_scan_topk
+from repro.kernels.ops import (lut_build, lut_build_q, pq_scan_dc,
+                               pq_scan_topk)
 
-__all__ = ["ops", "ref", "lut_build", "pq_scan_dc", "pq_scan_topk"]
+__all__ = ["ops", "ref", "lut_build", "lut_build_q", "pq_scan_dc",
+           "pq_scan_topk"]

@@ -32,13 +32,16 @@ from jax.experimental import pallas as pl
 from repro.kernels.compat import CompilerParams
 
 
-def _lut_build_kernel(res_ref, cb_ref, sqn_ref, out_ref):
+def _lut_block(res_ref, cb_ref, sqn_ref) -> jax.Array:
     r = res_ref[:, 0, :]                                  # (bT, dsub) f32
     c = cb_ref[0]                                         # (CB, dsub) f32
     cross = jnp.dot(r, c.T, preferred_element_type=jnp.float32)   # (bT, CB)
     rsq = jnp.sum(r * r, axis=-1, keepdims=True)          # (bT, 1)
-    lut = jnp.maximum(rsq + sqn_ref[0][None, :] - 2.0 * cross, 0.0)
-    out_ref[:, 0, :] = lut
+    return jnp.maximum(rsq + sqn_ref[0][None, :] - 2.0 * cross, 0.0)
+
+
+def _lut_build_kernel(res_ref, cb_ref, sqn_ref, out_ref):
+    out_ref[:, 0, :] = _lut_block(res_ref, cb_ref, sqn_ref)
 
 
 @functools.partial(jax.jit,
@@ -66,5 +69,65 @@ def lut_build_pallas(residuals: jax.Array, codebooks: jax.Array,
             dimension_semantics=("parallel", "parallel")),
         interpret=interpret,
         name="drim_lut_build",
+    )(residuals.astype(jnp.float32), codebooks.astype(jnp.float32),
+      sqnorms.astype(jnp.float32))
+
+
+# --------------------------------------------------------------------------
+# Fused quantize epilogue: LC + per-(task, subspace) affine uint8
+# quantization in one kernel.  The f32 table exists only inside the VMEM
+# block; HBM sees (bT, 1, CB) u8 plus two (bT, 1) f32 scalars — the
+# writeback drops ~4x (the paper's shrink-the-LUT move applied to our
+# own memory hierarchy).  Quantization math matches core.adc.quantize_lut
+# exactly (same ops, same order), so host- and kernel-quantized tables
+# agree bit-for-bit on identical f32 inputs.
+# --------------------------------------------------------------------------
+
+def _lut_build_q_kernel(res_ref, cb_ref, sqn_ref, outq_ref, outs_ref,
+                        outb_ref):
+    lut = _lut_block(res_ref, cb_ref, sqn_ref)            # (bT, CB) f32
+    lo = jnp.min(lut, axis=-1)                            # (bT,)
+    hi = jnp.max(lut, axis=-1)
+    scale = jnp.where(hi > lo, (hi - lo) / 255.0, 1.0)
+    q = jnp.round((lut - lo[:, None]) / scale[:, None])
+    outq_ref[:, 0, :] = jnp.clip(q, 0.0, 255.0).astype(jnp.uint8)
+    outs_ref[:, 0] = scale
+    outb_ref[:, 0] = lo
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("block_t", "interpret"))
+def lut_build_q_pallas(residuals: jax.Array, codebooks: jax.Array,
+                       sqnorms: jax.Array, *, block_t: int = 128,
+                       interpret: bool = True):
+    """residuals (T, M, dsub) f32, codebooks (M, CB, dsub), sqnorms (M, CB)
+    -> (lut_q (T, M, CB) u8, scale (T, M) f32, bias (T, M) f32).
+    T must be a multiple of block_t (ops.py pads)."""
+    t, m, dsub = residuals.shape
+    _, cbn, _ = codebooks.shape
+    assert t % block_t == 0, (t, block_t)
+    grid = (t // block_t, m)
+    return pl.pallas_call(
+        _lut_build_q_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((block_t, 1, dsub), lambda i, j: (i, j, 0)),
+            pl.BlockSpec((1, cbn, dsub), lambda i, j: (j, 0, 0)),
+            pl.BlockSpec((1, cbn), lambda i, j: (j, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((block_t, 1, cbn), lambda i, j: (i, j, 0)),
+            pl.BlockSpec((block_t, 1), lambda i, j: (i, j)),
+            pl.BlockSpec((block_t, 1), lambda i, j: (i, j)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((t, m, cbn), jnp.uint8),
+            jax.ShapeDtypeStruct((t, m), jnp.float32),
+            jax.ShapeDtypeStruct((t, m), jnp.float32),
+        ],
+        compiler_params=CompilerParams(
+            dimension_semantics=("parallel", "parallel")),
+        interpret=interpret,
+        name="drim_lut_build_q",
     )(residuals.astype(jnp.float32), codebooks.astype(jnp.float32),
       sqnorms.astype(jnp.float32))

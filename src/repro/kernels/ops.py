@@ -12,19 +12,28 @@ import functools
 import jax
 import jax.numpy as jnp
 
-from repro.kernels.lut_build import lut_build_pallas
-from repro.kernels.pq_scan import pq_scan_dc_pallas, pq_scan_topk_pallas
+from repro.core.adc import QuantizedLUT
+from repro.kernels.lut_build import lut_build_pallas, lut_build_q_pallas
+from repro.kernels.pq_scan import (pq_scan_dc_pallas, pq_scan_dc_q_pallas,
+                                   pq_scan_topk_pallas, pq_scan_topk_q_pallas)
+from repro.util import next_pow2
 
 
 def _default_interpret() -> bool:
     return jax.default_backend() != "tpu"
 
 
-def _next_pow2(x: int) -> int:
-    n = 1
-    while n < x:
-        n <<= 1
-    return n
+# The onehot intermediate (bC, M*CB) dominates the scan's VMEM footprint
+# (pq_scan.py header); quantized LUTs build it in bf16 instead of f32, so
+# the same budget fits twice the block — u8 defaults to 2x the f32 block.
+_BLOCK_C_F32 = 256
+_BLOCK_C_U8 = 512
+
+
+def _resolve_block_c(block_c: int | None, quantized: bool) -> int:
+    if block_c is not None:
+        return block_c
+    return _BLOCK_C_U8 if quantized else _BLOCK_C_F32
 
 
 def lut_build(residuals: jax.Array, codebooks: jax.Array,
@@ -36,7 +45,7 @@ def lut_build(residuals: jax.Array, codebooks: jax.Array,
     t = residuals.shape[0]
     m, cbn, dsub = codebooks.shape
     res = residuals.reshape(t, m, dsub)
-    bt = min(block_t, _next_pow2(max(t, 1)))
+    bt = min(block_t, next_pow2(t))
     pad = (-t) % bt
     if pad:
         res = jnp.pad(res, ((0, pad), (0, 0), (0, 0)))
@@ -45,42 +54,83 @@ def lut_build(residuals: jax.Array, codebooks: jax.Array,
     return out[:t]
 
 
-def pq_scan_dc(lut: jax.Array, codes: jax.Array, sizes: jax.Array | None
-               = None, *, strategy: str = "onehot", block_c: int = 256,
-               interpret: bool | None = None) -> jax.Array:
-    """DC phase: (T, M, CB) x (T, C, M) -> (T, C); padding rows +inf."""
+def lut_build_q(residuals: jax.Array, codebooks: jax.Array,
+                sqnorms: jax.Array, *, block_t: int = 128,
+                interpret: bool | None = None) -> QuantizedLUT:
+    """LC with the fused quantize epilogue: (T, D) residuals ->
+    QuantizedLUT of (T, M, CB) u8 + (T, M) scale/bias.  The f32 table
+    never leaves the kernel's VMEM block — HBM writeback is the u8 table
+    plus two scalars per subspace (~4x less than ``lut_build``)."""
     if interpret is None:
         interpret = _default_interpret()
+    t = residuals.shape[0]
+    m, cbn, dsub = codebooks.shape
+    res = residuals.reshape(t, m, dsub)
+    bt = min(block_t, next_pow2(t))
+    pad = (-t) % bt
+    if pad:
+        res = jnp.pad(res, ((0, pad), (0, 0), (0, 0)))
+    lut_q, scale, bias = lut_build_q_pallas(res, codebooks, sqnorms,
+                                            block_t=bt, interpret=interpret)
+    return QuantizedLUT(lut_q[:t], scale[:t], bias[:t])
+
+
+def pq_scan_dc(lut, codes: jax.Array, sizes: jax.Array | None
+               = None, *, strategy: str = "onehot",
+               block_c: int | None = None,
+               interpret: bool | None = None) -> jax.Array:
+    """DC phase: (T, M, CB) x (T, C, M) -> (T, C); padding rows +inf.
+
+    ``lut`` is either the f32 (T, M, CB) table or a
+    :class:`~repro.core.adc.QuantizedLUT` (uint8 fast path)."""
+    if interpret is None:
+        interpret = _default_interpret()
+    quantized = isinstance(lut, QuantizedLUT)
     t, c, m = codes.shape
-    bc = min(block_c, _next_pow2(max(c, 1)))
+    bc = min(_resolve_block_c(block_c, quantized), next_pow2(c))
     pad = (-c) % bc
     codes_i = codes.astype(jnp.int32)
     if pad:
         codes_i = jnp.pad(codes_i, ((0, 0), (0, pad), (0, 0)))
-    d = pq_scan_dc_pallas(lut, codes_i, strategy=strategy, block_c=bc,
-                          interpret=interpret)[:, :c]
+    if quantized:
+        d = pq_scan_dc_q_pallas(lut.lut_q, lut.scale, lut.bias, codes_i,
+                                strategy=strategy, block_c=bc,
+                                interpret=interpret)[:, :c]
+    else:
+        d = pq_scan_dc_pallas(lut, codes_i, strategy=strategy, block_c=bc,
+                              interpret=interpret)[:, :c]
     if sizes is not None:
         valid = jnp.arange(c)[None, :] < sizes[:, None]
         d = jnp.where(valid, d, jnp.inf)
     return d
 
 
-def pq_scan_topk(lut: jax.Array, codes: jax.Array, ids: jax.Array,
+def pq_scan_topk(lut, codes: jax.Array, ids: jax.Array,
                  sizes: jax.Array, k: int, *, strategy: str = "onehot",
-                 block_c: int = 256, interpret: bool | None = None):
-    """Fused DC+TS: returns (dists (T, k) ascending, ids (T, k))."""
+                 block_c: int | None = None, interpret: bool | None = None):
+    """Fused DC+TS: returns (dists (T, k) ascending, ids (T, k)).
+
+    ``lut`` is either the f32 (T, M, CB) table or a
+    :class:`~repro.core.adc.QuantizedLUT` (uint8 fast path)."""
     if interpret is None:
         interpret = _default_interpret()
+    quantized = isinstance(lut, QuantizedLUT)
     t, c, m = codes.shape
-    k_pad = _next_pow2(max(k, 8))
-    bc = max(min(block_c, _next_pow2(max(c, 1))), k_pad)
+    k_pad = next_pow2(max(k, 8))
+    bc = max(min(_resolve_block_c(block_c, quantized), next_pow2(c)), k_pad)
     pad = (-c) % bc
     codes_i = codes.astype(jnp.int32)
     ids_i = ids.astype(jnp.int32)
     if pad:
         codes_i = jnp.pad(codes_i, ((0, 0), (0, pad), (0, 0)))
         ids_i = jnp.pad(ids_i, ((0, 0), (0, pad)), constant_values=-1)
-    bd, bi = pq_scan_topk_pallas(lut, codes_i, ids_i, sizes, k_pad=k_pad,
-                                 strategy=strategy, block_c=bc,
-                                 interpret=interpret)
+    if quantized:
+        bd, bi = pq_scan_topk_q_pallas(lut.lut_q, lut.scale, lut.bias,
+                                       codes_i, ids_i, sizes, k_pad=k_pad,
+                                       strategy=strategy, block_c=bc,
+                                       interpret=interpret)
+    else:
+        bd, bi = pq_scan_topk_pallas(lut, codes_i, ids_i, sizes, k_pad=k_pad,
+                                     strategy=strategy, block_c=bc,
+                                     interpret=interpret)
     return bd[:, :k], bi[:, :k]

@@ -19,12 +19,20 @@ Kernels:
                          §Perf 'fused scan' optimization: HBM writeback drops
                          from C floats/task to k_pad floats/task.
 
+Quantized-LUT variants (``pq_scan_dc_q_pallas`` / ``pq_scan_topk_q_pallas``):
+the table arrives as uint8 + per-subspace f32 scale/bias
+(core.adc.quantize_lut), the onehot operand is built in bf16, and
+per-subspace integer accumulators take one (M,)-scale contraction at the
+end — see ``_block_dists_q``.
+
 Grid: (T, C/bC); the C axis is 'arbitrary' (sequential) for the fused kernel
 because scratch accumulates across it; T stays 'parallel' (megacore splits).
 
 VMEM per step (bC=512, M=16, CB=256, k_pad=32):
-  lut 16 KB + codes 32 KB + onehot intermediate (bC, M*CB) bf16 4 MB.
-  The onehot intermediate dominates; ops.py sizes bC to keep it < 4 MB.
+  lut 16 KB + codes 32 KB + onehot intermediate (bC, M*CB) f32 8 MB.
+  The onehot intermediate dominates; ops.py sizes bC to keep it in
+  budget — and the quantized path's bf16 onehot (+4 KB u8 lut) is why
+  u8 runs at twice the f32 block_c for the same footprint.
 """
 
 from __future__ import annotations
@@ -62,6 +70,41 @@ def _block_dists(lut_ref, codes_blk, strategy: str) -> jax.Array:
     raise ValueError(f"unknown strategy {strategy!r}")
 
 
+def _block_dists_q(lutq_ref, scale_ref, bias_ref, codes_blk,
+                   strategy: str) -> jax.Array:
+    """Quantized-LUT block distances: lutq_ref (1, M, CB) u8, scale/bias
+    (1, M) f32, codes_blk (bC, M) i32 -> (bC,) f32.
+
+    dist = sum_m scale_m * lutq[m, code_m] + sum_m bias_m.  The onehot
+    path contracts a bf16 onehot (0/1 exact) against the bf16-cast u8
+    table (integers <= 255 exact in bf16), so the VMEM-dominating
+    (bC, M, CB) intermediate is half the f32 path's and the table
+    operand a quarter — which is why ops.py runs u8 at 2x block_c.
+    Per-subspace accumulators stay separate until one tiny (M,) x
+    (M, bC) scale contraction at the end.
+    """
+    m, cbn = lutq_ref.shape[1], lutq_ref.shape[2]
+    scale = scale_ref[0]                                  # (M,) f32
+    bias_sum = jnp.sum(bias_ref[0])
+    if strategy == "onehot":
+        iota = jax.lax.broadcasted_iota(jnp.int32,
+                                        (codes_blk.shape[0], m, cbn), 2)
+        onehot = (codes_blk[:, :, None] == iota).astype(jnp.bfloat16)
+        acc = jax.lax.dot_general(                        # (M, bC) f32
+            onehot, lutq_ref[0].astype(jnp.bfloat16),
+            dimension_numbers=(((2,), (1,)), ((1,), (0,))),
+            preferred_element_type=jnp.float32)
+        return jnp.dot(scale, acc,
+                       preferred_element_type=jnp.float32) + bias_sum
+    elif strategy == "gather":
+        acc = jnp.zeros((codes_blk.shape[0],), jnp.float32)
+        for mm in range(m):                       # static unroll over subspaces
+            g = jnp.take(lutq_ref[0, mm], codes_blk[:, mm], axis=0)
+            acc = acc + scale[mm] * g.astype(jnp.float32)
+        return acc + bias_sum
+    raise ValueError(f"unknown strategy {strategy!r}")
+
+
 # --------------------------------------------------------------------------
 # DC-only kernel
 # --------------------------------------------------------------------------
@@ -95,6 +138,43 @@ def pq_scan_dc_pallas(lut: jax.Array, codes: jax.Array, *,
         interpret=interpret,
         name=f"drim_pq_scan_dc_{strategy}",
     )(lut.astype(jnp.float32), codes.astype(jnp.int32))
+
+
+def _pq_scan_dc_q_kernel(lutq_ref, scale_ref, bias_ref, codes_ref, out_ref,
+                         *, strategy):
+    out_ref[0] = _block_dists_q(lutq_ref, scale_ref, bias_ref, codes_ref[0],
+                                strategy)
+
+
+@functools.partial(jax.jit, static_argnames=("strategy", "block_c",
+                                             "interpret"))
+def pq_scan_dc_q_pallas(lut_q: jax.Array, scale: jax.Array, bias: jax.Array,
+                        codes: jax.Array, *, strategy: str = "onehot",
+                        block_c: int = 512,
+                        interpret: bool = True) -> jax.Array:
+    """Quantized-LUT DC: lut_q (T, M, CB) u8, scale/bias (T, M) f32,
+    codes (T, C, M) i32 -> dists (T, C) f32.  C % block_c == 0."""
+    t, m, cbn = lut_q.shape
+    _, c, _ = codes.shape
+    assert c % block_c == 0, (c, block_c)
+    grid = (t, c // block_c)
+    return pl.pallas_call(
+        functools.partial(_pq_scan_dc_q_kernel, strategy=strategy),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, m, cbn), lambda i, j: (i, 0, 0)),
+            pl.BlockSpec((1, m), lambda i, j: (i, 0)),
+            pl.BlockSpec((1, m), lambda i, j: (i, 0)),
+            pl.BlockSpec((1, block_c, m), lambda i, j: (i, j, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, block_c), lambda i, j: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((t, c), jnp.float32),
+        compiler_params=CompilerParams(
+            dimension_semantics=("parallel", "parallel")),
+        interpret=interpret,
+        name=f"drim_pq_scan_dc_q_{strategy}",
+    )(lut_q.astype(jnp.uint8), scale.astype(jnp.float32),
+      bias.astype(jnp.float32), codes.astype(jnp.int32))
 
 
 # --------------------------------------------------------------------------
@@ -173,4 +253,82 @@ def pq_scan_topk_pallas(lut: jax.Array, codes: jax.Array, ids: jax.Array,
         interpret=interpret,
         name=f"drim_pq_scan_topk_{strategy}",
     )(sizes.astype(jnp.int32), lut.astype(jnp.float32),
+      codes.astype(jnp.int32), ids.astype(jnp.int32))
+
+
+def _pq_scan_topk_q_kernel(size_ref, lutq_ref, scale_ref, bias_ref,
+                           codes_ref, ids_ref, outd_ref, outi_ref,
+                           bestd_s, besti_s, *, strategy, block_c, k_pad):
+    cstep = pl.program_id(1)
+    ncs = pl.num_programs(1)
+
+    @pl.when(cstep == 0)
+    def _init():
+        bestd_s[...] = jnp.full((1, k_pad), jnp.inf, jnp.float32)
+        besti_s[...] = jnp.full((1, k_pad), -1, jnp.int32)
+
+    dist = _block_dists_q(lutq_ref, scale_ref, bias_ref, codes_ref[0],
+                          strategy)                                # (bC,)
+    row = cstep * block_c + jax.lax.broadcasted_iota(
+        jnp.int32, (block_c,), 0)
+    valid = row < size_ref[0]
+    dist = jnp.where(valid, dist, jnp.inf)
+    ids = jnp.where(valid, ids_ref[0], -1)
+
+    nd, ni = running_topk_update(bestd_s[0], besti_s[0], dist, ids)
+    bestd_s[0] = nd
+    besti_s[0] = ni
+
+    @pl.when(cstep == ncs - 1)
+    def _flush():
+        outd_ref[0] = bestd_s[0]
+        outi_ref[0] = besti_s[0]
+
+
+@functools.partial(jax.jit, static_argnames=("k_pad", "strategy", "block_c",
+                                             "interpret"))
+def pq_scan_topk_q_pallas(lut_q: jax.Array, scale: jax.Array,
+                          bias: jax.Array, codes: jax.Array, ids: jax.Array,
+                          sizes: jax.Array, *, k_pad: int,
+                          strategy: str = "onehot", block_c: int = 512,
+                          interpret: bool = True):
+    """Quantized-LUT fused DC+TS — same contract as ``pq_scan_topk_pallas``
+    with lut_q (T, M, CB) u8 + scale/bias (T, M) f32 replacing the f32
+    table.  The running top-k scratch is unchanged; only the distance
+    block computation differs."""
+    t, m, cbn = lut_q.shape
+    _, c, _ = codes.shape
+    assert c % block_c == 0 and k_pad & (k_pad - 1) == 0 and k_pad <= block_c
+    grid = (t, c // block_c)
+    kern = functools.partial(_pq_scan_topk_q_kernel, strategy=strategy,
+                             block_c=block_c, k_pad=k_pad)
+    return pl.pallas_call(
+        kern,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1,), lambda i, j: (i,), memory_space=pltpu.SMEM),
+            pl.BlockSpec((1, m, cbn), lambda i, j: (i, 0, 0)),
+            pl.BlockSpec((1, m), lambda i, j: (i, 0)),
+            pl.BlockSpec((1, m), lambda i, j: (i, 0)),
+            pl.BlockSpec((1, block_c, m), lambda i, j: (i, j, 0)),
+            pl.BlockSpec((1, block_c), lambda i, j: (i, j)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, k_pad), lambda i, j: (i, 0)),
+            pl.BlockSpec((1, k_pad), lambda i, j: (i, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((t, k_pad), jnp.float32),
+            jax.ShapeDtypeStruct((t, k_pad), jnp.int32),
+        ],
+        scratch_shapes=[
+            pltpu.VMEM((1, k_pad), jnp.float32),
+            pltpu.VMEM((1, k_pad), jnp.int32),
+        ],
+        compiler_params=CompilerParams(
+            dimension_semantics=("parallel", "arbitrary")),
+        interpret=interpret,
+        name=f"drim_pq_scan_topk_q_{strategy}",
+    )(sizes.astype(jnp.int32), lut_q.astype(jnp.uint8),
+      scale.astype(jnp.float32), bias.astype(jnp.float32),
       codes.astype(jnp.int32), ids.astype(jnp.int32))

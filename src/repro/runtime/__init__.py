@@ -6,7 +6,8 @@ from repro.runtime.batching import (BucketPolicy, MicroBatch, MicroBatcher,
 from repro.runtime.cache import (AdmissionPolicy, CacheStats,
                                  HeatAwareAdmission, HotClusterLUTCache,
                                  LRUCache, OnlineHeatEstimator,
-                                 query_hash_bucket)
+                                 entry_nbytes, query_hash_bucket,
+                                 stack_lut_bank)
 from repro.runtime.serving import (LocalEngine, SearchEngine, ServingConfig,
                                    ServingRuntime, ServingStats,
                                    ShardedEngine)
@@ -17,6 +18,6 @@ __all__ = ["HeartbeatRegistry", "ElasticPlan", "plan_elastic_mesh",
            "TasksPerShardController",
            "AdmissionPolicy", "CacheStats", "HeatAwareAdmission",
            "HotClusterLUTCache", "LRUCache", "OnlineHeatEstimator",
-           "query_hash_bucket",
+           "entry_nbytes", "query_hash_bucket", "stack_lut_bank",
            "LocalEngine", "SearchEngine", "ServingConfig", "ServingRuntime",
            "ServingStats", "ShardedEngine"]

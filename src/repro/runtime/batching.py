@@ -42,6 +42,8 @@ from typing import Deque, Dict, List, Optional
 
 import numpy as np
 
+from repro.util import next_pow2 as _pow2_ceil
+
 
 class BucketPolicy:
     """A small sorted set of allowed (padded) batch sizes.
@@ -196,8 +198,6 @@ class MicroBatcher:
         return self.poll(now, drain=True)
 
 
-def _pow2_ceil(n: int) -> int:
-    return 1 << (max(int(n), 1) - 1).bit_length()
 
 
 class TasksPerShardController:

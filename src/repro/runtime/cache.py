@@ -8,7 +8,11 @@ cache that lets a repeat hit skip LC for that (query, cluster) pair
 entirely, plus the heat machinery that makes admission skew-aware:
 
   * :class:`LRUCache` / :class:`HotClusterLUTCache` — bounded cache keyed
-    on ``(cluster id, query hash bucket)`` holding (M, CB) f32 LUTs;
+    on ``(cluster id, query hash bucket)`` holding (M, CB) f32 LUTs, or —
+    with ``lut_dtype="uint8"`` — quantized ``(lut_q u8, scale, bias)``
+    triples (:func:`repro.core.adc.quantize_lut`), ~4x more entries per
+    byte.  Budgeting is by entry count (``capacity``), by bytes
+    (``capacity_bytes``), or both;
   * :class:`OnlineHeatEstimator` — exponentially-decayed per-cluster
     probe counts fed from the served stream; units match
     ``layout.estimate_heat`` (expected accesses per query), so the same
@@ -26,7 +30,8 @@ hashing, so *near*-duplicates also hit at the cost of an approximation
 error bounded by the grid (knob for the serving bench).
 
 Invariants:
-  * ``len(cache) <= capacity`` always (admission can only shrink churn);
+  * ``len(cache) <= capacity`` and ``bytes <= capacity_bytes`` always
+    (admission can only shrink churn);
   * with ``admission=None`` behaviour is exactly the PR 1 LRU;
   * with all-zero heat, :class:`HeatAwareAdmission` degrades to LRU
     (ties admit and evict the oldest sampled entry).
@@ -41,6 +46,21 @@ from typing import Any, Hashable, Optional, Sequence
 
 import numpy as np
 
+from repro.util import next_pow2
+
+
+def entry_nbytes(value: Any) -> int:
+    """Resident bytes of a cache value: an array, a tuple of arrays (the
+    quantized ``(lut_q, scale, bias)`` triple), or — fallback for plain
+    Python values in generic LRUCache use — ``sys.getsizeof``."""
+    if isinstance(value, (tuple, list)):
+        return int(sum(entry_nbytes(v) for v in value))
+    nb = getattr(value, "nbytes", None)
+    if nb is not None:
+        return int(nb)
+    import sys
+    return int(sys.getsizeof(value))
+
 
 @dataclasses.dataclass
 class CacheStats:
@@ -49,6 +69,11 @@ class CacheStats:
     inserts: int = 0
     evictions: int = 0
     rejects: int = 0      # admission-denied inserts (heat-aware policy)
+    # current content accounting (kept in sync by LRUCache on every
+    # mutation — byte budgeting made the resident footprint a first-class
+    # metric, not just the entry count)
+    entries: int = 0
+    bytes: int = 0
 
     @property
     def lookups(self) -> int:
@@ -61,7 +86,8 @@ class CacheStats:
     def as_dict(self) -> dict:
         return {"hits": self.hits, "misses": self.misses,
                 "inserts": self.inserts, "evictions": self.evictions,
-                "rejects": self.rejects,
+                "rejects": self.rejects, "entries": self.entries,
+                "bytes": self.bytes,
                 "hit_rate": round(self.hit_rate, 4)}
 
 
@@ -160,17 +186,31 @@ class HeatAwareAdmission(AdmissionPolicy):
 class LRUCache:
     """Bounded cache over hashable keys with hit/miss/eviction accounting.
 
+    Bounds: ``capacity`` (max entries; None = unbounded) and/or
+    ``capacity_bytes`` (max resident value bytes via
+    :func:`entry_nbytes`; None = unbounded) — at least one must be set.
     Recency order is LRU; when full, victim selection is delegated to the
     optional :class:`AdmissionPolicy` (default: evict oldest, admit all).
+    A byte budget may evict several victims for one insert (quantized
+    entries are smaller than the f32 ones they displace).
     """
 
-    def __init__(self, capacity: int,
-                 admission: Optional[AdmissionPolicy] = None):
-        if capacity < 1:
+    def __init__(self, capacity: Optional[int],
+                 admission: Optional[AdmissionPolicy] = None,
+                 capacity_bytes: Optional[int] = None):
+        if capacity is None and capacity_bytes is None:
+            raise ValueError("need capacity and/or capacity_bytes")
+        if capacity is not None and capacity < 1:
             raise ValueError("capacity must be >= 1")
-        self.capacity = int(capacity)
+        if capacity_bytes is not None and capacity_bytes < 1:
+            raise ValueError("capacity_bytes must be >= 1")
+        self.capacity = None if capacity is None else int(capacity)
+        self.capacity_bytes = (None if capacity_bytes is None
+                               else int(capacity_bytes))
         self.admission = admission
         self._od: "OrderedDict[Hashable, Any]" = OrderedDict()
+        self._size: dict = {}              # key -> entry_nbytes(value)
+        self.bytes = 0                     # resident value bytes
         self.stats = CacheStats()
 
     def __len__(self) -> int:
@@ -178,6 +218,26 @@ class LRUCache:
 
     def __contains__(self, key) -> bool:
         return key in self._od
+
+    def _sync_stats(self) -> None:
+        self.stats.entries = len(self._od)
+        self.stats.bytes = self.bytes
+
+    def _drop(self, key) -> None:
+        del self._od[key]
+        self.bytes -= self._size.pop(key)
+        self.stats.evictions += 1
+
+    def _needs_room(self, incoming_bytes: int, evicting: set) -> bool:
+        """Would inserting ``incoming_bytes`` still violate a bound after
+        evicting the (not-yet-dropped) keys in ``evicting``?"""
+        n = len(self._od) - len(evicting)
+        if self.capacity is not None and n >= self.capacity:
+            return True
+        if self.capacity_bytes is None:
+            return False
+        freed = sum(self._size[k] for k in evicting)
+        return self.bytes - freed + incoming_bytes > self.capacity_bytes
 
     def get(self, key) -> Optional[Any]:
         v = self._od.get(key)
@@ -190,25 +250,56 @@ class LRUCache:
 
     def put(self, key, value) -> bool:
         """Insert (or refresh) ``key``.  Returns False iff the admission
-        policy rejected the insert on a full cache."""
+        policy rejected the insert on a full cache, or the value alone
+        exceeds the byte budget."""
+        nb = entry_nbytes(value)
+        if self.capacity_bytes is not None and nb > self.capacity_bytes:
+            self.stats.rejects += 1
+            return False
         if key in self._od:
             self._od.move_to_end(key)
             self._od[key] = value
+            self.bytes += nb - self._size[key]
+            self._size[key] = nb
+            while (self.capacity_bytes is not None
+                   and self.bytes > self.capacity_bytes):
+                oldest = next(iter(self._od))   # refresh never self-evicts:
+                if oldest == key:               # key is at the MRU end
+                    break
+                self._drop(oldest)
+            self._sync_stats()
             return True
-        if self.admission is not None and len(self._od) >= self.capacity:
-            n = min(getattr(self.admission, "sample_size", 8), len(self._od))
-            sample = [k for k, _ in zip(self._od, range(n))]  # oldest first
-            victim = self.admission.pick_victim(key, sample)
-            if victim is None:
-                self.stats.rejects += 1
-                return False
-            del self._od[victim]
-            self.stats.evictions += 1
+        # Select the FULL victim set before touching the cache: a byte
+        # budget may need several evictions for one insert, and a late
+        # admission rejection must leave the cache untouched (the
+        # HeatAwareAdmission contract — rejected inserts cannot churn
+        # resident entries).
+        victims: set = set()
+        while self._needs_room(nb, victims) and len(victims) < len(self._od):
+            if self.admission is not None:
+                n = min(getattr(self.admission, "sample_size", 8),
+                        len(self._od) - len(victims))
+                sample = []                       # oldest first, unpicked
+                for k in self._od:
+                    if k not in victims:
+                        sample.append(k)
+                        if len(sample) == n:
+                            break
+                victim = self.admission.pick_victim(key, sample)
+                if victim is None:
+                    self.stats.rejects += 1
+                    self._sync_stats()
+                    return False
+            else:
+                victim = next(k for k in self._od if k not in victims)
+            victims.add(victim)
+        for v in victims:
+            self._drop(v)
         self._od[key] = value
+        self._size[key] = nb
+        self.bytes += nb
         self.stats.inserts += 1
-        while len(self._od) > self.capacity:
-            self._od.popitem(last=False)
-            self.stats.evictions += 1
+        self._sync_stats()
         return True
 
 
@@ -268,20 +359,33 @@ def lut_fill_misses(cache: "HotClusterLUTCache", codebook, luts,
     the LC batch to pow2 shapes keeps the compiled-shape set small (a
     first-seen miss count would otherwise pay its XLA compile
     mid-stream); pad rows of the *serving batch* (query index >=
-    len(buckets)) never enter the cache."""
+    len(buckets)) never enter the cache.
+
+    With ``cache.lut_dtype == "uint8"`` the fresh tables are quantized
+    (one batched :func:`repro.core.adc.quantize_lut` on device) and both
+    the filled ``luts`` rows and the cached entries become
+    ``(lut_q, scale, bias)`` host triples."""
     import jax.numpy as jnp
-    from repro.core.adc import build_lut_batch
+    from repro.core.adc import build_lut_batch, quantize_lut
     nmiss = len(miss_rows)
     if nmiss == 0:
         return
-    mpad = 1 << (nmiss - 1).bit_length()
+    mpad = next_pow2(nmiss)
     if residuals.shape[0] == mpad:
         miss = jnp.asarray(residuals)
     else:
         host = np.zeros((mpad, residuals.shape[1]), np.float32)
         host[:nmiss] = residuals
         miss = jnp.asarray(host)
-    fresh = np.asarray(build_lut_batch(codebook, miss))[:nmiss]
+    built = build_lut_batch(codebook, miss)
+    if cache.lut_dtype == "uint8":
+        qlut = quantize_lut(built)
+        lq = np.asarray(qlut.lut_q)[:nmiss]
+        sc = np.asarray(qlut.scale)[:nmiss]
+        bs = np.asarray(qlut.bias)[:nmiss]
+        fresh = [(lq[j], sc[j], bs[j]) for j in range(nmiss)]
+    else:
+        fresh = np.asarray(built)[:nmiss]
     for j, t in enumerate(miss_rows):
         luts[t] = fresh[j]
         qi = t // nprobe
@@ -289,26 +393,55 @@ def lut_fill_misses(cache: "HotClusterLUTCache", codebook, luts,
             cache.put_by_bucket(flat_probes[t], buckets[qi], fresh[j])
 
 
-def precompile_lut_shapes(codebook, max_rows: int) -> None:
-    """Compile the miss-batch LC shapes (pow2 up to ``max_rows``) ahead of
-    traffic — shared by both engines' ``precompile_lc``."""
+def stack_lut_bank(luts: Sequence):
+    """Assemble per-row cache values into one device bank.
+
+    f32 rows -> (T, M, CB) jnp array; quantized triples -> a
+    :class:`repro.core.adc.QuantizedLUT` of (T, M, CB) u8 + (T, M)
+    scale/bias.  Shared by both engines' cached paths so the bank layout
+    matches what the quantized scan kernels expect."""
     import jax.numpy as jnp
-    from repro.core.adc import build_lut_batch
-    max_rows = 1 << (max(max_rows, 1) - 1).bit_length()
+    from repro.core.adc import QuantizedLUT
+    if isinstance(luts[0], tuple):
+        return QuantizedLUT(
+            jnp.asarray(np.stack([v[0] for v in luts])),
+            jnp.asarray(np.stack([v[1] for v in luts])),
+            jnp.asarray(np.stack([v[2] for v in luts])))
+    return jnp.asarray(np.stack(luts))
+
+
+def precompile_lut_shapes(codebook, max_rows: int,
+                          lut_dtype: str = "f32") -> None:
+    """Compile the miss-batch LC shapes (pow2 up to ``max_rows``) ahead of
+    traffic — shared by both engines' ``precompile_lc``.  For the uint8
+    path the quantize epilogue is traced too (it is part of the same
+    per-miss-batch compiled program)."""
+    import jax.numpy as jnp
+    from repro.core.adc import build_lut_batch, quantize_lut
+    max_rows = next_pow2(max_rows)
     s = 1
     while s <= max_rows:
         # numpy source so the host->device convert for this shape is
         # also compiled, not just the LUT build itself
         zeros = np.zeros((s, codebook.m * codebook.dsub), np.float32)
-        build_lut_batch(codebook, jnp.asarray(zeros))
+        built = build_lut_batch(codebook, jnp.asarray(zeros))
+        if lut_dtype == "uint8":
+            quantize_lut(built)
         s *= 2
 
 
 class HotClusterLUTCache:
-    """Cache of per-(cluster, query-bucket) LC outputs — (M, CB) f32 LUTs.
+    """Cache of per-(cluster, query-bucket) LC outputs.
 
-    A full LUT is M*CB*4 bytes (16 KiB at M=16, CB=256); ``capacity`` is
-    an entry count, so budget ~capacity * 16 KiB of host memory.
+    Entries are (M, CB) f32 LUTs, or — with ``lut_dtype="uint8"`` —
+    quantized ``(lut_q (M, CB) u8, scale (M,), bias (M,))`` triples.  A
+    full f32 LUT is M*CB*4 bytes (16 KiB at M=16, CB=256); the quantized
+    entry is M*CB + 8*M bytes (~4.1 KiB), so a fixed ``capacity_bytes``
+    budget holds ~3.9x the entries — the serving-visible half of the
+    uint8 fast path (the other half is the shrunken DC traffic).
+
+    Budget by entry count (``capacity``), bytes (``capacity_bytes``), or
+    both; ``capacity=None`` leaves only the byte bound.
 
     ``admission`` switches victim selection from pure LRU to a policy —
     in practice :class:`HeatAwareAdmission` wired to the engine's
@@ -317,11 +450,18 @@ class HotClusterLUTCache:
     exact-granularity served results stay bit-identical either way.
     """
 
-    def __init__(self, capacity: int = 4096,
+    def __init__(self, capacity: Optional[int] = 4096,
                  granularity: Optional[float] = None,
-                 admission: Optional[AdmissionPolicy] = None):
-        self._lru = LRUCache(capacity, admission=admission)
+                 admission: Optional[AdmissionPolicy] = None,
+                 capacity_bytes: Optional[int] = None,
+                 lut_dtype: str = "f32"):
+        if lut_dtype not in ("f32", "uint8"):
+            raise ValueError(f"lut_dtype must be 'f32' or 'uint8', "
+                             f"got {lut_dtype!r}")
+        self._lru = LRUCache(capacity, admission=admission,
+                             capacity_bytes=capacity_bytes)
         self.granularity = granularity
+        self.lut_dtype = lut_dtype
 
     @property
     def stats(self) -> CacheStats:
@@ -330,6 +470,15 @@ class HotClusterLUTCache:
     @property
     def admission(self) -> Optional[AdmissionPolicy]:
         return self._lru.admission
+
+    @property
+    def capacity_bytes(self) -> Optional[int]:
+        return self._lru.capacity_bytes
+
+    @property
+    def bytes(self) -> int:
+        """Resident value bytes currently held."""
+        return self._lru.bytes
 
     def bucket_of(self, query: np.ndarray) -> int:
         """Hash a query once; reuse the bucket across its nprobe keys."""

@@ -50,14 +50,15 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core.adc import adc_distances
+from repro.core.adc import QuantizedLUT, adc_distances, adc_distances_quantized
 from repro.core.ivf import IVFPQIndex, PaddedClusters
 from repro.core.search import SearchParams, cluster_locate, search_ivfpq
 from repro.core.topk import topk_smallest
 from repro.runtime.batching import (BucketPolicy, MicroBatch, MicroBatcher,
                                     Request)
 from repro.runtime.cache import (HotClusterLUTCache, lut_fill_misses,
-                                 lut_miss_scan, precompile_lut_shapes)
+                                 lut_miss_scan, precompile_lut_shapes,
+                                 stack_lut_bank)
 
 
 # ---------------------------------------------------------------------------
@@ -131,14 +132,19 @@ def _cl_rc(queries, centroids, rotation, *, nprobe: int):
 @functools.partial(jax.jit, static_argnames=("k", "strategy", "nprobe"))
 def _dc_ts(lut, flat_probes, clusters: PaddedClusters, *, k: int,
            strategy: str, nprobe: int):
-    """DC + TS over cache-assembled LUTs: (Q*P, M, CB) -> (Q, k) x2."""
+    """DC + TS over cache-assembled LUTs: (Q*P, M, CB) f32 — or a
+    (Q*P,)-batched QuantizedLUT on the uint8 path — -> (Q, k) x2."""
     codes = clusters.codes[flat_probes]
     ids = clusters.ids[flat_probes]
     sizes = clusters.sizes[flat_probes]
-    dists = adc_distances(
-        lut, codes, sizes,
-        strategy="gather" if strategy == "gather" else "onehot")
-    nq = lut.shape[0] // nprobe
+    strat = "gather" if strategy == "gather" else "onehot"
+    if isinstance(lut, QuantizedLUT):
+        dists = adc_distances_quantized(lut, codes, sizes, strat)
+        n_rows = lut.lut_q.shape[0]
+    else:
+        dists = adc_distances(lut, codes, sizes, strat)
+        n_rows = lut.shape[0]
+    nq = n_rows // nprobe
     cand_d = dists.reshape(nq, nprobe * clusters.cmax)
     cand_i = ids.reshape(nq, nprobe * clusters.cmax)
     return topk_smallest(cand_d, cand_i, k)
@@ -158,6 +164,13 @@ class LocalEngine:
                  params: SearchParams,
                  lut_cache: Optional[HotClusterLUTCache] = None):
         _warn_direct_use("LocalEngine")
+        if (lut_cache is not None
+                and getattr(lut_cache, "lut_dtype", "f32")
+                != params.lut_dtype):
+            raise ValueError(
+                f"lut_cache.lut_dtype={lut_cache.lut_dtype!r} disagrees "
+                f"with SearchParams.lut_dtype={params.lut_dtype!r}; cached "
+                f"and uncached scans must run the same dtype")
         self.index = index
         self.clusters = clusters
         self.params = params
@@ -179,7 +192,8 @@ class LocalEngine:
         """Compile the cached path's miss-batch LC shapes (pow2 up to
         ``max_rows``) ahead of traffic — a first-seen miss count would
         otherwise pay its XLA compile mid-stream."""
-        precompile_lut_shapes(self.index.codebook, max_rows)
+        precompile_lut_shapes(self.index.codebook, max_rows,
+                              lut_dtype=self.params.lut_dtype)
 
     def _search_cached(self, queries: np.ndarray,
                        n_valid: Optional[int] = None):
@@ -205,7 +219,7 @@ class LocalEngine:
             lut_fill_misses(self.lut_cache, self.index.codebook, luts,
                             miss_rows, flat_probes, buckets, npr,
                             flat_res_np[miss_rows])
-        lut = jnp.asarray(np.stack(luts))                  # (QP, M, CB)
+        lut = stack_lut_bank(luts)            # (QP, M, CB) or QuantizedLUT
         bd, bi = _dc_ts(lut, jnp.asarray(flat_probes), self.clusters,
                         k=p.k, strategy=p.strategy, nprobe=npr)
         return np.asarray(bd), np.asarray(bi)
@@ -370,9 +384,12 @@ class ServingRuntime:
         pollute entries or stats."""
         cache = getattr(self.engine, "lut_cache", None)
         if cache is not None:
+            # same granularity AND lut_dtype as the real cache, so warmup
+            # compiles the exact bank dtype/shape set traffic will use
             self.engine.lut_cache = HotClusterLUTCache(
                 capacity=len(self.batcher.policy.buckets) * 64,
-                granularity=cache.granularity)
+                granularity=cache.granularity,
+                lut_dtype=getattr(cache, "lut_dtype", "f32"))
         try:
             for b in self.batcher.policy.buckets:
                 self.engine.search_batch(np.zeros((b, d), np.float32),

@@ -66,6 +66,28 @@ def selftest() -> int:
           f"(router={st['router']['policy']} picks={st['router']['picks']} "
           f"lut_hit_rate={st['aggregate'].get('lut_hit_rate', 0.0):.2f}): OK")
     svc2.shutdown()
+
+    # -- quantized-LUT fast path: uint8 spec, byte-budgeted cache ---------
+    spec3 = ServiceSpec(engine="local", replicas=1, nprobe=4, k=5,
+                        lut_dtype="uint8", cache_capacity_bytes=1 << 20,
+                        buckets=(1, 2, 4), max_wait_s=1e-3)
+    svc3 = AnnService.build(spec3, index=index)
+    svc3.warmup()
+    d_q, i_q = svc3.search(queries)
+    # quantized distances are compared via neighbor overlap, not values
+    # (quantization error is bounded but nonzero)
+    overlap = np.mean([len(set(i_q[r]) & set(np.asarray(i_d)[r])) / 5.0
+                       for r in range(len(queries))])
+    assert overlap >= 0.8, f"u8-vs-f32 neighbor overlap {overlap:.2f}"
+    reqs3 = svc3.stream(stream)
+    assert all(r.ids is not None and len(r.ids) == 5 for r in reqs3)
+    st3 = svc3.stats()
+    cache_bytes = st3["replicas"][0]["lut_cache"]["bytes"]
+    assert 0 < cache_bytes <= (1 << 20), cache_bytes
+    print(f"[selftest] uint8 spec: overlap={overlap:.2f} "
+          f"hit_rate={st3['aggregate'].get('lut_hit_rate', 0.0):.2f} "
+          f"cache_bytes={cache_bytes}: OK")
+    svc3.shutdown()
     print("[selftest] repro.service OK")
     return 0
 

@@ -149,15 +149,22 @@ class AnnService:
     @staticmethod
     def _build_replica(spec: ServiceSpec, index: IVFPQIndex, clusters,
                        sample_probes, serving_cfg: ServingConfig) -> Replica:
+        def make_cache(admission=None):
+            if not spec.cache_enabled:
+                return None
+            return HotClusterLUTCache(
+                capacity=spec.cache_capacity or None,
+                capacity_bytes=spec.cache_capacity_bytes or None,
+                granularity=spec.cache_granularity,
+                lut_dtype=spec.lut_dtype,
+                admission=admission)
+
         if spec.engine == "local":
-            cache = None
-            if spec.cache_capacity > 0:
-                cache = HotClusterLUTCache(
-                    capacity=spec.cache_capacity,
-                    granularity=spec.cache_granularity)
+            cache = make_cache()
             core = LocalEngine(index, clusters,
                                SearchParams(nprobe=spec.nprobe, k=spec.k,
-                                            strategy=spec.strategy),
+                                            strategy=spec.strategy,
+                                            lut_dtype=spec.lut_dtype),
                                lut_cache=cache)
             return Replica(ServingRuntime(core, serving_cfg), core, core,
                            cache, None)
@@ -166,18 +173,14 @@ class AnnService:
             from repro.core.layout import estimate_heat
             est = OnlineHeatEstimator(
                 index.nlist, seed=estimate_heat(sample_probes, index.nlist))
-        cache = None
-        if spec.cache_capacity > 0:
-            cache = HotClusterLUTCache(
-                capacity=spec.cache_capacity,
-                granularity=spec.cache_granularity,
-                admission=(HeatAwareAdmission(est)
-                           if spec.heat_aware_admission else None))
+        cache = make_cache(HeatAwareAdmission(est)
+                           if spec.heat_aware_admission else None)
         cfg_kwargs = dict(n_shards=spec.n_shards, nprobe=spec.nprobe,
                           k=spec.k, split_max=spec.split_max,
                           dup_budget_bytes=spec.dup_budget_bytes,
                           tasks_per_shard=spec.tasks_per_shard,
                           strategy=spec.strategy,
+                          lut_dtype=spec.lut_dtype,
                           relayout_every=spec.relayout_every)
         cfg_kwargs.update(dict(spec.engine_overrides or {}))
         core = DistributedEngine(index, EngineConfig(**cfg_kwargs),

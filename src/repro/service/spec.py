@@ -55,8 +55,10 @@ class ServiceSpec:
     """Everything AnnService needs, in one place.
 
     Groups (see README §service for the full knob list):
-      * search:  ``nprobe``/``k``/``strategy`` (``SearchParams`` /
-        ``EngineConfig`` fields);
+      * search:  ``nprobe``/``k``/``strategy``/``lut_dtype``
+        (``SearchParams`` / ``EngineConfig`` fields; ``lut_dtype="uint8"``
+        is the quantized-LUT fast path — 16 KiB -> ~4 KiB per LUT at
+        M=16, CB=256);
       * engine:  ``engine`` kind plus the sharded-only knobs
         (``n_shards``, ``tasks_per_shard``, ``dup_budget_bytes``,
         ``split_max``, ``relayout_every``, ``tune_tasks_per_shard``) and
@@ -65,8 +67,9 @@ class ServiceSpec:
       * replicas/routing: ``replicas`` engine+runtime copies behind a
         ``router`` policy (round_robin | least_queue | cache_aware);
       * serving: ``buckets``/``max_wait_s`` (``ServingConfig`` fields);
-      * cache/heat: ``cache_capacity`` (> 0 enables the per-replica
-        hot-cluster LUT cache), ``cache_granularity``,
+      * cache/heat: ``cache_capacity`` (entry bound) and/or
+        ``cache_capacity_bytes`` (byte bound) enable the per-replica
+        hot-cluster LUT cache; ``cache_granularity``,
         ``heat_aware_admission`` (sharded only: per-replica
         ``OnlineHeatEstimator`` + ``HeatAwareAdmission``, fed by the
         engine's CL output).
@@ -79,6 +82,10 @@ class ServiceSpec:
     nprobe: int = 8
     k: int = 10
     strategy: str = "gather"
+    # quantized-LUT fast path: "uint8" carries LUTs as u8 + per-subspace
+    # scales through kernels, cache, and engines (default f32 keeps
+    # results bit-compatible with the pre-quantization stack)
+    lut_dtype: str = "f32"
 
     # -- engine tier -------------------------------------------------------
     engine: str = "local"                  # "local" | "sharded"
@@ -100,9 +107,16 @@ class ServiceSpec:
     max_wait_s: float = 2e-3
 
     # -- cache / heat ------------------------------------------------------
-    cache_capacity: int = 0                # 0 = no LUT cache
+    cache_capacity: int = 0                # 0 = no entry bound
+    cache_capacity_bytes: int = 0          # 0 = no byte bound
+    # the per-replica LUT cache is enabled when either bound is set;
+    # at a fixed byte budget lut_dtype="uint8" holds ~4x the entries
     cache_granularity: Optional[float] = None
     heat_aware_admission: bool = False
+
+    @property
+    def cache_enabled(self) -> bool:
+        return self.cache_capacity > 0 or self.cache_capacity_bytes > 0
 
     def validate(self) -> "ServiceSpec":
         self.index.validate()
@@ -121,6 +135,9 @@ class ServiceSpec:
         if self.strategy not in ("gather", "onehot"):
             raise ValueError(f"ServiceSpec.strategy must be 'gather' or "
                              f"'onehot', got {self.strategy!r}")
+        if self.lut_dtype not in ("f32", "uint8"):
+            raise ValueError(f"ServiceSpec.lut_dtype must be 'f32' or "
+                             f"'uint8', got {self.lut_dtype!r}")
         if not self.buckets or any(int(b) < 1 for b in self.buckets):
             raise ValueError(f"ServiceSpec.buckets must be non-empty "
                              f"positive ints, got {self.buckets}")
@@ -130,13 +147,16 @@ class ServiceSpec:
         if self.cache_capacity < 0:
             raise ValueError(f"ServiceSpec.cache_capacity must be >= 0, "
                              f"got {self.cache_capacity}")
+        if self.cache_capacity_bytes < 0:
+            raise ValueError(f"ServiceSpec.cache_capacity_bytes must be "
+                             f">= 0, got {self.cache_capacity_bytes}")
         if (self.cache_granularity is not None
                 and self.cache_granularity <= 0):
             raise ValueError(f"ServiceSpec.cache_granularity must be None "
                              f"or positive, got {self.cache_granularity}")
-        if self.heat_aware_admission and self.cache_capacity == 0:
+        if self.heat_aware_admission and not self.cache_enabled:
             raise ValueError("ServiceSpec.heat_aware_admission needs "
-                             "cache_capacity > 0")
+                             "cache_capacity or cache_capacity_bytes > 0")
         if self.router_halflife_batches <= 0:
             raise ValueError("ServiceSpec.router_halflife_batches must be "
                              f"positive, got {self.router_halflife_batches}")

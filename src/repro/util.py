@@ -1,0 +1,17 @@
+"""Small shared helpers with no jax/numpy dependencies.
+
+Kept dependency-free so every layer (kernels, runtime, benchmarks) can
+import it without ordering concerns.
+"""
+
+from __future__ import annotations
+
+
+def next_pow2(x: int) -> int:
+    """Smallest power of two >= max(x, 1).
+
+    The repo's padding convention: block sizes, k_pad, and miss-batch
+    shapes are all rounded up to a power of two so the set of compiled
+    XLA shapes stays logarithmic in the observed size range.
+    """
+    return 1 << (max(int(x), 1) - 1).bit_length()

@@ -1,0 +1,363 @@
+"""Quantized-LUT fast path: uint8 ADC end to end.
+
+Covers the quantization primitives (error bound, kernel/host agreement),
+the Pallas uint8 scan variants, recall@10 parity vs f32 at paper configs,
+byte-budgeted caching with quantized entries, the serving invariants on
+the uint8 path (warm-cache repeats bit-identical, padding rows bypass
+cache/heat/stats), and the spec wiring.
+
+Comparison idiom (repo convention): ids via ``assert_array_equal`` and
+distances via ``allclose(rtol=1e-5)`` only where both sides are the SAME
+f32 pipeline; quantized-vs-f32 results are compared via recall /
+neighbor-set overlap, never by distance values.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import (SearchParams, adc_distances,
+                        adc_distances_quantized, dequantize_lut,
+                        quantize_lut, recall_at_k, search_ivfpq)
+from repro.kernels import ops
+from repro.runtime import HotClusterLUTCache, entry_nbytes
+
+NPROBE = 8
+
+
+def _mk(seed, t, m, cb, c, dsub):
+    rng = np.random.default_rng(seed)
+    res = rng.normal(size=(t, m * dsub)).astype(np.float32)
+    books = rng.normal(size=(m, cb, dsub)).astype(np.float32)
+    sqn = (books * books).sum(-1)
+    codes = rng.integers(0, cb, size=(t, c, m)).astype(np.int32)
+    ids = rng.integers(0, 1 << 20, size=(t, c)).astype(np.int32)
+    sizes = rng.integers(1, c + 1, size=(t,)).astype(np.int32)
+    return tuple(map(jnp.asarray, (res, books, sqn, codes, ids, sizes)))
+
+
+# ---------------------------------------------------------------------------
+# Quantization primitives
+# ---------------------------------------------------------------------------
+
+def test_quantize_roundtrip_error_bound():
+    """|dequant - lut| <= scale/2 per entry (half a quantization step),
+    and degenerate (constant) subspaces roundtrip exactly."""
+    res, books, sqn, *_ = _mk(0, 9, 8, 64, 4, 4)
+    lut = ops.lut_build(res, books, sqn)
+    qlut = quantize_lut(lut)
+    err = np.abs(np.asarray(dequantize_lut(qlut)) - np.asarray(lut))
+    bound = np.asarray(qlut.scale)[..., None] * 0.5
+    assert (err <= bound * (1 + 1e-5) + 1e-6).all()
+    flat = jnp.full((1, 4, 16), 3.25, jnp.float32)       # constant subspace
+    qflat = quantize_lut(flat)
+    np.testing.assert_array_equal(np.asarray(qflat.lut_q), 0)
+    np.testing.assert_array_equal(np.asarray(dequantize_lut(qflat)),
+                                  np.asarray(flat))
+
+
+def test_lut_build_q_kernel_matches_host_quantize():
+    """The fused quantize epilogue agrees with host-side quantize_lut of
+    the kernel's f32 output.  Entries sitting exactly on a rounding
+    boundary may flip by one count (in-kernel fusion reassociates the
+    affine transform), so the contract is |diff| <= 1 count — i.e. the
+    dequantized tables agree to within one quantization step."""
+    res, books, sqn, *_ = _mk(1, 30, 16, 256, 4, 8)
+    qk = ops.lut_build_q(res, books, sqn)
+    qh = quantize_lut(ops.lut_build(res, books, sqn))
+    diff = (np.asarray(qk.lut_q).astype(np.int32)
+            - np.asarray(qh.lut_q).astype(np.int32))
+    assert np.abs(diff).max() <= 1
+    assert (diff != 0).mean() < 1e-3          # boundary flips only
+    np.testing.assert_allclose(np.asarray(qk.scale), np.asarray(qh.scale),
+                               rtol=1e-6)
+    np.testing.assert_allclose(np.asarray(qk.bias), np.asarray(qh.bias),
+                               rtol=1e-6)
+
+
+@pytest.mark.parametrize("strategy", ["gather", "onehot"])
+def test_quantized_scan_matches_dequantized_reference(strategy):
+    """adc_distances_quantized == adc_distances over the dequantized
+    table (the ISSUE's 'reference dequantized scan' contract)."""
+    res, books, sqn, codes, ids, sizes = _mk(2, 5, 8, 64, 300, 4)
+    qlut = quantize_lut(ops.lut_build(res, books, sqn))
+    got = np.asarray(adc_distances_quantized(qlut, codes, sizes, strategy))
+    want = np.asarray(adc_distances(dequantize_lut(qlut), codes, sizes,
+                                    strategy))
+    valid = np.arange(codes.shape[1])[None] < np.asarray(sizes)[:, None]
+    np.testing.assert_allclose(got[valid], want[valid], rtol=1e-4, atol=1e-3)
+    assert np.isinf(got[~valid]).all()
+
+
+@pytest.mark.parametrize("t,m,cb,c", [(1, 4, 16, 32), (3, 8, 64, 300),
+                                      (8, 16, 256, 512)])
+@pytest.mark.parametrize("strategy", ["gather", "onehot"])
+def test_pq_scan_dc_q_kernel_sweep(t, m, cb, c, strategy):
+    res, books, sqn, codes, ids, sizes = _mk(3, t, m, cb, c, 4)
+    qlut = ops.lut_build_q(res, books, sqn)
+    got = np.asarray(ops.pq_scan_dc(qlut, codes, sizes, strategy=strategy))
+    want = np.asarray(adc_distances_quantized(qlut, codes, sizes, "gather"))
+    valid = np.arange(c)[None] < np.asarray(sizes)[:, None]
+    np.testing.assert_allclose(got[valid], want[valid], rtol=1e-4, atol=1e-3)
+    assert np.isinf(got[~valid]).all()
+
+
+@pytest.mark.parametrize("strategy", ["gather", "onehot"])
+def test_pq_scan_topk_q_kernel(strategy):
+    """Fused u8 kernel == full quantized scan + top-k (distances allclose;
+    equal-distance ties may permute ids, so compare id multisets)."""
+    res, books, sqn, codes, ids, sizes = _mk(4, 5, 8, 64, 300, 4)
+    qlut = ops.lut_build_q(res, books, sqn)
+    k = 10
+    gd, gi = ops.pq_scan_topk(qlut, codes, ids, sizes, k, strategy=strategy)
+    full = adc_distances_quantized(qlut, codes, sizes, "gather")
+    rd, ridx = jax.lax.top_k(-full, k)
+    np.testing.assert_allclose(np.asarray(gd), np.asarray(-rd),
+                               rtol=1e-4, atol=1e-3)
+    # quantization makes exact distance ties common, and tie-breaking may
+    # differ between the streaming kernel and a full-scan top-k — compare
+    # id multisets with tolerance for boundary ties only
+    want_ids = np.take_along_axis(
+        np.where(np.isfinite(np.asarray(full)), np.asarray(ids), -1),
+        np.asarray(ridx), axis=1)
+    for t_ in range(gi.shape[0]):
+        overlap = len(set(np.asarray(gi)[t_].tolist())
+                      & set(want_ids[t_].tolist()))
+        assert overlap >= k - 2, (t_, overlap)
+
+
+# ---------------------------------------------------------------------------
+# Recall parity at paper configs (synthetic SIFT-like corpus)
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("use_kernels", [False, True])
+def test_recall_parity_local(small_index, small_clusters, small_corpus,
+                             use_kernels):
+    """recall@10 drop <= 0.01 vs the f32 path, both DC strategies."""
+    for strategy in ("gather", "onehot"):
+        pf = SearchParams(nprobe=NPROBE, k=10, strategy=strategy,
+                          query_chunk=32, use_kernels=use_kernels)
+        pu = pf._replace(lut_dtype="uint8")
+        _, i_f = search_ivfpq(small_index, small_clusters,
+                              small_corpus.queries, pf)
+        _, i_u = search_ivfpq(small_index, small_clusters,
+                              small_corpus.queries, pu)
+        rf = float(recall_at_k(i_f, small_corpus.groundtruth))
+        ru = float(recall_at_k(i_u, small_corpus.groundtruth))
+        assert rf - ru <= 0.01, (strategy, use_kernels, rf, ru)
+
+
+def test_recall_parity_sharded(small_index, small_corpus):
+    from repro.core import cluster_locate
+    from repro.core.sharded_search import DistributedEngine, EngineConfig
+    probes, _ = cluster_locate(small_corpus.queries.astype(jnp.float32),
+                               small_index.centroids, NPROBE)
+    sample = np.asarray(probes)
+    queries = jnp.asarray(small_corpus.queries[:32], jnp.float32)
+    gt = small_corpus.groundtruth[:32]
+    recalls = {}
+    for dtype in ("f32", "uint8"):
+        cfg = EngineConfig(n_shards=4, nprobe=NPROBE, k=10,
+                           tasks_per_shard=512, strategy="gather",
+                           lut_dtype=dtype)
+        eng = DistributedEngine(small_index, cfg, sample)
+        _, i, _ = eng.search(queries)
+        recalls[dtype] = float(recall_at_k(jnp.asarray(i), gt))
+    assert recalls["f32"] - recalls["uint8"] <= 0.01, recalls
+
+
+# ---------------------------------------------------------------------------
+# Byte-budgeted cache with quantized entries
+# ---------------------------------------------------------------------------
+
+def test_cache_byte_budget_and_quantized_capacity():
+    """At a fixed byte budget the uint8 cache holds ~4x the entries, and
+    neither cache ever exceeds the budget; stats report bytes+entries."""
+    m, cb = 16, 256
+    f32_entry = np.zeros((m, cb), np.float32)
+    u8_entry = (np.zeros((m, cb), np.uint8), np.zeros(m, np.float32),
+                np.zeros(m, np.float32))
+    assert entry_nbytes(f32_entry) == m * cb * 4
+    assert entry_nbytes(u8_entry) == m * cb + 8 * m
+    budget = 16 * entry_nbytes(f32_entry)
+    caches = {}
+    for dtype, entry in (("f32", f32_entry), ("uint8", u8_entry)):
+        cache = HotClusterLUTCache(capacity=None, capacity_bytes=budget,
+                                   lut_dtype=dtype)
+        for i in range(100):
+            cache.put_by_bucket(i, 0, entry)
+            assert cache.bytes <= budget
+        caches[dtype] = cache
+    assert len(caches["uint8"]) >= 3 * len(caches["f32"])
+    stats = caches["uint8"].stats.as_dict()
+    assert stats["entries"] == len(caches["uint8"])
+    assert stats["bytes"] == caches["uint8"].bytes > 0
+
+
+def test_byte_budget_rejection_leaves_cache_untouched():
+    """A byte-budget insert that admission ultimately rejects must not
+    evict anything along the way: the full victim set is selected before
+    the cache is mutated (HeatAwareAdmission contract — one-off cold
+    probes cannot churn resident hot-cluster LUTs)."""
+    from repro.runtime import HeatAwareAdmission, LRUCache, \
+        OnlineHeatEstimator
+    est = OnlineHeatEstimator(nlist=4, halflife_batches=1e9)
+    for _ in range(4):
+        est.observe(np.array([[1], [2]]))       # clusters 1,2 hot; 0,3 cold
+    lru = LRUCache(capacity=None, capacity_bytes=100,
+                   admission=HeatAwareAdmission(est))
+    lru.put((0, 0), np.zeros(5, np.float32))    # cold, 20 B, oldest
+    lru.put((1, 0), np.zeros(10, np.float32))   # hot, 40 B
+    lru.put((2, 0), np.zeros(10, np.float32))   # hot, 40 B
+    before = (len(lru), lru.bytes, lru.stats.evictions,
+              list(lru._od.keys()))
+    # cold 60 B insert needs two victims; the second pick rejects
+    assert not lru.put((3, 0), np.zeros(15, np.float32))
+    after = (len(lru), lru.bytes, lru.stats.evictions,
+             list(lru._od.keys()))
+    assert before == after and lru.stats.rejects == 1
+
+
+def test_cache_rejects_oversized_and_validates_dtype():
+    with pytest.raises(ValueError):
+        HotClusterLUTCache(lut_dtype="f16")
+    with pytest.raises(ValueError):
+        HotClusterLUTCache(capacity=None)          # no bound at all
+    cache = HotClusterLUTCache(capacity=None, capacity_bytes=64)
+    assert not cache._lru.put(("k",), np.zeros(128, np.float32))
+    assert cache.stats.rejects == 1 and len(cache) == 0
+
+
+def test_engine_rejects_dtype_mismatch(small_index, small_clusters):
+    from repro.runtime.serving import LocalEngine, service_construction
+    with service_construction():
+        with pytest.raises(ValueError):
+            LocalEngine(small_index, small_clusters,
+                        SearchParams(nprobe=4, k=5, lut_dtype="uint8"),
+                        lut_cache=HotClusterLUTCache(capacity=64))
+
+
+# ---------------------------------------------------------------------------
+# Serving invariants on the uint8 path
+# ---------------------------------------------------------------------------
+
+def _local_u8(small_index, small_clusters, cache):
+    from repro.runtime.serving import LocalEngine, service_construction
+    with service_construction():
+        return LocalEngine(small_index, small_clusters,
+                           SearchParams(nprobe=NPROBE, k=10,
+                                        lut_dtype="uint8"),
+                           lut_cache=cache)
+
+
+def test_warm_cache_repeat_bit_identical(small_index, small_clusters,
+                                         small_corpus):
+    """Same batch twice with a warm quantized cache: the second pass is
+    served entirely from cached (lut_q, scale, bias) triples, so ids AND
+    distances are bit-identical."""
+    cache = HotClusterLUTCache(capacity=4096, lut_dtype="uint8")
+    eng = _local_u8(small_index, small_clusters, cache)
+    q = np.asarray(small_corpus.queries[:16], np.float32)
+    d1, i1 = eng.search_batch(q)
+    assert cache.stats.hits == 0
+    d2, i2 = eng.search_batch(q)
+    assert cache.stats.hit_rate > 0.4          # second pass all hits
+    np.testing.assert_array_equal(i1, i2)
+    np.testing.assert_array_equal(d1, d2)
+
+
+def test_padding_bypasses_cache_on_u8_path(small_index, small_clusters,
+                                           small_corpus):
+    """Rows >= n_valid are serving padding: never looked up, never
+    inserted, invisible to stats — exactly as on the f32 path."""
+    cache = HotClusterLUTCache(capacity=4096, lut_dtype="uint8")
+    eng = _local_u8(small_index, small_clusters, cache)
+    q = np.zeros((8, small_corpus.queries.shape[1]), np.float32)
+    q[:3] = np.asarray(small_corpus.queries[:3], np.float32)
+    eng.search_batch(q, n_valid=3)
+    assert cache.stats.lookups == 3 * NPROBE
+    assert len(cache) <= 3 * NPROBE
+    eng.search_batch(q, n_valid=0)             # warmup-style: all padding
+    assert cache.stats.lookups == 3 * NPROBE   # unchanged
+
+
+def test_sharded_u8_cache_padding_and_repeat(small_index, small_corpus):
+    from repro.core import cluster_locate
+    from repro.core.sharded_search import DistributedEngine, EngineConfig
+    probes, _ = cluster_locate(small_corpus.queries.astype(jnp.float32),
+                               small_index.centroids, NPROBE)
+    cache = HotClusterLUTCache(capacity=4096, lut_dtype="uint8")
+    cfg = EngineConfig(n_shards=4, nprobe=NPROBE, k=10, tasks_per_shard=512,
+                       strategy="gather", lut_dtype="uint8")
+    eng = DistributedEngine(small_index, cfg, np.asarray(probes),
+                            lut_cache=cache)
+    q = jnp.asarray(small_corpus.queries[:8], jnp.float32)
+    d1, i1, _ = eng.search(q, n_valid=4)       # 4 pad rows
+    assert cache.stats.lookups == 4 * NPROBE
+    d2, i2, _ = eng.search(q, n_valid=4)
+    np.testing.assert_array_equal(i1[:4], i2[:4])
+    np.testing.assert_array_equal(d1[:4], d2[:4])
+    assert cache.stats.hits > 0
+
+
+def test_runtime_serving_matches_direct_u8(small_index, small_clusters,
+                                           small_corpus):
+    """De-padded streamed results == a direct batched call on the same
+    engine (row-wise invariance holds for the quantized path too)."""
+    from repro.runtime.serving import ServingConfig, ServingRuntime, \
+        service_construction
+    cache = HotClusterLUTCache(capacity=4096, lut_dtype="uint8")
+    eng = _local_u8(small_index, small_clusters, cache)
+    with service_construction():
+        rt = ServingRuntime(eng, ServingConfig(buckets=(1, 2, 4),
+                                               max_wait_s=1e-3))
+    rt.warmup(small_corpus.queries.shape[1])
+    assert cache.stats.lookups == 0            # warmup never touches it
+    q = np.asarray(small_corpus.queries[:6], np.float32)
+    reqs = rt.run_stream([(i * 1e-3, q[i]) for i in range(6)])
+    direct_d, direct_i = eng.search_batch(q)
+    np.testing.assert_array_equal(np.stack([r.ids for r in reqs]), direct_i)
+
+
+# ---------------------------------------------------------------------------
+# Spec / service wiring
+# ---------------------------------------------------------------------------
+
+def test_spec_validation_u8():
+    from repro.service import ServiceSpec
+    with pytest.raises(ValueError, match="lut_dtype"):
+        ServiceSpec(lut_dtype="int8").validate()
+    with pytest.raises(ValueError, match="cache_capacity_bytes"):
+        ServiceSpec(cache_capacity_bytes=-1).validate()
+    with pytest.raises(ValueError, match="heat_aware_admission"):
+        ServiceSpec(heat_aware_admission=True).validate()
+    spec = ServiceSpec(lut_dtype="uint8", cache_capacity_bytes=1 << 20)
+    spec.validate()
+    assert spec.cache_enabled
+    assert not ServiceSpec().cache_enabled
+
+
+def test_service_u8_end_to_end(small_index, small_corpus):
+    """AnnService with lut_dtype=uint8 + byte-budgeted cache: neighbor
+    overlap with the f32 service >= 0.9 and cache bytes stay in budget."""
+    from repro.service import AnnService, ServiceSpec
+    q = np.asarray(small_corpus.queries[:16], np.float32)
+    base = dict(engine="local", replicas=1, nprobe=NPROBE, k=10,
+                buckets=(1, 2, 4), max_wait_s=1e-3)
+    svc_f = AnnService.build(ServiceSpec(**base), index=small_index)
+    _, i_f = svc_f.search(q)
+    svc_f.shutdown()
+    budget = 1 << 20
+    svc_u = AnnService.build(
+        ServiceSpec(lut_dtype="uint8", cache_capacity_bytes=budget, **base),
+        index=small_index)
+    svc_u.warmup()
+    _, i_u = svc_u.search(q)
+    overlap = np.mean([len(set(i_u[r]) & set(i_f[r])) / 10.0
+                       for r in range(len(q))])
+    assert overlap >= 0.9, overlap
+    cache = svc_u.replicas[0].cache
+    assert cache.lut_dtype == "uint8"
+    assert 0 < cache.bytes <= budget
+    svc_u.shutdown()
