@@ -158,10 +158,12 @@ def _shard_tasks_fn(codes, ids, sizes, cluster_of, qidx, sidx, queries,
     with a running top-k carried in the scan — the (T, C) distance matrix
     never reaches HBM (writeback drops from C to k floats/task), mirroring
     the fused Pallas kernel.  ``lut_dtype`` (e.g. bf16) halves LUT gather
-    traffic (the paper's int-LUT spirit on TPU dtypes) on the fused-scan
-    path only; ``quantize`` is the full uint8 fast path
-    (``EngineConfig.lut_dtype="uint8"``): LC gains the affine-quantize
-    epilogue and DC scans uint8 entries with per-subspace scales.
+    traffic (the paper's int-LUT spirit on TPU dtypes);
+    ``lut_dtype="uint8"`` (or ``quantize=True``,
+    ``EngineConfig.lut_dtype="uint8"``) is the full uint8 fast path on
+    both the plain and fused-scan dataflows: LC gains the
+    affine-quantize epilogue and DC scans uint8 entries with
+    per-(task, subspace) scales.
     """
     t = qidx.shape[0]
     valid = qidx >= 0
@@ -189,19 +191,25 @@ def _shard_tasks_fn(codes, ids, sizes, cluster_of, qidx, sidx, queries,
                                    strategy=strategy)
     elif fused_scan:
         lut = build_lut_batch(codebook, residual)             # LC
-        if lut_dtype is not None:
+        if quantize or lut_dtype == "uint8":
+            # full uint8 fast path, fused: the affine-quantize epilogue
+            # runs right after LC and the streaming DC scans u8 entries
+            # with per-(task, subspace) scales — HBM traffic per block
+            # drops 4x on top of the fused writeback saving
+            lut = quantize_lut(lut)
+        elif lut_dtype is not None:
             lut = lut.astype(lut_dtype)
         bd, bi = _fused_scan_topk(lut, task_codes, task_ids, task_sizes, k,
                                   block=scan_block)
     else:
         lut = build_lut_batch(codebook, residual)             # LC
-        if lut_dtype is not None:
-            lut = lut.astype(lut_dtype)
         strat = "gather" if strategy == "gather" else "onehot"
-        if quantize:
+        if quantize or lut_dtype == "uint8":
             d = adc_distances_quantized(quantize_lut(lut), task_codes,
                                         task_sizes, strat)    # DC (u8)
         else:
+            if lut_dtype is not None:
+                lut = lut.astype(lut_dtype)
             d = adc_distances(lut, task_codes, task_sizes, strat)   # DC
         bd, bi = topk_smallest(d, task_ids, k)                # TS
     bi = jnp.where(jnp.isfinite(bd), bi, -1)
@@ -215,8 +223,13 @@ def _fused_scan_topk(lut, task_codes, task_ids, task_sizes, k: int,
     jnp mirror of kernels/pq_scan.pq_scan_topk_pallas — same dataflow the
     fused kernel executes per VMEM block, expressed at XLA level so the
     dry-run's lowered artifact reflects the reduced HBM writeback.
+    ``lut`` may be a (T,)-batched :class:`QuantizedLUT`, in which case
+    each block runs the u8 gather-and-scale scan (the fused mirror of
+    ``kernels/pq_scan.pq_scan_topk_q_pallas``).
     """
-    from repro.core.adc import scan_codes
+    from repro.core.adc import scan_codes, scan_codes_quantized
+    scan_fn = (scan_codes_quantized if isinstance(lut, QuantizedLUT)
+               else scan_codes)
     t, c, m = task_codes.shape
     pad = (-c) % block
     if pad:
@@ -230,7 +243,7 @@ def _fused_scan_topk(lut, task_codes, task_ids, task_sizes, k: int,
     def step(carry, inp):
         bd, bi = carry
         cb, ib, blk_i = inp
-        d = jax.vmap(scan_codes)(lut, cb).astype(jnp.float32)  # (T, block)
+        d = jax.vmap(scan_fn)(lut, cb).astype(jnp.float32)     # (T, block)
         col = blk_i * block + jnp.arange(block)[None, :]
         d = jnp.where(col < task_sizes[:, None], d, jnp.inf)
         nd, ni = topk_smallest(jnp.concatenate([bd, d], axis=1),

@@ -180,7 +180,13 @@ def run_drim_ann_cell(multi_pod: bool, out_dir: pathlib.Path = ART_DIR,
                       tag: str = ""):
     """The paper's own workload as a dry-run cell: the sharded search step
     lowered on the production mesh (data axis = shards; queries replicated,
-    exactly the engine's layout)."""
+    exactly the engine's layout).
+
+    ``lut_dtype="uint8"`` lowers the quantized-LUT fast path (LC's
+    affine-quantize epilogue + u8 DC with per-subspace scales) so the
+    cost analysis prices the 4x smaller LUT traffic; with ``fused_scan``
+    the u8 entries stream through the C-block scan, mirroring
+    ``pq_scan_topk_q_pallas``'s dataflow at HLO level."""
     from repro.configs import drim_ann
     from repro.core.pq import PQCodebook
     from repro.core.sharded_search import _shard_tasks_fn
@@ -242,6 +248,10 @@ def run_drim_ann_cell(multi_pod: bool, out_dir: pathlib.Path = ART_DIR,
         lowered = jitted.lower(*args)
         compiled = lowered.compile()
     mesh_name = "multipod512" if multi_pod else "pod256"
+    if not tag:
+        tag = "__".join(p for p in (("fused" if fused_scan else ""),
+                                    (f"lut_{lut_dtype}" if lut_dtype
+                                     else "")) if p)
     name = f"drim_ann__search_100m__{mesh_name}" + (f"__{tag}" if tag else "")
     print(f"[{name}] lower+compile {time.time()-t0:.1f}s")
     print(compiled.memory_analysis())
@@ -266,15 +276,32 @@ def main():
                     default="pod")
     ap.add_argument("--all", action="store_true")
     ap.add_argument("--skip-existing", action="store_true")
+    # drim_ann cell variants (§Perf): fused C-block DC scan and/or the
+    # quantized-LUT fast path (uint8 = PR 4's u8 ADC, lowered here so
+    # cost_analysis prices the 4x smaller LUT traffic)
+    ap.add_argument("--fused-scan", action="store_true",
+                    help="drim_ann cell: stream DC over C-blocks with a "
+                         "carried top-k (fused kernel dataflow)")
+    ap.add_argument("--lut-dtype", choices=("f32", "bf16", "uint8"),
+                    default=None,
+                    help="drim_ann cell: LUT dtype (uint8 = full "
+                         "quantized fast path, usable with or without "
+                         "--fused-scan)")
     args = ap.parse_args()
     meshes = {"pod": (False,), "multipod": (True,),
               "both": (False, True)}[args.mesh]
+
+    # CLI dtype names -> what _shard_tasks_fn expects ("uint8" stays a
+    # string: it selects the quantize path, not a cast)
+    lut_dtype = {None: None, "f32": None, "bf16": jnp.bfloat16,
+                 "uint8": "uint8"}[args.lut_dtype]
 
     failures = []
     if args.all:
         todo = [(a, s, skip) for (a, s, skip) in registry.all_cells()]
         for mp in meshes:
-            run_drim_ann_cell(mp)
+            run_drim_ann_cell(mp, fused_scan=args.fused_scan,
+                              lut_dtype=lut_dtype)
         for (a, s, skip) in todo:
             for mp in meshes:
                 mesh_name = "multipod512" if mp else "pod256"
@@ -296,7 +323,8 @@ def main():
         return
     if args.arch == "drim_ann":
         for mp in meshes:
-            run_drim_ann_cell(mp)
+            run_drim_ann_cell(mp, fused_scan=args.fused_scan,
+                              lut_dtype=lut_dtype)
         return
     cell = registry.SHAPES_BY_NAME[args.shape]
     for mp in meshes:

@@ -7,13 +7,19 @@ LM mode — batched prefill + decode loop with KV caches:
 
 ANN mode (``--ann``) — RAG retrieval through the service layer: stands
 up :class:`repro.service.AnnService` from CLI knobs (engine kind,
-replicas, router policy, LUT cache), streams a Zipf-skewed query trace
-through the replica fleet, and prints the aggregate latency/hit-rate
-stats.  With ``--arch`` as well, the retrieved document vectors feed the
-LM decode loop as cross-attention context (the full RAG path):
+replicas, router policy, LUT cache) or — the deploy path — from a
+durable spec file (``--spec deploy.json``, the same artifact
+``python -m repro.service --spec`` boots, so the two entrypoints can
+never drift), streams a Zipf-skewed query trace through the replica
+fleet (``--clock wall`` drives the executor-backed async path), and
+prints the aggregate latency/hit-rate stats.  With ``--arch`` as well,
+the retrieved document vectors feed the LM decode loop as
+cross-attention context (the full RAG path):
 
     PYTHONPATH=src python -m repro.launch.serve --ann --replicas 2 \
         --router cache_aware --requests 64
+    PYTHONPATH=src python -m repro.launch.serve --ann --spec deploy.json \
+        --clock wall --requests 64
     PYTHONPATH=src python -m repro.launch.serve --ann \
         --arch llama32_vision_11b --smoke --gen 8
 """
@@ -80,13 +86,20 @@ def serve_ann(args):
     ds = make_clustered_corpus(seed=0, n=10_000, d=d_embed,
                                n_queries=max(args.batch, 32),
                                n_components=16)
-    spec = ServiceSpec(
-        engine=args.engine, replicas=args.replicas, router=args.router,
-        nprobe=8, k=4, strategy="gather",
-        index=IndexSpec(nlist=32, m=8, cb=64),
-        n_shards=4, tasks_per_shard=256,
-        buckets=(1, 2, 4), max_wait_s=1e-3,
-        cache_capacity=args.cache_capacity)
+    if args.spec:
+        # the durable deploy artifact: identical fleet to
+        # `python -m repro.service --spec` (index is rebuilt per
+        # spec.index over this corpus; k is forced to the RAG depth)
+        import dataclasses as _dc
+        spec = _dc.replace(ServiceSpec.load(args.spec), k=4)
+    else:
+        spec = ServiceSpec(
+            engine=args.engine, replicas=args.replicas, router=args.router,
+            nprobe=8, k=4, strategy="gather",
+            index=IndexSpec(nlist=32, m=8, cb=64),
+            n_shards=4, tasks_per_shard=256,
+            buckets=(1, 2, 4), max_wait_s=1e-3,
+            cache_capacity=args.cache_capacity)
     svc = AnnService.build(spec, points=ds.points,
                            sample_queries=ds.queries)
     svc.warmup()
@@ -96,7 +109,7 @@ def serve_ann(args):
     from repro.data import make_query_stream
     queries = np.asarray(ds.queries, np.float32)
     reqs = svc.stream(make_query_stream(queries, args.requests, args.qps,
-                                        skew=1.2))
+                                        skew=1.2), clock=args.clock)
     st = svc.stats()
     agg, rt = st["aggregate"], st["router"]
     print(f"[ann] {agg['requests']} requests over {svc.n_replicas} "
@@ -151,6 +164,13 @@ def main():
     ap.add_argument("--requests", type=int, default=64)
     ap.add_argument("--qps", type=float, default=2000.0)
     ap.add_argument("--cache-capacity", type=int, default=2048)
+    ap.add_argument("--spec", metavar="PATH",
+                    help="boot the fleet from a ServiceSpec deploy file "
+                         "(.json/.yaml) instead of the CLI knobs above")
+    ap.add_argument("--clock", choices=("virtual", "wall"),
+                    default="virtual",
+                    help="stream driver: discrete-event simulation or "
+                         "wall-clock executor-backed replicas")
     args = ap.parse_args()
     if args.ann:
         serve_ann(args)

@@ -1,5 +1,5 @@
 from repro.runtime.fault_tolerance import (HeartbeatRegistry, ElasticPlan,
-                                           plan_elastic_mesh,
+                                           plan_elastic_mesh, ReplicaHealth,
                                            StragglerPolicy, RunSupervisor)
 from repro.runtime.batching import (BucketPolicy, MicroBatch, MicroBatcher,
                                     Request, TasksPerShardController)
@@ -8,12 +8,14 @@ from repro.runtime.cache import (AdmissionPolicy, CacheStats,
                                  LRUCache, OnlineHeatEstimator,
                                  entry_nbytes, query_hash_bucket,
                                  stack_lut_bank)
-from repro.runtime.serving import (LocalEngine, SearchEngine, ServingConfig,
-                                   ServingRuntime, ServingStats,
-                                   ShardedEngine)
+from repro.runtime.serving import (BatchServeError, LocalEngine,
+                                   PimPacedEngine, SearchEngine,
+                                   ServingConfig, ServingRuntime,
+                                   ServingStats, ShardedEngine)
 
 __all__ = ["HeartbeatRegistry", "ElasticPlan", "plan_elastic_mesh",
-           "StragglerPolicy", "RunSupervisor",
+           "ReplicaHealth", "StragglerPolicy", "RunSupervisor",
+           "BatchServeError", "PimPacedEngine",
            "BucketPolicy", "MicroBatch", "MicroBatcher", "Request",
            "TasksPerShardController",
            "AdmissionPolicy", "CacheStats", "HeatAwareAdmission",

@@ -16,7 +16,10 @@ Flush policy (both knobs in :class:`MicroBatcher`):
 
 All timestamps are passed in explicitly (``now``, seconds), so the
 batcher is deterministic under a virtual clock — tests and the
-simulation driver in ``serving.py`` exploit this.
+simulation driver in ``serving.py`` exploit this.  Queue operations are
+additionally thread-safe (one lock around submit/poll/depth), because
+the async execution path (:mod:`repro.service.executor`) submits from
+the router thread while each replica's worker thread flushes.
 
 :class:`TasksPerShardController` is the sharded engine's counterpart to
 the bucket policy: the distributed engine's compiled step consumes a
@@ -37,8 +40,9 @@ shrink the compiled table relative to the untuned engine.
 from __future__ import annotations
 
 import dataclasses
+import threading
 from collections import deque
-from typing import Deque, Dict, List, Optional
+from typing import Any, Deque, Dict, List, Optional
 
 import numpy as np
 
@@ -91,7 +95,17 @@ class BucketPolicy:
 
 @dataclasses.dataclass
 class Request:
-    """One in-flight query.  Result fields are stamped at completion."""
+    """One in-flight query.  Result fields are stamped at completion.
+
+    The three completion timestamps decompose the request lifecycle on
+    whatever clock drove it (virtual or wall): ``t_arrival -> t_flush``
+    is queue time (waiting for the micro-batcher to release the batch),
+    ``t_flush -> t_service_start`` is batch time (the flushed batch
+    waiting for the replica's server to come free), and
+    ``t_service_start -> t_done`` is engine time.  ``timing()`` returns
+    the breakdown; ``future`` is the completion hook the async service
+    API attaches (resolved by the runtime at serve time — see
+    :class:`repro.service.executor.SearchFuture`)."""
     req_id: int
     query: np.ndarray            # (D,) float32
     t_arrival: float
@@ -100,6 +114,11 @@ class Request:
     ids: Optional[np.ndarray] = None      # (k,)
     t_done: Optional[float] = None
     bucket: Optional[int] = None          # padded batch shape it rode in
+    t_flush: Optional[float] = None         # when its batch flushed
+    t_service_start: Optional[float] = None  # when the engine started
+    future: Optional[Any] = None   # SearchFuture-like completion hook
+    replica: Optional[int] = None  # which replica served it (service tier)
+    retried: bool = False          # re-routed after a replica failure
 
     @property
     def done(self) -> bool:
@@ -110,6 +129,21 @@ class Request:
         if self.t_done is None:
             raise RuntimeError(f"request {self.req_id} not served yet")
         return self.t_done - self.t_arrival
+
+    def timing(self) -> dict:
+        """Per-request lifecycle breakdown (seconds) — queue / batch /
+        engine / total.  Only meaningful once served."""
+        if self.t_done is None:
+            raise RuntimeError(f"request {self.req_id} not served yet")
+        t_flush = self.t_flush if self.t_flush is not None else self.t_arrival
+        t_svc = (self.t_service_start if self.t_service_start is not None
+                 else t_flush)
+        return {
+            "queue_s": t_flush - self.t_arrival,
+            "batch_s": t_svc - t_flush,
+            "engine_s": self.t_done - t_svc,
+            "total_s": self.t_done - self.t_arrival,
+        }
 
 
 @dataclasses.dataclass
@@ -127,7 +161,12 @@ class MicroBatch:
 
 
 class MicroBatcher:
-    """Request queue + bucketed flush policy (no engine knowledge)."""
+    """Request queue + bucketed flush policy (no engine knowledge).
+
+    Thread-safe: one lock guards the queue and the flush counters, so a
+    router thread can ``submit`` while a replica worker ``poll``s.  The
+    flush decision and the pop happen under the same lock — two
+    concurrent pollers can never split one batch."""
 
     def __init__(self, policy: BucketPolicy, max_wait_s: float = 2e-3,
                  max_batch: Optional[int] = None):
@@ -137,6 +176,7 @@ class MicroBatcher:
         if self.max_batch > policy.max_batch:
             raise ValueError("max_batch exceeds largest bucket")
         self._queue: Deque[Request] = deque()
+        self._lock = threading.Lock()
         self._next_id = 0
         # counters for the serving stats
         self.n_submitted = 0
@@ -145,52 +185,70 @@ class MicroBatcher:
         self.valid_slots = 0
 
     # -- queue side --------------------------------------------------------
-    def submit(self, query: np.ndarray, now: float) -> Request:
-        req = Request(self._next_id, np.asarray(query, np.float32),
-                      float(now))
-        self._next_id += 1
-        self.n_submitted += 1
-        self._queue.append(req)
-        return req
+    def submit(self, query: np.ndarray, now: float,
+               attach: Optional[Any] = None) -> Request:
+        """Queue one request.  ``attach(req)``, when given, runs under
+        the queue lock *before* the request becomes visible to a poller
+        — the async service uses it to bind a SearchFuture without
+        racing the replica's worker thread."""
+        with self._lock:
+            req = Request(self._next_id, np.asarray(query, np.float32),
+                          float(now))
+            self._next_id += 1
+            self.n_submitted += 1
+            if attach is not None:
+                attach(req)
+            self._queue.append(req)
+            return req
 
     @property
     def depth(self) -> int:
-        return len(self._queue)
+        with self._lock:
+            return len(self._queue)
 
     def next_deadline(self) -> Optional[float]:
         """Virtual time at which the oldest request must flush."""
+        with self._lock:
+            return self._next_deadline_locked()
+
+    def _next_deadline_locked(self) -> Optional[float]:
         if not self._queue:
             return None
         return self._queue[0].t_arrival + self.max_wait_s
 
     # -- flush side --------------------------------------------------------
     def ready(self, now: float) -> Optional[str]:
+        with self._lock:
+            return self._ready_locked(now)
+
+    def _ready_locked(self, now: float) -> Optional[str]:
         if not self._queue:
             return None
         if len(self._queue) >= self.max_batch:
             return "full"
-        if now >= self.next_deadline():
+        if now >= self._next_deadline_locked():
             return "deadline"
         return None
 
     def poll(self, now: float, drain: bool = False) -> Optional[MicroBatch]:
         """Flush one micro-batch if policy (or ``drain``) says so."""
-        reason = self.ready(now)
-        if reason is None:
-            if not (drain and self._queue):
-                return None
-            reason = "drain"
-        take = min(len(self._queue), self.max_batch)
-        reqs = [self._queue.popleft() for _ in range(take)]
-        bucket = self.policy.bucket_for(take)
+        with self._lock:
+            reason = self._ready_locked(now)
+            if reason is None:
+                if not (drain and self._queue):
+                    return None
+                reason = "drain"
+            take = min(len(self._queue), self.max_batch)
+            reqs = [self._queue.popleft() for _ in range(take)]
+            bucket = self.policy.bucket_for(take)
+            self.flushes[reason] += 1
+            self.valid_slots += take
+            self.padded_slots += bucket - take
         d = reqs[0].query.shape[0]
         queries = np.zeros((bucket, d), np.float32)
         for i, r in enumerate(reqs):
             queries[i] = r.query
             r.bucket = bucket
-        self.flushes[reason] += 1
-        self.valid_slots += take
-        self.padded_slots += bucket - take
         return MicroBatch(reqs, queries, bucket, reason, float(now))
 
     def flush(self, now: float) -> Optional[MicroBatch]:

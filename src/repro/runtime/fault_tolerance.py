@@ -18,11 +18,19 @@ slow host to the next step; for synchronous training we expose
 ``StragglerPolicy`` which flags hosts whose step times exceed the p50 by a
 configurable ratio and (a) reroutes their data shard, (b) marks them for
 replacement at the next checkpoint boundary.
+
+Serving tier: :class:`ReplicaHealth` is the executor path's counterpart
+of ``HeartbeatRegistry`` — per-replica consecutive-failure counts fed by
+batch outcomes instead of heartbeats.  The service uses it to pick retry
+targets after a mid-batch engine failure (`repro.service` wires it into
+``ReplicaExecutor.on_batch_failure``) and to keep routing away from a
+replica that keeps dying.
 """
 
 from __future__ import annotations
 
 import dataclasses
+import threading
 import time
 from typing import Callable, Dict, List, Optional, Sequence
 
@@ -85,6 +93,72 @@ def plan_elastic_mesh(n_alive: int, data_axis: int, model_axis: int,
                        dropped_hosts=(),
                        batch_ratio=new_data / data_axis if not keep_batch
                        else 1.0)
+
+
+class ReplicaHealth:
+    """Consecutive-failure tracking for the service tier's replicas.
+
+    A replica is *unhealthy* once it fails ``max_consecutive`` batches
+    in a row; any successful batch resets its count.  The service
+    consults ``healthy()`` when picking a retry target (never the
+    replica that just failed) and exports the counters in ``stats()``.
+    Thread-safe: executor workers record outcomes concurrently.
+    """
+
+    def __init__(self, n_replicas: int, max_consecutive: int = 3):
+        if n_replicas < 1:
+            raise ValueError("n_replicas must be >= 1")
+        if max_consecutive < 1:
+            raise ValueError("max_consecutive must be >= 1")
+        self.max_consecutive = int(max_consecutive)
+        self._consecutive = [0] * int(n_replicas)
+        self._total = [0] * int(n_replicas)
+        self._lock = threading.Lock()
+
+    @property
+    def n_replicas(self) -> int:
+        return len(self._consecutive)
+
+    def resize(self, n_replicas: int) -> None:
+        """Track a grown fleet (new replicas start healthy); shrinking
+        drops the trailing replicas' counts (LIFO, matching the
+        autoscaler's grow/shrink order)."""
+        with self._lock:
+            n = int(n_replicas)
+            if n < 1:
+                raise ValueError("n_replicas must be >= 1")
+            cur = len(self._consecutive)
+            if n > cur:
+                self._consecutive += [0] * (n - cur)
+                self._total += [0] * (n - cur)
+            else:
+                del self._consecutive[n:]
+                del self._total[n:]
+
+    def record_success(self, replica: int) -> None:
+        with self._lock:
+            self._consecutive[replica] = 0
+
+    def record_failure(self, replica: int) -> None:
+        with self._lock:
+            self._consecutive[replica] += 1
+            self._total[replica] += 1
+
+    def is_healthy(self, replica: int) -> bool:
+        with self._lock:
+            return self._consecutive[replica] < self.max_consecutive
+
+    def healthy(self) -> List[int]:
+        with self._lock:
+            return [r for r, c in enumerate(self._consecutive)
+                    if c < self.max_consecutive]
+
+    def stats(self) -> dict:
+        with self._lock:
+            return {"failures": list(self._total),
+                    "unhealthy": [r for r, c in
+                                  enumerate(self._consecutive)
+                                  if c >= self.max_consecutive]}
 
 
 @dataclasses.dataclass

@@ -269,6 +269,77 @@ class ShardedEngine:
         return np.asarray(d), np.asarray(i)
 
 
+class PimPacedEngine:
+    """Pace an engine's service time to a modeled DRAM-PIM latency.
+
+    The dev box running this repro is not the target hardware: XLA-on-CPU
+    timings say nothing about a PIM fleet's capacity, and on a small
+    host one replica's compute can saturate every core, hiding the
+    fleet-scaling behavior the service tier exists to deliver.  This
+    wrapper is the hardware-in-the-loop answer: the inner engine computes
+    the *exact* results, then the wrapper sleeps out the remainder of the
+    batch's modeled service time (Eq. 15 per-task latency on the UPMEM
+    profile, ``ceil(n_valid * nprobe / ranks)`` serial task waves over
+    the replica's ``ranks`` DPU ranks).  Sleeping holds no lock and burns
+    no CPU, so N paced replicas overlap on any host exactly as N real
+    PIM-rank fleets would — wall-clock serving experiments (executor
+    overlap, autoscaling, routing) become deterministic-ish and
+    reproducible anywhere.
+
+    Results are bit-identical to the inner engine; only timing changes.
+    Warmup batches (``n_valid=0``) are never paced.
+    """
+
+    def __init__(self, engine: "SearchEngine", nprobe: int, ranks: int,
+                 task_latency_s: float):
+        if ranks < 1:
+            raise ValueError(f"ranks must be >= 1, got {ranks}")
+        if task_latency_s <= 0:
+            raise ValueError(f"task_latency_s must be positive, "
+                             f"got {task_latency_s}")
+        self.engine = engine
+        self.k = engine.k
+        self.nprobe = int(nprobe)
+        self.ranks = int(ranks)
+        self.task_latency_s = float(task_latency_s)
+        self.paced_batches = 0
+
+    def batch_latency_s(self, n_valid: int) -> float:
+        """Modeled service time for a batch of ``n_valid`` queries."""
+        tasks = n_valid * self.nprobe
+        waves = -(-tasks // self.ranks)
+        return waves * self.task_latency_s
+
+    # the serving runtime's optional engine hooks forward to the inner
+    # engine (lut_cache as a real property so warmup's throwaway-cache
+    # swap reaches the engine that actually consults it)
+    @property
+    def lut_cache(self):
+        return getattr(self.engine, "lut_cache", None)
+
+    @lut_cache.setter
+    def lut_cache(self, cache):
+        self.engine.lut_cache = cache
+
+    def __getattr__(self, name):
+        if name == "engine":        # guard: never recurse pre-__init__
+            raise AttributeError(name)
+        return getattr(self.engine, name)
+
+    def search_batch(self, queries: np.ndarray,
+                     n_valid: Optional[int] = None
+                     ) -> Tuple[np.ndarray, np.ndarray]:
+        t0 = time.perf_counter()
+        d, i = self.engine.search_batch(queries, n_valid=n_valid)
+        n = n_valid if n_valid is not None else len(queries)
+        if n > 0:
+            remaining = self.batch_latency_s(n) - (time.perf_counter() - t0)
+            if remaining > 0:
+                time.sleep(remaining)
+            self.paced_batches += 1
+        return d, i
+
+
 # ---------------------------------------------------------------------------
 # Instrumentation
 # ---------------------------------------------------------------------------
@@ -289,7 +360,12 @@ class BatchRecord:
 
 
 class ServingStats:
-    """Per-request latency + per-batch occupancy/service accounting."""
+    """Per-request latency + per-batch occupancy/service accounting.
+
+    Thread-safe: arrivals are recorded on the submitting (router) thread
+    while batch/done records come from the replica's executor worker, so
+    one lock guards the lists and ``summary()`` reads a consistent
+    snapshot."""
 
     def __init__(self):
         self.latencies_s: List[float] = []
@@ -297,31 +373,45 @@ class ServingStats:
         self.queue_depths: List[int] = []
         self.t_first_arrival: Optional[float] = None
         self.t_last_done: Optional[float] = None
+        self._lock = threading.Lock()
 
     def record_arrival(self, req: Request, depth: int) -> None:
-        if self.t_first_arrival is None:
-            self.t_first_arrival = req.t_arrival
-        self.queue_depths.append(depth)
+        with self._lock:
+            if (self.t_first_arrival is None
+                    or req.t_arrival < self.t_first_arrival):
+                self.t_first_arrival = req.t_arrival
+            self.queue_depths.append(depth)
 
     def record_batch(self, batch: MicroBatch, service_s: float) -> None:
-        self.batches.append(BatchRecord(batch.bucket, batch.n_valid,
-                                        batch.reason, service_s,
-                                        batch.t_flush))
+        with self._lock:
+            self.batches.append(BatchRecord(batch.bucket, batch.n_valid,
+                                            batch.reason, service_s,
+                                            batch.t_flush))
 
     def record_done(self, req: Request) -> None:
-        self.latencies_s.append(req.latency_s)
-        if self.t_last_done is None or req.t_done > self.t_last_done:
-            self.t_last_done = req.t_done
+        with self._lock:
+            self.latencies_s.append(req.latency_s)
+            if self.t_last_done is None or req.t_done > self.t_last_done:
+                self.t_last_done = req.t_done
+
+    def recent_latencies(self, n: int = 64) -> List[float]:
+        """Last ``n`` served latencies (the autoscaler's p99 window)."""
+        with self._lock:
+            return self.latencies_s[-n:]
 
     def summary(self) -> dict:
-        n = len(self.latencies_s)
-        span = ((self.t_last_done - self.t_first_arrival)
-                if n and self.t_last_done is not None else 0.0)
-        slots = sum(b.bucket for b in self.batches)
-        valid = sum(b.n_valid for b in self.batches)
-        reasons = {"full": 0, "deadline": 0, "drain": 0}
-        for b in self.batches:
-            reasons[b.reason] += 1
+        with self._lock:
+            n = len(self.latencies_s)
+            span = ((self.t_last_done - self.t_first_arrival)
+                    if n and self.t_last_done is not None else 0.0)
+            slots = sum(b.bucket for b in self.batches)
+            valid = sum(b.n_valid for b in self.batches)
+            reasons = {"full": 0, "deadline": 0, "drain": 0}
+            for b in self.batches:
+                reasons[b.reason] += 1
+            return self._summary_locked(n, span, slots, valid, reasons)
+
+    def _summary_locked(self, n, span, slots, valid, reasons) -> dict:
         return {
             "requests": n,
             "batches": len(self.batches),
@@ -355,6 +445,18 @@ class ServingConfig:
         return MicroBatcher(BucketPolicy(self.buckets),
                             max_wait_s=self.max_wait_s,
                             max_batch=self.max_batch)
+
+
+class BatchServeError(RuntimeError):
+    """An engine raised mid-batch.  Carries the flushed batch so the
+    caller (the replica executor) can fail or retry exactly the requests
+    that rode in it — no other in-flight request is affected."""
+
+    def __init__(self, batch: MicroBatch, cause: BaseException):
+        super().__init__(f"engine failed serving a {batch.bucket}-slot "
+                         f"batch ({batch.n_valid} live requests): {cause!r}")
+        self.batch = batch
+        self.cause = cause
 
 
 class ServingRuntime:
@@ -405,8 +507,11 @@ class ServingRuntime:
                 self.engine.lut_cache = cache
 
     # -- online API --------------------------------------------------------
-    def submit(self, query: np.ndarray, now: float) -> Request:
-        req = self.batcher.submit(query, now)
+    def submit(self, query: np.ndarray, now: float,
+               attach=None) -> Request:
+        """Queue one request; ``attach(req)`` binds a future under the
+        batcher lock (see ``MicroBatcher.submit``)."""
+        req = self.batcher.submit(query, now, attach=attach)
         self.stats.record_arrival(req, self.batcher.depth)
         return req
 
@@ -430,16 +535,25 @@ class ServingRuntime:
 
     def _serve(self, batch: MicroBatch, t_start: float) -> List[Request]:
         t0 = time.perf_counter()
-        d, i = self.engine.search_batch(batch.queries,
-                                        n_valid=batch.n_valid)
+        try:
+            d, i = self.engine.search_batch(batch.queries,
+                                            n_valid=batch.n_valid)
+        except Exception as e:
+            # fail only this batch's requests; the caller decides whether
+            # to retry them elsewhere (service tier) or propagate
+            raise BatchServeError(batch, e) from e
         service_s = time.perf_counter() - t0
         self.stats.record_batch(batch, service_s)
         t_done = t_start + service_s
         for row, req in enumerate(batch.requests):   # de-pad: rows [0, n)
             req.dists = np.asarray(d[row])
             req.ids = np.asarray(i[row])
+            req.t_flush = batch.t_flush
+            req.t_service_start = t_start
             req.t_done = t_done
             self.stats.record_done(req)
+            if req.future is not None:
+                req.future._resolve(req)
         return batch.requests
 
     # -- offline simulation ------------------------------------------------

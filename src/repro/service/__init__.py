@@ -1,18 +1,28 @@
 """repro.service — the service-layer API over the DRIM-ANN engines.
 
-One validated config (:class:`ServiceSpec`), one facade
-(:class:`AnnService`) owning the whole lifecycle (build -> warmup ->
-submit/search/stream -> stats -> shutdown), and a multi-replica
-:class:`Router` with round-robin, least-queue, and cache-aware policies.
-``python -m repro.service --selftest`` runs an end-to-end smoke.
+One validated config (:class:`ServiceSpec`, also the durable deploy
+artifact: ``to_dict``/``from_dict`` + ``save``/``load`` JSON/YAML), one
+facade (:class:`AnnService`) owning the whole lifecycle (build ->
+warmup -> submit/search/stream -> stats -> shutdown), an async request
+lifecycle (``submit_async`` -> :class:`SearchFuture`) over
+executor-backed replicas (:class:`ReplicaExecutor`), a multi-replica
+:class:`Router` with round-robin, least-queue, and cache-aware
+policies, and an :class:`Autoscaler` that moves the live fleet inside
+``[replicas, replicas_max]`` from queue-depth/p99 signals.
+``python -m repro.service --selftest`` runs an end-to-end smoke (both
+stream clocks); ``--spec deploy.json`` boots a fleet from a file.
 """
 
+from repro.service.autoscale import Autoscaler, ScaleEvent, ScaleSignals
+from repro.service.executor import ReplicaExecutor, SearchFuture
 from repro.service.router import (CacheAwarePolicy, LeastQueuePolicy,
                                   RoundRobinPolicy, Router, RoutingPolicy,
                                   make_policy)
 from repro.service.service import AnnService, Replica
-from repro.service.spec import IndexSpec, ServiceSpec
+from repro.service.spec import SPEC_VERSION, IndexSpec, ServiceSpec
 
 __all__ = ["AnnService", "Replica", "IndexSpec", "ServiceSpec",
+           "SPEC_VERSION", "SearchFuture", "ReplicaExecutor",
+           "Autoscaler", "ScaleSignals", "ScaleEvent",
            "Router", "RoutingPolicy", "RoundRobinPolicy",
            "LeastQueuePolicy", "CacheAwarePolicy", "make_policy"]

@@ -6,8 +6,16 @@ query trace, and asserts the service invariants end to end:
 
   * 1-replica local search == direct ``search_ivfpq`` (ids equal,
     distances allclose);
-  * streamed per-request results match the direct batch per query;
+  * streamed per-request results match the direct batch per query —
+    under the virtual-clock simulator or the wall-clock executor path
+    (``--clock virtual|wall``; CI runs both, with a hard timeout so an
+    executor deadlock fails fast);
   * every request was routed (pick counts sum to the request count).
+
+``--spec deploy.json`` (or ``.yaml``) boots the same smoke fleet from a
+durable deploy file instead of the built-in specs —
+``launch/serve.py --ann --spec ...`` reads the identical artifact, so
+the two entrypoints can never drift.
 
 Exit code 0 on success — wired into CI as a cheap post-install gate.
 """
@@ -21,18 +29,24 @@ import jax
 import numpy as np
 
 
-def selftest() -> int:
-    import jax.numpy as jnp
-
-    from repro.core import (SearchParams, build_ivfpq, pad_clusters,
-                            search_ivfpq)
+def _corpus_and_index():
+    from repro.core import build_ivfpq
     from repro.data import make_clustered_corpus
-    from repro.service import AnnService, ServiceSpec
 
     ds = make_clustered_corpus(seed=0, n=2000, d=16, n_queries=16,
                                n_components=8)
     index = build_ivfpq(jax.random.PRNGKey(0), ds.points, nlist=16, m=8,
                         cb=32, kmeans_iters=4, pq_iters=4)
+    return ds, index
+
+
+def selftest(clock: str = "virtual") -> int:
+    import jax.numpy as jnp
+
+    from repro.core import (SearchParams, pad_clusters, search_ivfpq)
+    from repro.service import AnnService, ServiceSpec
+
+    ds, index = _corpus_and_index()
     queries = np.asarray(ds.queries, np.float32)
 
     # -- 1 replica, no cache: facade == direct pipeline -------------------
@@ -56,14 +70,15 @@ def selftest() -> int:
     direct_d, direct_i = svc2.search(queries)
     pool = np.arange(24) % 4                    # hot 4-query pool
     stream = [(i * 5e-4, queries[pool[i]]) for i in range(24)]
-    reqs = svc2.stream(stream)
+    reqs = svc2.stream(stream, clock=clock)
     for i, r in enumerate(reqs):
         np.testing.assert_array_equal(r.ids, direct_i[pool[i]])
     st = svc2.stats()
     assert sum(st["router"]["picks"]) == len(reqs), st["router"]
     assert st["aggregate"]["requests"] == len(reqs)
     print(f"[selftest] streamed {len(reqs)} requests over 2 replicas "
-          f"(router={st['router']['policy']} picks={st['router']['picks']} "
+          f"(clock={clock} router={st['router']['policy']} "
+          f"picks={st['router']['picks']} "
           f"lut_hit_rate={st['aggregate'].get('lut_hit_rate', 0.0):.2f}): OK")
     svc2.shutdown()
 
@@ -79,7 +94,7 @@ def selftest() -> int:
     overlap = np.mean([len(set(i_q[r]) & set(np.asarray(i_d)[r])) / 5.0
                        for r in range(len(queries))])
     assert overlap >= 0.8, f"u8-vs-f32 neighbor overlap {overlap:.2f}"
-    reqs3 = svc3.stream(stream)
+    reqs3 = svc3.stream(stream, clock=clock)
     assert all(r.ids is not None and len(r.ids) == 5 for r in reqs3)
     st3 = svc3.stats()
     cache_bytes = st3["replicas"][0]["lut_cache"]["bytes"]
@@ -88,7 +103,33 @@ def selftest() -> int:
           f"hit_rate={st3['aggregate'].get('lut_hit_rate', 0.0):.2f} "
           f"cache_bytes={cache_bytes}: OK")
     svc3.shutdown()
-    print("[selftest] repro.service OK")
+    print(f"[selftest] repro.service OK (clock={clock})")
+    return 0
+
+
+def spec_smoke(spec_path: str, clock: str) -> int:
+    """Boot the selftest fleet from a durable deploy file and stream the
+    same skewed trace through it."""
+    from repro.service import AnnService, ServiceSpec
+
+    spec = ServiceSpec.load(spec_path)
+    ds, index = _corpus_and_index()
+    queries = np.asarray(ds.queries, np.float32)
+    svc = AnnService.build(spec, points=np.asarray(ds.points),
+                           sample_queries=queries)
+    svc.warmup()
+    direct_d, direct_i = svc.search(queries)
+    pool = np.arange(24) % 4
+    stream = [(i * 5e-4, queries[pool[i]]) for i in range(24)]
+    reqs = svc.stream(stream, clock=clock)
+    for i, r in enumerate(reqs):
+        assert set(r.ids.tolist()) == set(direct_i[pool[i]].tolist())
+    st = svc.stats()
+    assert sum(st["router"]["picks"]) == len(reqs), st["router"]
+    print(f"[spec] {spec_path}: booted {svc.n_replicas} replica(s) "
+          f"engine={spec.engine} router={st['router']['policy']}, "
+          f"streamed {len(reqs)} requests (clock={clock}): OK")
+    svc.shutdown()
     return 0
 
 
@@ -97,11 +138,20 @@ def main() -> int:
                                  description=__doc__)
     ap.add_argument("--selftest", action="store_true",
                     help="run the end-to-end service smoke test")
+    ap.add_argument("--clock", choices=("virtual", "wall"),
+                    default="virtual",
+                    help="stream driver for the smoke: discrete-event "
+                         "simulation or wall-clock executors")
+    ap.add_argument("--spec", metavar="PATH",
+                    help="boot the smoke fleet from a ServiceSpec deploy "
+                         "file (.json/.yaml) instead of built-in specs")
     args = ap.parse_args()
+    if args.spec:
+        return spec_smoke(args.spec, args.clock)
     if not args.selftest:
         ap.print_help()
         return 2
-    return selftest()
+    return selftest(args.clock)
 
 
 if __name__ == "__main__":

@@ -60,6 +60,14 @@ class RoutingPolicy:
     def observe(self, ridx: int, probes: Optional[np.ndarray]) -> None:
         pass
 
+    def resize(self, n_replicas: int) -> None:
+        """The autoscaler grew/shrank the live fleet to ``n_replicas``
+        (LIFO: growth appends, shrink drops the tail).  Stateless
+        policies need nothing — ``pick`` already keys on ``len(depths)``.
+        Stateful policies drop the drained tail's state here, so a
+        replica that later re-joins at the same index starts cold
+        instead of inheriting stale heat."""
+
 
 class RoundRobinPolicy(RoutingPolicy):
     name = "round_robin"
@@ -109,13 +117,32 @@ class CacheAwarePolicy(RoutingPolicy):
     def __init__(self, nlist: int, n_replicas: int,
                  halflife_batches: float = 64.0,
                  overload_factor: float = 1.5):
-        if overload_factor <= 1.0:
-            raise ValueError("overload_factor must be > 1")
+        if overload_factor < 1.0:
+            # 1.0 is fair-share-exact (every assignment beyond an even
+            # split spills); below 1.0 the cap is unsatisfiable
+            raise ValueError("overload_factor must be >= 1")
+        self.nlist = int(nlist)
+        self.halflife_batches = float(halflife_batches)
         self.estimators = [OnlineHeatEstimator(nlist, halflife_batches)
                            for _ in range(n_replicas)]
         self.assigned = [0] * n_replicas
         self.overload_factor = float(overload_factor)
         self._i = 0
+
+    def resize(self, n_replicas: int) -> None:
+        """Grow: fresh (cold) estimators for the new tail.  Shrink: the
+        drained tail's heat and assignment counts are dropped outright —
+        full decay, so hot clusters re-learn their home among the
+        survivors and a re-grown replica at that index starts cold."""
+        cur = len(self.estimators)
+        if n_replicas > cur:
+            self.estimators += [
+                OnlineHeatEstimator(self.nlist, self.halflife_batches)
+                for _ in range(n_replicas - cur)]
+            self.assigned += [0] * (n_replicas - cur)
+        else:
+            del self.estimators[n_replicas:]
+            del self.assigned[n_replicas:]
 
     def expected_hit_rate(self, ridx: int, probes: np.ndarray) -> float:
         """Mean over probed clusters of min(heat_r(c), 1) — heat is
@@ -180,6 +207,20 @@ class Router:
         self._probe_fn = probe_fn
         self.picks: List[int] = [0] * self.n_replicas
 
+    def resize(self, n_replicas: int) -> None:
+        """Follow an autoscale event: route over the new live fleet.
+        Pick counts for drained replicas are kept (they served real
+        traffic — stats must still sum to the request count); the
+        policy's per-replica state is resized (see ``resize`` on the
+        policy)."""
+        n = int(n_replicas)
+        if n < 1:
+            raise ValueError(f"router needs >= 1 live replica, got {n}")
+        self.n_replicas = n
+        if len(self.picks) < n:
+            self.picks += [0] * (n - len(self.picks))
+        self.policy.resize(n)
+
     def route(self, query: np.ndarray) -> int:
         probes = (self._probe_fn(query) if self.policy.wants_probes
                   else None)
@@ -193,4 +234,5 @@ class Router:
         return r
 
     def stats(self) -> dict:
-        return {"policy": self.policy.name, "picks": list(self.picks)}
+        return {"policy": self.policy.name, "picks": list(self.picks),
+                "live": self.n_replicas}

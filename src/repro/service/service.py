@@ -8,7 +8,10 @@ metrics" lives behind this facade:
     svc = AnnService.build(spec, points)        # index + engines + runtimes
     svc.warmup()                                # compile every bucket shape
     d, i = svc.search(queries)                  # synchronous batch
-    reqs = svc.stream([(t0, q0), (t1, q1)])     # virtual-clock replay
+    fut = svc.submit_async(q)                   # futures-based lifecycle
+    d1, i1 = fut.result(timeout=1.0)            #   (executor-backed)
+    reqs = svc.stream(trace)                    # virtual-clock replay
+    reqs = svc.stream(trace, clock="wall")      # real executor overlap
     svc.stats()                                 # per-replica + aggregate
     svc.shutdown()
 
@@ -20,17 +23,33 @@ and a :class:`~repro.service.router.Router` that assigns every incoming
 query to one replica.  Replicas share the index (and, for the local
 engine, the padded cluster tensors), so results are routing-independent.
 
-``stream`` generalizes ``ServingRuntime.run_stream`` to the replica
-fleet: one global arrival trace is replayed on a virtual clock, each
-replica keeps its own server-free time, and deadline flushes fire in
-global time order — so queueing shows up honestly per replica and the
-aggregate p50/p99/QPS roll up over the whole fleet.
+Request lifecycle (async API v2): ``submit_async`` routes the query,
+enqueues it on the chosen replica's micro-batcher, and returns a
+:class:`~repro.service.executor.SearchFuture`; the replica's
+:class:`~repro.service.executor.ReplicaExecutor` worker flushes on
+deadline/full, serves on the wall clock, and resolves the future with
+the per-request queue/batch/engine timing breakdown.  N executors
+genuinely overlap — that is the paper's many-ranks-busy throughput
+argument restated at the service tier.  A replica failing mid-batch
+fails only that batch's futures, and each affected request is retried
+once on another healthy replica (``runtime.fault_tolerance.
+ReplicaHealth`` tracks who is trustworthy).
 
-Invariants (pinned in tests/test_service.py):
+``stream`` replays one arrival trace through either driver —
+``clock="virtual"`` (discrete-event simulation, deterministic,
+measured service time charged onto a virtual timeline) or
+``clock="wall"`` (the executor path in real time) — through one shared
+submit loop, so both clocks exercise the same routing and batching
+code.  With ``ServiceSpec.replicas_max`` set, an
+:class:`~repro.service.autoscale.Autoscaler` grows/shrinks the live
+fleet between batches from queue-depth/p99 signals; scale events never
+change results (replicas are identical by construction).
+
+Invariants (pinned in tests/test_service.py, tests/test_async_service.py):
   * 1 replica, local engine, no cache: ``search`` is exactly
     ``search_ivfpq`` (same call, bit-identical);
-  * per-query neighbor sets are identical across replica counts and
-    router policies;
+  * per-query neighbor sets are identical across replica counts,
+    router policies, stream clocks, and autoscale events;
   * serving-batch padding rows never reach the router's heat estimators
     (the router routes *requests*; padding is created downstream).
 """
@@ -38,6 +57,8 @@ Invariants (pinned in tests/test_service.py):
 from __future__ import annotations
 
 import dataclasses
+import threading
+import time
 from typing import List, Optional, Sequence, Tuple
 
 import jax
@@ -50,9 +71,13 @@ from repro.core.sharded_search import DistributedEngine, EngineConfig
 from repro.runtime.batching import MicroBatch, Request
 from repro.runtime.cache import (HeatAwareAdmission, HotClusterLUTCache,
                                  OnlineHeatEstimator)
-from repro.runtime.serving import (LocalEngine, ServingConfig, ServingRuntime,
+from repro.runtime.fault_tolerance import ReplicaHealth
+from repro.runtime.serving import (LocalEngine, PimPacedEngine,
+                                   ServingConfig, ServingRuntime,
                                    ShardedEngine, _percentile,
                                    service_construction)
+from repro.service.autoscale import Autoscaler, ScaleSignals
+from repro.service.executor import ReplicaExecutor, SearchFuture
 from repro.service.router import Router, make_policy
 from repro.service.spec import ServiceSpec
 
@@ -84,8 +109,36 @@ class AnnService:
         self.index = index
         self.replicas: List[Replica] = list(replicas)
         self.router = router
+        self.health = ReplicaHealth(len(self.replicas))
+        self.autoscaler: Optional[Autoscaler] = None
+        if spec.replicas_max:
+            self.autoscaler = Autoscaler(
+                spec.replicas, spec.replicas_max,
+                queue_high=spec.autoscale_queue_high,
+                queue_low=spec.autoscale_queue_low,
+                p99_budget_s=(spec.autoscale_p99_budget_ms * 1e-3
+                              if spec.autoscale_p99_budget_ms else None),
+                cooldown=spec.autoscale_cooldown)
+        self._live = len(self.replicas)
+        self._executors: List[ReplicaExecutor] = []
         self._batch_rr = 0
+        self._retries = 0
+        # serializes retry-target selection (worker threads) against
+        # live-set updates (scale_to on the driver thread): a retry can
+        # never be routed to a replica the autoscaler is draining —
+        # either it sees the shrunken _live, or its enqueue lands before
+        # the tail executor's drain starts (which then serves it)
+        self._scale_lock = threading.Lock()
+        self._warmed = False
         self._closed = False
+        self._virtual_used = False   # clock-domain latch (see _check_*_ok)
+        # scale-out context, stashed by build(); scale_to() rebuilds
+        # replicas lazily from these when the fleet grows past the
+        # originally constructed set
+        self._clusters = None
+        self._sample_probes = None
+        self._serving_cfg = ServingConfig(buckets=tuple(spec.buckets),
+                                          max_wait_s=spec.max_wait_s)
 
     # -- construction ------------------------------------------------------
     @classmethod
@@ -141,10 +194,15 @@ class AnnService:
                 index.centroids, spec.nprobe)
             return np.asarray(p)[0]
 
+        svc = cls.__new__(cls)
         router = Router(policy, spec.replicas,
-                        depth_fn=lambda r: replicas[r].queue_depth,
+                        depth_fn=lambda r: svc.replicas[r].queue_depth,
                         probe_fn=probe_fn)
-        return cls(spec, index, replicas, router)
+        cls.__init__(svc, spec, index, replicas, router)
+        svc._clusters = clusters
+        svc._sample_probes = sample_probes
+        svc._serving_cfg = serving_cfg
+        return svc
 
     @staticmethod
     def _build_replica(spec: ServiceSpec, index: IVFPQIndex, clusters,
@@ -159,6 +217,26 @@ class AnnService:
                 lut_dtype=spec.lut_dtype,
                 admission=admission)
 
+        def pace(engine):
+            """PIM-paced serving: wrap the engine so batches take their
+            Eq. 15 modeled time on a ``pim_paced_ranks``-rank fleet
+            (results unchanged; see runtime.serving.PimPacedEngine)."""
+            if not spec.pim_paced_ranks:
+                return engine
+            from repro.core.perf_model import (IndexParams, UPMEM_PROFILE,
+                                               lut_width_bytes,
+                                               make_task_latency_model)
+            sizes = np.asarray(index.sizes)
+            model = make_task_latency_model(
+                IndexParams(n_total=int(sizes.sum()), nlist=index.nlist,
+                            q=1, d=index.dim, k=spec.k, p=spec.nprobe,
+                            m=index.codebook.m, cb=index.codebook.cb,
+                            b_lut=lut_width_bytes(spec.lut_dtype)),
+                UPMEM_PROFILE)
+            return PimPacedEngine(
+                engine, nprobe=spec.nprobe, ranks=spec.pim_paced_ranks,
+                task_latency_s=model.task_latency(float(sizes.mean())))
+
         if spec.engine == "local":
             cache = make_cache()
             core = LocalEngine(index, clusters,
@@ -166,8 +244,8 @@ class AnnService:
                                             strategy=spec.strategy,
                                             lut_dtype=spec.lut_dtype),
                                lut_cache=cache)
-            return Replica(ServingRuntime(core, serving_cfg), core, core,
-                           cache, None)
+            return Replica(ServingRuntime(pace(core), serving_cfg), core,
+                           core, cache, None)
         est = None
         if spec.heat_aware_admission or spec.relayout_every > 0:
             from repro.core.layout import estimate_heat
@@ -189,13 +267,19 @@ class AnnService:
         if spec.tune_tasks_per_shard:
             core.tasks_controller = core.make_tasks_controller()
         adapter = ShardedEngine(core)
-        return Replica(ServingRuntime(adapter, serving_cfg), adapter, core,
-                       cache, est)
+        return Replica(ServingRuntime(pace(adapter), serving_cfg), adapter,
+                       core, cache, est)
 
     # -- lifecycle ---------------------------------------------------------
     @property
     def n_replicas(self) -> int:
-        return len(self.replicas)
+        """Live replica count (the autoscaler moves this inside
+        ``[spec.replicas, spec.replicas_max]``)."""
+        return self._live
+
+    @property
+    def live_replicas(self) -> List[Replica]:
+        return self.replicas[:self._live]
 
     def core_engine(self, replica: int = 0):
         """The underlying engine (LocalEngine / DistributedEngine) of one
@@ -206,16 +290,43 @@ class AnnService:
         if self._closed:
             raise RuntimeError("AnnService is shut down")
 
+    def _check_virtual_ok(self, what: str) -> None:
+        """Virtual-clock APIs simulate time over the replica batchers;
+        once executor workers are live they poll those same batchers on
+        the wall clock, so mixing the two would race (and mix clock
+        domains in the stats).  Fail loudly instead."""
+        if any(ex.running for ex in self._executors):
+            raise RuntimeError(
+                f"{what} uses the virtual clock, but executor workers "
+                f"are live (submit_async / stream(clock='wall') started "
+                f"them); use clock='wall', or a service that has not "
+                f"gone async")
+        self._virtual_used = True
+
+    def _check_wall_ok(self, what: str) -> None:
+        """The mirror guard: wall-clock timestamps (time.monotonic)
+        must not land in stats that already hold virtual-clock times —
+        spans like t_last_done - t_first_arrival would be garbage."""
+        if self._virtual_used:
+            raise RuntimeError(
+                f"{what} stamps wall-clock times, but this service "
+                f"already served virtual-clock traffic (submit/step or "
+                f"stream(clock='virtual')); its stats would mix clock "
+                f"domains — use a fresh service for wall-clock serving")
+
     def warmup(self) -> None:
         """Compile every bucket shape on every replica (all-padding
         batches: no cache, heat, or router state is touched)."""
         self._check_open()
         for rep in self.replicas:
             rep.runtime.warmup(self.index.dim)
+        self._warmed = True
 
     def shutdown(self) -> dict:
-        """Close the service (subsequent calls raise) and return final
-        stats."""
+        """Drain the executors, close the service (subsequent calls
+        raise) and return final stats."""
+        for ex in self._executors:
+            ex.shutdown()
         out = self.stats()
         self._closed = True
         return out
@@ -223,87 +334,240 @@ class AnnService:
     # -- synchronous batch API ---------------------------------------------
     def search(self, queries) -> Tuple[np.ndarray, np.ndarray]:
         """One batched search, bypassing the micro-batcher (offline /
-        bulk callers).  Batches rotate over replicas round-robin; results
-        are replica-independent.  With 1 replica, a local engine, and no
-        cache this is exactly ``search_ivfpq``."""
+        bulk callers).  Batches rotate over live replicas round-robin;
+        results are replica-independent.  With 1 replica, a local
+        engine, and no cache this is exactly ``search_ivfpq``."""
         self._check_open()
         r = self._batch_rr % self.n_replicas
         self._batch_rr += 1
         return self.replicas[r].engine.search_batch(
             np.asarray(queries, np.float32))
 
-    # -- online API ---------------------------------------------------------
-    def submit(self, query, now: float) -> Request:
-        """Route one query and enqueue it on the chosen replica's
-        micro-batcher.  Returns the live Request (stamped when served)."""
-        self._check_open()
+    # -- async request lifecycle --------------------------------------------
+    def _route_and_submit(self, query, now: float,
+                          executor: bool) -> SearchFuture:
+        """The one submit path: route, enqueue, bind a future.  The
+        future is attached under the batcher lock, so an executor worker
+        can never serve the request before the future exists.
+
+        On the executor path, a pick landing on an unhealthy replica
+        (``ReplicaHealth``: too many consecutive batch failures) is
+        steered to the healthiest shallowest alternative, so a
+        permanently dying replica stops burning every routed request's
+        single retry.  The router's pick counts record the policy's
+        choice; ``stats()['health']`` shows who is being steered
+        around.  Like a heartbeat-dead host, a steered-around replica
+        receives no further traffic (nothing probes it), so it stays
+        out until an autoscaler shrink parks it or an operator resets
+        its health — the conservative choice for a replica that ate
+        ``max_consecutive`` batches in a row."""
         q = np.asarray(query, np.float32)
         r = self.router.route(q)
-        return self.replicas[r].runtime.submit(q, now)
+        if executor and not self.health.is_healthy(r):
+            with self._scale_lock:
+                alt = self._retry_target(exclude=r)
+            if alt is not None:
+                r = alt
+        cell: List[SearchFuture] = []
+
+        def attach(req: Request, r=r) -> None:
+            cell.append(SearchFuture(req, r))
+
+        if executor:
+            self._executors[r].submit(q, now=now, attach=attach)
+        else:
+            self.replicas[r].runtime.submit(q, now, attach=attach)
+        return cell[0]
+
+    def _ensure_executors(self, upto: Optional[int] = None) -> None:
+        """Stand up (or top up, after growth) one executor per replica
+        and start the first ``upto`` (default: the live set)."""
+        while len(self._executors) < len(self.replicas):
+            ridx = len(self._executors)
+            self._executors.append(ReplicaExecutor(
+                self.replicas[ridx].runtime, ridx,
+                on_batch_failure=self._on_batch_failure,
+                on_batch_success=self.health.record_success))
+        for ex in self._executors[:self._live if upto is None else upto]:
+            ex.start()
+
+    def submit_async(self, query,
+                     now: Optional[float] = None) -> SearchFuture:
+        """Route one query onto an executor-backed replica; returns a
+        :class:`SearchFuture` (``result(timeout)``, ``done()``,
+        ``timing()``).  First call starts the replica workers."""
+        self._check_open()
+        self._check_wall_ok("submit_async()")
+        self._ensure_executors()
+        t = float(now) if now is not None else time.monotonic()
+        return self._route_and_submit(query, t, executor=True)
+
+    # -- old sync surface: thin wrappers over the same lifecycle -----------
+    def submit(self, query, now: float) -> Request:
+        """Route one query and enqueue it on the chosen replica's
+        micro-batcher under the caller's (virtual) clock.  Returns the
+        live Request (stamped when served; its ``future`` resolves
+        then too).  Thin wrapper over the async lifecycle — drive
+        completion with :meth:`step`."""
+        self._check_open()
+        self._check_virtual_ok("submit()")
+        return self._route_and_submit(query, now, executor=False).request
 
     def step(self, now: float, drain: bool = False) -> List[Request]:
-        """Advance every replica's flush policy to time ``now``."""
+        """Advance every live replica's flush policy to time ``now``
+        (virtual-clock counterpart of the executor workers)."""
         self._check_open()
+        self._check_virtual_ok("step()")
         done: List[Request] = []
-        for rep in self.replicas:
+        for rep in self.live_replicas:
             done.extend(rep.runtime.step(now, drain=drain))
         return done
 
-    # -- offline stream simulation ------------------------------------------
-    def stream(self, arrivals: Sequence[Tuple[float, np.ndarray]]
-               ) -> List[Request]:
+    # -- fault tolerance (executor path) ------------------------------------
+    def _retry_target(self, exclude: int) -> Optional[int]:
+        """Healthy live replica with the shallowest queue, never the one
+        that just failed; None when the fleet has nowhere to go."""
+        cands = [r for r in self.health.healthy()
+                 if r < self._live and r != exclude]
+        if not cands:
+            return None
+        return min(cands, key=lambda r: self.replicas[r].queue_depth)
+
+    def _on_batch_failure(self, ridx: int, batch: MicroBatch,
+                          cause: BaseException) -> None:
+        """A replica died mid-batch: fail only that batch's requests,
+        retrying each once on another healthy replica."""
+        self.health.record_failure(ridx)
+        for req in batch.requests:
+            fut = req.future
+            if fut is None:
+                continue
+            with self._scale_lock:
+                target = (None if req.retried
+                          else self._retry_target(exclude=ridx))
+                if target is None:
+                    fut._fail(cause)
+                    continue
+                self._retries += 1
+
+                def attach(new_req: Request, fut=fut,
+                           target=target) -> None:
+                    fut._rebind(new_req, target)
+
+                # keep the original arrival stamp: the caller has been
+                # waiting since then, and stats/autoscaling must see the
+                # failover's real latency (the stale deadline also makes
+                # the retry flush immediately)
+                self._executors[target].submit(req.query,
+                                               now=req.t_arrival,
+                                               attach=attach)
+
+    # -- autoscaling ---------------------------------------------------------
+    def scale_to(self, n: int) -> None:
+        """Grow/shrink the live fleet to ``n`` replicas (LIFO).
+
+        Growth reuses parked replicas when available, else builds fresh
+        ones from the stashed spec context (warmed if the service was).
+        Shrink drains the tail executors (queued requests are served
+        before the worker parks) and drops their router heat.  Neighbor
+        sets are invariant across scale events — replicas are identical
+        by construction."""
+        self._check_open()
+        lo = self.spec.replicas
+        hi = self.spec.replicas_max or max(len(self.replicas), lo)
+        n = max(lo, min(int(n), hi))
+        if n == self._live:
+            return
+        if n > self._live:
+            with service_construction():
+                while len(self.replicas) < n:
+                    rep = self._build_replica(
+                        self.spec, self.index, self._scale_clusters(),
+                        self._sample_probes, self._serving_cfg)
+                    if self._warmed:
+                        rep.runtime.warmup(self.index.dim)
+                    self.replicas.append(rep)
+            self.health.resize(len(self.replicas))
+            if self._executors:
+                # executors must exist and run before _live admits them
+                # as retry targets (worker threads index _executors)
+                self._ensure_executors(upto=n)
+            with self._scale_lock:
+                self._live = n
+        else:
+            with self._scale_lock:
+                old_live = self._live
+                self._live = n   # retries must not target the tail...
+                tail = list(self._executors[n:old_live])
+            for ex in tail:      # ...then drain it outside the lock (a
+                ex.shutdown()    # failing worker may be waiting on it)
+        self.router.resize(self._live)
+
+    def _scale_clusters(self):
+        if self.spec.engine == "local" and self._clusters is None:
+            self._clusters = pad_clusters(self.index)
+        return self._clusters
+
+    def _autoscale_tick(self) -> None:
+        """One between-batches autoscaler evaluation (wall-clock stream
+        driver); applies the decision immediately."""
+        if self.autoscaler is None or not self._executors:
+            return
+        lat: List[float] = []
+        for rep in self.live_replicas:
+            lat.extend(rep.runtime.stats.recent_latencies(64))
+        signals = ScaleSignals(
+            queue_depths=[rep.queue_depth for rep in self.live_replicas],
+            p99_s=(_percentile(lat, 99) if lat else None))
+        target = self.autoscaler.decide(signals)
+        if target != self._live:
+            self.scale_to(target)
+
+    # -- stream drivers ------------------------------------------------------
+    def stream(self, arrivals: Sequence[Tuple[float, np.ndarray]],
+               clock: str = "virtual") -> List[Request]:
         """Replay (t_arrival, query) pairs across the replica fleet.
 
-        Multi-server discrete-event model: arrivals are routed in time
-        order, each replica serves its own flushed batches on its own
-        server-free clock (measured engine wall-clock charged onto the
-        virtual timeline), and deadline flushes fire in global time
-        order.  Returns requests in arrival order."""
+        One submit loop, two drivers:
+
+          * ``clock="virtual"`` — multi-server discrete-event model:
+            arrivals are routed in time order, each replica serves its
+            own flushed batches on its own server-free clock (measured
+            engine wall-clock charged onto the virtual timeline), and
+            deadline flushes fire in global time order.  Deterministic;
+            no threads.
+          * ``clock="wall"`` — the executor path in real time: arrival
+            gaps are slept, submits go through :meth:`submit_async`,
+            replica workers overlap, and (with ``replicas_max`` set)
+            the autoscaler moves the live fleet between batches.
+
+        Returns requests in arrival order (same neighbor sets under
+        either clock — pinned in tests)."""
         self._check_open()
-        reqs: List[Request] = []
-        free = [0.0] * self.n_replicas
-
-        def serve(r: int, batch: MicroBatch) -> None:
-            start = max(batch.t_flush, free[r])
-            served = self.replicas[r].runtime.serve_flushed(batch,
-                                                            t_start=start)
-            free[r] = served[0].t_done
-
-        def fire_deadlines(until: Optional[float] = None) -> None:
-            while True:
-                pend = [(rep.runtime.batcher.next_deadline(), ri)
-                        for ri, rep in enumerate(self.replicas)]
-                pend = [(d, ri) for d, ri in pend if d is not None]
-                if not pend:
-                    return
-                ddl, ri = min(pend)
-                if until is not None and ddl > until:
-                    return
-                batch = self.replicas[ri].runtime.batcher.poll(ddl)
-                if batch is None:
-                    return
-                serve(ri, batch)
-
-        for t, query in sorted(arrivals, key=lambda a: a[0]):
-            fire_deadlines(until=t)
-            q = np.asarray(query, np.float32)
-            r = self.router.route(q)
-            reqs.append(self.replicas[r].runtime.submit(q, now=t))
-            batch = self.replicas[r].runtime.batcher.poll(t)  # flush-on-full
-            if batch is not None:
-                serve(r, batch)
-        for ri, rep in enumerate(self.replicas):              # drain
-            b = rep.runtime.batcher
-            while b.depth:
-                batch = b.poll(b.next_deadline(), drain=True)
-                serve(ri, batch)
-        return reqs
+        if clock not in ("virtual", "wall"):
+            raise ValueError(f"stream clock must be 'virtual' or 'wall', "
+                             f"got {clock!r}")
+        if clock == "virtual":
+            self._check_virtual_ok("stream(clock='virtual')")
+        else:
+            self._check_wall_ok("stream(clock='wall')")
+        arrivals = sorted(arrivals, key=lambda a: a[0])
+        driver = (_WallStreamDriver(self) if clock == "wall"
+                  else _VirtualStreamDriver(self))
+        interval = self.spec.autoscale_interval
+        for i, (t, query) in enumerate(arrivals):
+            driver.advance_to(t)
+            driver.submit(query, t)
+            if clock == "wall" and (i + 1) % interval == 0:
+                self._autoscale_tick()
+        return driver.finish()
 
     # -- metrics -------------------------------------------------------------
     def stats(self) -> dict:
         """Per-replica runtime metrics plus fleet-level rollup: aggregate
         p50/p99 over all served requests, QPS over the global span,
-        summed LUT-cache hit rate, and the router's pick counts."""
+        summed LUT-cache hit rate, the router's pick counts, retry and
+        replica-health counters, and the autoscaler's event log."""
         per = [rep.runtime.metrics() for rep in self.replicas]
         lat: List[float] = []
         t0s, t1s = [], []
@@ -325,8 +589,96 @@ class AnnService:
             "p50_ms": _percentile(lat, 50) * 1e3,
             "p99_ms": _percentile(lat, 99) * 1e3,
             "qps": len(lat) / span if span > 0 else float("nan"),
+            "retries": self._retries,
         }
         if lookups:
             agg["lut_hit_rate"] = hits / lookups
-        return {"aggregate": agg, "router": self.router.stats(),
-                "replicas": per}
+        out = {"aggregate": agg, "router": self.router.stats(),
+               "health": self.health.stats(), "replicas": per}
+        if self.autoscaler is not None:
+            out["autoscaler"] = self.autoscaler.stats()
+        return out
+
+
+# ---------------------------------------------------------------------------
+# Stream drivers — one submit loop (in AnnService.stream), two clocks.
+# ---------------------------------------------------------------------------
+
+class _VirtualStreamDriver:
+    """Deterministic multi-server discrete-event replay (no threads):
+    per-replica server-free clocks, deadline flushes fired in global
+    time order, measured engine time charged onto the virtual
+    timeline."""
+
+    def __init__(self, svc: AnnService):
+        self.svc = svc
+        self.free = [0.0] * svc.n_replicas
+        self.reqs: List[Request] = []
+
+    def _serve(self, r: int, batch: MicroBatch) -> None:
+        start = max(batch.t_flush, self.free[r])
+        served = self.svc.replicas[r].runtime.serve_flushed(batch,
+                                                            t_start=start)
+        self.free[r] = served[0].t_done
+
+    def _fire_deadlines(self, until: Optional[float] = None) -> None:
+        reps = self.svc.live_replicas
+        while True:
+            pend = [(rep.runtime.batcher.next_deadline(), ri)
+                    for ri, rep in enumerate(reps)]
+            pend = [(d, ri) for d, ri in pend if d is not None]
+            if not pend:
+                return
+            ddl, ri = min(pend)
+            if until is not None and ddl > until:
+                return
+            batch = reps[ri].runtime.batcher.poll(ddl)
+            if batch is None:
+                return
+            self._serve(ri, batch)
+
+    def advance_to(self, t: float) -> None:
+        self._fire_deadlines(until=t)
+
+    def submit(self, query, t: float) -> None:
+        fut = self.svc._route_and_submit(query, t, executor=False)
+        req = fut.request
+        self.reqs.append(req)
+        r = req.replica
+        batch = self.svc.replicas[r].runtime.batcher.poll(t)  # flush-on-full
+        if batch is not None:
+            self._serve(r, batch)
+
+    def finish(self) -> List[Request]:
+        for ri, rep in enumerate(self.svc.live_replicas):     # drain
+            b = rep.runtime.batcher
+            while b.depth:
+                batch = b.poll(b.next_deadline(), drain=True)
+                self._serve(ri, batch)
+        return self.reqs
+
+
+class _WallStreamDriver:
+    """Real-time replay through the executor-backed replicas: arrival
+    gaps are slept, workers overlap, futures gate completion."""
+
+    def __init__(self, svc: AnnService):
+        self.svc = svc
+        svc._ensure_executors()
+        self.t0 = time.monotonic()
+        self.futures: List[SearchFuture] = []
+
+    def advance_to(self, t: float) -> None:
+        dt = (self.t0 + t) - time.monotonic()
+        if dt > 0:
+            time.sleep(dt)
+
+    def submit(self, query, t: float) -> None:
+        self.futures.append(self.svc.submit_async(query))
+
+    def finish(self) -> List[Request]:
+        for ex in self.svc._executors[:self.svc._live]:
+            ex.flush()
+        for fut in self.futures:
+            fut.result(timeout=120.0)
+        return [fut.request for fut in self.futures]

@@ -16,15 +16,29 @@ so a mis-wired spec fails at build time, not mid-stream.
 
 Everything is plain data — no engines are constructed here — so specs
 are cheap to sweep in benchmarks and trivially printable/loggable.
+
+Specs are also the durable deploy artifact: ``to_dict``/``from_dict``
+round-trip losslessly (``from_dict(to_dict(s)) == s``), and
+``save``/``load`` write/read JSON or YAML files (by extension), so
+``python -m repro.service --spec deploy.json`` and
+``launch/serve.py --ann --spec deploy.json`` boot identical fleets.
+Serialized specs carry ``version``; ``from_dict`` rejects unknown keys
+and unknown versions by name, so a typo'd deploy file fails loudly at
+load time instead of silently falling back to a default.
 """
 
 from __future__ import annotations
 
 import dataclasses
-from typing import Mapping, Optional, Tuple
+import json
+import pathlib
+from typing import Mapping, Optional, Tuple, Union
 
 _ENGINES = ("local", "sharded")
 _ROUTERS = ("round_robin", "least_queue", "cache_aware")
+
+#: serialization schema version; bump when fields change incompatibly
+SPEC_VERSION = 1
 
 
 @dataclasses.dataclass(frozen=True)
@@ -102,9 +116,26 @@ class ServiceSpec:
     router: str = "round_robin"   # "round_robin" | "least_queue" | "cache_aware"
     router_halflife_batches: float = 64.0  # cache_aware heat decay
 
+    # -- autoscaling (executor-backed streams) -----------------------------
+    # replicas_max > replicas arms the Autoscaler: the live fleet floats
+    # in [replicas, replicas_max] from queue-depth / p99 signals, applied
+    # between batches (results stay invariant across scale events).
+    replicas_max: int = 0                  # 0 = autoscaling off
+    autoscale_queue_high: float = 4.0      # mean depth/replica: grow above
+    autoscale_queue_low: float = 0.5       # ... shrink below
+    autoscale_p99_budget_ms: float = 0.0   # 0 = no latency signal
+    autoscale_cooldown: int = 8            # eval ticks between scale events
+    autoscale_interval: int = 8            # requests between evals
+
     # -- serving runtime ---------------------------------------------------
     buckets: Tuple[int, ...] = (1, 2, 4, 8, 16, 32)
     max_wait_s: float = 2e-3
+    # PIM-paced serving (hardware-in-the-loop): > 0 paces every replica's
+    # batches to the Eq. 15 modeled latency of a fleet of this many DPU
+    # ranks (UPMEM profile), so wall-clock serving experiments measure
+    # the modeled hardware's capacity instead of the dev box's cores.
+    # Results are unchanged — only service timing is.  0 = off.
+    pim_paced_ranks: int = 0
 
     # -- cache / heat ------------------------------------------------------
     cache_capacity: int = 0                # 0 = no entry bound
@@ -160,6 +191,30 @@ class ServiceSpec:
         if self.router_halflife_batches <= 0:
             raise ValueError("ServiceSpec.router_halflife_batches must be "
                              f"positive, got {self.router_halflife_batches}")
+        if self.replicas_max < 0:
+            raise ValueError(f"ServiceSpec.replicas_max must be >= 0, "
+                             f"got {self.replicas_max}")
+        if self.replicas_max and self.replicas_max < self.replicas:
+            raise ValueError(f"ServiceSpec.replicas_max "
+                             f"({self.replicas_max}) must be >= replicas "
+                             f"({self.replicas}) (or 0 to disable "
+                             f"autoscaling)")
+        if self.autoscale_queue_low >= self.autoscale_queue_high:
+            raise ValueError(f"ServiceSpec.autoscale_queue_low "
+                             f"({self.autoscale_queue_low}) must be < "
+                             f"autoscale_queue_high "
+                             f"({self.autoscale_queue_high})")
+        if self.autoscale_p99_budget_ms < 0:
+            raise ValueError("ServiceSpec.autoscale_p99_budget_ms must be "
+                             f">= 0, got {self.autoscale_p99_budget_ms}")
+        if self.autoscale_cooldown < 1 or self.autoscale_interval < 1:
+            raise ValueError("ServiceSpec.autoscale_cooldown and "
+                             ".autoscale_interval must be >= 1, got "
+                             f"cooldown={self.autoscale_cooldown} "
+                             f"interval={self.autoscale_interval}")
+        if self.pim_paced_ranks < 0:
+            raise ValueError(f"ServiceSpec.pim_paced_ranks must be >= 0, "
+                             f"got {self.pim_paced_ranks}")
         if self.engine != "sharded":
             # these all hang off the sharded engine's online heat loop
             for knob in ("relayout_every", "tune_tasks_per_shard",
@@ -200,3 +255,90 @@ class ServiceSpec:
             raise ValueError(f"ServiceSpec.relayout_every must be >= 0, "
                              f"got {self.relayout_every}")
         return self
+
+    # -- serialization: the durable deploy artifact ------------------------
+    def to_dict(self) -> dict:
+        """Plain-data form (JSON/YAML-ready), stamped with the schema
+        version.  Inverse of :meth:`from_dict`."""
+        out = dataclasses.asdict(self)
+        out["buckets"] = list(self.buckets)
+        if self.engine_overrides is not None:
+            out["engine_overrides"] = dict(self.engine_overrides)
+        out["version"] = SPEC_VERSION
+        return out
+
+    @classmethod
+    def from_dict(cls, data: Mapping) -> "ServiceSpec":
+        """Rebuild (and validate) a spec from :meth:`to_dict` output.
+
+        Unknown keys and unknown schema versions are rejected by name —
+        a deploy file written against a different field set must fail at
+        load, not boot a silently different fleet."""
+        data = dict(data)
+        version = data.pop("version", SPEC_VERSION)
+        if version != SPEC_VERSION:
+            raise ValueError(f"ServiceSpec version {version!r} is not "
+                             f"supported (this build reads version "
+                             f"{SPEC_VERSION})")
+        index = data.pop("index", None)
+        known = set(cls.__dataclass_fields__) - {"index"}
+        unknown = sorted(set(data) - known)
+        if unknown:
+            raise ValueError(f"ServiceSpec.from_dict: unknown keys "
+                             f"{unknown} (known: {sorted(known)})")
+        if index is not None:
+            if not isinstance(index, Mapping):
+                raise ValueError(f"ServiceSpec.from_dict: 'index' must be "
+                                 f"a mapping, got {type(index).__name__}")
+            iknown = set(IndexSpec.__dataclass_fields__)
+            iunknown = sorted(set(index) - iknown)
+            if iunknown:
+                raise ValueError(f"ServiceSpec.from_dict: unknown "
+                                 f"IndexSpec keys {iunknown}")
+            data["index"] = IndexSpec(**index)
+        if "buckets" in data:
+            data["buckets"] = tuple(int(b) for b in data["buckets"])
+        return cls(**data).validate()
+
+    def save(self, path: Union[str, pathlib.Path]) -> pathlib.Path:
+        """Write the spec as a deploy file; format follows the extension
+        (``.json``, or ``.yaml``/``.yml`` when PyYAML is available)."""
+        path = pathlib.Path(path)
+        data = self.to_dict()
+        if path.suffix in (".yaml", ".yml"):
+            yaml = _require_yaml(path)
+            path.write_text(yaml.safe_dump(data, sort_keys=True))
+        elif path.suffix == ".json":
+            path.write_text(json.dumps(data, indent=1, sort_keys=True)
+                            + "\n")
+        else:
+            raise ValueError(f"ServiceSpec.save: unsupported extension "
+                             f"{path.suffix!r} (use .json, .yaml, .yml)")
+        return path
+
+    @classmethod
+    def load(cls, path: Union[str, pathlib.Path]) -> "ServiceSpec":
+        """Read a deploy file written by :meth:`save` (or by hand)."""
+        path = pathlib.Path(path)
+        text = path.read_text()
+        if path.suffix in (".yaml", ".yml"):
+            yaml = _require_yaml(path)
+            data = yaml.safe_load(text)
+        elif path.suffix == ".json":
+            data = json.loads(text)
+        else:
+            raise ValueError(f"ServiceSpec.load: unsupported extension "
+                             f"{path.suffix!r} (use .json, .yaml, .yml)")
+        if not isinstance(data, Mapping):
+            raise ValueError(f"ServiceSpec.load: {path} does not contain "
+                             f"a mapping")
+        return cls.from_dict(data)
+
+
+def _require_yaml(path: pathlib.Path):
+    try:
+        import yaml
+    except ImportError as e:              # pragma: no cover - env-dependent
+        raise ValueError(f"{path}: YAML specs need PyYAML, which is not "
+                         f"installed — use a .json spec instead") from e
+    return yaml

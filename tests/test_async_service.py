@@ -1,0 +1,414 @@
+"""Async execution API v2: futures-based request lifecycle, wall-clock
+executor-backed streams (results identical to sync search), autoscaling
+across grow/shrink events, replica-failure retry, and ServiceSpec
+serialization (the durable deploy artifact)."""
+
+import dataclasses
+import threading
+
+import numpy as np
+import pytest
+
+from repro.runtime.fault_tolerance import ReplicaHealth
+from repro.service import (AnnService, Autoscaler, ScaleSignals,
+                           SPEC_VERSION, ServiceSpec)
+
+NPROBE = 8
+
+
+def _build(small_index, **spec_kwargs):
+    defaults = dict(engine="local", nprobe=NPROBE, k=10,
+                    buckets=(1, 2, 4), max_wait_s=1e-3)
+    defaults.update(spec_kwargs)
+    return AnnService.build(ServiceSpec(**defaults), index=small_index)
+
+
+# ---------------------------------------------------------------------------
+# Futures: the submit_async lifecycle
+# ---------------------------------------------------------------------------
+
+def test_future_result_and_timing(small_index, small_corpus):
+    queries = np.asarray(small_corpus.queries[:8], np.float32)
+    svc = _build(small_index, replicas=2, router="least_queue")
+    svc.warmup()
+    direct_d, direct_i = svc.search(queries)
+    futs = [svc.submit_async(queries[i]) for i in range(8)]
+    for i, fut in enumerate(futs):
+        d, ids = fut.result(timeout=30.0)
+        assert fut.done()
+        np.testing.assert_array_equal(ids, direct_i[i])
+        np.testing.assert_allclose(d, direct_d[i], rtol=1e-5)
+        t = fut.timing()
+        assert set(t) >= {"queue_s", "batch_s", "engine_s", "total_s",
+                          "replica", "retried"}
+        # the breakdown tiles the total lifecycle
+        assert t["total_s"] == pytest.approx(
+            t["queue_s"] + t["batch_s"] + t["engine_s"], abs=1e-9)
+        assert t["queue_s"] >= 0 and t["engine_s"] > 0
+        assert not t["retried"]
+        assert t["replica"] in (0, 1)
+    svc.shutdown()
+
+
+def test_future_timeout_fires(small_index, small_corpus):
+    """A future on a never-flushed queue times out rather than hanging:
+    use the virtual-clock path (no executor workers) so nothing serves."""
+    queries = np.asarray(small_corpus.queries[:1], np.float32)
+    svc = _build(small_index, replicas=1)
+    req = svc.submit(queries[0], now=0.0)          # virtual: nobody steps
+    with pytest.raises(TimeoutError, match="not served"):
+        req.future.result(timeout=0.05)
+    svc.step(now=1.0, drain=True)                  # now it completes
+    assert req.future.done()
+    svc.shutdown()
+
+
+def test_sync_submit_is_a_wrapper_over_the_future_lifecycle(small_index,
+                                                            small_corpus):
+    """The old virtual-clock submit/step surface rides the same request
+    lifecycle: the returned Request carries a future that resolves when
+    step() serves it, with the same timing breakdown."""
+    queries = np.asarray(small_corpus.queries[:4], np.float32)
+    svc = _build(small_index, replicas=2, router="round_robin",
+                 buckets=(2,), max_wait_s=1e-2)
+    svc.warmup()
+    reqs = [svc.submit(queries[i], now=0.0) for i in range(4)]
+    assert all(r.future is not None and not r.future.done() for r in reqs)
+    done = svc.step(now=0.0)
+    assert len(done) == 4
+    assert all(r.future.done() for r in reqs)
+    for r in reqs:
+        assert r.timing()["total_s"] >= 0.0
+    svc.shutdown()
+
+
+# ---------------------------------------------------------------------------
+# Wall-clock stream == sync search (acceptance)
+# ---------------------------------------------------------------------------
+
+def test_wall_stream_matches_sync_search(small_index, small_corpus):
+    queries = np.asarray(small_corpus.queries[:16], np.float32)
+    svc = _build(small_index, replicas=3, router="cache_aware",
+                 cache_capacity=512)
+    svc.warmup()
+    direct_d, direct_i = svc.search(queries)
+    stream = [(i * 1e-3, queries[i % 16]) for i in range(32)]
+    reqs = svc.stream(stream, clock="wall")
+    assert len(reqs) == 32
+    for i, r in enumerate(reqs):
+        np.testing.assert_array_equal(r.ids, direct_i[i % 16])
+        np.testing.assert_allclose(r.dists, direct_d[i % 16], rtol=1e-5)
+    st = svc.stats()
+    assert st["aggregate"]["requests"] == len(stream)
+    assert sum(st["router"]["picks"]) == len(stream)
+    svc.shutdown()
+
+
+def test_wall_and_virtual_streams_agree(small_index, small_corpus):
+    """One trace, both drivers: per-query neighbor sets identical."""
+    queries = np.asarray(small_corpus.queries[:8], np.float32)
+    stream = [(i * 1e-3, queries[i % 8]) for i in range(16)]
+    results = {}
+    for clock in ("virtual", "wall"):
+        svc = _build(small_index, replicas=2, router="round_robin")
+        svc.warmup()
+        reqs = svc.stream(stream, clock=clock)
+        results[clock] = [frozenset(r.ids.tolist()) for r in reqs]
+        svc.shutdown()
+    assert results["virtual"] == results["wall"]
+
+
+def test_stream_rejects_unknown_clock(small_index):
+    svc = _build(small_index, replicas=1)
+    with pytest.raises(ValueError, match="clock"):
+        svc.stream([], clock="sundial")
+    svc.shutdown()
+
+
+def test_virtual_apis_refuse_live_executors(small_index, small_corpus):
+    """Once executor workers are live they poll the batchers on the wall
+    clock; virtual-clock APIs must refuse instead of racing them."""
+    queries = np.asarray(small_corpus.queries[:2], np.float32)
+    svc = _build(small_index, replicas=1)
+    svc.warmup()
+    svc.submit_async(queries[0]).result(timeout=30.0)   # workers now live
+    with pytest.raises(RuntimeError, match="executor workers are live"):
+        svc.stream([(0.0, queries[0])])
+    with pytest.raises(RuntimeError, match="executor workers are live"):
+        svc.submit(queries[0], now=0.0)
+    with pytest.raises(RuntimeError, match="executor workers are live"):
+        svc.step(now=1.0)
+    # the wall driver still works
+    reqs = svc.stream([(0.0, queries[1])], clock="wall")
+    assert reqs[0].done
+    svc.shutdown()
+
+
+# ---------------------------------------------------------------------------
+# Autoscaling: grow/shrink mid-stream, results invariant (acceptance)
+# ---------------------------------------------------------------------------
+
+def test_autoscaler_decision_hysteresis():
+    a = Autoscaler(1, 3, queue_high=2.0, queue_low=0.5, cooldown=1)
+    assert a.decide(ScaleSignals([5])) == 2        # deep queue: grow
+    assert a.decide(ScaleSignals([5, 5])) == 3     # still deep: grow
+    assert a.decide(ScaleSignals([5, 5, 5])) == 3  # at max: hold
+    assert a.decide(ScaleSignals([1, 1, 1])) == 3  # hysteresis band: hold
+    assert a.decide(ScaleSignals([0, 0, 0])) == 2  # idle: shrink
+    assert a.decide(ScaleSignals([0, 0])) == 1
+    assert a.decide(ScaleSignals([0])) == 1        # at min: hold
+    st = a.stats()
+    assert st["grows"] == 2 and st["shrinks"] == 2
+    assert st["bounds"] == [1, 3]
+    # cooldown: back-to-back events are suppressed until it expires
+    b = Autoscaler(1, 3, queue_high=2.0, queue_low=0.5, cooldown=3)
+    assert b.decide(ScaleSignals([5])) == 2        # first event is armed
+    assert b.decide(ScaleSignals([5, 5])) == 2     # cooldown holds...
+    assert b.decide(ScaleSignals([5, 5])) == 2
+    assert b.decide(ScaleSignals([5, 5])) == 3     # ...then expires
+
+
+def test_autoscaler_p99_signal_and_validation():
+    a = Autoscaler(1, 2, queue_high=100.0, queue_low=0.01,
+                   p99_budget_s=0.010, cooldown=1)
+    assert a.decide(ScaleSignals([0], p99_s=0.5)) == 2   # SLO blown: grow
+    with pytest.raises(ValueError, match="max_replicas"):
+        Autoscaler(3, 2)
+    with pytest.raises(ValueError, match="queue_low"):
+        Autoscaler(1, 2, queue_high=1.0, queue_low=2.0)
+
+
+def test_wall_stream_with_autoscale_grow_and_shrink(small_index,
+                                                    small_corpus):
+    """Burst then trickle: the fleet grows under the burst, shrinks on
+    the quiet tail, and every request's neighbors still match the sync
+    search — the acceptance invariant across scale events."""
+    queries = np.asarray(small_corpus.queries[:16], np.float32)
+    # queue_low=0.5: at tick time the just-submitted request is still
+    # queued, so an idle 3-replica fleet reads mean depth 1/3
+    svc = _build(small_index, replicas=1, replicas_max=3,
+                 autoscale_queue_high=1.5, autoscale_queue_low=0.5,
+                 autoscale_cooldown=1, autoscale_interval=4,
+                 max_wait_s=3e-3)
+    svc.warmup()
+    direct_d, direct_i = svc.search(queries)
+    burst = [(i * 1e-4, queries[i % 16]) for i in range(48)]
+    tail_t0 = burst[-1][0]
+    tail = [(tail_t0 + 0.03 * (j + 1), queries[j % 16]) for j in range(16)]
+    reqs = svc.stream(burst + tail, clock="wall")
+    for i, r in enumerate(reqs):
+        np.testing.assert_array_equal(r.ids, direct_i[i % 16])
+        np.testing.assert_allclose(r.dists, direct_d[i % 16], rtol=1e-5)
+    st = svc.stats()
+    assert st["autoscaler"]["grows"] >= 1, st["autoscaler"]
+    assert st["autoscaler"]["shrinks"] >= 1, st["autoscaler"]
+    assert sum(st["router"]["picks"]) == len(reqs)
+    # live fleet stayed inside the spec bounds throughout
+    for ev in st["autoscaler"]["events"]:
+        assert 1 <= ev["n_after"] <= 3
+    svc.shutdown()
+
+
+def test_scale_to_bounds_and_router_follow(small_index, small_corpus):
+    svc = _build(small_index, replicas=1, replicas_max=3)
+    svc.warmup()
+    svc._ensure_executors()
+    svc.scale_to(5)                                # clamped to max
+    assert svc.n_replicas == 3
+    assert svc.router.n_replicas == 3
+    assert len(svc.replicas) == 3
+    svc.scale_to(0)                                # clamped to min
+    assert svc.n_replicas == 1
+    assert svc.router.n_replicas == 1
+    assert len(svc.replicas) == 3                  # parked, not destroyed
+    queries = np.asarray(small_corpus.queries[:4], np.float32)
+    d, i = svc.search(queries)                     # still serves
+    assert i.shape == (4, 10)
+    svc.shutdown()
+
+
+# ---------------------------------------------------------------------------
+# PIM-paced serving (hardware-in-the-loop timing model)
+# ---------------------------------------------------------------------------
+
+def test_pim_paced_changes_timing_not_results(small_index, small_corpus):
+    """pim_paced_ranks paces each batch to its Eq. 15 modeled latency:
+    neighbor results stay bit-identical to the unpaced service; served
+    engine time is at least the modeled floor."""
+    queries = np.asarray(small_corpus.queries[:8], np.float32)
+    plain = _build(small_index, replicas=1)
+    paced = _build(small_index, replicas=1, pim_paced_ranks=4)
+    d0, i0 = plain.search(queries)
+    d1, i1 = paced.search(queries)                 # bulk path: unpaced
+    np.testing.assert_array_equal(i1, i0)
+    np.testing.assert_array_equal(d1, d0)
+    paced.warmup()
+    engine = paced.replicas[0].runtime.engine
+    floor = engine.batch_latency_s(1)              # one-query batch model
+    assert floor > 0
+    reqs = paced.stream([(i * 1e-3, queries[i]) for i in range(8)],
+                        clock="wall")
+    for i, r in enumerate(reqs):
+        np.testing.assert_array_equal(r.ids, i0[i])
+        assert r.timing()["engine_s"] >= 0.9 * floor
+    assert engine.paced_batches >= 1
+    plain.shutdown()
+    paced.shutdown()
+
+
+# ---------------------------------------------------------------------------
+# Fault tolerance: a replica failing mid-batch (satellite)
+# ---------------------------------------------------------------------------
+
+class _FlakyEngine:
+    """Fails the first ``n_failures`` live batches, then recovers."""
+
+    def __init__(self, inner, n_failures=1):
+        self.inner = inner
+        self.k = inner.k
+        self.n_failures = n_failures
+        self.calls = 0
+        self.lock = threading.Lock()
+
+    def search_batch(self, queries, n_valid=None):
+        if n_valid is None or n_valid > 0:      # never fail warmup padding
+            with self.lock:
+                if self.calls < self.n_failures:
+                    self.calls += 1
+                    raise RuntimeError("injected PIM rank failure")
+        return self.inner.search_batch(queries, n_valid)
+
+
+def test_replica_failure_retries_on_another(small_index, small_corpus):
+    queries = np.asarray(small_corpus.queries[:8], np.float32)
+    svc = _build(small_index, replicas=2, router="round_robin",
+                 buckets=(1, 2), max_wait_s=1e-3)
+    svc.warmup()
+    direct_d, direct_i = svc.search(queries)
+    rep0 = svc.replicas[0]
+    flaky = _FlakyEngine(rep0.engine, n_failures=1)
+    rep0.engine = rep0.runtime.engine = flaky
+    futs = [svc.submit_async(queries[i]) for i in range(8)]
+    for i, fut in enumerate(futs):
+        d, ids = fut.result(timeout=30.0)      # failover is invisible
+        np.testing.assert_array_equal(ids, direct_i[i])
+    st = svc.stats()
+    assert st["aggregate"]["retries"] >= 1
+    assert st["health"]["failures"][0] >= 1
+    assert st["health"]["failures"][1] == 0
+    assert st["health"]["unhealthy"] == []     # one failure, then recovery
+    retried = [f for f in futs if f.timing()["retried"]]
+    assert retried and all(f.timing()["replica"] == 1 for f in retried)
+    svc.shutdown()
+
+
+def test_failure_with_no_retry_target_raises(small_index, small_corpus):
+    """Single-replica fleet: nowhere to retry — the future surfaces the
+    engine error instead of hanging."""
+    queries = np.asarray(small_corpus.queries[:2], np.float32)
+    svc = _build(small_index, replicas=1, buckets=(1,), max_wait_s=1e-4)
+    svc.warmup()
+    rep = svc.replicas[0]
+    flaky = _FlakyEngine(rep.engine, n_failures=100)
+    rep.engine = rep.runtime.engine = flaky
+    fut = svc.submit_async(queries[0])
+    with pytest.raises(RuntimeError, match="injected"):
+        fut.result(timeout=30.0)
+    assert svc.stats()["health"]["failures"][0] >= 1
+    svc.shutdown()
+
+
+def test_replica_health_tracker():
+    h = ReplicaHealth(3, max_consecutive=2)
+    assert h.healthy() == [0, 1, 2]
+    h.record_failure(1)
+    assert h.is_healthy(1)
+    h.record_failure(1)
+    assert not h.is_healthy(1)
+    assert h.healthy() == [0, 2]
+    h.record_success(1)                            # recovery resets
+    assert h.is_healthy(1)
+    assert h.stats()["failures"] == [0, 2, 0]
+    h.resize(5)
+    assert h.healthy() == [0, 1, 2, 3, 4]
+    h.resize(2)
+    assert h.n_replicas == 2
+
+
+# ---------------------------------------------------------------------------
+# ServiceSpec serialization (acceptance: lossless round-trip)
+# ---------------------------------------------------------------------------
+
+def _nondefault_spec():
+    return ServiceSpec(engine="sharded", replicas=2, replicas_max=4,
+                       router="cache_aware", nprobe=4, k=5,
+                       lut_dtype="uint8", n_shards=4, tasks_per_shard=256,
+                       relayout_every=8, heat_aware_admission=True,
+                       tune_tasks_per_shard=True,
+                       engine_overrides={"naive_layout": True},
+                       cache_capacity_bytes=1 << 20,
+                       buckets=(2, 8), max_wait_s=5e-3,
+                       autoscale_p99_budget_ms=12.5)
+
+
+@pytest.mark.parametrize("spec", [ServiceSpec(), _nondefault_spec()],
+                         ids=["default", "nondefault"])
+def test_spec_dict_roundtrip_lossless(spec):
+    d = spec.to_dict()
+    assert d["version"] == SPEC_VERSION
+    assert ServiceSpec.from_dict(d) == spec
+    # and the dict form is itself stable across a second trip
+    assert ServiceSpec.from_dict(d).to_dict() == d
+
+
+@pytest.mark.parametrize("suffix", [".json", ".yaml"])
+def test_spec_file_roundtrip(tmp_path, suffix):
+    spec = _nondefault_spec()
+    path = spec.save(tmp_path / f"deploy{suffix}")
+    assert ServiceSpec.load(path) == spec
+
+
+def test_spec_from_dict_rejects_unknown_and_versions():
+    spec = ServiceSpec()
+    with pytest.raises(ValueError, match="unknown keys.*'qs_per_node'"):
+        ServiceSpec.from_dict({**spec.to_dict(), "qs_per_node": 3})
+    with pytest.raises(ValueError, match="unknown IndexSpec keys"):
+        d = spec.to_dict()
+        d["index"]["n_list"] = 64
+        ServiceSpec.from_dict(d)
+    with pytest.raises(ValueError, match="version"):
+        ServiceSpec.from_dict({**spec.to_dict(), "version": 99})
+    with pytest.raises(ValueError, match="extension"):
+        spec.save("deploy.toml")
+    # a serialized spec still validates on load
+    with pytest.raises(ValueError, match="replicas_max"):
+        ServiceSpec.from_dict({**spec.to_dict(), "replicas": 3,
+                               "replicas_max": 2})
+
+
+def test_spec_validation_autoscale_fields():
+    ServiceSpec(replicas=2, replicas_max=4).validate()
+    ServiceSpec(replicas=2, replicas_max=0).validate()   # off
+    with pytest.raises(ValueError, match="autoscale_queue_low"):
+        ServiceSpec(autoscale_queue_low=5.0,
+                    autoscale_queue_high=1.0).validate()
+    with pytest.raises(ValueError, match="autoscale_cooldown"):
+        ServiceSpec(autoscale_cooldown=0).validate()
+
+
+def test_spec_file_boots_fleet(tmp_path, small_index, small_corpus):
+    """--spec acceptance: a saved deploy file stands up a working fleet
+    whose streamed results match its own sync search."""
+    path = ServiceSpec(engine="local", replicas=2, router="least_queue",
+                       nprobe=NPROBE, k=10, buckets=(1, 2, 4),
+                       max_wait_s=1e-3).save(tmp_path / "deploy.json")
+    svc = AnnService.build(ServiceSpec.load(path), index=small_index)
+    svc.warmup()
+    queries = np.asarray(small_corpus.queries[:8], np.float32)
+    direct_d, direct_i = svc.search(queries)
+    reqs = svc.stream([(i * 1e-3, queries[i]) for i in range(8)],
+                      clock="wall")
+    for i, r in enumerate(reqs):
+        np.testing.assert_array_equal(r.ids, direct_i[i])
+    assert svc.n_replicas == 2
+    svc.shutdown()

@@ -85,6 +85,35 @@ def test_fused_scan_topk_matches_unfused(small_index, small_corpus):
                                rtol=1e-4, atol=1e-3)
 
 
+def test_fused_scan_quantized_matches_plain_quantized(small_index):
+    """The dryrun's fused C-block scan with lut_dtype='uint8' must
+    produce the same distances as the unfused quantized DC (same
+    quantized LUT, same summation per block up to f32 order) — the
+    fused-scan quantized path is a dataflow rewrite, not a different
+    quantizer."""
+    import numpy as np
+    from repro.core.adc import (adc_distances_quantized, build_lut_batch,
+                                quantize_lut)
+    from repro.core.sharded_search import _fused_scan_topk
+    from repro.core.topk import topk_smallest
+    rng = np.random.default_rng(1)
+    t, c, m, cb = 6, 200, small_index.codebook.m, small_index.codebook.cb
+    res = jnp.asarray(rng.normal(0, 5, size=(t, small_index.dim))
+                      .astype(np.float32))
+    codes = jnp.asarray(rng.integers(0, cb, size=(t, c, m)).astype(np.int32))
+    ids = jnp.asarray(rng.integers(0, 10**6, size=(t, c)).astype(np.int32))
+    sizes = jnp.asarray(rng.integers(1, c + 1, size=(t,)).astype(np.int32))
+    qlut = quantize_lut(build_lut_batch(small_index.codebook, res))
+    d = adc_distances_quantized(qlut, codes, sizes, strategy="gather")
+    bd_ref, bi_ref = topk_smallest(d, ids, 10)
+    bd, bi = _fused_scan_topk(qlut, codes, ids, sizes, 10, block=64)
+    np.testing.assert_allclose(np.asarray(bd), np.asarray(bd_ref),
+                               rtol=1e-4, atol=1e-3)
+    for row in range(t):   # quantized ties may permute — compare sets
+        assert (set(np.asarray(bi)[row].tolist())
+                == set(np.asarray(bi_ref)[row].tolist()))
+
+
 def test_collective_bytes_parser():
     from repro.launch.roofline import collective_bytes_from_hlo
     hlo = """

@@ -214,6 +214,107 @@ def test_sharded_service_stream_matches_direct(small_index, small_corpus):
 
 
 # ---------------------------------------------------------------------------
+# Router bounded-load spill edges (cache_aware)
+# ---------------------------------------------------------------------------
+
+def _probes(*clusters):
+    return np.asarray(clusters, dtype=np.int64)
+
+
+def test_cache_aware_all_cold_ties_fall_back_to_least_queue():
+    """Cold caches score every replica 0.0 — an exact tie.  The spill
+    logic must not engage; ties resolve least-queue first, then rotate."""
+    from repro.service import CacheAwarePolicy
+    pol = CacheAwarePolicy(nlist=16, n_replicas=3)
+    # unequal queues: the shallowest wins while everyone is cold
+    assert pol.pick(None, _probes(1, 2), depths=[4, 0, 4]) == 1
+    pol.observe(1, _probes(1, 2))
+    # equal queues, still cold elsewhere: rotation spreads the ties
+    picks = set()
+    for _ in range(4):
+        r = pol.pick(None, _probes(9,), depths=[2, 2, 2])
+        picks.add(r)
+        pol.observe(r, _probes(9,))
+    assert len(picks) > 1                      # no single-replica collapse
+
+
+def test_cache_aware_single_replica_fleet_never_spills():
+    from repro.service import CacheAwarePolicy
+    pol = CacheAwarePolicy(nlist=16, n_replicas=1)
+    for i in range(32):
+        assert pol.pick(None, _probes(i % 16), depths=[i]) == 0
+        pol.observe(0, _probes(i % 16))
+    assert pol.assigned == [32]
+
+
+def test_cache_aware_overload_factor_one_is_fair_share_exact():
+    """overload_factor=1.0: any assignment beyond an even split spills
+    to the least-assigned replica, so when one replica's cache scores
+    strictly highest every pick, assignment counts still never diverge
+    by more than one request — fair share, exactly."""
+    from repro.service import CacheAwarePolicy
+    pol = CacheAwarePolicy(nlist=8, n_replicas=3, overload_factor=1.0)
+    for _ in range(16):                        # replica 0 is hot for all
+        pol.estimators[0].observe(np.arange(8).reshape(1, -1))
+    for i in range(30):
+        probes = _probes(i % 8)                # rotate: replica 0 stays
+        scores = [pol.expected_hit_rate(r, probes) for r in range(3)]
+        assert scores[0] == max(scores)        # the unique-best premise
+        r = pol.pick(None, probes, depths=[0, 0, 0])
+        pol.observe(r, probes)
+    assert max(pol.assigned) - min(pol.assigned) <= 1, pol.assigned
+    # below 1.0 the cap is unsatisfiable and must be rejected
+    with pytest.raises(ValueError, match="overload_factor"):
+        CacheAwarePolicy(nlist=16, n_replicas=3, overload_factor=0.9)
+
+
+def test_cache_aware_heat_decays_when_autoscaler_drains():
+    """Shrink drops the drained tail's heat outright; a replica re-grown
+    at that index starts cold instead of attracting its old traffic."""
+    from repro.service import CacheAwarePolicy
+    pol = CacheAwarePolicy(nlist=16, n_replicas=3)
+    for _ in range(8):
+        pol.observe(2, _probes(5, 6, 7))       # replica 2 owns 5/6/7
+    assert pol.expected_hit_rate(2, _probes(5, 6, 7)) == pytest.approx(1.0)
+    pol.resize(2)                              # autoscaler drains r2
+    assert len(pol.estimators) == 2 and len(pol.assigned) == 2
+    pol.resize(3)                              # ... later re-grows
+    assert pol.estimators[2].batches_observed == 0
+    assert pol.expected_hit_rate(2, _probes(5, 6, 7)) == 0.0
+    # hot probes now land on survivors, not the cold re-grown slot
+    r = pol.pick(None, _probes(5, 6, 7), depths=[0, 0, 0])
+    assert r in (0, 1) or pol.assigned[2] == 0
+
+
+def test_router_resize_keeps_drained_picks(small_index, small_corpus):
+    """Router.resize follows scale events: picks history survives a
+    shrink (stats must still sum to the request count), and the policy's
+    per-replica state follows the live fleet."""
+    queries = np.asarray(small_corpus.queries[:6], np.float32)
+    svc = AnnService.build(
+        ServiceSpec(engine="local", replicas=2, replicas_max=3,
+                    router="cache_aware", nprobe=NPROBE, k=10,
+                    buckets=(1, 2), max_wait_s=1e-3),
+        index=small_index)
+    svc.warmup()
+    svc._ensure_executors()
+    futs = [svc.submit_async(queries[i]) for i in range(4)]
+    for f in futs:
+        f.result(timeout=30.0)
+    svc.scale_to(3)
+    assert len(svc.router.policy.estimators) == 3
+    futs += [svc.submit_async(queries[4 + i]) for i in range(2)]
+    for f in futs[-2:]:
+        f.result(timeout=30.0)
+    svc.scale_to(2)                            # drain the grown replica
+    assert len(svc.router.policy.estimators) == 2
+    st = svc.stats()
+    assert sum(st["router"]["picks"]) == 6     # history survives the drain
+    assert st["router"]["live"] == 2
+    svc.shutdown()
+
+
+# ---------------------------------------------------------------------------
 # Deprecation shims
 # ---------------------------------------------------------------------------
 

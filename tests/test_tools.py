@@ -1,0 +1,66 @@
+"""tools/: bench_compare row diffing (the perf-regression trajectory)."""
+
+import json
+import pathlib
+import subprocess
+import sys
+
+ROOT = pathlib.Path(__file__).resolve().parents[1]
+sys.path.insert(0, str(ROOT / "tools"))
+
+import bench_compare  # noqa: E402
+
+
+def _snapshot(rows, suite="serving", error=None):
+    meta = {"elapsed_s": 1.0, "quick": True, "backend": "cpu"}
+    if error:
+        meta["error"] = error
+    return [{"suite": suite,
+             "rows": [{"name": n, "ms": ms, "note": ""}
+                      for n, ms in rows.items()],
+             "meta": meta}]
+
+
+def _write(tmp_path, name, payload):
+    p = tmp_path / name
+    p.write_text(json.dumps(payload))
+    return str(p)
+
+
+def test_compare_flags_regressions_and_improvements():
+    rep = bench_compare.compare(
+        old={"a": 10.0, "b": 10.0, "c": 10.0, "gone": 1.0},
+        new={"a": 10.5, "b": 20.0, "c": 5.0, "fresh": 2.0},
+        threshold=1.5)
+    assert rep["regressed"] == ["b"]           # 2.0x > 1.5x
+    assert rep["improved"] == ["c"]            # 0.5x < 1/1.5
+    assert rep["added"] == ["fresh"]           # new rows are never flagged
+    assert rep["removed"] == ["gone"]
+    assert rep["common"]["a"][2] == 1.05       # (old, new, ratio)
+
+
+def test_load_rows_skips_errored_suites(tmp_path):
+    snap = (_snapshot({"x": 1.0}) +
+            _snapshot({}, suite="kernels", error="Boom('x')"))
+    rows, errored = bench_compare.load_rows(
+        _write(tmp_path, "b.json", snap))
+    assert rows == {"x": 1.0}
+    assert errored == ["kernels"]
+
+
+def test_cli_exit_codes(tmp_path):
+    old = _write(tmp_path, "old.json", _snapshot({"a": 10.0, "b": 10.0}))
+    new = _write(tmp_path, "new.json", _snapshot({"a": 30.0, "b": 10.0}))
+    cmd = [sys.executable, str(ROOT / "tools" / "bench_compare.py")]
+    # report-only (the CI default): regressions never fail the step
+    out = subprocess.run(cmd + [old, new], capture_output=True, text=True)
+    assert out.returncode == 0, out.stderr
+    assert "REGRESS" in out.stdout and "1 regressed" in out.stdout
+    # the gate the ROADMAP will flip on once variance is charted
+    out = subprocess.run(cmd + [old, new, "--fail-on-regress"],
+                         capture_output=True, text=True)
+    assert out.returncode == 1
+    # identical snapshots pass the gate
+    out = subprocess.run(cmd + [old, old, "--fail-on-regress"],
+                         capture_output=True, text=True)
+    assert out.returncode == 0, out.stdout

@@ -1,0 +1,111 @@
+"""Diff two benchmark JSON snapshots (``benchmarks.run --json`` output).
+
+    python tools/bench_compare.py BENCH_quick.json BENCH_fresh.json \
+        [--threshold 1.5] [--fail-on-regress]
+
+Per row shared by both files, prints old/new ms and the ratio; rows
+slower than ``threshold`` x old are flagged ``REGRESS`` (and rows
+``1/threshold`` x faster flagged ``IMPROVE``) — the start of the
+regression-gate trajectory the ROADMAP asks for.  Rows present in only
+one file are listed as added/removed, never flagged: a new benchmark is
+not a regression.
+
+Exit code is 0 unless ``--fail-on-regress`` is given and at least one
+row regressed.  CI runs this as a *non-blocking* step against the
+committed ``BENCH_quick.json`` (CPU timing variance across runners is
+not yet understood well enough to gate merges — the ROADMAP tracks
+flipping ``--fail-on-regress`` on once it is).
+
+Schema per file: ``[{"suite": str, "rows": [{"name", "ms", "note"}],
+"meta": {...}}, ...]`` — suites that errored (``meta.error``) contribute
+no rows and are reported.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+from typing import Dict, Tuple
+
+
+def load_rows(path: str) -> Tuple[Dict[str, float], list]:
+    """{row name -> ms} plus the names of suites that errored."""
+    with open(path) as f:
+        suites = json.load(f)
+    rows: Dict[str, float] = {}
+    errored = []
+    for suite in suites:
+        if suite.get("meta", {}).get("error"):
+            errored.append(suite.get("suite", "?"))
+        for row in suite.get("rows", []):
+            rows[row["name"]] = float(row["ms"])
+    return rows, errored
+
+
+def compare(old: Dict[str, float], new: Dict[str, float],
+            threshold: float) -> dict:
+    """Row-by-row delta report: {common, regressed, improved, added,
+    removed}; ``common`` maps name -> (old_ms, new_ms, ratio)."""
+    common = {}
+    regressed, improved = [], []
+    for name in sorted(set(old) & set(new)):
+        o, n = old[name], new[name]
+        ratio = n / o if o > 0 else float("inf")
+        common[name] = (o, n, ratio)
+        if ratio > threshold:
+            regressed.append(name)
+        elif ratio < 1.0 / threshold:
+            improved.append(name)
+    return {
+        "common": common,
+        "regressed": regressed,
+        "improved": improved,
+        "added": sorted(set(new) - set(old)),
+        "removed": sorted(set(old) - set(new)),
+    }
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("old", help="baseline BENCH_*.json (e.g. committed)")
+    ap.add_argument("new", help="fresh BENCH_*.json to compare")
+    ap.add_argument("--threshold", type=float, default=1.5,
+                    help="flag rows slower than this ratio (default 1.5)")
+    ap.add_argument("--fail-on-regress", action="store_true",
+                    help="exit 1 when any row regressed (CI gate; off "
+                         "while run-to-run variance is being charted)")
+    args = ap.parse_args()
+    if args.threshold <= 1.0:
+        ap.error(f"--threshold must be > 1.0, got {args.threshold}")
+
+    old, old_err = load_rows(args.old)
+    new, new_err = load_rows(args.new)
+    rep = compare(old, new, args.threshold)
+
+    print(f"{'row':40s} {'old_ms':>10s} {'new_ms':>10s} {'ratio':>7s}")
+    for name, (o, n, ratio) in rep["common"].items():
+        flag = ("  REGRESS" if name in rep["regressed"]
+                else "  IMPROVE" if name in rep["improved"] else "")
+        print(f"{name:40s} {o:10.3f} {n:10.3f} {ratio:6.2f}x{flag}")
+    for name in rep["added"]:
+        print(f"{name:40s} {'-':>10s} {new[name]:10.3f}   added")
+    for name in rep["removed"]:
+        print(f"{name:40s} {old[name]:10.3f} {'-':>10s}   removed")
+    for label, errs in (("old", old_err), ("new", new_err)):
+        if errs:
+            print(f"# {label}: errored suites (no rows): {errs}")
+    print(f"# {len(rep['common'])} compared, {len(rep['regressed'])} "
+          f"regressed (> {args.threshold:.2f}x), {len(rep['improved'])} "
+          f"improved, {len(rep['added'])} added, {len(rep['removed'])} "
+          f"removed")
+    if args.fail_on_regress and rep["regressed"]:
+        return 1
+    return 0
+
+
+if __name__ == "__main__":
+    try:
+        sys.exit(main())
+    except BrokenPipeError:      # output piped into head/less and closed
+        sys.exit(0)
