@@ -40,6 +40,16 @@
                          dispatch the paper wins throughput with.
                          3 replicas must beat 1 by >= 1.5x QPS on the
                          same Zipf stream.
+  serve/mutate_r3      — the live index under churn: the same PIM-paced
+                         3-replica wall-clock fleet, but built
+                         ``mutable=True`` and serving the Zipf stream
+                         while a background thread interleaves
+                         upsert/delete batches and forces one
+                         maintenance generation swap mid-stream
+                         (split/merge/retrain + prepare/swap install).
+                         Searches never block on the swap, so p99
+                         should stay in the same regime as
+                         serve/async_r3.
 
 All timings are measured engine wall-clock charged onto a virtual-clock
 arrival trace (single-server model) — except the serve/async_* rows,
@@ -227,4 +237,65 @@ def run(quick: bool = False):
     out.append(row("serve/async_speedup", 1e-6 / speedup,
                    f"r3_over_r1={speedup:.2f}x_bar=1.5x"
                    f"_met={speedup >= 1.5}"))
+
+    # -- live mutation under paced wall-clock load ------------------------
+    # Builds its OWN service from the raw points (mutable=True rebuilds
+    # the index; the module-cached idx/clusters above must stay pristine
+    # for other rows).  A churn thread interleaves upsert/delete batches
+    # with the paced Zipf stream and forces one maintenance generation
+    # swap mid-stream; searches never block on the swap.
+    import threading
+    import time
+
+    from repro.service.spec import IndexSpec
+    pts = np.asarray(ds.points, np.float32)
+    mut_spec = ServiceSpec(
+        index=IndexSpec(nlist=idx.nlist, m=idx.codebook.m, cb=64,
+                        kmeans_iters=4, pq_iters=4),
+        engine="local", replicas=3, router="least_queue", nprobe=8,
+        k=10, pim_paced_ranks=4, mutable=True, buckets=(1, 2, 4, 8),
+        max_wait_s=2e-3)
+    svc = AnnService.build(mut_spec, points=pts)
+    svc.warmup()
+    mut_stream = _poisson_stream(pool, async_n, 8000.0, rng, skew=1.2)
+    stop = threading.Event()
+    churn_errors = []
+
+    def churn():
+        try:
+            r = np.random.default_rng(1)
+            base = pts.shape[0]
+            step = 0
+            while not stop.is_set():
+                ids = base + step * 16 + np.arange(16)
+                vecs = pts[r.integers(0, pts.shape[0], 16)]
+                vecs = vecs + r.normal(0.0, 1e-2, vecs.shape
+                                       ).astype(np.float32)
+                svc.upsert(ids, vecs)
+                if step == 3:        # one forced swap mid-stream
+                    svc.run_maintenance(force=True, wait=False)
+                svc.delete(ids[:8])
+                step += 1
+                time.sleep(2e-3)
+        except BaseException as e:   # surfaced after the stream
+            churn_errors.append(e)
+
+    churner = threading.Thread(target=churn, daemon=True)
+    churner.start()
+    try:
+        svc.stream(mut_stream, clock="wall")
+    finally:
+        stop.set()
+        churner.join()
+    if churn_errors:
+        raise churn_errors[0]
+    svc.run_maintenance(wait=True)   # join any in-flight cycle
+    st = svc.stats()
+    agg, mut = st["aggregate"], st["mutation"]
+    out.append(row(
+        "serve/mutate_r3", agg["p99_ms"] * 1e-3,
+        f"qps={agg['qps']:.0f}_p50_ms={agg['p50_ms']:.2f}"
+        f"_upserts={mut['upserts']}_deletes={mut['deletes']}"
+        f"_gen={mut['generation']}_nlist={mut['nlist']}"))
+    svc.shutdown()
     return out

@@ -42,7 +42,7 @@ def main():
         stats = eng.layout.stats(eng.latency)
         probes, _ = cluster_locate(ds.queries.astype(jnp.float32),
                                    eng.index.centroids, 8)
-        sched = eng._schedule(np.asarray(probes))
+        sched = eng.schedule(probes=np.asarray(probes))
         eng.carry = []
         print(f"{name}:")
         print(f"  recall@10={r:.3f}  layout imbalance="

@@ -7,6 +7,7 @@ from repro.core.kmeans import kmeans, kmeans_multi, l2_sq, assign_chunked
 from repro.core.pq import (PQCodebook, OPQCodebook, train_pq, train_opq,
                            encode_pq, decode_pq)
 from repro.core.ivf import IVFPQIndex, PaddedClusters, build_ivfpq, pad_clusters
+from repro.core.mutable_index import Index, MutationStats
 from repro.core.adc import (build_lut, build_lut_batch, build_lut_direct,
                             scan_codes, scan_codes_onehot, adc_distances,
                             QuantizedLUT, quantize_lut, dequantize_lut,
@@ -28,6 +29,7 @@ __all__ = [
     "PQCodebook", "OPQCodebook", "train_pq", "train_opq", "encode_pq",
     "decode_pq",
     "IVFPQIndex", "PaddedClusters", "build_ivfpq", "pad_clusters",
+    "Index", "MutationStats",
     "build_lut", "build_lut_batch", "build_lut_direct", "scan_codes",
     "scan_codes_onehot", "adc_distances",
     "QuantizedLUT", "quantize_lut", "dequantize_lut",

@@ -1,0 +1,671 @@
+"""Live IVF-PQ index: the unified ``Index`` front door + streaming mutation.
+
+Two jobs in one handle (ISSUE 6):
+
+  * **Front door** — ``Index`` owns everything the engines used to pass
+    around as loose tuples (CSR ``IVFPQIndex``, padded ``PaddedClusters``,
+    centroids/codebook/rotation, and now a generation counter).
+    ``IndexSpec.build(points) -> Index`` and ``Index.build(key, points,
+    ...)`` construct it; ``.ivf`` / ``.clusters`` expose the engine-ready
+    tensors; ``.search`` runs the five-phase pipeline directly.  Wrapping
+    a prebuilt ``IVFPQIndex`` is free and identity-preserving (``.ivf``
+    is the same object), so jit caches and bit-exactness pins survive.
+
+  * **Mutation** — built with ``mutable=True`` (raw vectors retained),
+    the handle supports ``upsert(ids, vectors)`` / ``delete(ids)`` and
+    background generation maintenance.  Upserts assign each vector to
+    its nearest live centroid (``kmeans.assign_chunked``), encode the
+    residual with the live PQ codebooks (``pq.encode_pq``), and append
+    to per-cluster padded code arrays.  Deletes use the same ``sizes``
+    masking discipline as the padding invariant: the cluster's last live
+    row is swap-compacted into the hole and ``sizes[c]`` decremented, so
+    a tombstone can never sit at a scanned position — masked rows never
+    reach the scan, the LUT cache, the heat estimator, or the router,
+    and id ``-1`` keeps meaning "padding" everywhere.
+
+Generation maintenance (``build_generation`` / ``install_generation``):
+clusters drifting past a size band are split (k-means k=2 over member
+vectors) or merged away (centroid dropped, members reassigned), PQ
+codebooks optionally retrained on fresh residuals, and every live vector
+re-assigned + re-encoded — all off the serving path on a snapshot taken
+under the handle lock.  ``install_generation`` reconciles mutations that
+landed after the snapshot (the ``_touched`` id set plus a live-id diff),
+swaps all state atomically, and bumps ``generation``; the service tier
+then installs the new tensors into every replica via the engines'
+double-buffered prepare/swap hooks and invalidates per-generation state
+(LUT caches, heat estimators, router affinity).
+
+Plain upserts/deletes do NOT invalidate LUT caches: a LUT depends only
+on (query, centroid, codebook), none of which move between generations.
+
+Concurrency model: one ``threading.RLock`` guards the mutable store;
+reads of the cached device snapshots (``clusters``/``ivf``) are
+lock-free attribute reads.  ``build_generation`` runs outside the lock
+(snapshot in, tensors out) so searches and mutations proceed during the
+rebuild; only the O(churn) reconcile in ``install_generation`` holds it.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import threading
+from typing import NamedTuple, Optional, Tuple
+
+import numpy as np
+
+from repro.core.ivf import IVFPQIndex, PaddedClusters, build_ivfpq, pad_clusters
+from repro.core.kmeans import assign_chunked, kmeans
+from repro.core.pq import PQCodebook, encode_pq, train_pq
+
+
+@dataclasses.dataclass
+class MutationStats:
+    """Cumulative mutation counters (one dict row in service stats)."""
+    upserts: int = 0
+    replaced: int = 0
+    deletes: int = 0
+    compactions: int = 0
+    splits: int = 0
+    merges: int = 0
+    retrains: int = 0
+    generations: int = 0
+
+    def as_dict(self) -> dict:
+        return dataclasses.asdict(self)
+
+
+def _round_up(n: int, multiple: int) -> int:
+    return max(-(-int(n) // multiple) * multiple, multiple)
+
+
+class _Store:
+    """Per-cluster padded numpy arrays + an id->(cluster, row) locator.
+
+    The mutable mirror of :class:`PaddedClusters`: codes (nlist, cap, M),
+    ids (nlist, cap) i32 with -1 marking free rows, sizes (nlist,) i32.
+    Rows [0, sizes[c]) are always live and contiguous — ``remove`` swaps
+    the cluster's last live row into the hole (``sizes`` IS the scan
+    mask, so a removed id is unreachable the instant it returns).
+    """
+
+    def __init__(self, codes: np.ndarray, ids: np.ndarray,
+                 sizes: np.ndarray, pad_multiple: int = 8):
+        self.codes = codes
+        self.ids = ids
+        self.sizes = sizes
+        self.pad_multiple = int(pad_multiple)
+        self.loc: dict = {}
+        for c in range(ids.shape[0]):
+            for r in range(int(sizes[c])):
+                self.loc[int(ids[c, r])] = (c, r)
+
+    @property
+    def nlist(self) -> int:
+        return self.codes.shape[0]
+
+    @property
+    def cap(self) -> int:
+        return self.codes.shape[1]
+
+    @property
+    def m(self) -> int:
+        return self.codes.shape[2]
+
+    @property
+    def n_live(self) -> int:
+        return int(self.sizes.sum())
+
+    @classmethod
+    def from_csr(cls, codes: np.ndarray, ids: np.ndarray,
+                 offsets: np.ndarray, nlist: int,
+                 pad_multiple: int = 8) -> "_Store":
+        sizes = (offsets[1:] - offsets[:-1]).astype(np.int32)
+        cap = _round_up(int(sizes.max(initial=1)), pad_multiple)
+        m = codes.shape[1]
+        out_codes = np.zeros((nlist, cap, m), codes.dtype)
+        out_ids = np.full((nlist, cap), -1, np.int32)
+        for c in range(nlist):
+            s = int(sizes[c])
+            out_codes[c, :s] = codes[offsets[c]:offsets[c] + s]
+            out_ids[c, :s] = ids[offsets[c]:offsets[c] + s]
+        return cls(out_codes, out_ids, sizes, pad_multiple)
+
+    @classmethod
+    def from_groups(cls, assign: np.ndarray, pids: np.ndarray,
+                    codes: np.ndarray, nlist: int,
+                    pad_multiple: int = 8) -> "_Store":
+        """Group (assign, pid, code) rows into a fresh store."""
+        sizes = np.bincount(assign, minlength=nlist)[:nlist].astype(np.int32)
+        cap = _round_up(int(sizes.max(initial=1)), pad_multiple)
+        m = codes.shape[1]
+        out_codes = np.zeros((nlist, cap, m), codes.dtype)
+        out_ids = np.full((nlist, cap), -1, np.int32)
+        cursor = np.zeros(nlist, np.int64)
+        for j in range(len(pids)):
+            c = int(assign[j])
+            r = int(cursor[c])
+            cursor[c] += 1
+            out_codes[c, r] = codes[j]
+            out_ids[c, r] = pids[j]
+        return cls(out_codes, out_ids, sizes, pad_multiple)
+
+    def _grow(self, needed: int) -> None:
+        new_cap = _round_up(max(needed, self.cap + self.cap // 2),
+                            self.pad_multiple)
+        codes = np.zeros((self.nlist, new_cap, self.m), self.codes.dtype)
+        ids = np.full((self.nlist, new_cap), -1, np.int32)
+        codes[:, :self.cap] = self.codes
+        ids[:, :self.cap] = self.ids
+        self.codes, self.ids = codes, ids
+
+    def append(self, c: int, pid: int, code: np.ndarray) -> None:
+        r = int(self.sizes[c])
+        if r >= self.cap:
+            self._grow(r + 1)
+        self.codes[c, r] = code
+        self.ids[c, r] = pid
+        self.sizes[c] = r + 1
+        self.loc[pid] = (c, r)
+
+    def remove(self, pid: int) -> bool:
+        """Swap-compact delete: the last live row fills the hole and the
+        size mask shrinks — never a mid-cluster tombstone."""
+        at = self.loc.pop(pid, None)
+        if at is None:
+            return False
+        c, r = at
+        last = int(self.sizes[c]) - 1
+        if r != last:
+            moved = int(self.ids[c, last])
+            self.codes[c, r] = self.codes[c, last]
+            self.ids[c, r] = moved
+            self.loc[moved] = (c, r)
+        self.codes[c, last] = 0
+        self.ids[c, last] = -1
+        self.sizes[c] = last
+        return True
+
+    def compact(self) -> bool:
+        """Shrink the padded capacity back to the live high-water mark
+        (rows are always contiguous, so this is a slice)."""
+        new_cap = _round_up(int(self.sizes.max(initial=1)),
+                            self.pad_multiple)
+        if new_cap >= self.cap:
+            return False
+        self.codes = np.ascontiguousarray(self.codes[:, :new_cap])
+        self.ids = np.ascontiguousarray(self.ids[:, :new_cap])
+        return True
+
+
+class _Generation(NamedTuple):
+    """A fully-built next index generation, pending installation."""
+    centroids: np.ndarray
+    codebook: PQCodebook
+    rotation: Optional[np.ndarray]
+    store: _Store
+    snapshot_ids: frozenset
+    splits: int
+    merges: int
+    retrained: bool
+
+
+class Index:
+    """The one index handle: spec-built or wrapped, static or mutable.
+
+    Static (default): a zero-copy wrapper over a prebuilt
+    :class:`IVFPQIndex` — ``.ivf`` is the same object, ``.clusters`` is
+    the cached ``pad_clusters`` output, mutation methods raise.
+
+    Mutable (``mutable=True`` + the raw ``points``): the handle owns
+    per-cluster padded code arrays, the raw vectors (keyed by id), and a
+    generation counter; see the module docstring for the mutation and
+    maintenance contracts.
+    """
+
+    def __init__(self, ivf: IVFPQIndex, *, points=None, mutable: bool = False,
+                 compact_threshold: float = 0.5, pad_multiple: int = 8):
+        self._ivf = ivf
+        self.mutable = bool(mutable)
+        self.generation = 0
+        self.stats = MutationStats()
+        self.compact_threshold = float(compact_threshold)
+        self._lock = threading.RLock()
+        self._clusters_cache: Optional[PaddedClusters] = None
+        self._csr_cache: Optional[IVFPQIndex] = ivf
+        self._view_cache: Optional[IVFPQIndex] = None
+        self._centroids_cache = ivf.centroids
+        if not self.mutable:
+            if points is not None and mutable is False:
+                pass        # points are only needed for the mutable store
+            return
+        if points is None:
+            raise ValueError("a mutable Index needs the raw points (vectors "
+                             "are re-encoded during maintenance)")
+        pts = np.asarray(points, np.float32)
+        ids_np = np.asarray(ivf.ids)
+        if ids_np.size and int(ids_np.max()) >= len(pts):
+            raise ValueError(f"index ids reference row {int(ids_np.max())} "
+                             f"but points has {len(pts)} rows")
+        self._centroids = np.asarray(ivf.centroids, np.float32)
+        self._codebook = ivf.codebook
+        self._rotation = (None if ivf.rotation is None
+                          else np.asarray(ivf.rotation, np.float32))
+        self._store = _Store.from_csr(np.asarray(ivf.codes), ids_np,
+                                      np.asarray(ivf.offsets), ivf.nlist,
+                                      pad_multiple)
+        self._vecs = {int(pid): pts[int(pid)].copy()
+                      for pid in self._store.loc}
+        self._touched: set = set()
+        self._removed_since_compact = 0
+
+    # -- construction ------------------------------------------------------
+    @classmethod
+    def build(cls, key, points, *, nlist: int, m: int, cb: int = 256,
+              kmeans_iters: int = 12, pq_iters: int = 12, opq: bool = False,
+              train_sample: Optional[int] = None, mutable: bool = False,
+              compact_threshold: float = 0.5) -> "Index":
+        """Build from raw points (``core.ivf.build_ivfpq`` under the
+        hood) and wrap in a handle — the unified front door."""
+        ivf = build_ivfpq(key, points, nlist=nlist, m=m, cb=cb,
+                          kmeans_iters=kmeans_iters, pq_iters=pq_iters,
+                          opq=opq, train_sample=train_sample)
+        return cls(ivf, points=points if mutable else None, mutable=mutable,
+                   compact_threshold=compact_threshold)
+
+    # -- read surface ------------------------------------------------------
+    @property
+    def ivf(self) -> IVFPQIndex:
+        """Engine-ready CSR snapshot.  Static: the wrapped object itself
+        (identity-preserving).  Mutable: rebuilt lazily after mutations."""
+        if not self.mutable:
+            return self._ivf
+        return self.to_ivfpq()
+
+    @property
+    def clusters(self) -> PaddedClusters:
+        """Engine-ready padded snapshot (cached until the next mutation)."""
+        import jax.numpy as jnp
+        if self._clusters_cache is None:
+            if not self.mutable:
+                self._clusters_cache = pad_clusters(self._ivf)
+            else:
+                with self._lock:
+                    st = self._store
+                    self._clusters_cache = PaddedClusters(
+                        jnp.asarray(st.codes), jnp.asarray(st.ids),
+                        jnp.asarray(st.sizes.astype(np.int32)))
+        return self._clusters_cache
+
+    @property
+    def search_view(self) -> IVFPQIndex:
+        """A lean CSR view for engines that scan ``clusters``: carries
+        centroids/codebook/rotation with empty code arrays, so its jit
+        input shapes are independent of N (no recompile per mutation)."""
+        import jax.numpy as jnp
+        if not self.mutable:
+            return self._ivf
+        if self._view_cache is None:
+            with self._lock:
+                m = self._store.m
+                dt = self._store.codes.dtype
+                self._view_cache = IVFPQIndex(
+                    jnp.asarray(self._centroids), self._codebook,
+                    jnp.zeros((0, m), dt), jnp.zeros((0,), jnp.int32),
+                    jnp.zeros((self.nlist + 1,), jnp.int32),
+                    None if self._rotation is None
+                    else jnp.asarray(self._rotation))
+        return self._view_cache
+
+    @property
+    def centroids(self):
+        if not self.mutable:
+            return self._ivf.centroids
+        import jax.numpy as jnp
+        if self._centroids_cache is None:
+            self._centroids_cache = jnp.asarray(self._centroids)
+        return self._centroids_cache
+
+    @property
+    def codebook(self) -> PQCodebook:
+        return self._codebook if self.mutable else self._ivf.codebook
+
+    @property
+    def rotation(self):
+        if not self.mutable:
+            return self._ivf.rotation
+        return None if self._rotation is None else self.search_view.rotation
+
+    @property
+    def nlist(self) -> int:
+        return (self._centroids.shape[0] if self.mutable
+                else self._ivf.nlist)
+
+    @property
+    def dim(self) -> int:
+        return (self._centroids.shape[1] if self.mutable
+                else self._ivf.dim)
+
+    @property
+    def sizes(self) -> np.ndarray:
+        """Live per-cluster sizes — the scan mask (tombstone-free)."""
+        if not self.mutable:
+            return np.asarray(self._ivf.sizes)
+        return self._store.sizes.copy()
+
+    def __len__(self) -> int:
+        return self._store.n_live if self.mutable else int(self._ivf.ids.shape[0])
+
+    def __contains__(self, pid) -> bool:
+        if not self.mutable:
+            return bool(np.any(np.asarray(self._ivf.ids) == int(pid)))
+        return int(pid) in self._store.loc
+
+    def live_ids(self) -> np.ndarray:
+        """All live point ids (sorted)."""
+        if not self.mutable:
+            return np.sort(np.asarray(self._ivf.ids))
+        with self._lock:
+            return np.array(sorted(self._store.loc), np.int64)
+
+    def vector(self, pid: int) -> np.ndarray:
+        self._require_mutable("vector")
+        return self._vecs[int(pid)].copy()
+
+    def to_ivfpq(self) -> IVFPQIndex:
+        """Current state as a CSR :class:`IVFPQIndex` (cached until the
+        next mutation) — what the sharded engine re-materializes from."""
+        import jax.numpy as jnp
+        if not self.mutable:
+            return self._ivf
+        if self._csr_cache is not None:
+            return self._csr_cache
+        with self._lock:
+            st = self._store
+            sizes = st.sizes.astype(np.int64)
+            n = int(sizes.sum())
+            codes = np.zeros((n, st.m), st.codes.dtype)
+            ids = np.zeros((n,), np.int32)
+            offsets = np.zeros(st.nlist + 1, np.int32)
+            pos = 0
+            for c in range(st.nlist):
+                s = int(sizes[c])
+                codes[pos:pos + s] = st.codes[c, :s]
+                ids[pos:pos + s] = st.ids[c, :s]
+                pos += s
+                offsets[c + 1] = pos
+            self._csr_cache = IVFPQIndex(
+                self.centroids, self._codebook, jnp.asarray(codes),
+                jnp.asarray(ids), jnp.asarray(offsets), self.rotation)
+        return self._csr_cache
+
+    def search(self, queries, params=None, *, nprobe: int = 8, k: int = 10):
+        """Front-door search: the five-phase pipeline over the handle's
+        current snapshot.  Returns ((Q, k) dists, (Q, k) ids) numpy."""
+        import jax.numpy as jnp
+        from repro.core.search import SearchParams, search_ivfpq
+        if params is None:
+            params = SearchParams(nprobe=nprobe, k=k)
+        d, i = search_ivfpq(self.search_view, self.clusters,
+                            jnp.asarray(np.asarray(queries, np.float32)),
+                            params)
+        return np.asarray(d), np.asarray(i)
+
+    # -- mutation ----------------------------------------------------------
+    def _require_mutable(self, what: str) -> None:
+        if not self.mutable:
+            raise RuntimeError(
+                f"Index.{what} needs a mutable index — build with "
+                f"IndexSpec.build(points, mutable=True) or "
+                f"Index.build(..., mutable=True)")
+
+    def _dirty(self) -> None:
+        self._clusters_cache = None
+        self._csr_cache = None
+
+    def upsert(self, ids, vectors) -> dict:
+        """Insert or replace vectors by id: assign to the nearest live
+        centroid, encode the residual with the live codebooks, append to
+        the cluster's padded rows (an existing id's old row is
+        swap-compacted out first).  Returns insert/replace counts."""
+        self._require_mutable("upsert")
+        import jax.numpy as jnp
+        pids = np.asarray(ids, np.int64).reshape(-1)
+        vecs = np.asarray(vectors, np.float32)
+        if vecs.ndim == 1:
+            vecs = vecs[None]
+        if vecs.shape != (len(pids), self.dim):
+            raise ValueError(f"upsert expects vectors ({len(pids)}, "
+                             f"{self.dim}), got {vecs.shape}")
+        if len(pids) == 0:
+            return {"n": 0, "inserted": 0, "replaced": 0,
+                    "generation": self.generation}
+        if pids.min() < 0 or pids.max() >= 2 ** 31:
+            raise ValueError("upsert ids must be int32-representable and "
+                             ">= 0 (-1 is the padding sentinel)")
+        while True:
+            # encode OUTSIDE the lock against a generation-stamped view;
+            # if a maintenance install swaps the quantizers mid-flight,
+            # loop and re-encode against the new ones
+            gen0 = self.generation
+            centroids, codebook, rotation = (self._centroids,
+                                             self._codebook, self._rotation)
+            assign, _ = assign_chunked(jnp.asarray(vecs),
+                                       jnp.asarray(centroids))
+            assign = np.asarray(assign)
+            residual = vecs - centroids[assign]
+            if rotation is not None:
+                residual = residual @ rotation
+            codes = np.asarray(encode_pq(codebook, jnp.asarray(residual)))
+            with self._lock:
+                if self.generation != gen0:
+                    continue
+                replaced = 0
+                for j, pid in enumerate(pids):
+                    pid = int(pid)
+                    if self._store.remove(pid):
+                        replaced += 1
+                        self._removed_since_compact += 1
+                    self._store.append(int(assign[j]), pid, codes[j])
+                    self._vecs[pid] = vecs[j].copy()
+                    self._touched.add(pid)
+                self.stats.upserts += len(pids)
+                self.stats.replaced += replaced
+                self._dirty()
+                return {"n": len(pids), "inserted": len(pids) - replaced,
+                        "replaced": replaced, "generation": self.generation}
+
+    def delete(self, ids) -> int:
+        """Remove ids from the live set.  Swap-compact: the size mask
+        shrinks immediately, so a deleted id is unreachable by the next
+        snapshot — it never appears in any search result.  Returns how
+        many of the given ids were actually live."""
+        self._require_mutable("delete")
+        pids = np.asarray(ids, np.int64).reshape(-1)
+        with self._lock:
+            removed = 0
+            for pid in pids:
+                if self._store.remove(int(pid)):
+                    self._vecs.pop(int(pid), None)
+                    self._touched.discard(int(pid))
+                    removed += 1
+            if removed:
+                self.stats.deletes += removed
+                self._removed_since_compact += removed
+                live = self._store.n_live
+                if (live > 0 and self._removed_since_compact
+                        >= self.compact_threshold * live):
+                    if self._store.compact():
+                        self.stats.compactions += 1
+                    self._removed_since_compact = 0
+                self._dirty()
+            return removed
+
+    # -- generation maintenance -------------------------------------------
+    def size_band(self, band: Optional[Tuple[int, int]] = None
+                  ) -> Tuple[int, int]:
+        """Resolve the cluster size band: an explicit (lo, hi), or the
+        auto band [mean/4, 4*mean] around the current mean live size."""
+        if band is not None:
+            lo, hi = int(band[0]), int(band[1])
+            if lo < 1 or hi <= lo:
+                raise ValueError(f"size band needs 1 <= lo < hi, "
+                                 f"got ({lo}, {hi})")
+            return lo, hi
+        mean = self._store.n_live / max(self.nlist, 1)
+        lo = max(1, int(mean / 4))
+        hi = max(int(np.ceil(mean * 4)), lo + 1, 8)
+        return lo, hi
+
+    def maintenance_plan(self, band: Optional[Tuple[int, int]] = None
+                         ) -> dict:
+        """Which clusters drifted outside the band right now."""
+        self._require_mutable("maintenance_plan")
+        lo, hi = self.size_band(band)
+        with self._lock:
+            sizes = self._store.sizes.copy()
+        return {"band": (lo, hi),
+                "split": [int(c) for c in np.nonzero(sizes > hi)[0]],
+                "merge": [int(c) for c in np.nonzero(sizes < lo)[0]]}
+
+    def build_generation(self, band: Optional[Tuple[int, int]] = None,
+                         retrain_pq: bool = True, kmeans_iters: int = 4,
+                         pq_iters: int = 4, seed: int = 0,
+                         train_sample: int = 16384) -> _Generation:
+        """Build the next generation off the serving path.
+
+        Snapshots (ids, vectors) under the lock, then — lock-free —
+        splits oversized clusters (k-means k=2 over members), drops
+        undersized centroids (members reassigned to the nearest
+        survivor), optionally retrains the PQ codebooks on fresh
+        residuals, and re-encodes every snapshotted vector.  Mutations
+        landing after the snapshot are reconciled at install time."""
+        self._require_mutable("build_generation")
+        import jax
+        import jax.numpy as jnp
+        with self._lock:
+            snap_ids = np.array(sorted(self._store.loc), np.int64)
+            snap_vecs = (np.stack([self._vecs[int(p)] for p in snap_ids])
+                         if len(snap_ids) else
+                         np.zeros((0, self.dim), np.float32))
+            centroids = self._centroids.copy()
+            codebook, rotation = self._codebook, self._rotation
+            lo, hi = self.size_band(band)
+            # post-snapshot mutations are replayed at install: reset the
+            # touched set so only genuinely-newer ids get re-encoded
+            self._touched = set()
+        snapshot = frozenset(int(p) for p in snap_ids)
+        key = jax.random.PRNGKey(seed)
+        if len(snap_ids) == 0:
+            store = _Store.from_groups(np.zeros(0, np.int64),
+                                       np.zeros(0, np.int64),
+                                       np.zeros((0, codebook.m),
+                                                self._store.codes.dtype),
+                                       centroids.shape[0])
+            return _Generation(centroids, codebook, rotation, store,
+                               snapshot, 0, 0, False)
+        assign, _ = assign_chunked(jnp.asarray(snap_vecs),
+                                   jnp.asarray(centroids))
+        assign = np.asarray(assign)
+        counts = np.bincount(assign, minlength=centroids.shape[0])
+        new_centroids = []
+        splits = merges = 0
+        for c in range(centroids.shape[0]):
+            if counts[c] > hi and counts[c] >= 2:
+                key, sub = jax.random.split(key)
+                km = kmeans(sub, jnp.asarray(snap_vecs[assign == c]), k=2,
+                            iters=kmeans_iters)
+                new_centroids.extend(np.asarray(km.centroids, np.float32))
+                splits += 1
+            elif counts[c] < lo:
+                merges += 1            # dropped; members reassign below
+            else:
+                new_centroids.append(centroids[c])
+        if not new_centroids:          # degenerate: everything undersized
+            new_centroids = [snap_vecs.mean(axis=0).astype(np.float32)]
+            merges = centroids.shape[0] - 1
+        new_centroids = np.stack(new_centroids).astype(np.float32)
+        assign2, _ = assign_chunked(jnp.asarray(snap_vecs),
+                                    jnp.asarray(new_centroids))
+        assign2 = np.asarray(assign2)
+        residual = snap_vecs - new_centroids[assign2]
+        if rotation is not None:
+            residual = residual @ rotation
+        retrained = False
+        if retrain_pq and len(snap_ids) >= codebook.cb:
+            train = residual
+            if len(train) > train_sample:
+                key, sub = jax.random.split(key)
+                sel = np.asarray(jax.random.choice(
+                    sub, len(train), shape=(train_sample,), replace=False))
+                train = train[sel]
+            codebook = train_pq(key, jnp.asarray(train), m=codebook.m,
+                                cb=codebook.cb, iters=pq_iters)
+            retrained = True
+        codes = np.asarray(encode_pq(codebook, jnp.asarray(residual)))
+        store = _Store.from_groups(assign2, snap_ids, codes,
+                                   new_centroids.shape[0],
+                                   self._store.pad_multiple)
+        return _Generation(new_centroids, codebook, rotation, store,
+                           snapshot, splits, merges, retrained)
+
+    def install_generation(self, gen: _Generation) -> dict:
+        """Reconcile post-snapshot mutations into the built generation,
+        then swap all state atomically and bump ``generation``.
+
+        Holds the lock for O(churn-since-snapshot): ids deleted since the
+        snapshot are removed from the new store; ids inserted or
+        re-upserted since (the ``_touched`` set) are re-encoded against
+        the new centroids/codebooks and appended."""
+        self._require_mutable("install_generation")
+        import jax.numpy as jnp
+        with self._lock:
+            live = self._store.loc
+            removed = [pid for pid in gen.snapshot_ids if pid not in live]
+            stale = sorted(pid for pid in self._touched if pid in live)
+            for pid in removed:
+                gen.store.remove(pid)
+            if stale:
+                vecs = np.stack([self._vecs[pid] for pid in stale])
+                assign, _ = assign_chunked(jnp.asarray(vecs),
+                                           jnp.asarray(gen.centroids))
+                assign = np.asarray(assign)
+                residual = vecs - gen.centroids[assign]
+                if gen.rotation is not None:
+                    residual = residual @ gen.rotation
+                codes = np.asarray(encode_pq(gen.codebook,
+                                             jnp.asarray(residual)))
+                for j, pid in enumerate(stale):
+                    gen.store.remove(pid)
+                    gen.store.append(int(assign[j]), pid, codes[j])
+            self._centroids = gen.centroids
+            self._codebook = gen.codebook
+            self._rotation = gen.rotation
+            self._store = gen.store
+            self._touched = set()
+            self._removed_since_compact = 0
+            self.generation += 1
+            self.stats.splits += gen.splits
+            self.stats.merges += gen.merges
+            self.stats.retrains += int(gen.retrained)
+            self.stats.generations += 1
+            self._dirty()
+            self._view_cache = None
+            self._centroids_cache = None
+            return {"generation": self.generation,
+                    "nlist": self.nlist,
+                    "splits": gen.splits, "merges": gen.merges,
+                    "retrained": gen.retrained,
+                    "reconciled_upserts": len(stale),
+                    "reconciled_deletes": len(removed)}
+
+    def run_maintenance(self, band: Optional[Tuple[int, int]] = None,
+                        force: bool = False, retrain_pq: bool = True,
+                        seed: int = 0) -> dict:
+        """Plan + build + install in one call (the service tier's
+        MutationCoordinator runs build on a background thread instead)."""
+        plan = self.maintenance_plan(band)
+        if not force and not plan["split"] and not plan["merge"]:
+            return {"ran": False, "plan": plan}
+        gen = self.build_generation(band, retrain_pq=retrain_pq, seed=seed)
+        info = self.install_generation(gen)
+        return {"ran": True, "plan": plan, **info}

@@ -467,12 +467,20 @@ class _Placement(NamedTuple):
     """One fully-materialized placement: layout + shard tensors + steps.
 
     Built off to the side by :meth:`DistributedEngine.prepare_layout`
-    (double buffering) and installed atomically by ``swap_layout``."""
+    (double buffering) and installed atomically by ``swap_layout``.
+
+    ``index``/``latency`` are set only by :meth:`prepare_index` (a live-
+    mutation generation swap): the placement then carries the NEW index
+    generation's CSR tensors and re-priced latency model, and installing
+    it also swaps ``engine.index`` and invalidates per-generation state
+    (LUT cache, heat estimator).  Plain re-layouts leave them None."""
     layout: Layout
     sindex: ShardedIndex
     cluster_of_host: np.ndarray
     step: Optional[object]
     step_lut: Optional[object]
+    index: Optional[IVFPQIndex] = None
+    latency: Optional[TaskLatencyModel] = None
 
 
 class DistributedEngine:
@@ -520,6 +528,7 @@ class DistributedEngine:
         self.tasks_controller = tasks_controller
         self.batches_served = 0
         self.relayouts = 0
+        self.generations = 0        # index generations installed (mutation)
         self._pending: Optional[_Placement] = None
         self._pending_heat: Optional[np.ndarray] = None
         self._swap_on_next_batch = False
@@ -527,18 +536,26 @@ class DistributedEngine:
         self._relayout_error: Optional[BaseException] = None
         self._build(self.heat)
 
-    def _materialize(self, heat: np.ndarray) -> _Placement:
+    def _materialize(self, heat: np.ndarray,
+                     index: Optional[IVFPQIndex] = None,
+                     latency: Optional[TaskLatencyModel] = None
+                     ) -> _Placement:
         """Build a placement from a heat vector without touching serving
-        state.  Cluster ids — and therefore LUT-cache keys — are stable
-        across rebuilds; only placement changes."""
-        sizes = np.asarray(self.index.sizes)
-        bytes_per_row = self.index.codebook.m + 4
+        state.  Plain re-layouts (``index=None``) place the engine's
+        current index: cluster ids — and therefore LUT-cache keys — are
+        stable across rebuilds; only placement changes.  A generation
+        swap passes the NEW index (+ re-priced latency model), which
+        rides inside the placement until install."""
+        idx = self.index if index is None else index
+        lat = self.latency if latency is None else latency
+        sizes = np.asarray(idx.sizes)
+        bytes_per_row = idx.codebook.m + 4
         layout = build_layout(
             sizes, heat, self.cfg.n_shards, split_max=self.cfg.split_max,
             dup_budget_bytes=self.cfg.dup_budget_bytes,
-            bytes_per_row=bytes_per_row, latency=self.latency,
+            bytes_per_row=bytes_per_row, latency=lat,
             naive=self.cfg.naive_layout)
-        sindex = materialize_shards(self.index, layout)
+        sindex = materialize_shards(idx, layout)
         step = step_lut = None
         if self.mesh is not None:
             step = make_sharded_step(self.mesh, sindex, k=self.cfg.k,
@@ -549,11 +566,19 @@ class DistributedEngine:
                 self.mesh, sindex, k=self.cfg.k, strategy=self.cfg.strategy,
                 use_kernels=self.cfg.use_kernels)
         return _Placement(layout, sindex, np.asarray(sindex.cluster_of),
-                          step, step_lut)
+                          step, step_lut, index=index,
+                          latency=None if index is None else lat)
 
     def _install(self, placement: _Placement) -> None:
         """Point the serving path at ``placement``.  Deferred-task carry
-        is dropped — callers re-issue via flush rounds."""
+        is dropped — callers re-issue via flush rounds.  A placement
+        carrying a new index generation also swaps the engine's index
+        and latency model (per-generation cache/heat invalidation is
+        handled by ``swap_layout``, the only caller that can see one)."""
+        if placement.index is not None:
+            self.index = placement.index
+            if placement.latency is not None:
+                self.latency = placement.latency
         self.layout = placement.layout
         self.sindex = placement.sindex
         self._cluster_of_host = placement.cluster_of_host
@@ -604,12 +629,26 @@ class DistributedEngine:
             raise ValueError("swap_layout: no pending placement "
                              "(call prepare_layout first)")
         before = self.layout.stats(self.latency)["imbalance"]
+        new_generation = self._pending.index is not None
         self.heat = self._pending_heat
         self._install(self._pending)
         self._pending = None
         self._pending_heat = None
         self._swap_on_next_batch = False
         self.relayouts += 1
+        if new_generation:
+            # per-generation invalidation: cluster ids changed meaning
+            # (splits/merges renumber) and codebooks may have retrained,
+            # so cached LUTs and decayed heat are both stale.  The
+            # estimator resets IN PLACE (admission policy and router hold
+            # references to it), seeded with the heat the new placement
+            # was built from so cold-start admission stays sane.
+            self.generations += 1
+            if self.lut_cache is not None:
+                self.lut_cache.clear()
+            if self.heat_estimator is not None:
+                self.heat_estimator.reset(nlist=self.index.nlist,
+                                          seed=self.heat)
         if self.tasks_controller is not None:
             # re-price the width prediction: split decisions (and so
             # tasks/query) may have changed with the new heat
@@ -621,6 +660,62 @@ class DistributedEngine:
         """prepare_layout + swap_layout in one synchronous call (the
         pre-double-buffering API, kept for direct callers)."""
         self.prepare_layout(heat)
+        return self.swap_layout()
+
+    # -- live-mutation generation swaps -----------------------------------
+    def prepare_index(self, index: IVFPQIndex,
+                      heat: Optional[np.ndarray] = None) -> None:
+        """Double-buffered *generation* swap, phase 1: materialize a
+        placement for a NEW index (mutated / split / merged / retrained
+        by the live-index maintenance loop) off to the side, while the
+        current generation keeps serving.
+
+        The latency model is re-priced for the new generation's size and
+        cluster count.  ``heat`` defaults to the online estimator's view
+        when the cluster count is unchanged, else to uniform (split/merge
+        renumbered the clusters, so old per-cluster heat is meaningless).
+        ``swap_layout`` installs it — swapping ``self.index`` too and
+        invalidating the LUT cache + heat estimator."""
+        from repro.core.perf_model import (IndexParams, UPMEM_PROFILE,
+                                           lut_width_bytes)
+        self._sync_relayout_thread()
+        self._swap_on_next_batch = False
+        nlist = index.nlist
+        if heat is None:
+            if (self.heat_estimator is not None
+                    and self.heat_estimator.nlist == nlist):
+                heat = self.heat_estimator.heat()
+            elif len(self.heat) == nlist:
+                heat = self.heat
+            else:
+                heat = np.full(nlist, self.cfg.nprobe / max(nlist, 1),
+                               np.float64)
+        sizes = np.asarray(index.sizes)
+        latency = make_task_latency_model(
+            IndexParams(n_total=int(sizes.sum()), nlist=nlist, q=1,
+                        d=index.dim, k=self.cfg.k, p=self.cfg.nprobe,
+                        m=index.codebook.m, cb=index.codebook.cb,
+                        b_lut=lut_width_bytes(self.cfg.lut_dtype)),
+            UPMEM_PROFILE)
+        self._pending_heat = np.asarray(heat, np.float64)
+        self._pending = self._materialize(self._pending_heat, index=index,
+                                          latency=latency)
+
+    def stage_index(self, index: IVFPQIndex,
+                    heat: Optional[np.ndarray] = None) -> None:
+        """prepare_index + install at the start of the next served batch
+        (the same ``_swap_on_next_batch`` hook periodic re-layout uses) —
+        the mutation coordinator's non-blocking install path: searches
+        never wait on a generation build."""
+        self.prepare_index(index, heat)
+        self._swap_on_next_batch = True
+
+    def install_index(self, index: IVFPQIndex,
+                      heat: Optional[np.ndarray] = None) -> dict:
+        """prepare_index + swap_layout in one synchronous call.  Callers
+        must not have searches in flight (the non-blocking path is
+        ``stage_index``)."""
+        self.prepare_index(index, heat)
         return self.swap_layout()
 
     def _sync_relayout_thread(self) -> None:
@@ -642,6 +737,11 @@ class DistributedEngine:
         scan/merge work.  ``_join_pending_relayout`` (next batch start)
         joins and swaps."""
         self._sync_relayout_thread()       # never two rebuilds in flight
+        if self._pending is not None and self._pending.index is not None:
+            # a staged index generation is waiting to swap: a periodic
+            # re-layout must not clobber it (the generation swap installs
+            # fresh heat anyway; relayout resumes on the new generation)
+            return
         heat = np.asarray(self.heat_estimator.heat(), np.float64)
 
         def build():
@@ -720,6 +820,7 @@ class DistributedEngine:
         """Engine-side counters surfaced in ServingRuntime.metrics()."""
         info = {"batches": self.batches_served,
                 "relayouts": self.relayouts,
+                "generations": self.generations,
                 "pending_relayout": self._pending is not None,
                 "tasks_per_shard": self.cfg.tasks_per_shard}
         if self.tasks_controller is not None:
@@ -729,6 +830,25 @@ class DistributedEngine:
         return info
 
     # -- online ------------------------------------------------------------
+    def schedule(self, probes: Optional[np.ndarray] = None, *,
+                 tasks_per_shard: Optional[int] = None,
+                 drain: bool = False) -> ShardSchedule:
+        """Public scheduling API: build one batch's static task tables
+        from the (Q, P) probed-cluster lists.
+
+        Keyword-first form of the long-private ``_schedule`` (whose
+        positional signature stays frozen for older call sites):
+        ``probes`` is required, ``tasks_per_shard`` overrides the
+        config's per-shard task cap for this call, and ``drain=True``
+        schedules a carry-only flush round (capacity cap kept, balance
+        filter off).  Deferred tasks land in ``self.carry`` exactly as
+        with the private spelling."""
+        if probes is None:
+            raise TypeError("schedule() requires probes=(Q, P) "
+                            "cluster ids from cluster_locate")
+        return self._schedule(np.asarray(probes),
+                              tasks_per_shard=tasks_per_shard, drain=drain)
+
     def _schedule(self, probes: np.ndarray,
                   tasks_per_shard: Optional[int] = None,
                   drain: bool = False) -> ShardSchedule:

@@ -69,6 +69,7 @@ class CacheStats:
     inserts: int = 0
     evictions: int = 0
     rejects: int = 0      # admission-denied inserts (heat-aware policy)
+    clears: int = 0       # whole-cache invalidations (generation swaps)
     # current content accounting (kept in sync by LRUCache on every
     # mutation — byte budgeting made the resident footprint a first-class
     # metric, not just the entry count)
@@ -86,8 +87,8 @@ class CacheStats:
     def as_dict(self) -> dict:
         return {"hits": self.hits, "misses": self.misses,
                 "inserts": self.inserts, "evictions": self.evictions,
-                "rejects": self.rejects, "entries": self.entries,
-                "bytes": self.bytes,
+                "rejects": self.rejects, "clears": self.clears,
+                "entries": self.entries, "bytes": self.bytes,
                 "hit_rate": round(self.hit_rate, 4)}
 
 
@@ -158,6 +159,30 @@ class OnlineHeatEstimator:
     def heat_of(self, cluster_id: int) -> float:
         return float(self._counts[int(cluster_id)] /
                      max(self._queries, 1e-12))
+
+    def reset(self, nlist: Optional[int] = None,
+              seed: Optional[np.ndarray] = None,
+              seed_weight: float = 32.0) -> None:
+        """Forget all decayed history *in place* — the per-generation
+        invalidation hook.  When index maintenance splits/merges
+        clusters, cluster ids change meaning, so stale heat must not
+        steer admission, layout, or routing; resetting in place (rather
+        than swapping the object) means every holder of this estimator —
+        cache admission policy, engine, router — sees the reset.
+        ``nlist`` resizes to the new generation's cluster count; ``seed``
+        optionally re-seeds (same semantics as the constructor)."""
+        if nlist is not None:
+            self.nlist = int(nlist)
+        self._counts = np.zeros(self.nlist, np.float64)
+        self._queries = 0.0
+        self.batches_observed = 0
+        if seed is not None:
+            seed = np.asarray(seed, np.float64)
+            if seed.shape != (self.nlist,):
+                raise ValueError(f"seed shape {seed.shape} != "
+                                 f"({self.nlist},)")
+            self._counts = seed * float(seed_weight)
+            self._queries = float(seed_weight)
 
 
 class HeatAwareAdmission(AdmissionPolicy):
@@ -301,6 +326,19 @@ class LRUCache:
         self.stats.inserts += 1
         self._sync_stats()
         return True
+
+    def clear(self) -> None:
+        """Drop every resident entry at once (generation invalidation:
+        a new index generation re-keys cluster ids and re-trains
+        codebooks, so the whole cache is stale).  Cumulative hit/miss/
+        insert/eviction counters are kept — a clear is a lifecycle
+        event, not an eviction storm — and content accounting re-syncs
+        to empty."""
+        self._od.clear()
+        self._size.clear()
+        self.bytes = 0
+        self.stats.clears += 1
+        self._sync_stats()
 
 
 def query_hash_bucket(query: np.ndarray,
@@ -500,6 +538,11 @@ class HotClusterLUTCache:
     def put_by_bucket(self, cluster_id: int, bucket: int,
                       lut: np.ndarray) -> None:
         self._lru.put((int(cluster_id), bucket), lut)
+
+    def clear(self) -> None:
+        """Generation invalidation: drop every cached LUT (see
+        :meth:`LRUCache.clear`)."""
+        self._lru.clear()
 
     def __len__(self) -> int:
         return len(self._lru)

@@ -158,6 +158,14 @@ class LocalEngine:
     misses (one batched ``build_lut_batch`` over the miss rows); RC/DC/TS
     are unchanged, so at exact granularity results are bit-identical to
     the uncached path.
+
+    Live-index support: ``(index, clusters)`` live in one ``_view`` tuple
+    read exactly once per batch, and ``install`` swaps the whole tuple —
+    a single atomic attribute store — so a mutation landing mid-batch
+    can never mix old centroids with new codes.  ``install`` with a new
+    *index* (a generation swap: centroids/codebooks changed) also bumps
+    the view generation that salts every LUT-cache bucket, so a stale
+    in-flight batch cannot poison the cache for the new generation.
     """
 
     def __init__(self, index: IVFPQIndex, clusters: PaddedClusters,
@@ -171,17 +179,54 @@ class LocalEngine:
                 f"lut_cache.lut_dtype={lut_cache.lut_dtype!r} disagrees "
                 f"with SearchParams.lut_dtype={params.lut_dtype!r}; cached "
                 f"and uncached scans must run the same dtype")
-        self.index = index
-        self.clusters = clusters
+        self._view = (index, clusters, 0)
         self.params = params
         self.lut_cache = lut_cache
         self.k = params.k
 
+    # the (index, clusters) pair is one atomic view; the split properties
+    # keep the long-standing attribute surface working
+    @property
+    def index(self) -> IVFPQIndex:
+        return self._view[0]
+
+    @index.setter
+    def index(self, index: IVFPQIndex) -> None:
+        self.install(index=index)
+
+    @property
+    def clusters(self) -> PaddedClusters:
+        return self._view[1]
+
+    @clusters.setter
+    def clusters(self, clusters: PaddedClusters) -> None:
+        self.install(clusters=clusters)
+
+    @property
+    def view_generation(self) -> int:
+        return self._view[2]
+
+    def install(self, index: Optional[IVFPQIndex] = None,
+                clusters: Optional[PaddedClusters] = None) -> None:
+        """Atomically swap the engine onto new index tensors.
+
+        ``clusters``-only installs are plain data mutations (upserts /
+        deletes): LUTs depend only on (query, centroid, codebook), so
+        cached entries stay valid.  Passing ``index`` means the
+        quantizers changed (a maintenance generation) — the view
+        generation is bumped so cache keys from older views can never be
+        hit again, even by a batch that was in flight across the swap."""
+        cur_index, cur_clusters, gen = self._view
+        self._view = (index if index is not None else cur_index,
+                      clusters if clusters is not None else cur_clusters,
+                      gen + 1 if index is not None else gen)
+
     def search_batch(self, queries: np.ndarray,
                      n_valid: Optional[int] = None
                      ) -> Tuple[np.ndarray, np.ndarray]:
+        index, clusters, _ = self._view
         if self.lut_cache is None:
-            d, i = search_ivfpq(self.index, self.clusters,
+            d, i = search_ivfpq(index, clusters,
                                 jnp.asarray(queries, jnp.float32),
                                 self.params)
             return np.asarray(d), np.asarray(i)
@@ -203,24 +248,27 @@ class LocalEngine:
         (>= n_valid) bypass the cache entirely — they must not occupy LRU
         slots or distort hit-rate accounting."""
         p = self.params
-        probes, flat_res = _cl_rc(jnp.asarray(queries), self.index.centroids,
-                                  self.index.rotation, nprobe=p.nprobe)
+        index, clusters, vgen = self._view    # one atomic read per batch
+        probes, flat_res = _cl_rc(jnp.asarray(queries), index.centroids,
+                                  index.rotation, nprobe=p.nprobe)
         probes_np = np.asarray(probes)                     # (Q, P)
         nq, npr = probes_np.shape
         flat_probes = probes_np.reshape(-1)
         n_valid_q = n_valid if n_valid is not None else nq
-        # one hash per (valid) query, reused across its nprobe cache keys
-        buckets = [self.lut_cache.bucket_of(queries[qi])
+        # one hash per (valid) query, reused across its nprobe cache
+        # keys; the view generation salts the bucket so entries from a
+        # superseded generation (older centroids/codebooks) can never hit
+        buckets = [(vgen, self.lut_cache.bucket_of(queries[qi]))
                    for qi in range(n_valid_q)]
         luts, miss_rows = lut_miss_scan(self.lut_cache, flat_probes,
                                         buckets, npr, nq * npr)
         if miss_rows:
             flat_res_np = np.asarray(flat_res)
-            lut_fill_misses(self.lut_cache, self.index.codebook, luts,
+            lut_fill_misses(self.lut_cache, index.codebook, luts,
                             miss_rows, flat_probes, buckets, npr,
                             flat_res_np[miss_rows])
         lut = stack_lut_bank(luts)            # (QP, M, CB) or QuantizedLUT
-        bd, bi = _dc_ts(lut, jnp.asarray(flat_probes), self.clusters,
+        bd, bi = _dc_ts(lut, jnp.asarray(flat_probes), clusters,
                         k=p.k, strategy=p.strategy, nprobe=npr)
         return np.asarray(bd), np.asarray(bi)
 

@@ -15,6 +15,7 @@ stream clocks); ``--spec deploy.json`` boots a fleet from a file.
 
 from repro.service.autoscale import Autoscaler, ScaleEvent, ScaleSignals
 from repro.service.executor import ReplicaExecutor, SearchFuture
+from repro.service.mutation import MutationCoordinator
 from repro.service.router import (CacheAwarePolicy, LeastQueuePolicy,
                                   RoundRobinPolicy, Router, RoutingPolicy,
                                   make_policy)
@@ -25,4 +26,5 @@ __all__ = ["AnnService", "Replica", "IndexSpec", "ServiceSpec",
            "SPEC_VERSION", "SearchFuture", "ReplicaExecutor",
            "Autoscaler", "ScaleSignals", "ScaleEvent",
            "Router", "RoutingPolicy", "RoundRobinPolicy",
-           "LeastQueuePolicy", "CacheAwarePolicy", "make_policy"]
+           "LeastQueuePolicy", "CacheAwarePolicy", "make_policy",
+           "MutationCoordinator"]

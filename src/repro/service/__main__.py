@@ -10,7 +10,10 @@ query trace, and asserts the service invariants end to end:
     under the virtual-clock simulator or the wall-clock executor path
     (``--clock virtual|wall``; CI runs both, with a hard timeout so an
     executor deadlock fails fast);
-  * every request was routed (pick counts sum to the request count).
+  * every request was routed (pick counts sum to the request count);
+  * live mutation: a ``mutable=True`` fleet upserts 64 vectors (>= 0.9
+    self-retrieval), deletes half (tombstones never in results, before
+    or after a forced maintenance generation swap).
 
 ``--spec deploy.json`` (or ``.yaml``) boots the same smoke fleet from a
 durable deploy file instead of the built-in specs —
@@ -103,6 +106,39 @@ def selftest(clock: str = "virtual") -> int:
           f"hit_rate={st3['aggregate'].get('lut_hit_rate', 0.0):.2f} "
           f"cache_bytes={cache_bytes}: OK")
     svc3.shutdown()
+
+    # -- live-index mutation: upsert / delete / maintenance ---------------
+    spec4 = ServiceSpec(engine="local", replicas=2, nprobe=4, k=5,
+                        mutable=True, buckets=(1, 2, 4), max_wait_s=1e-3)
+    svc4 = AnnService.build(spec4, points=np.asarray(ds.points))
+    new_ids = np.arange(2000, 2064)
+    new_vecs = np.asarray(ds.points[:64], np.float32) + 1e-2
+    svc4.upsert(new_ids, new_vecs)
+    _, i_m = svc4.search(new_vecs)
+    overlap = float(np.mean([new_ids[r] in np.asarray(i_m)[r]
+                             for r in range(len(new_ids))]))
+    assert overlap >= 0.9, f"upsert self-retrieval overlap {overlap:.2f}"
+    gone = new_ids[:32]
+    svc4.delete(gone)
+    _, i_d2 = svc4.search(new_vecs)
+    assert not np.isin(np.asarray(i_d2), gone).any(), \
+        "deleted ids surfaced in results"
+    kept = new_ids[32:]
+    kept_hits = float(np.mean([kept[r] in np.asarray(i_d2)[32 + r]
+                               for r in range(len(kept))]))
+    assert kept_hits >= 0.9, f"survivor retrieval {kept_hits:.2f}"
+    maint = svc4.run_maintenance(force=True)
+    assert maint["ran"], maint
+    _, i_g = svc4.search(new_vecs)
+    assert not np.isin(np.asarray(i_g), gone).any(), \
+        "deleted ids resurfaced after maintenance"
+    mstats = svc4.stats()["mutation"]
+    assert mstats["generation"] >= 1 and mstats["deletes"] == len(gone)
+    print(f"[selftest] mutation: upserted {len(new_ids)} "
+          f"(overlap={overlap:.2f}), deleted {len(gone)}, "
+          f"maintenance gen={mstats['generation']} "
+          f"nlist={mstats['nlist']}: OK")
+    svc4.shutdown()
     print(f"[selftest] repro.service OK (clock={clock})")
     return 0
 

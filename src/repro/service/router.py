@@ -68,6 +68,13 @@ class RoutingPolicy:
         replica that later re-joins at the same index starts cold
         instead of inheriting stale heat."""
 
+    def invalidate_clusters(self, nlist: int) -> None:
+        """A new index *generation* was installed (live-index maintenance
+        split/merged clusters and possibly retrained codebooks), so
+        cluster ids changed meaning and any per-cluster routing state is
+        stale.  ``nlist`` is the new generation's cluster count.
+        Stateless policies need nothing."""
+
 
 class RoundRobinPolicy(RoutingPolicy):
     name = "round_robin"
@@ -143,6 +150,15 @@ class CacheAwarePolicy(RoutingPolicy):
         else:
             del self.estimators[n_replicas:]
             del self.assigned[n_replicas:]
+
+    def invalidate_clusters(self, nlist: int) -> None:
+        """Generation swap: every replica's cache was cleared, so learned
+        affinity is void — reset each estimator in place at the new
+        cluster count (assignment counts survive: bounded-load spill is
+        about request spread, which the swap does not rewrite)."""
+        self.nlist = int(nlist)
+        for est in self.estimators:
+            est.reset(nlist=self.nlist)
 
     def expected_hit_rate(self, ridx: int, probes: np.ndarray) -> float:
         """Mean over probed clusters of min(heat_r(c), 1) — heat is
@@ -220,6 +236,11 @@ class Router:
         if len(self.picks) < n:
             self.picks += [0] * (n - len(self.picks))
         self.policy.resize(n)
+
+    def invalidate_clusters(self, nlist: int) -> None:
+        """Forward a generation swap to the policy (see
+        :meth:`RoutingPolicy.invalidate_clusters`)."""
+        self.policy.invalidate_clusters(int(nlist))
 
     def route(self, query: np.ndarray) -> int:
         probes = (self._probe_fn(query) if self.policy.wants_probes

@@ -61,11 +61,10 @@ import threading
 import time
 from typing import List, Optional, Sequence, Tuple
 
-import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core.ivf import IVFPQIndex, build_ivfpq, pad_clusters
+from repro.core.mutable_index import Index
 from repro.core.search import SearchParams, cluster_locate
 from repro.core.sharded_search import DistributedEngine, EngineConfig
 from repro.runtime.batching import MicroBatch, Request
@@ -103,10 +102,10 @@ class AnnService:
     takes already-constructed parts.
     """
 
-    def __init__(self, spec: ServiceSpec, index: IVFPQIndex,
+    def __init__(self, spec: ServiceSpec, index: Index,
                  replicas: Sequence[Replica], router: Router):
         self.spec = spec
-        self.index = index
+        self.index = index                 # the unified Index handle
         self.replicas: List[Replica] = list(replicas)
         self.router = router
         self.health = ReplicaHealth(len(self.replicas))
@@ -134,34 +133,48 @@ class AnnService:
         self._virtual_used = False   # clock-domain latch (see _check_*_ok)
         # scale-out context, stashed by build(); scale_to() rebuilds
         # replicas lazily from these when the fleet grows past the
-        # originally constructed set
-        self._clusters = None
+        # originally constructed set (cluster tensors come straight off
+        # the Index handle — always the current generation's)
         self._sample_probes = None
+        self._sample_queries = None
         self._serving_cfg = ServingConfig(buckets=tuple(spec.buckets),
                                           max_wait_s=spec.max_wait_s)
+        # mutation coordinator (wired by build() when spec.mutable)
+        self.mutator = None
 
     # -- construction ------------------------------------------------------
     @classmethod
     def build(cls, spec: ServiceSpec, points=None, *,
-              index: Optional[IVFPQIndex] = None,
-              sample_queries=None) -> "AnnService":
+              index=None, sample_queries=None) -> "AnnService":
         """Stand up the whole service from a validated spec.
 
         Either ``points`` (index built per ``spec.index``) or a prebuilt
-        ``index`` must be given.  ``sample_queries`` seeds the sharded
-        engine's heat estimate (falls back to a slice of the corpus)."""
+        ``index`` must be given — an :class:`~repro.core.mutable_index.
+        Index` handle, or a raw ``IVFPQIndex`` (wrapped transparently).
+        With ``spec.mutable`` the service is built over a *mutable*
+        handle (needs ``points``, or an already-mutable handle) and
+        ``upsert``/``delete``/``run_maintenance`` come alive.
+        ``sample_queries`` seeds the sharded engine's heat estimate
+        (falls back to a slice of the corpus)."""
         spec.validate()
         if index is None:
             if points is None:
                 raise ValueError("AnnService.build needs points or index")
-            index = build_ivfpq(
-                jax.random.PRNGKey(spec.index.seed), points,
-                nlist=spec.index.nlist, m=spec.index.m, cb=spec.index.cb,
-                kmeans_iters=spec.index.kmeans_iters,
-                pq_iters=spec.index.pq_iters, opq=spec.index.opq,
-                train_sample=spec.index.train_sample)
+            handle = spec.index.build(points, mutable=spec.mutable)
+        elif isinstance(index, Index):
+            handle = index
+            if spec.mutable and not handle.mutable:
+                raise ValueError(
+                    "spec.mutable=True needs a mutable Index handle — "
+                    "build one with IndexSpec.build(points, mutable=True)")
+        else:
+            # raw IVFPQIndex: wrap (identity-preserving for the static
+            # case; with spec.mutable the raw points must come along so
+            # maintenance can re-encode)
+            handle = Index(index, points=points, mutable=spec.mutable)
 
         sample_probes = None
+        sample_np = None
         if spec.engine == "sharded":
             sample = sample_queries
             if sample is None:
@@ -170,42 +183,46 @@ class AnnService:
                                      "(or points to fall back on) for the "
                                      "heat estimate")
                 sample = np.asarray(points)[:min(256, len(points))]
+            sample_np = np.asarray(sample, np.float32)
             probes, _ = cluster_locate(
-                jnp.asarray(np.asarray(sample, np.float32)),
-                index.centroids, spec.nprobe)
+                jnp.asarray(sample_np), handle.centroids, spec.nprobe)
             sample_probes = np.asarray(probes)
 
-        clusters = (pad_clusters(index) if spec.engine == "local" else None)
         serving_cfg = ServingConfig(buckets=tuple(spec.buckets),
                                     max_wait_s=spec.max_wait_s)
         replicas: List[Replica] = []
         with service_construction():
             for _ in range(spec.replicas):
                 replicas.append(cls._build_replica(
-                    spec, index, clusters, sample_probes, serving_cfg))
+                    spec, handle, sample_probes, serving_cfg))
 
         policy = make_policy(
-            spec.router, nlist=index.nlist, n_replicas=spec.replicas,
+            spec.router, nlist=handle.nlist, n_replicas=spec.replicas,
             halflife_batches=spec.router_halflife_batches)
 
         def probe_fn(q: np.ndarray) -> np.ndarray:
+            # read centroids through the handle so routing follows the
+            # live generation (maintenance may split/merge clusters)
             p, _ = cluster_locate(
                 jnp.asarray(np.asarray(q, np.float32)[None]),
-                index.centroids, spec.nprobe)
+                handle.centroids, spec.nprobe)
             return np.asarray(p)[0]
 
         svc = cls.__new__(cls)
         router = Router(policy, spec.replicas,
                         depth_fn=lambda r: svc.replicas[r].queue_depth,
                         probe_fn=probe_fn)
-        cls.__init__(svc, spec, index, replicas, router)
-        svc._clusters = clusters
+        cls.__init__(svc, spec, handle, replicas, router)
         svc._sample_probes = sample_probes
+        svc._sample_queries = sample_np
         svc._serving_cfg = serving_cfg
+        if spec.mutable:
+            from repro.service.mutation import MutationCoordinator
+            svc.mutator = MutationCoordinator(svc)
         return svc
 
     @staticmethod
-    def _build_replica(spec: ServiceSpec, index: IVFPQIndex, clusters,
+    def _build_replica(spec: ServiceSpec, index: Index,
                        sample_probes, serving_cfg: ServingConfig) -> Replica:
         def make_cache(admission=None):
             if not spec.cache_enabled:
@@ -239,7 +256,11 @@ class AnnService:
 
         if spec.engine == "local":
             cache = make_cache()
-            core = LocalEngine(index, clusters,
+            # search_view: for a static handle, the wrapped IVFPQIndex
+            # itself (bit-exact identity with direct search_ivfpq); for a
+            # mutable one, a lean view whose jit shapes are independent
+            # of N so mutations/generations never force recompiles
+            core = LocalEngine(index.search_view, index.clusters,
                                SearchParams(nprobe=spec.nprobe, k=spec.k,
                                             strategy=spec.strategy,
                                             lut_dtype=spec.lut_dtype),
@@ -261,7 +282,7 @@ class AnnService:
                           lut_dtype=spec.lut_dtype,
                           relayout_every=spec.relayout_every)
         cfg_kwargs.update(dict(spec.engine_overrides or {}))
-        core = DistributedEngine(index, EngineConfig(**cfg_kwargs),
+        core = DistributedEngine(index.to_ivfpq(), EngineConfig(**cfg_kwargs),
                                  sample_probes, lut_cache=cache,
                                  heat_estimator=est)
         if spec.tune_tasks_per_shard:
@@ -325,11 +346,50 @@ class AnnService:
     def shutdown(self) -> dict:
         """Drain the executors, close the service (subsequent calls
         raise) and return final stats."""
+        if self.mutator is not None:
+            self.mutator.close()
         for ex in self._executors:
             ex.shutdown()
         out = self.stats()
         self._closed = True
         return out
+
+    # -- mutation API --------------------------------------------------------
+    def _require_mutable(self, what: str):
+        if self.mutator is None:
+            raise RuntimeError(
+                f"AnnService.{what} needs a mutable service — build with "
+                f"ServiceSpec(mutable=True) and the points array")
+        return self.mutator
+
+    def upsert(self, ids, vectors) -> dict:
+        """Insert or replace vectors in the live index: assign to the
+        nearest centroid, encode with the live PQ codebooks, append to
+        the per-cluster code arrays, and install the new tensors on
+        every replica (centroids/codebooks unchanged, so LUT caches stay
+        valid).  Visible to the next search batch.  Returns insert/
+        replace counts (see :meth:`Index.upsert`)."""
+        self._check_open()
+        return self._require_mutable("upsert").upsert(ids, vectors)
+
+    def delete(self, ids) -> int:
+        """Remove ids from the live index (swap-compacted out of the
+        scan mask — a deleted id can never appear in a result) and
+        install on every replica.  Returns how many ids were live."""
+        self._check_open()
+        return self._require_mutable("delete").delete(ids)
+
+    def run_maintenance(self, force: bool = False, wait: bool = True
+                        ) -> dict:
+        """Run one cluster-maintenance cycle: split/merge clusters that
+        drifted past the spec's size band and retrain PQ codebooks,
+        building the next index generation on a background thread and
+        installing it via each engine's prepare/swap — searches never
+        block on the rebuild.  ``force=True`` rebuilds even when no
+        cluster is out of band; ``wait=False`` returns immediately."""
+        self._check_open()
+        return self._require_mutable("run_maintenance").run_maintenance(
+            force=force, wait=wait)
 
     # -- synchronous batch API ---------------------------------------------
     def search(self, queries) -> Tuple[np.ndarray, np.ndarray]:
@@ -482,7 +542,7 @@ class AnnService:
             with service_construction():
                 while len(self.replicas) < n:
                     rep = self._build_replica(
-                        self.spec, self.index, self._scale_clusters(),
+                        self.spec, self.index,
                         self._sample_probes, self._serving_cfg)
                     if self._warmed:
                         rep.runtime.warmup(self.index.dim)
@@ -502,11 +562,6 @@ class AnnService:
             for ex in tail:      # ...then drain it outside the lock (a
                 ex.shutdown()    # failing worker may be waiting on it)
         self.router.resize(self._live)
-
-    def _scale_clusters(self):
-        if self.spec.engine == "local" and self._clusters is None:
-            self._clusters = pad_clusters(self.index)
-        return self._clusters
 
     def _autoscale_tick(self) -> None:
         """One between-batches autoscaler evaluation (wall-clock stream
@@ -597,6 +652,8 @@ class AnnService:
                "health": self.health.stats(), "replicas": per}
         if self.autoscaler is not None:
             out["autoscaler"] = self.autoscaler.stats()
+        if self.mutator is not None:
+            out["mutation"] = self.mutator.stats()
         return out
 
 

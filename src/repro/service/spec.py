@@ -38,7 +38,15 @@ _ENGINES = ("local", "sharded")
 _ROUTERS = ("round_robin", "least_queue", "cache_aware")
 
 #: serialization schema version; bump when fields change incompatibly
-SPEC_VERSION = 1
+#: v1 -> v2: added `mutable` + `mutation_*` knobs (live-index mutation);
+#: v1 deploy files load unchanged (the new knobs default to off), but a
+#: v1-stamped file carrying v2-only keys is rejected by name.
+SPEC_VERSION = 2
+
+#: fields that did not exist in spec schema v1 (migration guard)
+_V2_FIELDS = frozenset({"mutable", "mutation_size_band",
+                        "mutation_maintenance_interval",
+                        "mutation_compact_threshold"})
 
 
 @dataclasses.dataclass(frozen=True)
@@ -62,6 +70,21 @@ class IndexSpec:
         if self.cb < 2:
             raise ValueError(f"IndexSpec.cb must be >= 2, got {self.cb}")
         return self
+
+    def build(self, points, *, mutable: bool = False):
+        """The unified index front door: build an
+        :class:`~repro.core.mutable_index.Index` handle from raw points.
+        With ``mutable=True`` the handle also retains the raw vectors and
+        supports ``upsert``/``delete`` + generation maintenance."""
+        import jax
+
+        from repro.core.mutable_index import Index
+        self.validate()
+        return Index.build(jax.random.PRNGKey(self.seed), points,
+                           nlist=self.nlist, m=self.m, cb=self.cb,
+                           kmeans_iters=self.kmeans_iters,
+                           pq_iters=self.pq_iters, opq=self.opq,
+                           train_sample=self.train_sample, mutable=mutable)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -145,6 +168,23 @@ class ServiceSpec:
     cache_granularity: Optional[float] = None
     heat_aware_admission: bool = False
 
+    # -- live mutation (spec schema v2) ------------------------------------
+    # mutable=True builds the service over a mutable Index handle: the
+    # raw vectors are retained and AnnService.upsert/delete/
+    # run_maintenance come alive (needs the points array at build time).
+    mutable: bool = False
+    # cluster size band (lo, hi) for the maintenance loop: clusters past
+    # hi are split (k-means k=2), clusters under lo merged away.
+    # (0, 0) = auto band [mean/4, 4*mean] around the live mean size.
+    mutation_size_band: Tuple[int, int] = (0, 0)
+    # run a maintenance check every N mutation calls; 0 = manual only
+    # (call AnnService.run_maintenance yourself)
+    mutation_maintenance_interval: int = 0
+    # repack padded cluster capacity once deletes have freed this
+    # fraction of the live set (capacity high-water compaction — deleted
+    # rows themselves are swap-compacted out immediately, tombstone-free)
+    mutation_compact_threshold: float = 0.5
+
     @property
     def cache_enabled(self) -> bool:
         return self.cache_capacity > 0 or self.cache_capacity_bytes > 0
@@ -215,6 +255,28 @@ class ServiceSpec:
         if self.pim_paced_ranks < 0:
             raise ValueError(f"ServiceSpec.pim_paced_ranks must be >= 0, "
                              f"got {self.pim_paced_ranks}")
+        band = tuple(self.mutation_size_band)
+        if len(band) != 2:
+            raise ValueError(f"ServiceSpec.mutation_size_band must be "
+                             f"(lo, hi), got {self.mutation_size_band!r}")
+        if band != (0, 0) and (band[0] < 1 or band[1] <= band[0]):
+            raise ValueError(f"ServiceSpec.mutation_size_band needs "
+                             f"1 <= lo < hi (or (0, 0) for the auto "
+                             f"band), got {band}")
+        if self.mutation_maintenance_interval < 0:
+            raise ValueError(f"ServiceSpec.mutation_maintenance_interval "
+                             f"must be >= 0, got "
+                             f"{self.mutation_maintenance_interval}")
+        if self.mutation_compact_threshold <= 0:
+            raise ValueError(f"ServiceSpec.mutation_compact_threshold "
+                             f"must be positive, got "
+                             f"{self.mutation_compact_threshold}")
+        if not self.mutable:
+            # the mutation knobs all hang off the mutable handle
+            if band != (0, 0) or self.mutation_maintenance_interval:
+                raise ValueError("ServiceSpec.mutation_size_band / "
+                                 ".mutation_maintenance_interval require "
+                                 "mutable=True")
         if self.engine != "sharded":
             # these all hang off the sharded engine's online heat loop
             for knob in ("relayout_every", "tune_tasks_per_shard",
@@ -262,6 +324,7 @@ class ServiceSpec:
         version.  Inverse of :meth:`from_dict`."""
         out = dataclasses.asdict(self)
         out["buckets"] = list(self.buckets)
+        out["mutation_size_band"] = list(self.mutation_size_band)
         if self.engine_overrides is not None:
             out["engine_overrides"] = dict(self.engine_overrides)
         out["version"] = SPEC_VERSION
@@ -276,7 +339,16 @@ class ServiceSpec:
         load, not boot a silently different fleet."""
         data = dict(data)
         version = data.pop("version", SPEC_VERSION)
-        if version != SPEC_VERSION:
+        if version == 1:
+            # v1 -> v2 migration: every v2-only field defaults to "off",
+            # so a clean v1 file loads as-is; a v1-stamped file that
+            # nonetheless carries v2 keys is lying about its version
+            leaked = sorted(set(data) & _V2_FIELDS)
+            if leaked:
+                raise ValueError(f"ServiceSpec version 1 file carries "
+                                 f"version-2 keys {leaked}; restamp it "
+                                 f"version: {SPEC_VERSION}")
+        elif version != SPEC_VERSION:
             raise ValueError(f"ServiceSpec version {version!r} is not "
                              f"supported (this build reads version "
                              f"{SPEC_VERSION})")
@@ -298,6 +370,9 @@ class ServiceSpec:
             data["index"] = IndexSpec(**index)
         if "buckets" in data:
             data["buckets"] = tuple(int(b) for b in data["buckets"])
+        if "mutation_size_band" in data:
+            data["mutation_size_band"] = tuple(
+                int(b) for b in data["mutation_size_band"])
         return cls(**data).validate()
 
     def save(self, path: Union[str, pathlib.Path]) -> pathlib.Path:

@@ -1,0 +1,438 @@
+"""Live-index mutation: upsert/delete semantics, churn recall parity,
+generation maintenance, fleet propagation, and the spec v2 schema.
+
+The headline test is churn parity: after a Zipf-skewed interleaved
+upsert/delete/search stream (including a maintenance generation swap),
+recall@10 of the mutated index must stay within 0.0035 of an index
+rebuilt from scratch over the same final alive set — the live path is
+allowed to be approximate (PQ codes encoded against live codebooks,
+clusters drifting past the size band between maintenance cycles) but not
+meaningfully worse than a full rebuild.
+"""
+
+import threading
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import (Index, SearchParams, build_ivfpq, pad_clusters,
+                        search_ivfpq)
+from repro.data import make_clustered_corpus
+from repro.runtime.cache import (HotClusterLUTCache, LRUCache,
+                                 OnlineHeatEstimator)
+from repro.service import (AnnService, IndexSpec, ServiceSpec,
+                           SPEC_VERSION)
+
+NPROBE = 8
+K = 10
+
+
+@pytest.fixture(scope="module")
+def churn_corpus():
+    # 5000 points: first 4000 are the base index, the tail is the
+    # insert pool the churn stream draws from
+    return make_clustered_corpus(3, n=5000, d=16, n_queries=32,
+                                 n_components=24, k_gt=K)
+
+
+def _build_mutable(points, seed=0, nlist=32):
+    return Index.build(jax.random.PRNGKey(seed), points, nlist=nlist,
+                       m=8, cb=64, kmeans_iters=4, pq_iters=4,
+                       mutable=True)
+
+
+def _overlap(retrieved, expected):
+    """Mean per-query |retrieved ∩ expected| / k over id sets."""
+    retrieved = np.asarray(retrieved)
+    expected = np.asarray(expected)
+    k = expected.shape[1]
+    return float(np.mean([
+        len(set(retrieved[q].tolist()) & set(expected[q].tolist())) / k
+        for q in range(expected.shape[0])]))
+
+
+# ---------------------------------------------------------------------------
+# Index front door
+# ---------------------------------------------------------------------------
+
+def test_static_handle_is_zero_copy(small_index):
+    """Wrapping a prebuilt IVFPQIndex must be identity, not a copy —
+    engines built from the handle stay bit-exact with engines built from
+    the raw index (pinned elsewhere)."""
+    h = Index(small_index)
+    assert h.ivf is small_index
+    assert h.search_view is small_index
+    assert not h.mutable
+    assert len(h) == small_index.ids.shape[0]
+    pc = pad_clusters(small_index)
+    np.testing.assert_array_equal(np.asarray(h.clusters.sizes),
+                                  np.asarray(pc.sizes))
+    with pytest.raises(RuntimeError):
+        h.upsert([0], np.zeros((1, small_index.centroids.shape[1])))
+    with pytest.raises(RuntimeError):
+        h.delete([0])
+
+
+def test_index_spec_build_front_door(churn_corpus):
+    pts = np.asarray(churn_corpus.points[:1000], np.float32)
+    spec = IndexSpec(nlist=8, m=8, cb=32, kmeans_iters=3, pq_iters=3)
+    h = spec.build(pts)
+    assert not h.mutable and len(h) == 1000 and h.nlist == 8
+    hm = spec.build(pts, mutable=True)
+    assert hm.mutable
+    hm.upsert([1000], pts[:1])
+    assert 1000 in hm and len(hm) == 1001
+
+
+def test_mutable_upsert_delete_semantics(churn_corpus):
+    pts = np.asarray(churn_corpus.points[:2000], np.float32)
+    h = _build_mutable(pts, nlist=16)
+    assert h.mutable and len(h) == 2000
+
+    # insert new ids
+    info = h.upsert(np.arange(2000, 2010), pts[:10] + 0.5)
+    assert info == {"n": 10, "inserted": 10, "replaced": 0,
+                    "generation": 0}
+    assert len(h) == 2010 and 2005 in h
+    np.testing.assert_allclose(h.vector(2005), pts[5] + 0.5)
+
+    # upsert an existing id = replace, not duplicate
+    info = h.upsert([5], pts[6:7])
+    assert info["replaced"] == 1 and info["inserted"] == 0
+    assert len(h) == 2010
+    np.testing.assert_allclose(h.vector(5), pts[6])
+
+    # delete returns the number actually removed; unknown ids are no-ops
+    assert h.delete([2000, 2001, 999999]) == 2
+    assert len(h) == 2008 and 2000 not in h
+    assert h.delete([2000]) == 0
+
+    # invalid ids rejected
+    with pytest.raises(ValueError):
+        h.upsert([-1], pts[:1])
+    with pytest.raises(ValueError):
+        h.upsert([0, 1], pts[:1])       # length mismatch
+
+
+# ---------------------------------------------------------------------------
+# Churn parity (the acceptance bar: within 0.0035 of a full rebuild)
+# ---------------------------------------------------------------------------
+
+def test_churn_recall_parity_vs_rebuild(churn_corpus):
+    ds = churn_corpus
+    pts = np.asarray(ds.points, np.float32)
+    base, pool = pts[:4000], pts[4000:]
+    queries = np.asarray(ds.queries, np.float32)
+    h = _build_mutable(base, seed=0)
+
+    # Zipf-skewed interleaved churn: inserts draw fresh ids from the
+    # pool, deletes prefer low ids (skewed, like hot-key churn), and a
+    # maintenance cycle runs mid-stream.
+    rng = np.random.default_rng(0)
+    next_id = 4000
+    live = set(range(4000))
+    for step in range(8):
+        n_ins = 32
+        take = rng.integers(0, pool.shape[0], n_ins)
+        ids = np.arange(next_id, next_id + n_ins)
+        h.upsert(ids, pool[take])
+        live.update(ids.tolist())
+        next_id += n_ins
+        # Zipf-ish victim choice over the live set
+        victims = np.asarray(sorted(live))
+        zipf_w = 1.0 / (1.0 + np.arange(victims.shape[0]))
+        kill = rng.choice(victims, size=16, replace=False,
+                          p=zipf_w / zipf_w.sum())
+        h.delete(kill)
+        live.difference_update(int(v) for v in kill)
+        # search mid-churn must never surface a dead id
+        _, i_mid = h.search(queries[:8], nprobe=NPROBE, k=K)
+        assert set(np.asarray(i_mid).reshape(-1).tolist()) <= live
+        if step == 4:
+            h.run_maintenance(force=True, seed=7)
+
+    assert set(int(p) for p in h.live_ids()) == live
+
+    # final alive set, in id order: groundtruth + rebuild baseline
+    alive_ids = np.asarray(sorted(live))
+    alive_vecs = np.stack([h.vector(int(p)) for p in alive_ids])
+    d2 = (np.sum(queries ** 2, 1)[:, None]
+          + np.sum(alive_vecs ** 2, 1)[None, :]
+          - 2.0 * queries @ alive_vecs.T)
+    gt_ids = alive_ids[np.argsort(d2, axis=1)[:, :K]]
+
+    rebuilt = build_ivfpq(jax.random.PRNGKey(0), alive_vecs, nlist=32,
+                          m=8, cb=64, kmeans_iters=4, pq_iters=4)
+    _, i_reb = search_ivfpq(rebuilt, pad_clusters(rebuilt),
+                            jnp.asarray(queries),
+                            SearchParams(nprobe=NPROBE, k=K))
+    r_rebuild = _overlap(alive_ids[np.asarray(i_reb)], gt_ids)
+
+    _, i_mut = h.search(queries, nprobe=NPROBE, k=K)
+    r_mut = _overlap(np.asarray(i_mut), gt_ids)
+
+    assert r_mut >= r_rebuild - 0.0035, \
+        f"churned recall {r_mut:.4f} vs rebuild {r_rebuild:.4f}"
+
+
+def test_tombstones_never_in_results(churn_corpus):
+    """Deletes are swap-compacted out of the scanned rows — a dead id
+    cannot appear at any nprobe, before or after maintenance."""
+    pts = np.asarray(churn_corpus.points[:2000], np.float32)
+    queries = np.asarray(churn_corpus.queries, np.float32)
+    h = _build_mutable(pts, nlist=16)
+    rng = np.random.default_rng(1)
+    dead = rng.choice(2000, size=400, replace=False)
+    h.delete(dead)
+    for nprobe in (1, 8, 16):
+        _, ids = h.search(queries, nprobe=nprobe, k=K)
+        assert not np.isin(np.asarray(ids), dead).any()
+    h.run_maintenance(force=True)
+    _, ids = h.search(queries, nprobe=16, k=K)
+    assert not np.isin(np.asarray(ids), dead).any()
+
+
+# ---------------------------------------------------------------------------
+# Maintenance: size band, split/merge, generation reconcile
+# ---------------------------------------------------------------------------
+
+def test_maintenance_splits_and_merges(churn_corpus):
+    pts = np.asarray(churn_corpus.points[:3000], np.float32)
+    h = _build_mutable(pts, nlist=16)
+    lo, hi = h.size_band()
+    assert 1 <= lo < hi
+
+    # force an oversized cluster: pile a tight blob onto one centroid.
+    # The auto band scales with total n (hi tracks 4x the mean size),
+    # so pin an explicit band the blown-up cluster clearly exceeds.
+    c0 = np.asarray(h.centroids)[0]
+    blob = c0[None, :] + np.random.default_rng(2).normal(
+        0, 1e-3, (600, pts.shape[1])).astype(np.float32)
+    h.upsert(np.arange(3000, 3600), blob)
+    band = (1, 400)
+    plan = h.maintenance_plan(band)
+    assert plan["split"], plan
+    out = h.run_maintenance(band)
+    assert out["ran"] and out["splits"] >= 1
+    assert h.generation == 1
+    # everything is still findable after the swap
+    _, ids = h.search(np.asarray(churn_corpus.queries, np.float32),
+                      nprobe=NPROBE, k=K)
+    assert np.asarray(ids).min() >= 0
+
+
+def test_generation_reconciles_concurrent_mutations(churn_corpus):
+    """Mutations that land between the maintenance snapshot and the
+    install must survive the swap (reconcile path)."""
+    pts = np.asarray(churn_corpus.points[:2000], np.float32)
+    h = _build_mutable(pts, nlist=16)
+    gen = h.build_generation(seed=3)          # snapshot taken here
+    late_ids = np.arange(2000, 2016)
+    h.upsert(late_ids, pts[:16] + 0.25)       # after the snapshot
+    h.delete(np.arange(100, 110))
+    info = h.install_generation(gen)
+    assert info["reconciled_upserts"] >= 1
+    assert info["reconciled_deletes"] >= 1
+    assert all(int(p) in h for p in late_ids)
+    assert 105 not in h
+    _, ids = h.search(pts[:16] + 0.25, nprobe=NPROBE, k=K)
+    hit = np.mean([late_ids[q] in np.asarray(ids)[q]
+                   for q in range(16)])
+    assert hit >= 0.9
+
+
+# ---------------------------------------------------------------------------
+# Service tier: fleet propagation, futures across a swap, sharded engine
+# ---------------------------------------------------------------------------
+
+def _mutable_service(points, *, engine="local", replicas=2, **kw):
+    spec = ServiceSpec(
+        index=IndexSpec(nlist=16, m=8, cb=32, kmeans_iters=4, pq_iters=4),
+        engine=engine, replicas=replicas, nprobe=NPROBE, k=K,
+        mutable=True, buckets=(1, 2, 4, 8), max_wait_s=1e-3, **kw)
+    return AnnService.build(spec, points=points)
+
+
+def test_service_mutations_replicate_local(churn_corpus):
+    pts = np.asarray(churn_corpus.points[:2000], np.float32)
+    svc = _mutable_service(pts, replicas=2)
+    try:
+        new_ids = np.arange(2000, 2032)
+        svc.upsert(new_ids, pts[:32] + 0.01)
+        # route enough queries that both replicas serve some
+        _, ids = svc.search(pts[:32] + 0.01)
+        assert _overlap(ids, new_ids[:, None]) >= 0.9
+        svc.delete(new_ids[:16])
+        _, ids = svc.search(pts[:32] + 0.01)
+        assert not np.isin(np.asarray(ids), new_ids[:16]).any()
+        out = svc.run_maintenance(force=True)
+        assert out["ran"]
+        _, ids = svc.search(pts[:32] + 0.01)
+        assert not np.isin(np.asarray(ids), new_ids[:16]).any()
+        st = svc.stats()["mutation"]
+        assert st["upserts"] == 32 and st["deletes"] == 16
+        assert st["generation"] == 1 and st["maintenance_runs"] == 1
+    finally:
+        svc.shutdown()
+
+
+def test_service_requires_mutable_flag(churn_corpus):
+    pts = np.asarray(churn_corpus.points[:1000], np.float32)
+    spec = ServiceSpec(
+        index=IndexSpec(nlist=8, m=8, cb=32, kmeans_iters=3, pq_iters=3),
+        engine="local", replicas=1, nprobe=4, k=5)
+    svc = AnnService.build(spec, points=pts)
+    try:
+        with pytest.raises(RuntimeError, match="mutable"):
+            svc.upsert([1000], pts[:1])
+        with pytest.raises(RuntimeError, match="mutable"):
+            svc.delete([0])
+        with pytest.raises(RuntimeError, match="mutable"):
+            svc.run_maintenance()
+    finally:
+        svc.shutdown()
+
+
+def test_maintenance_swap_preserves_inflight_futures(churn_corpus):
+    """Futures submitted before a forced generation swap must all
+    resolve — the swap never blocks or drops the serving path."""
+    pts = np.asarray(churn_corpus.points[:2000], np.float32)
+    queries = np.asarray(churn_corpus.queries, np.float32)
+    svc = _mutable_service(pts, replicas=2)
+    try:
+        svc.warmup()
+        futs = [svc.submit_async(queries[q % len(queries)])
+                for q in range(24)]
+        out = svc.run_maintenance(force=True, wait=True)
+        assert out["ran"]
+        live = set(int(p) for p in svc.index.live_ids())
+        for f in futs:
+            d, i = f.result(timeout=30.0)
+            assert i.shape == (K,) and np.isfinite(d).all()
+            assert set(int(p) for p in i) <= live
+    finally:
+        svc.shutdown()
+
+
+def test_sharded_service_mutation(churn_corpus):
+    pts = np.asarray(churn_corpus.points[:2000], np.float32)
+    svc = _mutable_service(pts, engine="sharded", replicas=1, n_shards=4)
+    try:
+        gens0 = svc.core_engine().serving_info()["generations"]
+        new_ids = np.arange(2000, 2032)
+        svc.upsert(new_ids, pts[:32] + 0.01)
+        _, ids = svc.search(pts[:32] + 0.01)
+        assert _overlap(ids, new_ids[:, None]) >= 0.9
+        svc.delete(new_ids[:16])
+        _, ids = svc.search(pts[:32] + 0.01)
+        assert not np.isin(np.asarray(ids), new_ids[:16]).any()
+        out = svc.run_maintenance(force=True)
+        assert out["ran"]
+        _, ids = svc.search(np.asarray(churn_corpus.queries, np.float32))
+        assert np.asarray(ids).min() >= 0
+        # staged installs happen at batch starts on the serving path
+        assert svc.core_engine().serving_info()["generations"] > gens0
+    finally:
+        svc.shutdown()
+
+
+# ---------------------------------------------------------------------------
+# Per-generation invalidation primitives
+# ---------------------------------------------------------------------------
+
+def test_lru_cache_clear_counts():
+    c = LRUCache(capacity=4)
+    c.put("a", np.zeros(4, np.float32))
+    c.put("b", np.zeros(4, np.float32))
+    assert c.stats.entries == 2
+    c.clear()
+    assert c.stats.entries == 0 and c.stats.bytes == 0
+    assert c.stats.clears == 1
+    assert c.get("a") is None
+    wrapped = HotClusterLUTCache(capacity=4)
+    wrapped.put_by_bucket(3, 7, np.zeros((4, 4), np.float32))
+    wrapped.clear()
+    assert wrapped.stats.entries == 0
+    assert wrapped.stats.clears == 1
+
+
+def test_heat_estimator_reset_resizes():
+    est = OnlineHeatEstimator(8, halflife_batches=4.0)
+    est.observe(np.array([[0, 1, 2]]))
+    assert est.heat().sum() > 0
+    est.reset(nlist=12)
+    assert est.nlist == 12 and est.heat().shape == (12,)
+    assert est.heat().sum() == 0 and est.batches_observed == 0
+    seed = np.full(12, 0.5)
+    est.reset(nlist=12, seed=seed)
+    assert est.heat().shape == (12,) and est.heat().sum() > 0
+
+
+@pytest.mark.filterwarnings("ignore::DeprecationWarning")
+def test_local_engine_view_generation(small_index, small_clusters):
+    from repro.runtime import LocalEngine
+    eng = LocalEngine(small_index, small_clusters,
+                      SearchParams(nprobe=4, k=5))
+    g0 = eng.view_generation
+    eng.install(clusters=small_clusters)     # data-only: same generation
+    assert eng.view_generation == g0
+    eng.install(index=small_index, clusters=small_clusters)
+    assert eng.view_generation == g0 + 1     # codebook/centroids changed
+
+
+# ---------------------------------------------------------------------------
+# Spec schema v2
+# ---------------------------------------------------------------------------
+
+def test_spec_v2_roundtrip():
+    spec = ServiceSpec(mutable=True, mutation_size_band=(4, 4000),
+                       mutation_maintenance_interval=64,
+                       mutation_compact_threshold=0.25)
+    d = spec.to_dict()
+    assert d["version"] == SPEC_VERSION == 2
+    assert d["mutation_size_band"] == [4, 4000]
+    assert ServiceSpec.from_dict(d) == spec
+
+
+def test_spec_v1_files_still_load():
+    """A v1 deploy file (no mutation keys) loads with mutation off."""
+    d = ServiceSpec().to_dict()
+    d["version"] = 1
+    for key in ("mutable", "mutation_size_band",
+                "mutation_maintenance_interval",
+                "mutation_compact_threshold"):
+        d.pop(key)
+    spec = ServiceSpec.from_dict(d)
+    assert not spec.mutable
+    assert spec.mutation_size_band == (0, 0)
+
+
+def test_spec_v1_with_v2_keys_rejected():
+    d = ServiceSpec(mutable=True).to_dict()
+    d["version"] = 1
+    with pytest.raises(ValueError, match="mutable"):
+        ServiceSpec.from_dict(d)
+
+
+def test_spec_mutation_validation():
+    with pytest.raises(ValueError, match="mutation_size_band"):
+        ServiceSpec(mutation_size_band=(5, 2)).validate()
+    with pytest.raises(ValueError, match="mutable"):
+        ServiceSpec(mutation_size_band=(2, 50)).validate()
+    with pytest.raises(ValueError, match="mutable"):
+        ServiceSpec(mutation_maintenance_interval=8).validate()
+    with pytest.raises(ValueError, match="mutation_compact_threshold"):
+        ServiceSpec(mutable=True,
+                    mutation_compact_threshold=0.0).validate()
+    # well-formed mutable spec passes
+    ServiceSpec(mutable=True, mutation_size_band=(2, 50),
+                mutation_maintenance_interval=8).validate()
+
+
+def test_spec_v2_save_load(tmp_path):
+    spec = ServiceSpec(mutable=True, mutation_maintenance_interval=32)
+    p = tmp_path / "deploy.json"
+    spec.save(p)
+    assert ServiceSpec.load(p) == spec

@@ -374,6 +374,25 @@ def test_schedule_tasks_per_shard_stays_optional_kwarg(small_index,
     assert sched2.query_idx.shape == (4, 64)
 
 
+def test_public_schedule_matches_private(small_index, sample_probes):
+    """The public keyword API (`schedule(probes=...)`) is a thin veneer
+    over `_schedule` — identical plans, and probes is required."""
+    eng = DistributedEngine(
+        small_index,
+        EngineConfig(n_shards=4, nprobe=NPROBE, k=10, tasks_per_shard=512),
+        sample_probes)
+    want = eng._schedule(sample_probes[:4], tasks_per_shard=64)
+    eng.carry = []
+    got = eng.schedule(probes=sample_probes[:4], tasks_per_shard=64)
+    eng.carry = []
+    np.testing.assert_array_equal(np.asarray(got.query_idx),
+                                  np.asarray(want.query_idx))
+    np.testing.assert_array_equal(np.asarray(got.slot_idx),
+                                  np.asarray(want.slot_idx))
+    with pytest.raises(TypeError):
+        eng.schedule()
+
+
 # ---------------------------------------------------------------------------
 # Double-buffered re-layout
 # ---------------------------------------------------------------------------
