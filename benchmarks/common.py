@@ -48,5 +48,12 @@ def timeit(fn, *args, warmup=1, iters=3):
     return float(np.median(ts))
 
 
-def row(name: str, seconds: float, derived) -> str:
-    return f"{name},{seconds * 1e6:.1f},{derived}"
+def row(name: str, seconds: float, derived, stable: bool = False) -> str:
+    """One CSV bench row: ``name,us_per_call,stable,derived``.
+
+    ``stable=True`` tags rows whose timing is run-stable on this
+    container (PIM-paced rows: service time is the Eq. 15 model, not
+    host scheduling) — only tagged rows may be gated by
+    ``tools/bench_compare.py --fail-on-regress``; untagged rows swing
+    0.1-5x run-to-run and are reported, never gated."""
+    return f"{name},{seconds * 1e6:.1f},{int(bool(stable))},{derived}"

@@ -1,12 +1,18 @@
-# One function per paper table/figure. Prints ``name,us_per_call,derived``
-# CSV rows.  ``python -m benchmarks.run [--quick] [--json PATH]``.
+# One function per paper table/figure. Prints
+# ``name,us_per_call,stable,derived`` CSV rows.
+# ``python -m benchmarks.run [--quick] [--json PATH]``.
 #
 # ``--json PATH`` additionally writes the suite results as JSON — the
-# start of a tracked perf trajectory (CI uploads BENCH_quick.json as a
-# non-blocking artifact).  Schema: a list of suite objects
-#   {"suite": str, "rows": [{"name": str, "ms": float, "note": str}],
+# tracked perf trajectory (CI diffs a fresh run against the committed
+# BENCH_quick.json and gates on stable-tagged rows).  Schema: a list of
+# suite objects
+#   {"suite": str, "rows": [{"name": str, "ms": float, "stable": bool,
+#                            "note": str}],
 #    "meta": {"elapsed_s": float, "quick": bool, "backend": str,
 #             "error": str | absent}}
+# ``stable`` marks rows whose timing is run-stable on this container
+# (PIM-paced rows); only those may be regression-gated — see
+# tools/bench_compare.py.
 
 from __future__ import annotations
 
@@ -18,9 +24,11 @@ import traceback
 
 
 def _parse_row(line: str) -> dict:
-    """'name,us_per_call,derived' CSV row -> {name, ms, note}."""
-    name, us, note = line.split(",", 2)
-    return {"name": name, "ms": float(us) / 1e3, "note": note}
+    """'name,us_per_call,stable,derived' CSV row (benchmarks.common.row)
+    -> {name, ms, stable, note}."""
+    name, us, stable, note = line.split(",", 3)
+    return {"name": name, "ms": float(us) / 1e3,
+            "stable": bool(int(stable)), "note": note}
 
 
 def main() -> None:
@@ -35,7 +43,7 @@ def main() -> None:
     from benchmarks import (bench_recall, bench_e2e, bench_breakdown,
                             bench_multiplierless, bench_perfmodel,
                             bench_loadbalance, bench_scaling, bench_kernels,
-                            bench_dse, bench_serving)
+                            bench_dse, bench_serving, bench_pareto)
     benches = {
         "recall": bench_recall,            # §V-A accuracy constraint
         "e2e": bench_e2e,                  # Fig. 6/7
@@ -47,6 +55,7 @@ def main() -> None:
         "kernels": bench_kernels,          # Pallas micro-benches
         "dse": bench_dse,                  # §III-C
         "serving": bench_serving,          # online micro-batching runtime
+        "pareto": bench_pareto,            # recall/latency frontier sweep
     }
     if args.only:
         names = args.only.split(",")
@@ -55,7 +64,7 @@ def main() -> None:
     import jax
     backend = jax.default_backend()
 
-    print("name,us_per_call,derived")
+    print("name,us_per_call,stable,derived")
     failures = []
     suites = []
     for name, mod in benches.items():

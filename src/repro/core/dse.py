@@ -171,6 +171,50 @@ def run_dse(base: IndexParams,
     return _finish(history)
 
 
+# ---------------------------------------------------------------------------
+# Perf-model dominance pruning (used by core.autotune before any candidate
+# touches a real engine): a candidate is dominated when another one is
+# modeled no slower AND is no worse on every quality coordinate, with at
+# least one strict improvement.  Quality keys are compared componentwise
+# (a *partial* order — e.g. (m, nprobe, dtype_rank) under the monotone
+# recall surrogate), so incomparable candidates always both survive.
+# ---------------------------------------------------------------------------
+
+def dominates(time_a: float, qual_a: Sequence[float],
+              time_b: float, qual_b: Sequence[float]) -> bool:
+    """True when (time_a, qual_a) dominates (time_b, qual_b): no slower,
+    componentwise no worse quality, strictly better somewhere."""
+    if len(qual_a) != len(qual_b):
+        raise ValueError(f"quality keys must have equal arity, got "
+                         f"{len(qual_a)} vs {len(qual_b)}")
+    if time_a > time_b:
+        return False
+    if any(a < b for a, b in zip(qual_a, qual_b)):
+        return False
+    return time_a < time_b or any(a > b for a, b in zip(qual_a, qual_b))
+
+
+def prune_dominated(cands: Sequence, time_fn: Callable,
+                    quality_fn: Callable) -> tuple[list, list]:
+    """Split ``cands`` into (survivors, pruned) under :func:`dominates`.
+
+    ``time_fn(c)`` is the modeled cost (lower better); ``quality_fn(c)``
+    a tuple compared componentwise (higher better).  Exact ties (equal
+    time and equal quality key) dominate nothing, so duplicates all
+    survive — pruning may only remove a candidate some survivor strictly
+    beats.  Dominance is transitive, so every pruned candidate is
+    dominated by at least one *survivor* (pinned in tests/test_dse.py).
+    Input order is preserved in both lists.
+    """
+    scored = [(time_fn(c), tuple(quality_fn(c)), c) for c in cands]
+    survivors, pruned = [], []
+    for i, (t_i, q_i, c_i) in enumerate(scored):
+        dead = any(dominates(t_j, q_j, t_i, q_i)
+                   for j, (t_j, q_j, _) in enumerate(scored) if j != i)
+        (pruned if dead else survivors).append(c_i)
+    return survivors, pruned
+
+
 def _pt_of(d: Dict) -> tuple:
     return (d["k"], d["p"], d["nlist"], d["m"], d["cb"])
 

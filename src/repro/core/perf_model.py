@@ -252,6 +252,37 @@ def make_task_latency_model(ix: IndexParams, hw: HardwareProfile,
                             l_sort=t("TS", per_point=True))
 
 
+def serving_batch_latency(ix: IndexParams, hw: HardwareProfile,
+                          ranks: int, batch: int,
+                          lut_hit_rate: float = 0.0,
+                          multiplierless: bool = True,
+                          compute_scale: float = 1.0) -> float:
+    """Modeled service time (s) of one ``batch``-query serving batch on a
+    ``ranks``-rank PIM fleet — the same Eq. 15 basis that paces
+    :class:`~repro.runtime.serving.PimPacedEngine`, restated per batch:
+    ``ceil(batch * nprobe / ranks)`` serial task waves, each paying
+    ``l_lut + C * (l_calc + l_sort)``.
+
+    ``lut_hit_rate`` discounts the per-task LUT construction by the
+    fraction of (query, cluster) tasks the hot-cluster cache serves
+    (the cache saves the RC+LC work, never the scan/sort) — the term
+    the auto-tuner uses to price ``cache_capacity_bytes`` candidates.
+    """
+    if ranks < 1:
+        raise ValueError(f"ranks must be >= 1, got {ranks}")
+    if batch < 1:
+        raise ValueError(f"batch must be >= 1, got {batch}")
+    if not 0.0 <= lut_hit_rate <= 1.0:
+        raise ValueError(f"lut_hit_rate must be in [0, 1], "
+                         f"got {lut_hit_rate}")
+    model = make_task_latency_model(ix, hw, multiplierless=multiplierless,
+                                    compute_scale=compute_scale)
+    l_task = (model.l_lut * (1.0 - lut_hit_rate)
+              + ix.c * (model.l_calc + model.l_sort))
+    waves = -(-(batch * ix.p) // ranks)
+    return waves * l_task
+
+
 # --------------------------------------------------------------------------
 # TPU roofline terms (§Roofline of EXPERIMENTS.md) — used by launch/roofline
 # for model-side sanity checks against compiled HLO numbers.

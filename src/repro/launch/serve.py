@@ -20,8 +20,15 @@ cross-attention context (the full RAG path):
         --router cache_aware --requests 64
     PYTHONPATH=src python -m repro.launch.serve --ann --spec deploy.json \
         --clock wall --requests 64
+    PYTHONPATH=src python -m repro.launch.serve --ann --autotune \
+        --slo-recall 0.8 --slo-p99-ms 50 --requests 64
     PYTHONPATH=src python -m repro.launch.serve --ann \
         --arch llama32_vision_11b --smoke --gen 8
+
+``--autotune`` replaces the hand-picked CLI knobs with the SLO-driven
+auto-tuner (``core.autotune``): the spec is *derived* — searched
+against the perf model and validated on a calibration stream — then
+the same fleet is stood up and streamed as usual.
 """
 
 from __future__ import annotations
@@ -86,7 +93,37 @@ def serve_ann(args):
     ds = make_clustered_corpus(seed=0, n=10_000, d=d_embed,
                                n_queries=max(args.batch, 32),
                                n_components=16)
-    if args.spec:
+    if args.autotune:
+        # derive the spec instead of hand-picking it: perf-model
+        # shortlist -> measured calibration -> SLO-validated ServiceSpec
+        # (k stays at the tuner's slo.k; retrieval depth is sliced below)
+        from repro.service import (SLO, SLOInfeasible, TuneSpace,
+                                   autotune_service)
+        slo = SLO(recall_at_k=args.slo_recall, p99_ms=args.slo_p99_ms)
+        # m carries recall on this d=32 corpus (m=8 caps near 0.59);
+        # nprobe past 8 of the 32 lists buys nothing but latency
+        space = TuneSpace(m=(8, 16), nprobe=(4, 8),
+                          lut_dtype=("uint8", "f32"),
+                          buckets=((1, 2, 4),), tasks_per_shard=(256,),
+                          cache_capacity_bytes=(0, 1 << 19))
+        try:
+            svc, res = autotune_service(
+                np.asarray(ds.points), slo,
+                queries=np.asarray(ds.queries, np.float32),
+                space=space, nlist=32, replicas=args.replicas,
+                router=args.router, seed=0)
+        except SLOInfeasible as e:
+            print(f"[ann] INFEASIBLE: {e}")
+            for entry in e.frontier:
+                print(f"[ann]   m={entry['m']} nprobe={entry['nprobe']} "
+                      f"lut={entry['lut_dtype']}: "
+                      f"recall={entry['recall']:.3f} "
+                      f"p99={entry['p99_ms']:.2f}ms")
+            raise SystemExit(1)
+        for line in res.report().splitlines():
+            print(f"[ann] {line}")
+        spec = res.spec
+    elif args.spec:
         # the durable deploy artifact: identical fleet to
         # `python -m repro.service --spec` (index is rebuilt per
         # spec.index over this corpus; k is forced to the RAG depth)
@@ -100,9 +137,10 @@ def serve_ann(args):
             n_shards=4, tasks_per_shard=256,
             buckets=(1, 2, 4), max_wait_s=1e-3,
             cache_capacity=args.cache_capacity)
-    svc = AnnService.build(spec, points=ds.points,
-                           sample_queries=ds.queries)
-    svc.warmup()
+    if not args.autotune:
+        svc = AnnService.build(spec, points=ds.points,
+                               sample_queries=ds.queries)
+        svc.warmup()
 
     # Zipf-skewed arrivals over the query pool (hot queries repeat —
     # what the LUT cache and the cache-aware router are for)
@@ -167,6 +205,13 @@ def main():
     ap.add_argument("--spec", metavar="PATH",
                     help="boot the fleet from a ServiceSpec deploy file "
                          "(.json/.yaml) instead of the CLI knobs above")
+    ap.add_argument("--autotune", action="store_true",
+                    help="derive the spec with the SLO-driven auto-tuner "
+                         "(core.autotune) instead of CLI knobs / --spec")
+    ap.add_argument("--slo-recall", type=float, default=0.8,
+                    help="--autotune: required recall@k (default 0.8)")
+    ap.add_argument("--slo-p99-ms", type=float, default=50.0,
+                    help="--autotune: paced p99 budget in ms (default 50)")
     ap.add_argument("--clock", choices=("virtual", "wall"),
                     default="virtual",
                     help="stream driver: discrete-event simulation or "

@@ -10,9 +10,14 @@ executor-backed replicas (:class:`ReplicaExecutor`), a multi-replica
 policies, and an :class:`Autoscaler` that moves the live fleet inside
 ``[replicas, replicas_max]`` from queue-depth/p99 signals.
 ``python -m repro.service --selftest`` runs an end-to-end smoke (both
-stream clocks); ``--spec deploy.json`` boots a fleet from a file.
+stream clocks); ``--spec deploy.json`` boots a fleet from a file;
+``--autotune`` searches configurations against the perf model
+(:func:`~repro.core.autotune.autotune`) and emits a spec meeting a
+declared :class:`~repro.core.autotune.SLO`.
 """
 
+from repro.core.autotune import (SLO, AutotuneResult, SLOInfeasible,
+                                 TuneSpace, autotune, autotune_service)
 from repro.service.autoscale import Autoscaler, ScaleEvent, ScaleSignals
 from repro.service.executor import ReplicaExecutor, SearchFuture
 from repro.service.mutation import MutationCoordinator
@@ -27,4 +32,6 @@ __all__ = ["AnnService", "Replica", "IndexSpec", "ServiceSpec",
            "Autoscaler", "ScaleSignals", "ScaleEvent",
            "Router", "RoutingPolicy", "RoundRobinPolicy",
            "LeastQueuePolicy", "CacheAwarePolicy", "make_policy",
-           "MutationCoordinator"]
+           "MutationCoordinator",
+           "SLO", "TuneSpace", "AutotuneResult", "SLOInfeasible",
+           "autotune", "autotune_service"]

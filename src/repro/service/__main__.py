@@ -20,6 +20,12 @@ durable deploy file instead of the built-in specs —
 ``launch/serve.py --ann --spec ...`` reads the identical artifact, so
 the two entrypoints can never drift.
 
+``--autotune`` closes the loop the other way: instead of reading a
+spec, it *derives* one — ``core.autotune`` searches the configuration
+space against the perf model, validates survivors on a calibration
+stream, and prints the winning spec's report (``--save-spec out.json``
+persists it as the deploy artifact ``--spec`` can then boot).
+
 Exit code 0 on success — wired into CI as a cheap post-install gate.
 """
 
@@ -169,6 +175,45 @@ def spec_smoke(spec_path: str, clock: str) -> int:
     return 0
 
 
+def autotune_smoke(slo_recall: float, slo_p99_ms: float,
+                   save_spec: str | None) -> int:
+    """Derive a deploy spec for the smoke corpus: run the SLO-driven
+    auto-tuner (perf-model shortlist -> measured calibration) and print
+    its report; ``--save-spec`` persists the winning ServiceSpec."""
+    from repro.service import SLO, SLOInfeasible, TuneSpace, autotune
+
+    from repro.data import make_clustered_corpus
+
+    ds = make_clustered_corpus(seed=0, n=3000, d=16, n_queries=48,
+                               n_components=12, k_gt=10)
+    space = TuneSpace(m=(4, 8), nprobe=(2, 4, 8),
+                      lut_dtype=("uint8", "f32"), buckets=((1, 2, 4, 8),),
+                      tasks_per_shard=(1024,),
+                      cache_capacity_bytes=(0, 1 << 19))
+    slo = SLO(recall_at_k=slo_recall, p99_ms=slo_p99_ms)
+    try:
+        res = autotune(np.asarray(ds.points), slo,
+                       queries=np.asarray(ds.queries),
+                       groundtruth=np.asarray(ds.groundtruth),
+                       space=space, nlist=16, calibration_requests=48,
+                       validate_budget=6, seed=0)
+    except SLOInfeasible as e:
+        print(f"[autotune] INFEASIBLE: {e}")
+        for entry in e.frontier:
+            print(f"[autotune]   frontier: m={entry['m']} "
+                  f"nprobe={entry['nprobe']} lut={entry['lut_dtype']} "
+                  f"recall={entry['recall']:.3f} "
+                  f"p99={entry['p99_ms']:.2f}ms")
+        return 1
+    for line in res.report().splitlines():
+        print(f"[autotune] {line}")
+    if save_spec:
+        path = res.spec.save(save_spec)
+        print(f"[autotune] spec saved -> {path} "
+              f"(boot it with --spec {path})")
+    return 0
+
+
 def main() -> int:
     ap = argparse.ArgumentParser(prog="python -m repro.service",
                                  description=__doc__)
@@ -181,7 +226,20 @@ def main() -> int:
     ap.add_argument("--spec", metavar="PATH",
                     help="boot the smoke fleet from a ServiceSpec deploy "
                          "file (.json/.yaml) instead of built-in specs")
+    ap.add_argument("--autotune", action="store_true",
+                    help="derive a spec for the smoke corpus with the "
+                         "SLO-driven auto-tuner and print its report")
+    ap.add_argument("--slo-recall", type=float, default=0.8,
+                    help="autotune: required recall@10 (default 0.8)")
+    ap.add_argument("--slo-p99-ms", type=float, default=50.0,
+                    help="autotune: paced p99 budget in ms (default 50)")
+    ap.add_argument("--save-spec", metavar="PATH",
+                    help="autotune: persist the winning ServiceSpec as a "
+                         "deploy file (.json/.yaml)")
     args = ap.parse_args()
+    if args.autotune:
+        return autotune_smoke(args.slo_recall, args.slo_p99_ms,
+                              args.save_spec)
     if args.spec:
         return spec_smoke(args.spec, args.clock)
     if not args.selftest:

@@ -1,0 +1,148 @@
+"""End-to-end auto-tuner tests (core/autotune.py): the emitted spec
+meets the declared SLO on a held-out stream, infeasible SLOs raise with
+the measured frontier attached, and the pipeline is deterministic given
+the seed.
+
+One tuning run over a small clustered corpus is shared across tests
+(the run builds real indexes and streams a paced calibration load, so
+it is the expensive part — everything else asserts against its
+result).  Latency numbers come through the PIM-paced engine, which
+charges ``max(model, host_elapsed)``: the winner sits far from the SLO
+boundary, so host jitter cannot flip any assertion here, but exact
+p50/p99 floats are never compared across runs.
+"""
+
+import dataclasses
+import functools
+import math
+
+import numpy as np
+import pytest
+
+from repro.core.autotune import (SLO, AutotuneResult, Candidate,
+                                 SLOInfeasible, TuneSpace, autotune,
+                                 measure_spec, predicted_latency_ms)
+from repro.data import make_clustered_corpus
+
+SEED = 0
+SLO_MAIN = SLO(recall_at_k=0.8, p99_ms=50.0, k=10)
+SPACE = TuneSpace(m=(4, 8), nprobe=(2, 4, 8), lut_dtype=("uint8", "f32"),
+                  buckets=((1, 2, 4, 8),), tasks_per_shard=(1024,),
+                  cache_capacity_bytes=(0,))
+NLIST = 16
+N_CALIB = 32       # of the 48 corpus queries; the rest are held out
+
+
+@functools.lru_cache(maxsize=1)
+def _corpus():
+    ds = make_clustered_corpus(SEED, n=3000, d=16, n_queries=48,
+                               n_components=12, k_gt=10)
+    points = np.asarray(ds.points)
+    queries = np.asarray(ds.queries, np.float32)
+    gt = np.asarray(ds.groundtruth)
+    return points, queries, gt
+
+
+def _tune(seed=SEED, slo=SLO_MAIN, validate_budget=6):
+    points, queries, gt = _corpus()
+    return autotune(points, slo, queries=queries[:N_CALIB],
+                    groundtruth=gt[:N_CALIB], space=SPACE, nlist=NLIST,
+                    calibration_requests=48, validate_budget=validate_budget,
+                    seed=seed)
+
+
+@functools.lru_cache(maxsize=1)
+def _tuned() -> AutotuneResult:
+    return _tune()
+
+
+def test_emitted_spec_is_validated_and_meets_slo():
+    res = _tuned()
+    res.spec.validate()                       # deploy-ready artifact
+    assert res.slo.met_by(res.measured["recall"], res.measured["p99_ms"])
+    assert res.measured["recall"] >= SLO_MAIN.recall_at_k
+    assert res.measured["p99_ms"] <= SLO_MAIN.p99_ms
+    # bookkeeping is consistent: everything validated is on the
+    # frontier, only the last (winning) entry met the SLO
+    assert res.validated == len(res.frontier) >= 1
+    assert res.modeled == SPACE.size()
+    assert 0 <= res.pruned < res.modeled
+    assert [e["meets_slo"] for e in res.frontier].count(True) == 1
+    assert res.frontier[-1]["meets_slo"]
+    assert res.index is not None              # winner's trained index
+
+
+def test_emitted_spec_meets_slo_on_held_out_stream():
+    """The SLO must hold beyond the calibration set: replay a held-out
+    query slice (never seen by the tuner) through the emitted spec."""
+    res = _tuned()
+    points, queries, gt = _corpus()
+    held_q, held_gt = queries[N_CALIB:], gt[N_CALIB:]
+    assert len(held_q) == 16
+    measured = measure_spec(res.spec, res.index, held_q, held_gt,
+                            k=SLO_MAIN.k, n_requests=48, qps=4000.0,
+                            skew=1.2, seed=SEED + 17)
+    assert res.slo.met_by(measured["recall"], measured["p99_ms"]), measured
+
+
+def test_infeasible_slo_raises_with_frontier():
+    impossible = SLO(recall_at_k=0.8, p99_ms=1e-6, k=10)
+    with pytest.raises(SLOInfeasible) as ei:
+        _tune(slo=impossible, validate_budget=2)
+    err = ei.value
+    assert err.slo == impossible
+    assert len(err.frontier) == 2             # budget exhausted, all shown
+    for entry in err.frontier:
+        assert not entry["meets_slo"]
+        assert entry["p99_ms"] > impossible.p99_ms
+        assert {"m", "nprobe", "lut_dtype", "recall", "p99_ms",
+                "predicted_ms"} <= set(entry)
+    assert "closest" in str(err)              # actionable failure report
+
+
+def test_autotune_deterministic_given_seed():
+    first = _tuned()
+    again = _tune()                           # fresh run, same seed
+    assert again.spec == first.spec           # identical deploy artifact
+    assert again.measured["recall"] == first.measured["recall"]
+    assert again.validated == first.validated
+    assert ([ (e["m"], e["nprobe"], e["lut_dtype"]) for e in again.frontier]
+            == [(e["m"], e["nprobe"], e["lut_dtype"])
+                for e in first.frontier])
+
+
+def test_validation_errors():
+    points, queries, gt = _corpus()
+    for bad in (SLO(recall_at_k=0.0), SLO(recall_at_k=1.5),
+                SLO(p99_ms=0.0), SLO(k=0)):
+        with pytest.raises(ValueError):
+            bad.validate()
+    with pytest.raises(ValueError, match="validate_budget"):
+        autotune(points, SLO_MAIN, validate_budget=0)
+    with pytest.raises(ValueError, match="non-empty"):
+        autotune(points, SLO_MAIN,
+                 space=dataclasses.replace(SPACE, nprobe=()))
+    with pytest.raises(ValueError, match="unknown dtypes"):
+        autotune(points, SLO_MAIN,
+                 space=dataclasses.replace(SPACE, lut_dtype=("f16",)))
+    # SLO.k deeper than the supplied groundtruth must fail loudly
+    with pytest.raises(ValueError, match="recall@10"):
+        autotune(points, SLO_MAIN, queries=queries[:8],
+                 groundtruth=gt[:8, :5], space=SPACE, nlist=NLIST)
+
+
+def test_predicted_latency_orders_like_the_knobs():
+    """The modeled cost the shortlist sorts on moves the right way with
+    each knob (the dominance pruning's soundness rests on this)."""
+    base = Candidate(m=8, nprobe=8, lut_dtype="f32",
+                     buckets=(1, 2, 4, 8), tasks_per_shard=1024,
+                     cache_capacity_bytes=0)
+    kw = dict(n_total=100_000, nlist=64, d=32, k=10, ranks=4,
+              qps=4000.0, max_wait_s=2e-3)
+    t = lambda c: predicted_latency_ms(c, **kw)  # noqa: E731
+    assert t(dataclasses.replace(base, nprobe=16)) > t(base)
+    assert t(dataclasses.replace(base, m=16)) > t(base)
+    assert t(dataclasses.replace(base, lut_dtype="uint8")) < t(base)
+    cached = dataclasses.replace(base, cache_capacity_bytes=1 << 20)
+    assert t(cached) < t(base)                # hit prior discounts LUTs
+    assert math.isfinite(t(base)) and t(base) > 0

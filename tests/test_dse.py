@@ -4,7 +4,7 @@ import math
 import numpy as np
 import pytest
 
-from repro.core.dse import DSESpace, run_dse
+from repro.core.dse import DSESpace, dominates, prune_dominated, run_dse
 from repro.core.perf_model import IndexParams, UPMEM_PROFILE, total_time
 
 
@@ -56,6 +56,60 @@ def test_dse_exhaustive_small_space():
     res = run_dse(BASE, synthetic_accuracy, accuracy_constraint=0.0,
                   space=space, budget=50)
     assert res.evals == space.size()   # degenerate exhaustive case (paper)
+
+
+# -- dominance pruning (used by core.autotune's model shortlist) -----------
+
+def test_dominates_partial_order():
+    # faster + no worse quality, strictly better somewhere
+    assert dominates(1.0, (2, 2), 2.0, (2, 2))          # faster, equal qual
+    assert dominates(1.0, (3, 2), 1.0, (2, 2))          # equal time, better
+    assert not dominates(1.0, (2, 2), 1.0, (2, 2))      # exact tie
+    assert not dominates(1.0, (3, 1), 2.0, (2, 2))      # incomparable qual
+    assert not dominates(2.0, (3, 3), 1.0, (2, 2))      # slower never wins
+    with pytest.raises(ValueError):
+        dominates(1.0, (1, 2), 1.0, (1,))               # arity mismatch
+
+
+def _rand_scored(rng, n=40, arity=2):
+    """Random candidates as (time, quality-tuple) dicts with deliberate
+    duplicates and shared coordinate values so ties/plateaus occur."""
+    cands = [{"t": float(rng.integers(1, 6)),
+              "q": tuple(int(v) for v in rng.integers(0, 4, size=arity))}
+             for _ in range(n)]
+    cands += cands[:5]                                  # exact duplicates
+    return cands
+
+
+def test_prune_dominated_soundness():
+    """The ISSUE-pinned invariant: pruning never discards a candidate
+    that dominates a survivor — i.e. every survivor is undominated and
+    every pruned candidate is beaten by some survivor."""
+    rng = np.random.default_rng(0)
+    for trial in range(10):
+        cands = _rand_scored(rng)
+        surv, pruned = prune_dominated(
+            cands, time_fn=lambda c: c["t"], quality_fn=lambda c: c["q"])
+        assert sorted(map(id, surv + pruned)) == sorted(map(id, cands))
+        for s in surv:                       # no survivor is dominated
+            assert not any(dominates(o["t"], o["q"], s["t"], s["q"])
+                           for o in cands if o is not s)
+        for p in pruned:                     # pruned: beaten by a SURVIVOR
+            assert any(dominates(s["t"], s["q"], p["t"], p["q"])
+                       for s in surv)
+
+
+def test_prune_dominated_ties_and_order():
+    mk = lambda t, q: {"t": t, "q": q}  # noqa: E731
+    a, b = mk(1.0, (2,)), mk(1.0, (2,))            # exact tie: both live
+    c = mk(2.0, (2,))                              # dominated by a and b
+    d = mk(0.5, (1,))                              # incomparable with a/b
+    surv, pruned = prune_dominated(
+        [a, c, b, d], time_fn=lambda x: x["t"], quality_fn=lambda x: x["q"])
+    assert surv == [a, b, d] and pruned == [c]     # input order preserved
+    surv, pruned = prune_dominated(
+        [], time_fn=lambda x: x["t"], quality_fn=lambda x: x["q"])
+    assert surv == [] and pruned == []
 
 
 def test_dse_respects_constraint_tradeoff():

@@ -1,11 +1,14 @@
+import dataclasses
 import math
 
 import numpy as np
 import pytest
 
 from repro.core.perf_model import (IndexParams, UPMEM_PROFILE,
-                                   TPU_V5E_PROFILE, phase_costs, phase_times,
+                                   TPU_V5E_PROFILE, lut_width_bytes,
+                                   phase_costs, phase_times,
                                    c2io, total_time, make_task_latency_model,
+                                   serving_batch_latency,
                                    roofline_terms, dominant_term, PHASES)
 
 
@@ -76,6 +79,69 @@ def test_task_latency_model_monotone():
     lm = make_task_latency_model(BASE, UPMEM_PROFILE)
     assert lm.l_lut > 0 and lm.l_calc > 0 and lm.l_sort > 0
     assert lm.task_latency(1000) > lm.task_latency(10)
+
+
+# -- invariants the auto-tuner's pruning leans on --------------------------
+# core.autotune prunes candidates the model says are dominated; that is
+# only sound if modeled cost is monotone in the quality knobs (more work
+# never gets cheaper) and the uint8 LUT path is genuinely priced below
+# f32.  Pin those properties here.
+
+def _t(ix):
+    return total_time(ix, UPMEM_PROFILE, multiplierless=True)
+
+
+def test_total_time_monotone_in_nprobe():
+    times = [_t(dataclasses.replace(BASE, p=p)) for p in (8, 32, 96, 128)]
+    assert all(a <= b + 1e-15 for a, b in zip(times, times[1:]))
+    assert times[0] < times[-1]           # and strictly overall
+
+
+def test_total_time_monotone_in_m():
+    times = [_t(dataclasses.replace(BASE, m=m)) for m in (8, 16, 32, 64)]
+    assert all(a <= b + 1e-15 for a, b in zip(times, times[1:]))
+    assert times[0] < times[-1]
+
+
+def test_total_time_monotone_in_dataset_size():
+    times = [_t(dataclasses.replace(BASE, n_total=n))
+             for n in (10**7, 5 * 10**7, 10**8, 4 * 10**8)]
+    assert all(a <= b + 1e-15 for a, b in zip(times, times[1:]))
+    assert times[0] < times[-1]
+
+
+def test_uint8_lut_strictly_cheaper_than_f32():
+    assert lut_width_bytes("uint8") < lut_width_bytes("f32")
+    with pytest.raises(ValueError):
+        lut_width_bytes("f16")
+    u8 = dataclasses.replace(BASE, b_lut=lut_width_bytes("uint8"))
+    f32 = dataclasses.replace(BASE, b_lut=lut_width_bytes("f32"))
+    assert _t(u8) < _t(f32)
+    assert (serving_batch_latency(u8, UPMEM_PROFILE, ranks=4, batch=16)
+            < serving_batch_latency(f32, UPMEM_PROFILE, ranks=4, batch=16))
+
+
+def test_serving_batch_latency_invariants():
+    lat = lambda **kw: serving_batch_latency(  # noqa: E731
+        BASE, UPMEM_PROFILE, **{"ranks": 64, "batch": 8, **kw})
+    # non-decreasing in batch (wave count is a ceiling, so plateaus ok)
+    batches = [lat(batch=b) for b in (1, 2, 8, 32, 128)]
+    assert all(a <= b + 1e-15 for a, b in zip(batches, batches[1:]))
+    assert batches[0] < batches[-1]
+    # non-increasing in ranks — more PIM ranks never slows a batch
+    ranks = [lat(ranks=r) for r in (1, 4, 16, 64, 1024)]
+    assert all(a >= b - 1e-15 for a, b in zip(ranks, ranks[1:]))
+    assert ranks[0] > ranks[-1]
+    # LUT cache hits discount the RC+LC term only: strictly faster, but
+    # never below the pure scan/sort floor
+    assert lat(lut_hit_rate=0.5) < lat()
+    model = make_task_latency_model(BASE, UPMEM_PROFILE)
+    floor = (-(-(8 * BASE.p) // 64)) * BASE.c * (model.l_calc + model.l_sort)
+    assert lat(lut_hit_rate=1.0) >= floor - 1e-15
+    for bad in ({"ranks": 0}, {"batch": 0}, {"lut_hit_rate": 1.5},
+                {"lut_hit_rate": -0.1}):
+        with pytest.raises(ValueError):
+            lat(**bad)
 
 
 def test_roofline_terms_and_dominance():

@@ -1,0 +1,152 @@
+"""Property tests for service/spec.py serialization: valid specs
+round-trip losslessly (to_dict/from_dict and JSON/YAML save/load,
+bit-identically on disk); malformed/unknown-key/version-mismatched
+deploy files are rejected by name; and every spec the auto-tuner can
+emit passes full validation."""
+
+import json
+import pathlib
+import tempfile
+
+import pytest
+
+try:
+    from hypothesis import given, settings, strategies as st
+except ModuleNotFoundError:      # degrade to a fixed-example sweep
+    from _hypothesis_fallback import given, settings, st
+
+from repro.core.autotune import TuneSpace, candidate_spec
+from repro.service.spec import SPEC_VERSION, IndexSpec, ServiceSpec
+
+# a spread of valid specs covering both schema eras: v1-style fields
+# only, each engine tier, cache/heat, routing, autoscaling, pacing, and
+# the v2 mutation knobs
+VALID_SPECS = [
+    ServiceSpec(),
+    ServiceSpec(index=IndexSpec(nlist=32, m=8, opq=True, seed=3),
+                nprobe=4, k=5, strategy="onehot"),
+    ServiceSpec(lut_dtype="uint8", cache_capacity_bytes=1 << 20,
+                buckets=(1, 4, 16), max_wait_s=1e-3),
+    ServiceSpec(engine="sharded", n_shards=4, tasks_per_shard=256,
+                relayout_every=8, tune_tasks_per_shard=True,
+                cache_capacity=64, heat_aware_admission=True,
+                engine_overrides={"naive_layout": True}),
+    ServiceSpec(replicas=2, replicas_max=4, router="cache_aware",
+                pim_paced_ranks=4, autoscale_p99_budget_ms=25.0),
+    ServiceSpec(mutable=True, mutation_size_band=(4, 64),
+                mutation_maintenance_interval=8,
+                mutation_compact_threshold=0.25),
+]
+
+# (field, bad value) edits that must make from_dict raise; each is a
+# single-field corruption of an otherwise valid default spec
+BAD_EDITS = [
+    ("nprobe", 0), ("k", -1),
+    ("strategy", "fancy"), ("lut_dtype", "f16"),
+    ("engine", "gpu"), ("router", "random"),
+    ("replicas", 0), ("replicas_max", -1),
+    ("buckets", []), ("buckets", [4, 0]),
+    ("max_wait_s", 0.0),
+    ("cache_capacity", -1), ("cache_capacity_bytes", -1),
+    ("cache_granularity", 0.0),
+    ("heat_aware_admission", True),      # local engine AND no cache
+    ("relayout_every", 8),               # sharded-only knob on local
+    ("engine_overrides", {"naive_layout": True}),   # likewise
+    ("mutation_maintenance_interval", 4),           # needs mutable=True
+    ("mutation_size_band", [5, 2]),      # inverted band
+    ("router_halflife_batches", 0.0),
+    ("autoscale_queue_low", 9.0),        # low >= high
+]
+
+
+@settings(deadline=None, max_examples=len(VALID_SPECS))
+@given(st.sampled_from(VALID_SPECS))
+def test_valid_spec_roundtrips_to_dict(spec):
+    spec.validate()
+    d = spec.to_dict()
+    assert d["version"] == SPEC_VERSION
+    back = ServiceSpec.from_dict(d)
+    assert back == spec
+    assert back.to_dict() == d           # fixed point, not just equality
+
+
+@settings(deadline=None, max_examples=2 * len(VALID_SPECS))
+@given(st.sampled_from(VALID_SPECS),
+       st.sampled_from(["json", "yaml"]))
+def test_valid_spec_file_roundtrip_bit_identical(spec, ext):
+    with tempfile.TemporaryDirectory() as td:
+        p1 = pathlib.Path(td) / f"a.{ext}"
+        p2 = pathlib.Path(td) / f"b.{ext}"
+        spec.save(p1)
+        loaded = ServiceSpec.load(p1)
+        assert loaded == spec
+        loaded.save(p2)                  # save∘load is the identity on disk
+        assert p1.read_bytes() == p2.read_bytes()
+
+
+@settings(deadline=None, max_examples=len(BAD_EDITS))
+@given(st.sampled_from(BAD_EDITS))
+def test_single_field_corruption_rejected(edit):
+    field, bad = edit
+    d = ServiceSpec().to_dict()
+    d[field] = bad
+    with pytest.raises(ValueError, match=field):
+        ServiceSpec.from_dict(d)
+
+
+def test_unknown_keys_and_versions_rejected():
+    base = ServiceSpec().to_dict()
+    for poison in ({"nprob": 8},                       # typo'd field
+                   {"index": {"nlists": 64}},          # typo'd index field
+                   {"version": SPEC_VERSION + 1},
+                   {"version": "2"}):                  # wrong type too
+        d = dict(base)
+        if "index" in poison:
+            d["index"] = dict(d["index"], **poison["index"])
+        else:
+            d.update(poison)
+        with pytest.raises(ValueError):
+            ServiceSpec.from_dict(d)
+    # a clean v1 file (no v2 keys) still loads ...
+    v1 = {k: v for k, v in base.items()
+          if k not in ("mutable", "mutation_size_band",
+                       "mutation_maintenance_interval",
+                       "mutation_compact_threshold")}
+    v1["version"] = 1
+    assert ServiceSpec.from_dict(v1) == ServiceSpec()
+    # ... but a v1-stamped file smuggling v2 keys is lying
+    lying = dict(base, version=1)
+    with pytest.raises(ValueError, match="version-2 keys"):
+        ServiceSpec.from_dict(lying)
+    with pytest.raises(ValueError, match="mapping"):
+        ServiceSpec.from_dict(dict(base, index=[1, 2]))
+
+
+def test_save_load_rejects_unknown_extension(tmp_path):
+    with pytest.raises(ValueError, match="extension"):
+        ServiceSpec().save(tmp_path / "deploy.toml")
+    (tmp_path / "deploy.toml").write_text("nprobe = 8\n")
+    with pytest.raises(ValueError, match="extension"):
+        ServiceSpec.load(tmp_path / "deploy.toml")
+    p = tmp_path / "notmap.json"
+    p.write_text(json.dumps([1, 2, 3]))
+    with pytest.raises(ValueError, match="mapping"):
+        ServiceSpec.load(p)
+
+
+def test_every_tuner_emitted_spec_validates_and_roundtrips():
+    """candidate_spec must only ever emit deployable specs: sweep the
+    default TuneSpace grid and require each result to pass full
+    validation and survive the serialization round trip."""
+    space = TuneSpace().validate()
+    seen = 0
+    for cand in space.grid():
+        spec = candidate_spec(cand, nlist=64, ranks=4, k=10)
+        spec.validate()                  # idempotent re-validation
+        assert spec.nprobe == cand.nprobe
+        assert spec.lut_dtype == cand.lut_dtype
+        assert spec.index.m == cand.m
+        assert spec.cache_capacity_bytes == cand.cache_capacity_bytes
+        assert ServiceSpec.from_dict(spec.to_dict()) == spec
+        seen += 1
+    assert seen == space.size() and seen >= 60

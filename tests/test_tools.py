@@ -1,4 +1,4 @@
-"""tools/: bench_compare row diffing (the perf-regression trajectory)."""
+"""tools/: bench_compare row diffing + stable-row gating, pareto_plot."""
 
 import json
 import pathlib
@@ -9,14 +9,16 @@ ROOT = pathlib.Path(__file__).resolve().parents[1]
 sys.path.insert(0, str(ROOT / "tools"))
 
 import bench_compare  # noqa: E402
+import pareto_plot    # noqa: E402
 
 
-def _snapshot(rows, suite="serving", error=None):
+def _snapshot(rows, suite="serving", error=None, stable=()):
     meta = {"elapsed_s": 1.0, "quick": True, "backend": "cpu"}
     if error:
         meta["error"] = error
     return [{"suite": suite,
-             "rows": [{"name": n, "ms": ms, "note": ""}
+             "rows": [{"name": n, "ms": ms, "stable": n in stable,
+                       "note": ""}
                       for n, ms in rows.items()],
              "meta": meta}]
 
@@ -37,30 +39,124 @@ def test_compare_flags_regressions_and_improvements():
     assert rep["added"] == ["fresh"]           # new rows are never flagged
     assert rep["removed"] == ["gone"]
     assert rep["common"]["a"][2] == 1.05       # (old, new, ratio)
+    assert rep["gated_regressed"] == []        # nothing gated by default
 
 
-def test_load_rows_skips_errored_suites(tmp_path):
-    snap = (_snapshot({"x": 1.0}) +
+def test_compare_gates_only_gated_rows():
+    rep = bench_compare.compare(
+        old={"paced": 10.0, "noisy": 10.0},
+        new={"paced": 30.0, "noisy": 30.0},
+        threshold=1.5, gated={"paced"})
+    assert rep["regressed"] == ["noisy", "paced"]
+    assert rep["gated_regressed"] == ["paced"]   # only the stable row
+
+
+def test_compare_zero_baseline_rows():
+    """0ms baselines are value-encoding rows (e.g. boolean parity as
+    0/epsilon): equal-zero is parity, not an infinite regression; going
+    0 -> nonzero IS flagged."""
+    rep = bench_compare.compare(old={"zz": 0.0, "zb": 0.0},
+                                new={"zz": 0.0, "zb": 0.5},
+                                threshold=1.5)
+    assert rep["common"]["zz"][2] == 1.0
+    assert "zz" not in rep["regressed"]
+    assert rep["common"]["zb"][2] == float("inf")
+    assert "zb" in rep["regressed"]
+
+
+def test_load_rows_skips_errored_suites_and_reads_stable(tmp_path):
+    snap = (_snapshot({"x": 1.0, "y": 2.0}, stable={"y"}) +
             _snapshot({}, suite="kernels", error="Boom('x')"))
-    rows, errored = bench_compare.load_rows(
+    rows, stable, errored = bench_compare.load_rows(
         _write(tmp_path, "b.json", snap))
-    assert rows == {"x": 1.0}
+    assert rows == {"x": 1.0, "y": 2.0}
+    assert stable == {"y"}
     assert errored == ["kernels"]
+    # rows with no "stable" key (older snapshots) are simply ungated
+    legacy = [{"suite": "s", "rows": [{"name": "old", "ms": 1.0,
+                                      "note": ""}], "meta": {}}]
+    rows, stable, errored = bench_compare.load_rows(
+        _write(tmp_path, "legacy.json", legacy))
+    assert rows == {"old": 1.0} and stable == set() and errored == []
 
 
 def test_cli_exit_codes(tmp_path):
-    old = _write(tmp_path, "old.json", _snapshot({"a": 10.0, "b": 10.0}))
-    new = _write(tmp_path, "new.json", _snapshot({"a": 30.0, "b": 10.0}))
+    old = _write(tmp_path, "old.json",
+                 _snapshot({"a": 10.0, "b": 10.0}, stable={"a"}))
+    regressed_untagged = _write(
+        tmp_path, "n1.json", _snapshot({"a": 10.0, "b": 30.0},
+                                       stable={"a"}))
+    regressed_stable = _write(
+        tmp_path, "n2.json", _snapshot({"a": 30.0, "b": 10.0},
+                                       stable={"a"}))
     cmd = [sys.executable, str(ROOT / "tools" / "bench_compare.py")]
-    # report-only (the CI default): regressions never fail the step
-    out = subprocess.run(cmd + [old, new], capture_output=True, text=True)
+    # report-only: regressions never fail the step
+    out = subprocess.run(cmd + [old, regressed_stable],
+                         capture_output=True, text=True)
     assert out.returncode == 0, out.stderr
     assert "REGRESS" in out.stdout and "1 regressed" in out.stdout
-    # the gate the ROADMAP will flip on once variance is charted
-    out = subprocess.run(cmd + [old, new, "--fail-on-regress"],
+    # the CI gate: only stable-in-both rows can fail it
+    out = subprocess.run(cmd + [old, regressed_untagged,
+                                "--fail-on-regress"],
                          capture_output=True, text=True)
-    assert out.returncode == 1
-    # identical snapshots pass the gate
-    out = subprocess.run(cmd + [old, old, "--fail-on-regress"],
+    assert out.returncode == 0, out.stdout   # b regressed but is unstable
+    out = subprocess.run(cmd + [old, regressed_stable,
+                                "--fail-on-regress"],
+                         capture_output=True, text=True)
+    assert out.returncode == 1, out.stdout
+    assert "[gated]" in out.stdout
+    # --gate-all widens the gate to every common row
+    out = subprocess.run(cmd + [old, regressed_untagged,
+                                "--fail-on-regress", "--gate-all"],
+                         capture_output=True, text=True)
+    assert out.returncode == 1, out.stdout
+    # identical snapshots pass the gate either way
+    out = subprocess.run(cmd + [old, old, "--fail-on-regress",
+                                "--gate-all"],
                          capture_output=True, text=True)
     assert out.returncode == 0, out.stdout
+
+
+# -- pareto_plot -----------------------------------------------------------
+
+def _pareto_snapshot():
+    def note(recall, p50, frontier):
+        return (f"recall={recall:.3f}_p50_ms={p50:.2f}_qps=1000"
+                f"_paced_ranks=4_frontier={frontier}")
+    return [{"suite": "pareto", "rows": [
+        {"name": "pareto/p2_u8", "ms": 5.0, "stable": False,
+         "note": note(0.6, 3.0, True)},
+        {"name": "pareto/p8_u8", "ms": 20.0, "stable": True,
+         "note": note(0.9, 12.0, True)},
+        {"name": "pareto/p8_f32", "ms": 30.0, "stable": True,
+         "note": note(0.9, 20.0, False)},
+    ], "meta": {}}]
+
+
+def test_pareto_plot_load_and_render(tmp_path):
+    path = _write(tmp_path, "p.json", _pareto_snapshot())
+    pts = pareto_plot.load_pareto(path)
+    assert len(pts) == 3
+    by_name = {p["name"]: p for p in pts}
+    assert by_name["pareto/p8_u8"]["frontier"]
+    assert not by_name["pareto/p8_f32"]["frontier"]
+    assert by_name["pareto/p2_u8"]["recall"] == 0.6
+    art = pareto_plot.ascii_plot(pts, [])
+    assert "O" in art and "recall@10" in art
+    svg = pareto_plot.svg_plot(pts, [])
+    assert svg.startswith("<svg") and "polyline" in svg
+
+
+def test_pareto_plot_cli(tmp_path):
+    path = _write(tmp_path, "p.json", _pareto_snapshot())
+    svg_out = tmp_path / "f.svg"
+    cmd = [sys.executable, str(ROOT / "tools" / "pareto_plot.py")]
+    out = subprocess.run(cmd + [path, "--svg", str(svg_out)],
+                         capture_output=True, text=True)
+    assert out.returncode == 0, out.stderr
+    assert "2 on the frontier" in out.stdout
+    assert svg_out.read_text().startswith("<svg")
+    # a snapshot with no pareto rows exits 2
+    empty = _write(tmp_path, "e.json", _snapshot({"serve/x": 1.0}))
+    out = subprocess.run(cmd + [empty], capture_output=True, text=True)
+    assert out.returncode == 2

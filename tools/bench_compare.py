@@ -1,24 +1,27 @@
 """Diff two benchmark JSON snapshots (``benchmarks.run --json`` output).
 
     python tools/bench_compare.py BENCH_quick.json BENCH_fresh.json \
-        [--threshold 1.5] [--fail-on-regress]
+        [--threshold 1.5] [--fail-on-regress] [--gate-all]
 
 Per row shared by both files, prints old/new ms and the ratio; rows
 slower than ``threshold`` x old are flagged ``REGRESS`` (and rows
-``1/threshold`` x faster flagged ``IMPROVE``) — the start of the
-regression-gate trajectory the ROADMAP asks for.  Rows present in only
+``1/threshold`` x faster flagged ``IMPROVE``).  Rows present in only
 one file are listed as added/removed, never flagged: a new benchmark is
 not a regression.
 
-Exit code is 0 unless ``--fail-on-regress`` is given and at least one
-row regressed.  CI runs this as a *non-blocking* step against the
-committed ``BENCH_quick.json`` (CPU timing variance across runners is
-not yet understood well enough to gate merges — the ROADMAP tracks
-flipping ``--fail-on-regress`` on once it is).
+Gating: with ``--fail-on-regress`` the exit code is 1 when any *gated*
+row regressed.  A row is gated when it is tagged ``stable: true`` in
+BOTH snapshots — the PIM-paced rows, whose service time is the Eq. 15
+model rather than host scheduling (the unpaced virtual-clock rows swing
+0.1-5x run-to-run on this container and are reported, never gated).
+``--gate-all`` widens the gate to every common row (local debugging of
+a perf change; too noisy for CI).  CI runs ``--fail-on-regress``
+against the committed ``BENCH_quick.json``.
 
-Schema per file: ``[{"suite": str, "rows": [{"name", "ms", "note"}],
-"meta": {...}}, ...]`` — suites that errored (``meta.error``) contribute
-no rows and are reported.
+Schema per file: ``[{"suite": str, "rows": [{"name", "ms", "stable",
+"note"}], "meta": {...}}, ...]`` — ``stable`` is optional (older
+snapshots predate it; their rows are never gated) and suites that
+errored (``meta.error``) contribute no rows and are reported.
 """
 
 from __future__ import annotations
@@ -26,32 +29,43 @@ from __future__ import annotations
 import argparse
 import json
 import sys
-from typing import Dict, Tuple
+from typing import Dict, Set, Tuple
 
 
-def load_rows(path: str) -> Tuple[Dict[str, float], list]:
-    """{row name -> ms} plus the names of suites that errored."""
+def load_rows(path: str) -> Tuple[Dict[str, float], Set[str], list]:
+    """({row name -> ms}, {stable-tagged row names}, errored suites)."""
     with open(path) as f:
         suites = json.load(f)
     rows: Dict[str, float] = {}
+    stable: Set[str] = set()
     errored = []
     for suite in suites:
         if suite.get("meta", {}).get("error"):
             errored.append(suite.get("suite", "?"))
         for row in suite.get("rows", []):
             rows[row["name"]] = float(row["ms"])
-    return rows, errored
+            if row.get("stable"):
+                stable.add(row["name"])
+    return rows, stable, errored
 
 
 def compare(old: Dict[str, float], new: Dict[str, float],
-            threshold: float) -> dict:
+            threshold: float, gated: Set[str] = frozenset()) -> dict:
     """Row-by-row delta report: {common, regressed, improved, added,
-    removed}; ``common`` maps name -> (old_ms, new_ms, ratio)."""
+    removed, gated_regressed}; ``common`` maps name ->
+    (old_ms, new_ms, ratio).  ``gated_regressed`` is the subset of
+    ``regressed`` inside ``gated`` — what --fail-on-regress acts on."""
     common = {}
     regressed, improved = [], []
     for name in sorted(set(old) & set(new)):
         o, n = old[name], new[name]
-        ratio = n / o if o > 0 else float("inf")
+        if o > 0:
+            ratio = n / o
+        else:
+            # a 0ms baseline is a value-encoding row (e.g. a boolean
+            # parity encoded as 0/epsilon) — equal-zero is parity, not
+            # an infinite regression
+            ratio = 1.0 if n <= 0 else float("inf")
         common[name] = (o, n, ratio)
         if ratio > threshold:
             regressed.append(name)
@@ -61,6 +75,7 @@ def compare(old: Dict[str, float], new: Dict[str, float],
         "common": common,
         "regressed": regressed,
         "improved": improved,
+        "gated_regressed": [n for n in regressed if n in gated],
         "added": sorted(set(new) - set(old)),
         "removed": sorted(set(old) - set(new)),
     }
@@ -73,21 +88,27 @@ def main() -> int:
     ap.add_argument("--threshold", type=float, default=1.5,
                     help="flag rows slower than this ratio (default 1.5)")
     ap.add_argument("--fail-on-regress", action="store_true",
-                    help="exit 1 when any row regressed (CI gate; off "
-                         "while run-to-run variance is being charted)")
+                    help="exit 1 when any gated row regressed (gated = "
+                         "stable-tagged in both snapshots; the CI gate)")
+    ap.add_argument("--gate-all", action="store_true",
+                    help="with --fail-on-regress: gate every common row, "
+                         "not just the stable-tagged ones")
     args = ap.parse_args()
     if args.threshold <= 1.0:
         ap.error(f"--threshold must be > 1.0, got {args.threshold}")
 
-    old, old_err = load_rows(args.old)
-    new, new_err = load_rows(args.new)
-    rep = compare(old, new, args.threshold)
+    old, old_stable, old_err = load_rows(args.old)
+    new, new_stable, new_err = load_rows(args.new)
+    gated = (set(old) & set(new)) if args.gate_all \
+        else (old_stable & new_stable)
+    rep = compare(old, new, args.threshold, gated=gated)
 
     print(f"{'row':40s} {'old_ms':>10s} {'new_ms':>10s} {'ratio':>7s}")
     for name, (o, n, ratio) in rep["common"].items():
         flag = ("  REGRESS" if name in rep["regressed"]
                 else "  IMPROVE" if name in rep["improved"] else "")
-        print(f"{name:40s} {o:10.3f} {n:10.3f} {ratio:6.2f}x{flag}")
+        gate = " [gated]" if name in gated and flag else ""
+        print(f"{name:40s} {o:10.3f} {n:10.3f} {ratio:6.2f}x{flag}{gate}")
     for name in rep["added"]:
         print(f"{name:40s} {'-':>10s} {new[name]:10.3f}   added")
     for name in rep["removed"]:
@@ -95,11 +116,14 @@ def main() -> int:
     for label, errs in (("old", old_err), ("new", new_err)):
         if errs:
             print(f"# {label}: errored suites (no rows): {errs}")
-    print(f"# {len(rep['common'])} compared, {len(rep['regressed'])} "
-          f"regressed (> {args.threshold:.2f}x), {len(rep['improved'])} "
-          f"improved, {len(rep['added'])} added, {len(rep['removed'])} "
-          f"removed")
-    if args.fail_on_regress and rep["regressed"]:
+    print(f"# {len(rep['common'])} compared ({len(gated)} gated), "
+          f"{len(rep['regressed'])} regressed (> {args.threshold:.2f}x, "
+          f"{len(rep['gated_regressed'])} gated), "
+          f"{len(rep['improved'])} improved, {len(rep['added'])} added, "
+          f"{len(rep['removed'])} removed")
+    if args.fail_on_regress and rep["gated_regressed"]:
+        print(f"# FAIL: gated rows regressed: {rep['gated_regressed']}",
+              file=sys.stderr)
         return 1
     return 0
 

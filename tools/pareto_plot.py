@@ -1,0 +1,170 @@
+"""Plot the recall/latency Pareto frontier from BENCH_*.json snapshots.
+
+    python tools/pareto_plot.py BENCH_quick.json [OLD.json] [--svg out.svg]
+
+Reads the ``pareto/*`` rows written by ``benchmarks/bench_pareto.py``
+(``benchmarks.run --only pareto --json ...``) and renders recall@10
+(x, higher better) against paced p99 ms (y, log-ish lower better) as an
+ASCII scatter — frontier configs as ``O``, dominated ones as ``·`` —
+plus the frontier staircase.  With a second snapshot the old frontier
+is overlaid (``o``/``,``) so a frontier *shift* between two PRs is
+visible in the terminal.  ``--svg`` additionally writes a small
+self-contained SVG (no plotting deps — CI archives it next to the
+JSON).
+
+Exit code 2 when a snapshot has no pareto rows.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import re
+import sys
+from typing import List, Tuple
+
+WIDTH, HEIGHT = 64, 20
+
+
+def load_pareto(path: str) -> List[dict]:
+    """[{name, recall, p99_ms, frontier}] from one snapshot's pareto/*
+    rows (recall/frontier are parsed out of the row note)."""
+    with open(path) as f:
+        suites = json.load(f)
+    out = []
+    for suite in suites:
+        for row in suite.get("rows", []):
+            if not row["name"].startswith("pareto/"):
+                continue
+            note = row.get("note", "")
+            recall = re.search(r"recall=([0-9.]+)", note)
+            if not recall:
+                continue
+            out.append({
+                "name": row["name"],
+                "recall": float(recall.group(1)),
+                "p99_ms": float(row["ms"]),
+                "frontier": "frontier=True" in note,
+            })
+    return out
+
+
+def _bounds(pts: List[dict]) -> Tuple[float, float, float, float]:
+    rs = [p["recall"] for p in pts]
+    ys = [p["p99_ms"] for p in pts]
+    r0, r1 = min(rs), max(rs)
+    y0, y1 = min(ys), max(ys)
+    if r1 - r0 < 1e-9:
+        r0, r1 = r0 - 0.05, r1 + 0.05
+    if y1 - y0 < 1e-9:
+        y0, y1 = y0 * 0.9, y1 * 1.1 or 1.0
+    return r0, r1, y0, y1
+
+
+def ascii_plot(new: List[dict], old: List[dict]) -> str:
+    r0, r1, y0, y1 = _bounds(new + old)
+    grid = [[" "] * WIDTH for _ in range(HEIGHT)]
+
+    def put(p, mark_front, mark_dom):
+        x = int((p["recall"] - r0) / (r1 - r0) * (WIDTH - 1))
+        y = int((p["p99_ms"] - y0) / (y1 - y0) * (HEIGHT - 1))
+        y = HEIGHT - 1 - y                      # low latency at the bottom
+        grid[y][x] = mark_front if p["frontier"] else mark_dom
+
+    for p in old:
+        put(p, "o", ",")
+    for p in new:                               # new overdraws old
+        put(p, "O", "·")
+
+    lines = [f"p99_ms  {y1:8.2f} ┐"]
+    for i, g in enumerate(grid):
+        prefix = "                "
+        if i == HEIGHT - 1:
+            prefix = f"        {y0:8.2f} ┘"
+        lines.append(prefix[:16] + "│" + "".join(g))
+    lines.append(" " * 16 + "└" + "─" * WIDTH)
+    lines.append(f"{'':16} {r0:<10.3f}{'recall@10':^{WIDTH - 20}}"
+                 f"{r1:>8.3f}")
+    legend = "O frontier  · dominated"
+    if old:
+        legend += "  (o/, = old snapshot)"
+    lines.append(" " * 17 + legend)
+    return "\n".join(lines)
+
+
+def svg_plot(new: List[dict], old: List[dict]) -> str:
+    """Self-contained SVG: frontier staircase + config dots."""
+    w, h, pad = 480, 300, 42
+    r0, r1, y0, y1 = _bounds(new + old)
+
+    def xy(p):
+        x = pad + (p["recall"] - r0) / (r1 - r0) * (w - 2 * pad)
+        y = h - pad - (p["p99_ms"] - y0) / (y1 - y0) * (h - 2 * pad)
+        return x, y
+
+    parts = [f'<svg xmlns="http://www.w3.org/2000/svg" width="{w}" '
+             f'height="{h}" font-family="monospace" font-size="10">',
+             f'<rect width="{w}" height="{h}" fill="white"/>',
+             f'<line x1="{pad}" y1="{h - pad}" x2="{w - pad}" '
+             f'y2="{h - pad}" stroke="black"/>',
+             f'<line x1="{pad}" y1="{pad}" x2="{pad}" y2="{h - pad}" '
+             f'stroke="black"/>',
+             f'<text x="{w // 2}" y="{h - 8}" text-anchor="middle">'
+             f'recall@10 ({r0:.3f} – {r1:.3f})</text>',
+             f'<text x="12" y="{h // 2}" transform="rotate(-90 12 '
+             f'{h // 2})" text-anchor="middle">paced p99 ms '
+             f'({y0:.2f} – {y1:.2f})</text>']
+    for pts, color, alpha in ((old, "#999999", 0.7),
+                              (new, "#1f77b4", 1.0)):
+        frontier = sorted((p for p in pts if p["frontier"]),
+                          key=lambda p: p["recall"])
+        if frontier:
+            d = " ".join(f"{xy(p)[0]:.1f},{xy(p)[1]:.1f}"
+                         for p in frontier)
+            parts.append(f'<polyline points="{d}" fill="none" '
+                         f'stroke="{color}" stroke-opacity="{alpha}"/>')
+        for p in pts:
+            x, y = xy(p)
+            r = 4 if p["frontier"] else 2.5
+            parts.append(f'<circle cx="{x:.1f}" cy="{y:.1f}" r="{r}" '
+                         f'fill="{color}" fill-opacity="{alpha}">'
+                         f'<title>{p["name"]}: recall='
+                         f'{p["recall"]:.3f} p99={p["p99_ms"]:.2f}ms'
+                         f'</title></circle>')
+    parts.append("</svg>")
+    return "\n".join(parts)
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("new", help="BENCH_*.json with pareto/* rows")
+    ap.add_argument("old", nargs="?", default=None,
+                    help="optional older snapshot to overlay")
+    ap.add_argument("--svg", metavar="PATH",
+                    help="also write the frontier as a standalone SVG")
+    args = ap.parse_args()
+
+    new = load_pareto(args.new)
+    if not new:
+        print(f"# {args.new}: no pareto/* rows (run benchmarks.run "
+              f"--only pareto --json first)", file=sys.stderr)
+        return 2
+    old = load_pareto(args.old) if args.old else []
+
+    print(ascii_plot(new, old))
+    n_front = sum(p["frontier"] for p in new)
+    print(f"# {len(new)} configs, {n_front} on the frontier "
+          f"({args.new})")
+    for p in sorted(new, key=lambda p: p["recall"]):
+        mark = "O" if p["frontier"] else " "
+        print(f"#  {mark} {p['name']:24s} recall={p['recall']:.3f} "
+              f"p99={p['p99_ms']:8.2f}ms")
+    if args.svg:
+        with open(args.svg, "w") as f:
+            f.write(svg_plot(new, old))
+        print(f"# wrote {args.svg}")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())
