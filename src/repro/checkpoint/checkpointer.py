@@ -27,6 +27,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.util import atomic_write, atomic_write_text, fsync_dir
 
 _SEP = "/"
 
@@ -89,8 +90,8 @@ class Checkpointer:
         tmp.mkdir(parents=True)
         shard_dir = tmp / f"proc_{self.process_index:05d}"
         shard_dir.mkdir()
-        np.savez(shard_dir / "arrays.npz",
-                 **{k: v for k, v in flat.items()})
+        with atomic_write(shard_dir / "arrays.npz", "wb") as f:
+            np.savez(f, **{k: v for k, v in flat.items()})
         manifest = {
             "step": step,
             "time": time.time(),
@@ -100,11 +101,15 @@ class Checkpointer:
                        for k, v in flat.items()},
             "extra": extra,
         }
-        (tmp / "manifest.json").write_text(json.dumps(manifest, indent=1))
-        (tmp / "COMMITTED").write_text("ok")        # commit marker
+        atomic_write_text(tmp / "manifest.json",
+                          json.dumps(manifest, indent=1))
+        # commit marker last: a crash before this line leaves an
+        # uncommitted (ignored) tmp dir, never a half-restorable step
+        atomic_write_text(tmp / "COMMITTED", "ok")
         if final.exists():
             shutil.rmtree(final)
         tmp.rename(final)
+        fsync_dir(self.dir)
         self._gc()
 
     def _gc(self):

@@ -213,21 +213,32 @@ def _model_hit_rate(cand: Candidate, nlist: int) -> float:
 
 def predicted_latency_ms(cand: Candidate, *, n_total: int, nlist: int,
                          d: int, k: int, ranks: int, qps: float,
-                         max_wait_s: float, cb: int = 256) -> float:
+                         max_wait_s: float, cb: int = 256,
+                         cold_fraction: float = 0.0,
+                         disk=None) -> float:
     """Modeled serving-batch latency (ms) for one candidate: Eq. 15 on
     the UPMEM profile at the expected batch occupancy (offered load x
     batching window, clipped to the candidate's largest bucket), LUT
     bytes priced per ``lut_dtype``, cache candidates discounted by the
     hit prior.  Used only to *order* candidates and prune dominated
-    ones — the SLO itself is checked against measured latency."""
+    ones — the SLO itself is checked against measured latency.
+
+    ``cold_fraction``/``disk`` price a tiered deploy's disk tier (see
+    :func:`~repro.core.perf_model.cold_probe_seconds`): pass the
+    expected RAM-miss share (e.g. ``1 - budget/total``) so the
+    shortlist ranks candidates under tiering, not just all-resident."""
     occupancy = int(min(max(cand.buckets),
                         max(1, round(qps * max_wait_s))))
     ix = IndexParams(n_total=n_total, nlist=nlist, q=1, d=d, k=k,
                      p=cand.nprobe, m=cand.m, cb=cb,
                      b_lut=lut_width_bytes(cand.lut_dtype))
+    if cold_fraction > 0.0 and disk is None:
+        from repro.core.perf_model import NVME_PROFILE
+        disk = NVME_PROFILE
     t = serving_batch_latency(ix, UPMEM_PROFILE, ranks=ranks,
                               batch=occupancy,
-                              lut_hit_rate=_model_hit_rate(cand, nlist))
+                              lut_hit_rate=_model_hit_rate(cand, nlist),
+                              cold_fraction=cold_fraction, disk=disk)
     return t * 1e3
 
 

@@ -223,8 +223,20 @@ class Index:
     """
 
     def __init__(self, ivf: IVFPQIndex, *, points=None, mutable: bool = False,
-                 compact_threshold: float = 0.5, pad_multiple: int = 8):
+                 compact_threshold: float = 0.5, pad_multiple: int = 8,
+                 storage: str = "resident", storage_dir=None,
+                 storage_budget_bytes: int = 0,
+                 storage_promote_margin: float = 1.25):
+        if storage not in ("resident", "tiered"):
+            raise ValueError(f"storage must be 'resident' or 'tiered', "
+                             f"got {storage!r}")
+        if storage == "tiered" and mutable:
+            raise ValueError("tiered storage currently requires a static "
+                             "index (the spill file is written once; "
+                             "upserts would need per-cluster rewrite)")
         self._ivf = ivf
+        self.storage = storage
+        self.tiered_store = None
         self.mutable = bool(mutable)
         self.generation = 0
         self.stats = MutationStats()
@@ -234,6 +246,36 @@ class Index:
         self._csr_cache: Optional[IVFPQIndex] = ivf
         self._view_cache: Optional[IVFPQIndex] = None
         self._centroids_cache = ivf.centroids
+        if storage == "tiered":
+            if storage_dir is None:
+                raise ValueError("storage='tiered' needs storage_dir (the "
+                                 "spill directory)")
+            if storage_budget_bytes <= 0:
+                raise ValueError(f"storage='tiered' needs "
+                                 f"storage_budget_bytes > 0, got "
+                                 f"{storage_budget_bytes}")
+            import jax.numpy as jnp
+            from repro.storage.tiered import TieredStore
+            if ivf.codes.dtype != jnp.uint8:
+                raise ValueError(f"tiered storage ships uint8 PQ codes "
+                                 f"(cb <= 256); index codes are "
+                                 f"{ivf.codes.dtype}")
+            self.tiered_store = TieredStore.from_index(
+                ivf, storage_dir, budget_bytes=int(storage_budget_bytes),
+                pad_multiple=pad_multiple,
+                promote_margin=float(storage_promote_margin))
+            # Replace the wrapped CSR with a lean view: centroids /
+            # codebook / rotation / real offsets (so ``sizes`` stays
+            # honest) but EMPTY code/id arrays — the full code tensor now
+            # lives in the tier's mmap + resident slab, and dropping the
+            # reference here is what actually frees the beyond-budget
+            # bytes.  Engines route with this view and fetch codes from
+            # ``tiered_store``.
+            self._ivf = IVFPQIndex(
+                ivf.centroids, ivf.codebook,
+                jnp.zeros((0, ivf.codebook.m), jnp.uint8),
+                jnp.zeros((0,), jnp.int32), ivf.offsets, ivf.rotation)
+            self._csr_cache = self._ivf
         if not self.mutable:
             if points is not None and mutable is False:
                 pass        # points are only needed for the mutable store
@@ -263,14 +305,23 @@ class Index:
     def build(cls, key, points, *, nlist: int, m: int, cb: int = 256,
               kmeans_iters: int = 12, pq_iters: int = 12, opq: bool = False,
               train_sample: Optional[int] = None, mutable: bool = False,
-              compact_threshold: float = 0.5) -> "Index":
+              compact_threshold: float = 0.5, storage: str = "resident",
+              storage_dir=None, storage_budget_bytes: int = 0,
+              storage_promote_margin: float = 1.25) -> "Index":
         """Build from raw points (``core.ivf.build_ivfpq`` under the
-        hood) and wrap in a handle — the unified front door."""
+        hood) and wrap in a handle — the unified front door.
+
+        ``storage="tiered"`` spills the built codes to ``storage_dir``
+        and keeps only ``storage_budget_bytes`` of hot clusters resident
+        (see :mod:`repro.storage.tiered`); static indexes only."""
         ivf = build_ivfpq(key, points, nlist=nlist, m=m, cb=cb,
                           kmeans_iters=kmeans_iters, pq_iters=pq_iters,
                           opq=opq, train_sample=train_sample)
         return cls(ivf, points=points if mutable else None, mutable=mutable,
-                   compact_threshold=compact_threshold)
+                   compact_threshold=compact_threshold, storage=storage,
+                   storage_dir=storage_dir,
+                   storage_budget_bytes=storage_budget_bytes,
+                   storage_promote_margin=storage_promote_margin)
 
     # -- read surface ------------------------------------------------------
     @property
@@ -287,6 +338,11 @@ class Index:
         import jax.numpy as jnp
         if self._clusters_cache is None:
             if not self.mutable:
+                if self.tiered_store is not None:
+                    raise RuntimeError(
+                        "a tiered Index holds no resident PaddedClusters "
+                        "(that is the point) — fetch probed clusters "
+                        "through .tiered_store.gather(...)")
                 self._clusters_cache = pad_clusters(self._ivf)
             else:
                 with self._lock:
@@ -353,10 +409,19 @@ class Index:
         return self._store.sizes.copy()
 
     def __len__(self) -> int:
-        return self._store.n_live if self.mutable else int(self._ivf.ids.shape[0])
+        if self.mutable:
+            return self._store.n_live
+        if self.tiered_store is not None:   # lean view: ids live in the tier
+            return int(self.tiered_store.sizes.sum())
+        return int(self._ivf.ids.shape[0])
 
     def __contains__(self, pid) -> bool:
         if not self.mutable:
+            if self.tiered_store is not None:
+                tier = self.tiered_store
+                valid = np.arange(tier.cap)[None, :] < tier.sizes[:, None]
+                return bool(np.any(
+                    np.asarray(tier._ids_mm)[valid] == int(pid)))
             return bool(np.any(np.asarray(self._ivf.ids) == int(pid)))
         return int(pid) in self._store.loc
 

@@ -252,11 +252,45 @@ def make_task_latency_model(ix: IndexParams, hw: HardwareProfile,
                             l_sort=t("TS", per_point=True))
 
 
+# --------------------------------------------------------------------------
+# Disk tier — prices a cold probe the way c2io prices PIM transfers.
+# A tiered index (repro.storage) keeps hot clusters resident and serves
+# cold ones from an mmap spill file; the extra cost per cold probe is one
+# seek plus the cluster's code+id bytes over disk bandwidth.
+# --------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class DiskProfile:
+    """Spill-tier device model: fixed per-read latency + stream bandwidth."""
+    name: str
+    seek_s: float      # per-read latency floor (s) — NVMe ~80 us
+    bw: float          # sustained read bandwidth (bytes/s)
+    notes: str = ""
+
+
+NVME_PROFILE = DiskProfile(
+    name="nvme-gen4", seek_s=8e-5, bw=3.5e9,
+    notes="consumer Gen4 NVMe: ~80 us random-read latency, 3.5 GB/s")
+
+
+def cold_probe_seconds(ix: IndexParams, disk: DiskProfile) -> float:
+    """Added latency of serving one probe from the spill tier instead of
+    RAM: one seek plus the cluster's record bytes (M code bytes + one
+    id per point) streamed at disk bandwidth.  Strictly positive for any
+    real device (``seek_s > 0``), so a cold probe always prices higher
+    than the same probe hot — the invariant the residency controller's
+    cost accounting relies on."""
+    record_bytes = ix.c * (ix.m * ix.b_code + ix.b_addr)
+    return disk.seek_s + record_bytes / disk.bw
+
+
 def serving_batch_latency(ix: IndexParams, hw: HardwareProfile,
                           ranks: int, batch: int,
                           lut_hit_rate: float = 0.0,
                           multiplierless: bool = True,
-                          compute_scale: float = 1.0) -> float:
+                          compute_scale: float = 1.0,
+                          cold_fraction: float = 0.0,
+                          disk: "DiskProfile | None" = None) -> float:
     """Modeled service time (s) of one ``batch``-query serving batch on a
     ``ranks``-rank PIM fleet — the same Eq. 15 basis that paces
     :class:`~repro.runtime.serving.PimPacedEngine`, restated per batch:
@@ -267,6 +301,12 @@ def serving_batch_latency(ix: IndexParams, hw: HardwareProfile,
     fraction of (query, cluster) tasks the hot-cluster cache serves
     (the cache saves the RC+LC work, never the scan/sort) — the term
     the auto-tuner uses to price ``cache_capacity_bytes`` candidates.
+
+    ``cold_fraction`` is the share of probes served from a disk spill
+    tier (``repro.storage``): each such probe pays
+    :func:`cold_probe_seconds` on top of its scan, so a tiered deploy is
+    priced strictly above the all-resident one whenever it actually
+    misses RAM.  Requires ``disk`` when nonzero.
     """
     if ranks < 1:
         raise ValueError(f"ranks must be >= 1, got {ranks}")
@@ -275,10 +315,17 @@ def serving_batch_latency(ix: IndexParams, hw: HardwareProfile,
     if not 0.0 <= lut_hit_rate <= 1.0:
         raise ValueError(f"lut_hit_rate must be in [0, 1], "
                          f"got {lut_hit_rate}")
+    if not 0.0 <= cold_fraction <= 1.0:
+        raise ValueError(f"cold_fraction must be in [0, 1], "
+                         f"got {cold_fraction}")
+    if cold_fraction > 0.0 and disk is None:
+        raise ValueError("cold_fraction > 0 requires a DiskProfile")
     model = make_task_latency_model(ix, hw, multiplierless=multiplierless,
                                     compute_scale=compute_scale)
     l_task = (model.l_lut * (1.0 - lut_hit_rate)
               + ix.c * (model.l_calc + model.l_sort))
+    if cold_fraction > 0.0:
+        l_task += cold_fraction * cold_probe_seconds(ix, disk)
     waves = -(-(batch * ix.p) // ranks)
     return waves * l_task
 

@@ -141,6 +141,58 @@ def materialize_shards(index: IVFPQIndex, layout: Layout,
                         index.centroids, index.codebook, index.rotation)
 
 
+def materialize_shards_tiered(index: IVFPQIndex, layout: Layout, tier,
+                              pad_multiple: int = 8):
+    """Tiered materialize: device tensors hold only RAM-resident clusters.
+
+    ``index`` is a tiered handle's lean CSR view (real offsets, empty
+    code arrays); rows come from the :class:`repro.storage.TieredStore`
+    instead.  Instances of clusters cold at snapshot time get device
+    ``sizes = 0`` — the shard step then yields inf/-1 candidates for
+    them (ignored by the merge) and the engine scans those probes
+    host-side through the tier's fetch path.  Returns ``(sindex,
+    cold_mask)``; the mask is the snapshot the serving path routes by
+    until the next re-layout (a cluster promoted mid-epoch still scans
+    host-side — correct, just not yet device-accelerated).
+    """
+    m = index.codebook.m
+    s = layout.n_shards
+    slots = max(int((layout.shard_of == sh).sum()) for sh in range(s))
+    slots = max(slots, 1)
+    cpart = max(i.size for i in layout.instances)
+    cpart = max(-(-cpart // pad_multiple) * pad_multiple, pad_multiple)
+
+    resident = np.asarray(tier.resident_mask).copy()
+    sh_codes = np.zeros((s, slots, cpart, m), np.uint8)
+    sh_ids = np.full((s, slots, cpart), -1, np.int32)
+    sh_sizes = np.zeros((s, slots), np.int32)
+    sh_cluster = np.full((s, slots), -1, np.int32)
+    sh_start = np.zeros((s, slots), np.int32)
+    slot_of = np.full(len(layout.instances), -1, np.int64)
+
+    cursor = np.zeros(s, np.int64)
+    for inst in layout.instances:
+        sh = int(layout.shard_of[inst.instance_id])
+        slot = int(cursor[sh])
+        cursor[sh] += 1
+        sz = int(inst.size)
+        if resident[inst.cluster]:
+            codes_c, ids_c = tier.peek(inst.cluster)
+            sh_codes[sh, slot, :sz] = codes_c[inst.start:inst.start + sz]
+            sh_ids[sh, slot, :sz] = ids_c[inst.start:inst.start + sz]
+            sh_sizes[sh, slot] = sz
+        # cold: sizes stay 0 — the host-side tier scan owns this cluster
+        sh_cluster[sh, slot] = inst.cluster
+        sh_start[sh, slot] = inst.start
+        slot_of[inst.instance_id] = slot
+
+    sindex = ShardedIndex(jnp.asarray(sh_codes), jnp.asarray(sh_ids),
+                          jnp.asarray(sh_sizes), jnp.asarray(sh_cluster),
+                          jnp.asarray(sh_start), slot_of,
+                          index.centroids, index.codebook, index.rotation)
+    return sindex, ~resident
+
+
 # ---------------------------------------------------------------------------
 # Per-shard task pipeline — the "DPU kernel" (RC + LC + DC + TS).
 # ---------------------------------------------------------------------------
@@ -481,6 +533,23 @@ class _Placement(NamedTuple):
     step_lut: Optional[object]
     index: Optional[IVFPQIndex] = None
     latency: Optional[TaskLatencyModel] = None
+    cold_mask: Optional[np.ndarray] = None   # tiered: True = not on device
+
+
+@functools.partial(jax.jit, static_argnames=("k", "strategy"))
+def _cold_scan(lut, codes, ids, sizes, *, k: int, strategy: str):
+    """DC + TS over tier-fetched cold tasks: (T, cap, M) u8 codes +
+    per-task LUT rows -> (T, k) candidates (same candidate contract as a
+    shard step's output — appended before the host merge, so cold probes
+    are exact, never approximated).  Pad tasks carry ``sizes = 0`` and
+    fall out as inf/-1."""
+    strat = "gather" if strategy == "gather" else "onehot"
+    if isinstance(lut, QuantizedLUT):
+        d = adc_distances_quantized(lut, codes, sizes, strat)
+    else:
+        d = adc_distances(lut, codes, sizes, strat)
+    bd, bi = topk_smallest(d, ids, k)
+    return bd, jnp.where(jnp.isfinite(bd), bi, -1)
 
 
 class DistributedEngine:
@@ -497,7 +566,7 @@ class DistributedEngine:
                  sample_probes: np.ndarray,
                  latency: Optional[TaskLatencyModel] = None,
                  mesh=None, lut_cache=None, heat_estimator=None,
-                 tasks_controller=None):
+                 tasks_controller=None, tiered_store=None):
         from repro.core.perf_model import (IndexParams, UPMEM_PROFILE,
                                            lut_width_bytes)
         if cfg.lut_dtype not in ("f32", "uint8"):
@@ -526,6 +595,11 @@ class DistributedEngine:
         self.lut_cache = lut_cache
         self.heat_estimator = heat_estimator
         self.tasks_controller = tasks_controller
+        # tiered storage: device shard tensors hold only the tier's
+        # resident clusters; probes of snapshot-cold clusters are scanned
+        # host-side through the tier's batched fetch path (_scan_cold)
+        self.tiered_store = tiered_store
+        self._cold_mask: Optional[np.ndarray] = None
         self.batches_served = 0
         self.relayouts = 0
         self.generations = 0        # index generations installed (mutation)
@@ -555,7 +629,12 @@ class DistributedEngine:
             dup_budget_bytes=self.cfg.dup_budget_bytes,
             bytes_per_row=bytes_per_row, latency=lat,
             naive=self.cfg.naive_layout)
-        sindex = materialize_shards(idx, layout)
+        cold_mask = None
+        if self.tiered_store is not None:
+            sindex, cold_mask = materialize_shards_tiered(
+                idx, layout, self.tiered_store)
+        else:
+            sindex = materialize_shards(idx, layout)
         step = step_lut = None
         if self.mesh is not None:
             step = make_sharded_step(self.mesh, sindex, k=self.cfg.k,
@@ -567,7 +646,8 @@ class DistributedEngine:
                 use_kernels=self.cfg.use_kernels)
         return _Placement(layout, sindex, np.asarray(sindex.cluster_of),
                           step, step_lut, index=index,
-                          latency=None if index is None else lat)
+                          latency=None if index is None else lat,
+                          cold_mask=cold_mask)
 
     def _install(self, placement: _Placement) -> None:
         """Point the serving path at ``placement``.  Deferred-task carry
@@ -582,6 +662,7 @@ class DistributedEngine:
         self.layout = placement.layout
         self.sindex = placement.sindex
         self._cluster_of_host = placement.cluster_of_host
+        self._cold_mask = placement.cold_mask
         self.carry: list = []
         self._step = placement.step
         self._step_lut = placement.step_lut
@@ -827,6 +908,8 @@ class DistributedEngine:
             info["tasks_controller"] = self.tasks_controller.summary()
         if self.heat_estimator is not None:
             info["heat_batches"] = self.heat_estimator.batches_observed
+        if self.tiered_store is not None:
+            info["tier"] = self.tiered_store.serving_info()
         return info
 
     # -- online ------------------------------------------------------------
@@ -906,6 +989,54 @@ class DistributedEngine:
                             flat_probes, buckets, npr, res)
         return stack_lut_bank(luts)
 
+    def _scan_cold(self, queries_np: np.ndarray, probes: np.ndarray,
+                   bank):
+        """Scan this batch's snapshot-cold probes through the tier.
+
+        (q, pos) pairs whose cluster is absent from the device tensors
+        are gathered from the tier (one deduplicated mmap read per
+        batch), scored by :func:`_cold_scan` with the same LUTs the
+        device path would use — bank rows when the cache is on (row
+        ``q * nprobe + pos``, shared with split parts), a fresh pow2-
+        padded RC+LC otherwise — and returned as extra (T, k) candidate
+        rows for the host merge.  Returns ``None`` when nothing is cold.
+        """
+        mask = self._cold_mask
+        if mask is None or not mask.any():
+            return None
+        cold_q, cold_pos = np.nonzero(mask[probes])
+        if cold_q.size == 0:
+            return None
+        clusters = probes[cold_q, cold_pos]
+        t = int(cold_q.size)
+        tpad = next_pow2(t)
+        codes, ids, sizes = self.tiered_store.gather(clusters)
+        codes_p = np.zeros((tpad,) + codes.shape[1:], codes.dtype)
+        ids_p = np.full((tpad,) + ids.shape[1:], -1, ids.dtype)
+        sizes_p = np.zeros((tpad,), sizes.dtype)
+        codes_p[:t], ids_p[:t], sizes_p[:t] = codes, ids, sizes
+        if bank is not None:
+            lidx = np.zeros(tpad, np.int64)
+            lidx[:t] = cold_q.astype(np.int64) * self.cfg.nprobe + cold_pos
+            li = jnp.asarray(lidx)
+            lut = jax.tree.map(lambda a: a[li], bank)
+        else:
+            q_p = np.zeros((tpad, queries_np.shape[1]), np.float32)
+            q_p[:t] = queries_np[cold_q]
+            crows = np.zeros(tpad, np.int32)
+            crows[:t] = clusters
+            res = miss_residuals(jnp.asarray(q_p), self.sindex.centroids,
+                                 jnp.asarray(crows), self.sindex.rotation)
+            lut = build_lut_batch(self.index.codebook, res)
+            if self.cfg.lut_dtype == "uint8":
+                lut = quantize_lut(lut)
+        bd, bi = _cold_scan(lut, jnp.asarray(codes_p), jnp.asarray(ids_p),
+                            jnp.asarray(sizes_p), k=self.cfg.k,
+                            strategy=self.cfg.strategy)
+        qarr = np.full(tpad, -1, np.int64)
+        qarr[:t] = cold_q
+        return np.asarray(bd), np.asarray(bi), qarr
+
     def _probe_posmap(self, probes: np.ndarray) -> np.ndarray:
         """(nq, nlist) position of each cluster in its query's probe list
         (-1 absent).  Built once per batch — every drain round reuses it."""
@@ -953,6 +1084,12 @@ class DistributedEngine:
         if nv > 0:      # all-padding warmup batches don't count as traffic
             if self.heat_estimator is not None:
                 self.heat_estimator.observe(probes[:nv])
+            if self.tiered_store is not None:
+                # tier heat drives promote/demote; residency changes only
+                # take effect on device at the next re-layout (the cold
+                # mask is a placement snapshot), but the mmap fetch path
+                # serves the in-between batches exactly
+                self.tiered_store.observe(probes[:nv])
             self.batches_served += 1
             if (self.cfg.relayout_every > 0
                     and self.heat_estimator is not None
@@ -1012,6 +1149,14 @@ class DistributedEngine:
             if not (flush and self.carry):
                 break
             pending = np.zeros((0, 0), np.int64)   # only carry-in tasks
+        if self.tiered_store is not None:
+            cold = self._scan_cold(np.asarray(queries, np.float32), probes,
+                                   bank)
+            if cold is not None:
+                cd, ci, cq = cold
+                all_d.append(cd)
+                all_i.append(ci)
+                all_q.append(cq)
         d = np.concatenate([a.reshape(-1, self.cfg.k) for a in all_d])
         i = np.concatenate([a.reshape(-1, self.cfg.k) for a in all_i])
         q = np.concatenate([a.reshape(-1) for a in all_q])

@@ -368,20 +368,41 @@ def lut_miss_scan(cache: "HotClusterLUTCache", flat_probes: np.ndarray,
     beyond ``len(buckets)`` are serving padding — they are returned as
     misses without touching the cache (no lookup, no stats).
     Returns (luts, miss_rows): luts[t] is the cached (M, CB) LUT or None.
+
+    The row math is batched in numpy: ``flat_probes`` is pulled to the
+    host once (per-row indexing of a device array syncs per element),
+    pad rows are the contiguous tail so they never enter the loop, and
+    duplicate (cluster, bucket) keys within the batch resolve through a
+    local memo — one LRU traversal per *unique* key, with hit/miss
+    counters bumped per row so the stats match the per-row scan exactly.
     """
     luts = [None] * n_rows
+    n_valid = min(len(buckets) * nprobe, n_rows)
+    pad_rows = list(range(n_valid, n_rows))    # pad: compute, don't cache
+    if n_valid == 0:
+        return luts, pad_rows
+    probes = np.asarray(flat_probes)[:n_valid].astype(np.int64, copy=False)
+    keys = [(int(c), buckets[t // nprobe]) for t, c in enumerate(probes)]
     miss_rows = []
-    for t in range(n_rows):
-        qi = t // nprobe
-        if qi >= len(buckets):                 # pad row: compute, don't cache
-            miss_rows.append(t)
+    seen: dict = {}
+    stats = cache.stats
+    for t, k in enumerate(keys):
+        if k in seen:
+            v = seen[k]
+            if v is None:
+                stats.misses += 1
+                miss_rows.append(t)
+            else:
+                stats.hits += 1
+                luts[t] = v
             continue
-        hit = cache.get_by_bucket(flat_probes[t], buckets[qi])
-        if hit is None:
+        v = cache.get_by_bucket(k[0], k[1])
+        seen[k] = v
+        if v is None:
             miss_rows.append(t)
         else:
-            luts[t] = hit
-    return luts, miss_rows
+            luts[t] = v
+    return luts, miss_rows + pad_rows
 
 
 def lut_fill_misses(cache: "HotClusterLUTCache", codebook, luts,
@@ -424,11 +445,12 @@ def lut_fill_misses(cache: "HotClusterLUTCache", codebook, luts,
         fresh = [(lq[j], sc[j], bs[j]) for j in range(nmiss)]
     else:
         fresh = np.asarray(built)[:nmiss]
+    probes = np.asarray(flat_probes)           # host once, not per row
     for j, t in enumerate(miss_rows):
         luts[t] = fresh[j]
         qi = t // nprobe
         if qi < len(buckets):
-            cache.put_by_bucket(flat_probes[t], buckets[qi], fresh[j])
+            cache.put_by_bucket(int(probes[t]), buckets[qi], fresh[j])
 
 
 def stack_lut_bank(luts: Sequence):
@@ -440,12 +462,24 @@ def stack_lut_bank(luts: Sequence):
     matches what the quantized scan kernels expect."""
     import jax.numpy as jnp
     from repro.core.adc import QuantizedLUT
-    if isinstance(luts[0], tuple):
-        return QuantizedLUT(
-            jnp.asarray(np.stack([v[0] for v in luts])),
-            jnp.asarray(np.stack([v[1] for v in luts])),
-            jnp.asarray(np.stack([v[2] for v in luts])))
-    return jnp.asarray(np.stack(luts))
+    n = len(luts)
+    first = luts[0]
+    if isinstance(first, tuple):
+        # one preallocated slab per component, single pass — np.stack of
+        # three list comprehensions walked the row list four times and
+        # re-concatenated each slab
+        lq = np.empty((n,) + first[0].shape, first[0].dtype)
+        sc = np.empty((n,) + first[1].shape, first[1].dtype)
+        bs = np.empty((n,) + first[2].shape, first[2].dtype)
+        for i, (a, b, c) in enumerate(luts):
+            lq[i], sc[i], bs[i] = a, b, c
+        return QuantizedLUT(jnp.asarray(lq), jnp.asarray(sc),
+                            jnp.asarray(bs))
+    first = np.asarray(first)
+    bank = np.empty((n,) + first.shape, first.dtype)
+    for i, v in enumerate(luts):
+        bank[i] = v
+    return jnp.asarray(bank)
 
 
 def precompile_lut_shapes(codebook, max_rows: int,

@@ -50,7 +50,10 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core.adc import QuantizedLUT, adc_distances, adc_distances_quantized
+from repro.core.adc import (QuantizedLUT, adc_distances,
+                            adc_distances_quantized, build_lut_batch,
+                            quantize_lut)
+from repro.core.coarse2 import Coarse2, coarse2_locate
 from repro.core.ivf import IVFPQIndex, PaddedClusters
 from repro.core.search import SearchParams, cluster_locate, search_ivfpq
 from repro.core.topk import topk_smallest
@@ -150,6 +153,42 @@ def _dc_ts(lut, flat_probes, clusters: PaddedClusters, *, k: int,
     return topk_smallest(cand_d, cand_i, k)
 
 
+@jax.jit
+def _rc_from_probes(queries, centroids, rotation, probes):
+    """RC for externally-routed probes (two-level CL): (Q, D) + (Q, P)
+    -> flat residuals (Q*P, D)."""
+    residual = queries[:, None, :] - centroids[probes]
+    if rotation is not None:
+        residual = residual @ rotation
+    return residual.reshape(probes.shape[0] * probes.shape[1], -1)
+
+
+@functools.partial(jax.jit, static_argnames=("k", "strategy", "nprobe"))
+def _dc_ts_tasks(lut, codes, ids, sizes, *, k: int, strategy: str,
+                 nprobe: int):
+    """DC + TS over *pre-gathered* task tensors — the tiered fetch path.
+
+    Identical math to :func:`_dc_ts`, but the (Q*P, cmax, M) codes /
+    (Q*P, cmax) ids / (Q*P,) sizes arrive from the host (TieredStore
+    resident-slab rows + mmap cold reads) instead of being gathered from
+    a device-resident ``PaddedClusters`` — the engine never materializes
+    the full code tensor.  Because the tier's per-cluster capacity equals
+    ``pad_clusters``'s cmax and sizes mask the scan the same way, results
+    are bit-identical to the all-resident gather."""
+    strat = "gather" if strategy == "gather" else "onehot"
+    if isinstance(lut, QuantizedLUT):
+        dists = adc_distances_quantized(lut, codes, sizes, strat)
+        n_rows = lut.lut_q.shape[0]
+    else:
+        dists = adc_distances(lut, codes, sizes, strat)
+        n_rows = lut.shape[0]
+    nq = n_rows // nprobe
+    cmax = codes.shape[1]
+    cand_d = dists.reshape(nq, nprobe * cmax)
+    cand_i = ids.reshape(nq, nprobe * cmax)
+    return topk_smallest(cand_d, cand_i, k)
+
+
 class LocalEngine:
     """Single-device five-phase pipeline behind the serving protocol.
 
@@ -168,9 +207,12 @@ class LocalEngine:
     in-flight batch cannot poison the cache for the new generation.
     """
 
-    def __init__(self, index: IVFPQIndex, clusters: PaddedClusters,
+    def __init__(self, index: IVFPQIndex, clusters: Optional[PaddedClusters],
                  params: SearchParams,
-                 lut_cache: Optional[HotClusterLUTCache] = None):
+                 lut_cache: Optional[HotClusterLUTCache] = None,
+                 tiered_store=None,
+                 coarse: Optional[Coarse2] = None,
+                 coarse_nprobe1: int = 0):
         _warn_direct_use("LocalEngine")
         if (lut_cache is not None
                 and getattr(lut_cache, "lut_dtype", "f32")
@@ -179,9 +221,23 @@ class LocalEngine:
                 f"lut_cache.lut_dtype={lut_cache.lut_dtype!r} disagrees "
                 f"with SearchParams.lut_dtype={params.lut_dtype!r}; cached "
                 f"and uncached scans must run the same dtype")
+        if clusters is None and tiered_store is None:
+            raise ValueError("clusters may be omitted only with a "
+                             "tiered_store (codes then live in the tier)")
         self._view = (index, clusters, 0)
         self.params = params
         self.lut_cache = lut_cache
+        # tiered storage (repro.storage.TieredStore): CL routes as usual,
+        # then codes/ids/sizes for the probed clusters are fetched from
+        # the RAM-resident slab or the mmap spill file — the engine holds
+        # no full PaddedClusters, which is the beyond-memory point
+        self.tiered_store = tiered_store
+        # two-level coarse quantizer: when set, CL ranks only the top
+        # coarse_nprobe1 groups' member centroids instead of all nlist
+        self.coarse = coarse
+        self.coarse_nprobe1 = (int(coarse_nprobe1) if coarse_nprobe1
+                               else (coarse.n_groups if coarse is not None
+                                     else 0))
         self.k = params.k
 
     # the (index, clusters) pair is one atomic view; the split properties
@@ -225,6 +281,9 @@ class LocalEngine:
                      n_valid: Optional[int] = None
                      ) -> Tuple[np.ndarray, np.ndarray]:
         index, clusters, _ = self._view
+        if self.tiered_store is not None or self.coarse is not None:
+            return self._search_tasks(np.asarray(queries, np.float32),
+                                      n_valid)
         if self.lut_cache is None:
             d, i = search_ivfpq(index, clusters,
                                 jnp.asarray(queries, jnp.float32),
@@ -232,6 +291,16 @@ class LocalEngine:
             return np.asarray(d), np.asarray(i)
         return self._search_cached(np.asarray(queries, np.float32),
                                    n_valid)
+
+    def serving_info(self) -> dict:
+        """Engine-side metrics block (tier residency, routing mode)."""
+        out: dict = {"engine": "local"}
+        if self.coarse is not None:
+            out["coarse"] = {"n_groups": self.coarse.n_groups,
+                             "nprobe1": self.coarse_nprobe1}
+        if self.tiered_store is not None:
+            out["tier"] = self.tiered_store.serving_info()
+        return out
 
     def precompile_lc(self, max_rows: int) -> None:
         """Compile the cached path's miss-batch LC shapes (pow2 up to
@@ -270,6 +339,70 @@ class LocalEngine:
         lut = stack_lut_bank(luts)            # (QP, M, CB) or QuantizedLUT
         bd, bi = _dc_ts(lut, jnp.asarray(flat_probes), clusters,
                         k=p.k, strategy=p.strategy, nprobe=npr)
+        return np.asarray(bd), np.asarray(bi)
+
+    def _route(self, queries_j, index):
+        """CL + RC, flat or two-level: -> (probes (Q, P), flat residuals).
+
+        With a :class:`~repro.core.coarse2.Coarse2` installed, routing
+        scores ``n_groups + nprobe1 * gmax`` centroid rows instead of all
+        ``nlist`` — at ``nprobe1 == n_groups`` the probe set matches flat
+        CL (the parity default when ``coarse_nprobe1`` is unset)."""
+        p = self.params
+        if self.coarse is None:
+            return _cl_rc(queries_j, index.centroids, index.rotation,
+                          nprobe=p.nprobe)
+        probes, _ = coarse2_locate(self.coarse, queries_j,
+                                   nprobe=p.nprobe,
+                                   nprobe1=self.coarse_nprobe1)
+        flat_res = _rc_from_probes(queries_j, index.centroids,
+                                   index.rotation, probes)
+        return probes, flat_res
+
+    def _search_tasks(self, queries: np.ndarray,
+                      n_valid: Optional[int] = None):
+        """Tiered / two-level path: route, fetch task tensors through the
+        tier (resident slab hit or batched mmap cold read), scan.
+
+        Probe heat from valid rows feeds the tier's residency controller
+        *before* the fetch, so a sustained shift promotes clusters ahead
+        of — not after — the reads that want them.  Cold reads within the
+        batch are deduplicated and fetched in one memmap gather
+        (``TieredStore.gather``), i.e. per-probe misses batch per flush.
+        """
+        p = self.params
+        index, clusters, vgen = self._view    # one atomic read per batch
+        probes, flat_res = self._route(jnp.asarray(queries), index)
+        probes_np = np.asarray(probes)                     # (Q, P)
+        nq, npr = probes_np.shape
+        flat_probes = probes_np.reshape(-1)
+        n_valid_q = n_valid if n_valid is not None else nq
+        tier = self.tiered_store
+        if tier is not None and n_valid_q > 0:
+            tier.observe(probes_np[:n_valid_q])
+        if self.lut_cache is not None:
+            buckets = [(vgen, self.lut_cache.bucket_of(queries[qi]))
+                       for qi in range(n_valid_q)]
+            luts, miss_rows = lut_miss_scan(self.lut_cache, flat_probes,
+                                            buckets, npr, nq * npr)
+            if miss_rows:
+                flat_res_np = np.asarray(flat_res)
+                lut_fill_misses(self.lut_cache, index.codebook, luts,
+                                miss_rows, flat_probes, buckets, npr,
+                                flat_res_np[miss_rows])
+            lut = stack_lut_bank(luts)
+        else:
+            lut = build_lut_batch(index.codebook, flat_res)
+            if p.lut_dtype == "uint8":
+                lut = quantize_lut(lut)
+        if tier is not None:
+            codes, ids, sizes = tier.gather(flat_probes)
+            bd, bi = _dc_ts_tasks(lut, jnp.asarray(codes),
+                                  jnp.asarray(ids), jnp.asarray(sizes),
+                                  k=p.k, strategy=p.strategy, nprobe=npr)
+        else:
+            bd, bi = _dc_ts(lut, jnp.asarray(flat_probes), clusters,
+                            k=p.k, strategy=p.strategy, nprobe=npr)
         return np.asarray(bd), np.asarray(bi)
 
 

@@ -145,6 +145,44 @@ def selftest(clock: str = "virtual") -> int:
           f"maintenance gen={mstats['generation']} "
           f"nlist={mstats['nlist']}: OK")
     svc4.shutdown()
+
+    # -- tiered storage: beyond-memory serving, results unchanged ---------
+    import tempfile
+
+    spec5_kw = dict(engine="local", replicas=1, nprobe=4, k=5,
+                    buckets=(1, 2, 4), max_wait_s=1e-3)
+    ref5 = AnnService.build(ServiceSpec(**spec5_kw), index=index)
+    d_r5, i_r5 = ref5.search(queries)
+    ref5.shutdown()
+    tdir = tempfile.mkdtemp(prefix="selftest_tier_")
+    spec5 = ServiceSpec(storage="tiered", storage_dir=tdir,
+                        storage_budget_bytes=1, **spec5_kw)  # fully cold
+    svc5 = AnnService.build(spec5, points=np.asarray(ds.points), index=index)
+    tier = svc5.index.tiered_store
+    budget = max(tier.total_bytes // 4, tier.bytes_per_cluster)
+    svc5.shutdown()
+    spec5 = ServiceSpec(storage="tiered", storage_dir=tdir + "q",
+                        storage_budget_bytes=budget, **spec5_kw)
+    svc5 = AnnService.build(spec5, index=index)
+    tier = svc5.index.tiered_store
+    assert tier.total_bytes >= 4 * tier.budget_bytes >= 4, \
+        (tier.total_bytes, tier.budget_bytes)
+    d_t5, i_t5 = svc5.search(queries)
+    np.testing.assert_array_equal(i_t5, i_r5)
+    np.testing.assert_allclose(d_t5, d_r5, rtol=1e-5, atol=1e-4)
+    for _ in range(4):                       # churn residency; stay exact
+        svc5.search(queries)
+    d_t6, i_t6 = svc5.search(queries)
+    np.testing.assert_array_equal(i_t6, i_r5)
+    assert tier.resident_bytes <= tier.budget_bytes
+    tinfo = svc5.stats()["tier"]
+    assert tinfo["cold_fetches"] > 0, tinfo
+    print(f"[selftest] tiered: {tinfo['total_bytes']}B index under "
+          f"{tinfo['budget_bytes']}B budget "
+          f"(resident={tinfo['resident_clusters']}/{index.nlist} "
+          f"hot_rate={tinfo['hot_rate']:.2f}) "
+          f"results == all-resident: OK")
+    svc5.shutdown()
     print(f"[selftest] repro.service OK (clock={clock})")
     return 0
 

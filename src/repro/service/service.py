@@ -157,21 +157,36 @@ class AnnService:
         ``sample_queries`` seeds the sharded engine's heat estimate
         (falls back to a slice of the corpus)."""
         spec.validate()
+        storage_kw = dict(storage=spec.storage, storage_dir=spec.storage_dir,
+                          storage_budget_bytes=spec.storage_budget_bytes,
+                          storage_promote_margin=spec.storage_promote_margin)
+        if spec.storage == "tiered" and spec.storage_dir is None:
+            # fresh spill dir per build; lives as long as the process
+            import tempfile
+            storage_kw["storage_dir"] = tempfile.mkdtemp(prefix="ann_tier_")
         if index is None:
             if points is None:
                 raise ValueError("AnnService.build needs points or index")
-            handle = spec.index.build(points, mutable=spec.mutable)
+            handle = spec.index.build(points, mutable=spec.mutable,
+                                      **storage_kw)
         elif isinstance(index, Index):
             handle = index
             if spec.mutable and not handle.mutable:
                 raise ValueError(
                     "spec.mutable=True needs a mutable Index handle — "
                     "build one with IndexSpec.build(points, mutable=True)")
+            if handle.storage != spec.storage:
+                raise ValueError(
+                    f"spec.storage={spec.storage!r} but the prebuilt Index "
+                    f"handle was built storage={handle.storage!r} — build "
+                    f"it with IndexSpec.build(points, storage=...) to "
+                    f"match")
         else:
             # raw IVFPQIndex: wrap (identity-preserving for the static
             # case; with spec.mutable the raw points must come along so
             # maintenance can re-encode)
-            handle = Index(index, points=points, mutable=spec.mutable)
+            handle = Index(index, points=points, mutable=spec.mutable,
+                           **storage_kw)
 
         sample_probes = None
         sample_np = None
@@ -237,34 +252,63 @@ class AnnService:
         def pace(engine):
             """PIM-paced serving: wrap the engine so batches take their
             Eq. 15 modeled time on a ``pim_paced_ranks``-rank fleet
-            (results unchanged; see runtime.serving.PimPacedEngine)."""
+            (results unchanged; see runtime.serving.PimPacedEngine).
+            With tiered storage the per-task latency also carries the
+            disk tier's expected cold-probe cost (Eq. 15 + seek/bw), at
+            the steady-state cold prior 1 - budget/total."""
             if not spec.pim_paced_ranks:
                 return engine
             from repro.core.perf_model import (IndexParams, UPMEM_PROFILE,
                                                lut_width_bytes,
                                                make_task_latency_model)
             sizes = np.asarray(index.sizes)
-            model = make_task_latency_model(
-                IndexParams(n_total=int(sizes.sum()), nlist=index.nlist,
-                            q=1, d=index.dim, k=spec.k, p=spec.nprobe,
-                            m=index.codebook.m, cb=index.codebook.cb,
-                            b_lut=lut_width_bytes(spec.lut_dtype)),
-                UPMEM_PROFILE)
+            ixp = IndexParams(n_total=int(sizes.sum()), nlist=index.nlist,
+                              q=1, d=index.dim, k=spec.k, p=spec.nprobe,
+                              m=index.codebook.m, cb=index.codebook.cb,
+                              b_lut=lut_width_bytes(spec.lut_dtype))
+            model = make_task_latency_model(ixp, UPMEM_PROFILE)
+            task_s = model.task_latency(float(sizes.mean()))
+            if index.tiered_store is not None:
+                from repro.core.perf_model import (NVME_PROFILE,
+                                                   cold_probe_seconds)
+                tier = index.tiered_store
+                cold_prior = max(
+                    0.0, 1.0 - tier.budget_bytes / max(tier.total_bytes, 1))
+                task_s += cold_prior * cold_probe_seconds(ixp, NVME_PROFILE)
             return PimPacedEngine(
                 engine, nprobe=spec.nprobe, ranks=spec.pim_paced_ranks,
-                task_latency_s=model.task_latency(float(sizes.mean())))
+                task_latency_s=task_s)
 
         if spec.engine == "local":
             cache = make_cache()
+            coarse = None
+            if spec.coarse_groups:
+                # one Coarse2 per handle (replicas share it; routing is
+                # deterministic in the index seed)
+                coarse = getattr(index, "_coarse2_cache", None)
+                if coarse is None:
+                    import jax
+
+                    from repro.core.coarse2 import build_coarse2
+                    coarse = build_coarse2(
+                        jax.random.PRNGKey(spec.index.seed),
+                        index.centroids, n_groups=spec.coarse_groups)
+                    index._coarse2_cache = coarse
             # search_view: for a static handle, the wrapped IVFPQIndex
             # itself (bit-exact identity with direct search_ivfpq); for a
             # mutable one, a lean view whose jit shapes are independent
-            # of N so mutations/generations never force recompiles
-            core = LocalEngine(index.search_view, index.clusters,
+            # of N so mutations/generations never force recompiles.
+            # Tiered handles hold no resident clusters — the engine
+            # fetches probed rows through the tier instead.
+            tier = index.tiered_store
+            clusters = None if tier is not None else index.clusters
+            core = LocalEngine(index.search_view, clusters,
                                SearchParams(nprobe=spec.nprobe, k=spec.k,
                                             strategy=spec.strategy,
                                             lut_dtype=spec.lut_dtype),
-                               lut_cache=cache)
+                               lut_cache=cache, tiered_store=tier,
+                               coarse=coarse,
+                               coarse_nprobe1=spec.coarse_nprobe1)
             return Replica(ServingRuntime(pace(core), serving_cfg), core,
                            core, cache, None)
         est = None
@@ -284,7 +328,8 @@ class AnnService:
         cfg_kwargs.update(dict(spec.engine_overrides or {}))
         core = DistributedEngine(index.to_ivfpq(), EngineConfig(**cfg_kwargs),
                                  sample_probes, lut_cache=cache,
-                                 heat_estimator=est)
+                                 heat_estimator=est,
+                                 tiered_store=index.tiered_store)
         if spec.tune_tasks_per_shard:
             core.tasks_controller = core.make_tasks_controller()
         adapter = ShardedEngine(core)
@@ -650,6 +695,8 @@ class AnnService:
             agg["lut_hit_rate"] = hits / lookups
         out = {"aggregate": agg, "router": self.router.stats(),
                "health": self.health.stats(), "replicas": per}
+        if self.index.tiered_store is not None:
+            out["tier"] = self.index.tiered_store.serving_info()
         if self.autoscaler is not None:
             out["autoscaler"] = self.autoscaler.stats()
         if self.mutator is not None:

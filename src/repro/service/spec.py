@@ -39,14 +39,21 @@ _ROUTERS = ("round_robin", "least_queue", "cache_aware")
 
 #: serialization schema version; bump when fields change incompatibly
 #: v1 -> v2: added `mutable` + `mutation_*` knobs (live-index mutation);
-#: v1 deploy files load unchanged (the new knobs default to off), but a
-#: v1-stamped file carrying v2-only keys is rejected by name.
-SPEC_VERSION = 2
+#: v2 -> v3: added `storage*` (tiered RAM/disk residency) + `coarse_*`
+#: (two-level routing) knobs.  Older deploy files load unchanged (the
+#: new knobs default to off), but an old-stamped file carrying newer
+#: keys is rejected by name.
+SPEC_VERSION = 3
 
 #: fields that did not exist in spec schema v1 (migration guard)
 _V2_FIELDS = frozenset({"mutable", "mutation_size_band",
                         "mutation_maintenance_interval",
                         "mutation_compact_threshold"})
+
+#: fields added by spec schema v3 (tiered storage + two-level routing)
+_V3_FIELDS = frozenset({"storage", "storage_budget_bytes",
+                        "storage_promote_margin", "storage_dir",
+                        "coarse_groups", "coarse_nprobe1"})
 
 
 @dataclasses.dataclass(frozen=True)
@@ -71,11 +78,18 @@ class IndexSpec:
             raise ValueError(f"IndexSpec.cb must be >= 2, got {self.cb}")
         return self
 
-    def build(self, points, *, mutable: bool = False):
+    def build(self, points, *, mutable: bool = False,
+              storage: str = "resident", storage_dir=None,
+              storage_budget_bytes: int = 0,
+              storage_promote_margin: float = 1.25):
         """The unified index front door: build an
         :class:`~repro.core.mutable_index.Index` handle from raw points.
         With ``mutable=True`` the handle also retains the raw vectors and
-        supports ``upsert``/``delete`` + generation maintenance."""
+        supports ``upsert``/``delete`` + generation maintenance.  With
+        ``storage="tiered"`` the PQ codes spill to ``storage_dir`` and
+        only ``storage_budget_bytes`` of hot clusters stay resident
+        (the storage knobs live on :class:`ServiceSpec`, not here — they
+        describe serving residency, not index geometry)."""
         import jax
 
         from repro.core.mutable_index import Index
@@ -84,7 +98,10 @@ class IndexSpec:
                            nlist=self.nlist, m=self.m, cb=self.cb,
                            kmeans_iters=self.kmeans_iters,
                            pq_iters=self.pq_iters, opq=self.opq,
-                           train_sample=self.train_sample, mutable=mutable)
+                           train_sample=self.train_sample, mutable=mutable,
+                           storage=storage, storage_dir=storage_dir,
+                           storage_budget_bytes=storage_budget_bytes,
+                           storage_promote_margin=storage_promote_margin)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -185,6 +202,25 @@ class ServiceSpec:
     # rows themselves are swap-compacted out immediately, tombstone-free)
     mutation_compact_threshold: float = 0.5
 
+    # -- tiered storage + two-level routing (spec schema v3) ---------------
+    # storage="tiered" serves an index bigger than RAM: PQ codes spill to
+    # disk as memory-mapped files and only the hottest clusters (by the
+    # online heat estimator) stay resident, within storage_budget_bytes.
+    # Results match the all-resident index exactly — cold probes fetch
+    # codes through the mmap tier before the scan — only latency changes.
+    storage: str = "resident"              # "resident" | "tiered"
+    storage_budget_bytes: int = 0          # resident bytes cap (tiered)
+    # a cold cluster displaces a resident one only when its heat exceeds
+    # margin * the coldest resident's heat (anti-thrash hysteresis)
+    storage_promote_margin: float = 1.25
+    # spill directory; None = a fresh temp dir per build
+    storage_dir: Optional[str] = None
+    # two-level coarse quantizer (local engine): route via coarse_groups
+    # L1 centroids, score only the top coarse_nprobe1 groups' members.
+    # 0 = flat CL.  coarse_nprobe1=0 means "all groups" (exact parity).
+    coarse_groups: int = 0
+    coarse_nprobe1: int = 0
+
     @property
     def cache_enabled(self) -> bool:
         return self.cache_capacity > 0 or self.cache_capacity_bytes > 0
@@ -277,6 +313,35 @@ class ServiceSpec:
                 raise ValueError("ServiceSpec.mutation_size_band / "
                                  ".mutation_maintenance_interval require "
                                  "mutable=True")
+        if self.storage not in ("resident", "tiered"):
+            raise ValueError(f"ServiceSpec.storage must be 'resident' or "
+                             f"'tiered', got {self.storage!r}")
+        if self.storage == "tiered":
+            if self.storage_budget_bytes < 1:
+                raise ValueError(f"ServiceSpec.storage_budget_bytes must be "
+                                 f">= 1 with storage='tiered', got "
+                                 f"{self.storage_budget_bytes}")
+            if self.mutable:
+                raise ValueError("ServiceSpec: storage='tiered' requires "
+                                 "mutable=False (the tier spills a static "
+                                 "snapshot)")
+        elif self.storage_budget_bytes:
+            raise ValueError("ServiceSpec.storage_budget_bytes requires "
+                             "storage='tiered'")
+        if self.storage_promote_margin < 1.0:
+            raise ValueError(f"ServiceSpec.storage_promote_margin must be "
+                             f">= 1, got {self.storage_promote_margin}")
+        if self.coarse_groups < 0 or self.coarse_nprobe1 < 0:
+            raise ValueError(f"ServiceSpec.coarse_groups/.coarse_nprobe1 "
+                             f"must be >= 0, got {self.coarse_groups}/"
+                             f"{self.coarse_nprobe1}")
+        if self.coarse_nprobe1 and not self.coarse_groups:
+            raise ValueError("ServiceSpec.coarse_nprobe1 requires "
+                             "coarse_groups > 0")
+        if self.coarse_groups and self.engine != "local":
+            raise ValueError("ServiceSpec.coarse_groups requires "
+                             "engine='local' (the sharded engine routes "
+                             "flat)")
         if self.engine != "sharded":
             # these all hang off the sharded engine's online heat loop
             for knob in ("relayout_every", "tune_tasks_per_shard",
@@ -339,15 +404,16 @@ class ServiceSpec:
         load, not boot a silently different fleet."""
         data = dict(data)
         version = data.pop("version", SPEC_VERSION)
-        if version == 1:
-            # v1 -> v2 migration: every v2-only field defaults to "off",
-            # so a clean v1 file loads as-is; a v1-stamped file that
-            # nonetheless carries v2 keys is lying about its version
-            leaked = sorted(set(data) & _V2_FIELDS)
+        if version in (1, 2):
+            # migration: every newer-schema field defaults to "off", so a
+            # clean old file loads as-is; an old-stamped file that
+            # nonetheless carries newer keys is lying about its version
+            newer = (_V2_FIELDS | _V3_FIELDS) if version == 1 else _V3_FIELDS
+            leaked = sorted(set(data) & newer)
             if leaked:
-                raise ValueError(f"ServiceSpec version 1 file carries "
-                                 f"version-2 keys {leaked}; restamp it "
-                                 f"version: {SPEC_VERSION}")
+                raise ValueError(f"ServiceSpec version {version} file "
+                                 f"carries newer-schema keys {leaked}; "
+                                 f"restamp it version: {SPEC_VERSION}")
         elif version != SPEC_VERSION:
             raise ValueError(f"ServiceSpec version {version!r} is not "
                              f"supported (this build reads version "

@@ -1,0 +1,10 @@
+"""Tiered storage subsystem: heat-driven RAM/disk cluster residency.
+
+See :mod:`repro.storage.tiered` for the design; the serving wiring is
+``ServiceSpec(storage="tiered", storage_budget_bytes=...)``.
+"""
+
+from repro.storage.tiered import (ResidencyController, TierStats,
+                                  TieredStore)
+
+__all__ = ["ResidencyController", "TierStats", "TieredStore"]

@@ -1,0 +1,357 @@
+"""Tiered cluster storage: heat-driven RAM/disk residency for PQ codes.
+
+DRIM-ANN's premise is that ANNS is memory-hungry; UpANNS and the
+billion-scale co-design work (PAPERS.md) push PIM indexes past what fits
+in host RAM.  This module is that wall's subsystem: the full padded
+cluster arrays — codes ``(nlist, cap, M)`` u8 and ids ``(nlist, cap)``
+i32, exactly the :class:`~repro.core.ivf.PaddedClusters` layout — are
+spilled once to memory-mapped files (crash-safe via
+:func:`repro.util.atomic_write`), and only a *resident set* of hot
+clusters is held in RAM under an explicit byte budget.
+
+Three pieces:
+
+  * :class:`TieredStore` — the fetch path.  ``gather(cluster_ids)``
+    returns each probed cluster's padded rows, hot clusters from the
+    RAM slab, cold clusters from the mmap tier in ONE batched read per
+    flush (unique cluster ids deduplicated first, so a popular cold
+    cluster is read once per batch, not once per query).  Bytes are
+    identical either way — tier residency can never change a search
+    result, only its cost (tests pin bit-exactness).
+  * :class:`ResidencyController` — the policy.  Driven by the same
+    :class:`~repro.runtime.cache.OnlineHeatEstimator` units that feed
+    layout and cache admission, it promotes clusters whose observed
+    probe heat exceeds the coldest resident's by a hysteresis margin
+    and demotes the coldest to make room — the budget is never
+    exceeded, by construction (slot count = budget // bytes/cluster).
+  * the spill format — ``codes.u8`` / ``ids.i32`` raw little-endian
+    arrays plus a ``meta.json`` with shapes and sizes, each written
+    atomically (tmp + fsync + rename), so a crash mid-spill leaves the
+    previous generation readable.
+
+The disk tier ships uint8 PQ codes — the PR 4 quantized path's ~4x byte
+saving is exactly what makes cold probes affordable; its price (seek +
+bytes/bandwidth) is modeled by ``core.perf_model.cold_probe_seconds`` so
+schedulers and the auto-tuner stay honest about cold-probe cost.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import json
+import os
+import pathlib
+from typing import Optional, Sequence, Tuple
+
+import numpy as np
+
+from repro.util import atomic_write, atomic_write_text
+from repro.runtime.cache import OnlineHeatEstimator
+
+_CODES_FILE = "codes.u8"
+_IDS_FILE = "ids.i32"
+_META_FILE = "meta.json"
+
+
+@dataclasses.dataclass
+class TierStats:
+    """Cumulative fetch-path + residency-churn counters."""
+    hot_hits: int = 0          # probed clusters served from the RAM slab
+    cold_fetches: int = 0      # unique cold clusters read from mmap
+    cold_requests: int = 0     # probed clusters that were cold (pre-dedup)
+    cold_bytes: int = 0        # bytes read from the mmap tier
+    promotions: int = 0
+    demotions: int = 0
+
+    def as_dict(self) -> dict:
+        return dataclasses.asdict(self)
+
+    @property
+    def probes(self) -> int:
+        return self.hot_hits + self.cold_requests
+
+    @property
+    def hot_rate(self) -> float:
+        return self.hot_hits / self.probes if self.probes else 0.0
+
+
+class ResidencyController:
+    """Promote/demote policy over observed probe heat.
+
+    Wraps an :class:`OnlineHeatEstimator` (shared with layout/admission —
+    one heat vector, one unit).  ``plan(resident_mask, n_slots)`` returns
+    the (promote, demote) cluster lists that move the resident set toward
+    the top-``n_slots``-by-heat clusters, with hysteresis: a cold cluster
+    displaces the coldest resident only when ``heat[cold] >
+    promote_margin * heat[victim]`` — one-off scans cannot thrash
+    residency (the same protection :class:`HeatAwareAdmission` gives the
+    LUT cache).  Free slots are filled unconditionally.
+    """
+
+    def __init__(self, estimator: OnlineHeatEstimator,
+                 promote_margin: float = 1.25):
+        if promote_margin < 1.0:
+            raise ValueError(f"promote_margin must be >= 1, "
+                             f"got {promote_margin}")
+        self.estimator = estimator
+        self.promote_margin = float(promote_margin)
+
+    def observe(self, probe_lists: np.ndarray) -> None:
+        self.estimator.observe(probe_lists)
+
+    def plan(self, resident_mask: np.ndarray,
+             n_slots: int) -> Tuple[list, list]:
+        """-> (promote, demote) cluster-id lists; |promote| - |demote| =
+        free slots consumed, so applying them never exceeds the budget."""
+        heat = self.estimator.heat()
+        resident = np.nonzero(resident_mask)[0]
+        cold = np.nonzero(~resident_mask)[0]
+        if n_slots <= 0 or cold.size == 0:
+            return [], []
+        promote: list = []
+        demote: list = []
+        # hottest cold first; coldest resident is the standing victim
+        cold = cold[np.argsort(-heat[cold], kind="stable")]
+        victims = list(resident[np.argsort(heat[resident],
+                                           kind="stable")])
+        free = n_slots - resident.size
+        for c in cold:
+            if free > 0:
+                promote.append(int(c))
+                free -= 1
+                continue
+            if not victims:
+                break
+            v = victims[0]
+            if heat[c] > self.promote_margin * heat[v] + 1e-12:
+                promote.append(int(c))
+                demote.append(int(victims.pop(0)))
+            else:
+                break          # neither this nor any colder cold qualifies
+        return promote, demote
+
+
+class TieredStore:
+    """Hot-in-RAM / cold-on-disk padded cluster storage.
+
+    The array contract is exactly :class:`~repro.core.ivf.PaddedClusters`
+    (same ``pad_multiple`` capacity rounding), so a gather from this
+    store is byte-for-byte what the all-resident engine's on-device
+    ``clusters.codes[flat_probes]`` gather produces — bit-identical
+    results are structural, not numerical luck.
+
+    Residency is slot-based: ``n_slots = budget_bytes //
+    bytes_per_cluster`` rows of a preallocated RAM slab, so
+    ``resident_bytes <= budget_bytes`` is an invariant, not a goal.
+    """
+
+    def __init__(self, directory, codes: np.ndarray, ids: np.ndarray,
+                 sizes: np.ndarray, *, budget_bytes: int,
+                 estimator: Optional[OnlineHeatEstimator] = None,
+                 promote_margin: float = 1.25,
+                 heat_halflife_batches: float = 64.0):
+        codes = np.ascontiguousarray(codes, np.uint8)
+        ids = np.ascontiguousarray(ids, np.int32)
+        sizes = np.ascontiguousarray(sizes, np.int32)
+        if codes.ndim != 3 or ids.shape != codes.shape[:2] \
+                or sizes.shape != codes.shape[:1]:
+            raise ValueError(f"inconsistent cluster arrays: codes "
+                             f"{codes.shape}, ids {ids.shape}, sizes "
+                             f"{sizes.shape}")
+        if budget_bytes < 0:
+            raise ValueError(f"budget_bytes must be >= 0, "
+                             f"got {budget_bytes}")
+        self.dir = pathlib.Path(directory)
+        self.dir.mkdir(parents=True, exist_ok=True)
+        self.nlist, self.cap, self.m = codes.shape
+        self.sizes = sizes                      # tiny; always resident
+        self.budget_bytes = int(budget_bytes)
+        self.stats = TierStats()
+        self._spill(codes, ids)
+        self._codes_mm = np.memmap(self.dir / _CODES_FILE, np.uint8,
+                                   mode="r", shape=codes.shape)
+        self._ids_mm = np.memmap(self.dir / _IDS_FILE, np.int32,
+                                 mode="r", shape=ids.shape)
+        # slot-based resident slab: budget -> whole-cluster slots
+        bpc = self.bytes_per_cluster
+        self.n_slots = min(self.budget_bytes // bpc, self.nlist)
+        self._slot_of = np.full(self.nlist, -1, np.int64)
+        self._cluster_of = np.full(max(self.n_slots, 1), -1, np.int64)
+        self._hot_codes = np.zeros((max(self.n_slots, 1), self.cap, self.m),
+                                   np.uint8)
+        self._hot_ids = np.full((max(self.n_slots, 1), self.cap), -1,
+                                np.int32)
+        self.controller = ResidencyController(
+            estimator or OnlineHeatEstimator(
+                self.nlist, halflife_batches=heat_halflife_batches),
+            promote_margin=promote_margin)
+        # seed residency deterministically: largest clusters first (the
+        # best prior before traffic — big clusters cost the most to
+        # fetch), ties by cluster id
+        order = np.argsort(-sizes.astype(np.int64), kind="stable")
+        for slot, c in enumerate(order[:self.n_slots]):
+            self._load_slot(slot, int(c))
+
+    # -- construction ------------------------------------------------------
+    @classmethod
+    def from_clusters(cls, clusters, directory, *, budget_bytes: int,
+                      **kwargs) -> "TieredStore":
+        """Spill a :class:`PaddedClusters` (device or host arrays)."""
+        return cls(directory, np.asarray(clusters.codes),
+                   np.asarray(clusters.ids), np.asarray(clusters.sizes),
+                   budget_bytes=budget_bytes, **kwargs)
+
+    @classmethod
+    def from_index(cls, index, directory, *, budget_bytes: int,
+                   pad_multiple: int = 8, **kwargs) -> "TieredStore":
+        """Spill an :class:`IVFPQIndex` via the canonical padding."""
+        from repro.core.ivf import pad_clusters
+        return cls.from_clusters(pad_clusters(index,
+                                              pad_multiple=pad_multiple),
+                                 directory, budget_bytes=budget_bytes,
+                                 **kwargs)
+
+    @classmethod
+    def open(cls, directory, *, budget_bytes: int,
+             **kwargs) -> "TieredStore":
+        """Re-open a previously-spilled directory (restart path)."""
+        directory = pathlib.Path(directory)
+        meta = json.loads((directory / _META_FILE).read_text())
+        shape = tuple(meta["codes_shape"])
+        codes = np.memmap(directory / _CODES_FILE, np.uint8, mode="r",
+                          shape=shape)
+        ids = np.memmap(directory / _IDS_FILE, np.int32, mode="r",
+                        shape=shape[:2])
+        return cls(directory, np.asarray(codes), np.asarray(ids),
+                   np.asarray(meta["sizes"], np.int32),
+                   budget_bytes=budget_bytes, **kwargs)
+
+    def _spill(self, codes: np.ndarray, ids: np.ndarray) -> None:
+        """Write the full cold tier atomically (tmp + fsync + rename per
+        file, meta last) — a crash mid-spill leaves the directory either
+        absent or fully readable."""
+        with atomic_write(self.dir / _CODES_FILE, "wb") as f:
+            f.write(codes.tobytes())
+        with atomic_write(self.dir / _IDS_FILE, "wb") as f:
+            f.write(ids.tobytes())
+        atomic_write_text(self.dir / _META_FILE, json.dumps({
+            "codes_shape": list(codes.shape),
+            "codes_dtype": "uint8", "ids_dtype": "int32",
+            "sizes": [int(s) for s in self.sizes]}, indent=1))
+
+    # -- accounting --------------------------------------------------------
+    @property
+    def bytes_per_cluster(self) -> int:
+        """RAM cost of one resident cluster: padded u8 codes + i32 ids."""
+        return self.cap * self.m + self.cap * 4
+
+    @property
+    def total_bytes(self) -> int:
+        """Full index code bytes (what an all-resident engine holds)."""
+        return self.nlist * self.bytes_per_cluster
+
+    @property
+    def resident_bytes(self) -> int:
+        return int((self._slot_of >= 0).sum()) * self.bytes_per_cluster
+
+    @property
+    def resident_mask(self) -> np.ndarray:
+        """(nlist,) bool — True where the cluster is RAM-resident."""
+        return self._slot_of >= 0
+
+    def serving_info(self) -> dict:
+        return dict(self.stats.as_dict(),
+                    hot_rate=round(self.stats.hot_rate, 4),
+                    resident_clusters=int((self._slot_of >= 0).sum()),
+                    resident_bytes=self.resident_bytes,
+                    budget_bytes=self.budget_bytes,
+                    total_bytes=self.total_bytes, n_slots=self.n_slots)
+
+    # -- residency ---------------------------------------------------------
+    def _load_slot(self, slot: int, c: int) -> None:
+        self._hot_codes[slot] = self._codes_mm[c]
+        self._hot_ids[slot] = self._ids_mm[c]
+        self._slot_of[c] = slot
+        self._cluster_of[slot] = c
+
+    def promote(self, c: int, slot: Optional[int] = None) -> bool:
+        c = int(c)
+        if self._slot_of[c] >= 0 or self.n_slots == 0:
+            return False
+        if slot is None:
+            free = np.nonzero(self._cluster_of[:self.n_slots] < 0)[0]
+            if free.size == 0:
+                return False
+            slot = int(free[0])
+        self._load_slot(slot, c)
+        self.stats.promotions += 1
+        return True
+
+    def demote(self, c: int) -> bool:
+        c = int(c)
+        slot = int(self._slot_of[c])
+        if slot < 0:
+            return False
+        self._slot_of[c] = -1
+        self._cluster_of[slot] = -1
+        self.stats.demotions += 1
+        return True
+
+    def observe(self, probe_lists: np.ndarray) -> None:
+        """Fold one served batch's CL output into the heat estimate and
+        apply the controller's promote/demote plan.  Caller pre-slices
+        padding rows (same contract as the heat estimator)."""
+        probe_lists = np.asarray(probe_lists)
+        if probe_lists.size == 0:
+            return
+        self.controller.observe(probe_lists)
+        promote, demote = self.controller.plan(self.resident_mask,
+                                               self.n_slots)
+        for v in demote:
+            self.demote(v)
+        for c in promote:
+            self.promote(c)
+
+    def peek(self, c: int) -> Tuple[np.ndarray, np.ndarray]:
+        """Residency-aware read of one cluster's padded (codes, ids)
+        WITHOUT touching stats or residency — the offline materialize
+        path (building device shard tensors) must not count as serving
+        traffic or perturb heat-driven promotion."""
+        c = int(c)
+        slot = int(self._slot_of[c])
+        if slot >= 0:
+            return self._hot_codes[slot], self._hot_ids[slot]
+        return np.asarray(self._codes_mm[c]), np.asarray(self._ids_mm[c])
+
+    # -- fetch path --------------------------------------------------------
+    def gather(self, cluster_ids: Sequence[int]
+               ) -> Tuple[np.ndarray, np.ndarray, np.ndarray]:
+        """Batched residency-aware fetch: (T,) cluster ids ->
+        (codes (T, cap, M) u8, ids (T, cap) i32, sizes (T,) i32).
+
+        Hot rows come from the RAM slab; cold rows are deduplicated and
+        read from the mmap tier in one fancy-indexed read per call — the
+        per-flush batching that amortizes seek cost across a batch's
+        probes.  Output bytes are independent of residency."""
+        cids = np.asarray(cluster_ids, np.int64).reshape(-1)
+        t = cids.shape[0]
+        out_codes = np.empty((t, self.cap, self.m), np.uint8)
+        out_ids = np.empty((t, self.cap), np.int32)
+        slots = self._slot_of[cids]
+        hot = slots >= 0
+        n_hot = int(hot.sum())
+        if n_hot:
+            out_codes[hot] = self._hot_codes[slots[hot]]
+            out_ids[hot] = self._hot_ids[slots[hot]]
+        self.stats.hot_hits += n_hot
+        cold_rows = np.nonzero(~hot)[0]
+        if cold_rows.size:
+            uniq, inv = np.unique(cids[cold_rows], return_inverse=True)
+            blk_codes = np.asarray(self._codes_mm[uniq])   # one batched read
+            blk_ids = np.asarray(self._ids_mm[uniq])
+            out_codes[cold_rows] = blk_codes[inv]
+            out_ids[cold_rows] = blk_ids[inv]
+            self.stats.cold_fetches += int(uniq.size)
+            self.stats.cold_requests += int(cold_rows.size)
+            self.stats.cold_bytes += int(uniq.size) * self.bytes_per_cluster
+        return out_codes, out_ids, self.sizes[cids]

@@ -24,6 +24,7 @@ from repro.runtime.cache import (HotClusterLUTCache, LRUCache,
                                  OnlineHeatEstimator)
 from repro.service import (AnnService, IndexSpec, ServiceSpec,
                            SPEC_VERSION)
+from repro.service.spec import _V2_FIELDS, _V3_FIELDS
 
 NPROBE = 8
 K = 10
@@ -391,18 +392,16 @@ def test_spec_v2_roundtrip():
                        mutation_maintenance_interval=64,
                        mutation_compact_threshold=0.25)
     d = spec.to_dict()
-    assert d["version"] == SPEC_VERSION == 2
+    assert d["version"] == SPEC_VERSION >= 2
     assert d["mutation_size_band"] == [4, 4000]
     assert ServiceSpec.from_dict(d) == spec
 
 
 def test_spec_v1_files_still_load():
-    """A v1 deploy file (no mutation keys) loads with mutation off."""
+    """A v1 deploy file (no mutation or storage keys) loads with both off."""
     d = ServiceSpec().to_dict()
     d["version"] = 1
-    for key in ("mutable", "mutation_size_band",
-                "mutation_maintenance_interval",
-                "mutation_compact_threshold"):
+    for key in (_V2_FIELDS | _V3_FIELDS):
         d.pop(key)
     spec = ServiceSpec.from_dict(d)
     assert not spec.mutable

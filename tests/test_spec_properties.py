@@ -16,7 +16,8 @@ except ModuleNotFoundError:      # degrade to a fixed-example sweep
     from _hypothesis_fallback import given, settings, st
 
 from repro.core.autotune import TuneSpace, candidate_spec
-from repro.service.spec import SPEC_VERSION, IndexSpec, ServiceSpec
+from repro.service.spec import (SPEC_VERSION, IndexSpec, ServiceSpec,
+                               _V2_FIELDS, _V3_FIELDS)
 
 # a spread of valid specs covering both schema eras: v1-style fields
 # only, each engine tier, cache/heat, routing, autoscaling, pacing, and
@@ -107,16 +108,14 @@ def test_unknown_keys_and_versions_rejected():
             d.update(poison)
         with pytest.raises(ValueError):
             ServiceSpec.from_dict(d)
-    # a clean v1 file (no v2 keys) still loads ...
+    # a clean v1 file (no newer-schema keys) still loads ...
     v1 = {k: v for k, v in base.items()
-          if k not in ("mutable", "mutation_size_band",
-                       "mutation_maintenance_interval",
-                       "mutation_compact_threshold")}
+          if k not in (_V2_FIELDS | _V3_FIELDS)}
     v1["version"] = 1
     assert ServiceSpec.from_dict(v1) == ServiceSpec()
-    # ... but a v1-stamped file smuggling v2 keys is lying
+    # ... but a v1-stamped file smuggling newer keys is lying
     lying = dict(base, version=1)
-    with pytest.raises(ValueError, match="version-2 keys"):
+    with pytest.raises(ValueError, match="newer-schema keys"):
         ServiceSpec.from_dict(lying)
     with pytest.raises(ValueError, match="mapping"):
         ServiceSpec.from_dict(dict(base, index=[1, 2]))

@@ -1,0 +1,271 @@
+"""Tiered storage tests: heat-driven RAM/disk residency for
+beyond-memory indexes.
+
+Groups:
+  * mmap round-trip — spill + reopen is bit-exact vs PaddedClusters;
+  * residency invariance — promote/demote cycles never change neighbor
+    sets, at every nprobe (the scan mask, not residency, decides
+    results);
+  * budget — resident bytes never exceed the configured budget under a
+    Zipf-skewed churn stream;
+  * spec schema v3 — round-trip, v1/v2 migration, and by-name rejection
+    of old-stamped files carrying newer keys;
+  * perf model — cold probes are priced strictly above hot probes.
+"""
+
+import json
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import SearchParams, pad_clusters, search_ivfpq
+from repro.core.coarse2 import build_coarse2, coarse2_locate
+from repro.core.perf_model import (DiskProfile, IndexParams, NVME_PROFILE,
+                                   cold_probe_seconds, serving_batch_latency)
+from repro.core.search import cluster_locate
+from repro.runtime.serving import LocalEngine
+from repro.service.spec import SPEC_VERSION, ServiceSpec
+from repro.storage import TieredStore
+
+
+# -- mmap round-trip ---------------------------------------------------------
+
+def test_spill_roundtrip_bit_exact(small_index, small_clusters,
+                                   tmp_path_factory):
+    """Spilled codes/ids re-read through the tier equal the in-RAM
+    padded tensors byte for byte — for fully-cold and fully-hot tiers."""
+    ref_codes = np.asarray(small_clusters.codes)
+    ref_ids = np.asarray(small_clusters.ids)
+    ref_sizes = np.asarray(small_clusters.sizes)
+    for tag, budget in (("cold", 1), ("hot", 1 << 30)):
+        d = tmp_path_factory.mktemp(f"tier_{tag}")
+        tier = TieredStore.from_index(small_index, d, budget_bytes=budget)
+        all_c = np.arange(small_index.nlist)[None, :]
+        codes, ids, sizes = tier.gather(all_c.ravel())
+        np.testing.assert_array_equal(codes, ref_codes)
+        np.testing.assert_array_equal(ids, ref_ids)
+        np.testing.assert_array_equal(sizes, ref_sizes)
+
+
+def test_open_rereads_spill(small_index, tmp_path):
+    """TieredStore.open on an existing spill dir serves the same bytes
+    (a restart does not need the original index object)."""
+    t1 = TieredStore.from_index(small_index, tmp_path, budget_bytes=1)
+    c1, i1, s1 = t1.gather(np.arange(small_index.nlist))
+    t2 = TieredStore.open(tmp_path, budget_bytes=1 << 30)
+    c2, i2, s2 = t2.gather(np.arange(small_index.nlist))
+    np.testing.assert_array_equal(c1, c2)
+    np.testing.assert_array_equal(i1, i2)
+    np.testing.assert_array_equal(s1, s2)
+
+
+# -- residency invariance ----------------------------------------------------
+
+@pytest.mark.parametrize("nprobe", [1, 4, 16])
+def test_neighbors_invariant_under_residency(small_index, small_clusters,
+                                             small_corpus, tmp_path_factory,
+                                             nprobe):
+    """The tiered engine's neighbor sets equal the all-resident
+    pipeline's at every nprobe, for any residency fraction, before and
+    after promote/demote churn."""
+    p = SearchParams(nprobe=nprobe, k=10)
+    sd, si = search_ivfpq(small_index, small_clusters,
+                          small_corpus.queries, p)
+    sd, si = np.asarray(sd), np.asarray(si)
+    d = tmp_path_factory.mktemp(f"tier_np{nprobe}")
+    tier = TieredStore.from_index(
+        small_index, d,
+        budget_bytes=16 * 1)  # tiny: a handful of clusters at most
+    tier2 = TieredStore.from_index(
+        small_index, tmp_path_factory.mktemp(f"tier2_np{nprobe}"),
+        budget_bytes=tier.bytes_per_cluster * 13)
+    for t in (tier, tier2):
+        eng = LocalEngine(small_index, None, p, tiered_store=t)
+        td, ti = eng.search_batch(np.asarray(small_corpus.queries,
+                                             np.float32))
+        np.testing.assert_array_equal(ti, si)
+        np.testing.assert_allclose(td, sd, rtol=1e-5, atol=1e-4)
+        for _ in range(3):   # churn heat -> promotes/demotes
+            eng.search_batch(np.asarray(small_corpus.queries, np.float32))
+        td2, ti2 = eng.search_batch(np.asarray(small_corpus.queries,
+                                               np.float32))
+        np.testing.assert_array_equal(ti2, si)
+
+
+def test_explicit_promote_demote_roundtrip(small_index, small_clusters,
+                                           tmp_path):
+    """Promote then demote a cluster; its bytes after the round trip are
+    the original spill bytes (residency is a pure copy, never a move)."""
+    probe = TieredStore.from_index(small_index, tmp_path, budget_bytes=1)
+    tier2 = TieredStore.from_index(small_index, str(tmp_path) + "_b",
+                                   budget_bytes=probe.bytes_per_cluster * 4)
+    c = int(np.argmax(np.asarray(small_clusters.sizes)))
+    before = tier2.gather(np.array([c]))
+    tier2.promote(c)
+    assert bool(tier2.resident_mask[c])
+    mid = tier2.gather(np.array([c]))
+    tier2.demote(c)
+    assert not bool(tier2.resident_mask[c])
+    after = tier2.gather(np.array([c]))
+    for a, b in zip(before, mid):
+        np.testing.assert_array_equal(a, b)
+    for a, b in zip(before, after):
+        np.testing.assert_array_equal(a, b)
+
+
+# -- budget under churn ------------------------------------------------------
+
+def test_budget_never_exceeded_under_zipf(small_index, small_corpus,
+                                          tmp_path):
+    """Serve a Zipf-skewed stream through a tier 4x+ smaller than the
+    index; after every batch resident_bytes <= budget_bytes."""
+    tier = TieredStore.from_index(small_index, tmp_path, budget_bytes=1)
+    budget = tier.total_bytes // 5
+    tier = TieredStore.from_index(small_index, str(tmp_path) + "_z",
+                                  budget_bytes=budget)
+    assert tier.total_bytes >= 4 * tier.budget_bytes
+    p = SearchParams(nprobe=8, k=10)
+    eng = LocalEngine(small_index, None, p, tiered_store=tier)
+    rng = np.random.default_rng(0)
+    queries = np.asarray(small_corpus.queries, np.float32)
+    # zipf-ranked query pool: low indexes drawn much more often
+    ranks = rng.zipf(1.3, size=512).clip(1, len(queries)) - 1
+    for batch in np.array_split(ranks, 16):
+        eng.search_batch(queries[batch])
+        assert tier.resident_bytes <= tier.budget_bytes
+    st = tier.stats
+    assert st.promotions >= 1          # the hot head got promoted
+    assert st.hot_hits > 0 and st.cold_fetches > 0
+    assert 0.0 < st.hot_rate < 1.0
+
+
+def test_heat_estimator_drives_promotion(tmp_path, small_index):
+    """Clusters probed repeatedly become resident; unprobed ones do
+    not displace them (promote margin hysteresis)."""
+    tier = TieredStore.from_index(small_index, tmp_path, budget_bytes=1)
+    tier = TieredStore.from_index(
+        small_index, str(tmp_path) + "_h",
+        budget_bytes=tier.bytes_per_cluster * 2)
+    hot = np.array([[3, 5]] * 8)
+    for _ in range(6):
+        tier.observe(hot)
+    assert bool(tier.resident_mask[3]) and bool(tier.resident_mask[5])
+    tier.observe(np.array([[7, 9]]))   # one lukewarm batch: no displace
+    assert bool(tier.resident_mask[3]) and bool(tier.resident_mask[5])
+
+
+# -- two-level coarse quantizer ---------------------------------------------
+
+def test_coarse2_full_fanout_matches_flat(small_index, small_corpus):
+    """nprobe1 == n_groups scores every cluster: probe sets equal flat
+    cluster_locate's per query (order may differ on ties)."""
+    q = jnp.asarray(np.asarray(small_corpus.queries[:16], np.float32))
+    flat, _ = cluster_locate(q, small_index.centroids, 8)
+    coarse = build_coarse2(jax.random.PRNGKey(0), small_index.centroids,
+                           n_groups=6)
+    two, _ = coarse2_locate(coarse, q, nprobe=8, nprobe1=coarse.n_groups)
+    for r in range(q.shape[0]):
+        assert set(np.asarray(two)[r].tolist()) == \
+            set(np.asarray(flat)[r].tolist())
+
+
+def test_coarse2_members_partition_clusters(small_index):
+    coarse = build_coarse2(jax.random.PRNGKey(0), small_index.centroids,
+                           n_groups=8)
+    members = np.asarray(coarse.members)
+    live = members[members >= 0]
+    assert sorted(live.tolist()) == list(range(small_index.nlist))
+
+
+# -- spec schema v3 ----------------------------------------------------------
+
+def _tiered_spec(**kw):
+    kw.setdefault("storage", "tiered")
+    kw.setdefault("storage_budget_bytes", 1 << 16)
+    return ServiceSpec(**kw)
+
+
+def test_spec_v3_roundtrip(tmp_path):
+    spec = _tiered_spec(storage_promote_margin=1.5, nprobe=4, k=5)
+    path = spec.save(tmp_path / "deploy.json")
+    assert ServiceSpec.load(path) == spec
+    data = json.loads(path.read_text())
+    assert data["version"] == SPEC_VERSION == 3
+
+
+def test_spec_v2_file_loads(tmp_path):
+    """A clean v2 deploy file (no v3 keys) loads; the new knobs default
+    to off."""
+    data = ServiceSpec(nprobe=4, k=5).to_dict()
+    for key in ("storage", "storage_budget_bytes", "storage_promote_margin",
+                "storage_dir", "coarse_groups", "coarse_nprobe1"):
+        data.pop(key)
+    data["version"] = 2
+    spec = ServiceSpec.from_dict(data)
+    assert spec.storage == "resident" and spec.coarse_groups == 0
+
+
+@pytest.mark.parametrize("stamp", [1, 2])
+def test_spec_old_stamp_with_v3_keys_rejected(stamp):
+    data = _tiered_spec(nprobe=4, k=5).to_dict()
+    data["version"] = stamp
+    if stamp == 1:   # v1 files may not carry v2 keys either
+        for key in ("mutable", "mutation_size_band",
+                    "mutation_maintenance_interval",
+                    "mutation_compact_threshold"):
+            data.pop(key)
+    with pytest.raises(ValueError, match="newer-schema keys"):
+        ServiceSpec.from_dict(data)
+
+
+def test_spec_v3_validation():
+    with pytest.raises(ValueError, match="storage_budget_bytes"):
+        ServiceSpec(storage="tiered").validate()
+    with pytest.raises(ValueError, match="storage"):
+        ServiceSpec(storage="cloud").validate()
+    with pytest.raises(ValueError, match="mutable"):
+        _tiered_spec(mutable=True).validate()
+    with pytest.raises(ValueError, match="storage_budget_bytes"):
+        ServiceSpec(storage_budget_bytes=5).validate()
+    with pytest.raises(ValueError, match="promote_margin"):
+        _tiered_spec(storage_promote_margin=0.5).validate()
+    with pytest.raises(ValueError, match="coarse_nprobe1"):
+        ServiceSpec(coarse_nprobe1=2).validate()
+    with pytest.raises(ValueError, match="engine='local'"):
+        ServiceSpec(coarse_groups=4, engine="sharded").validate()
+    _tiered_spec().validate()
+    ServiceSpec(coarse_groups=4, coarse_nprobe1=2).validate()
+
+
+# -- perf model: disk tier ---------------------------------------------------
+
+def test_cold_probe_strictly_dearer_than_hot():
+    from repro.core.perf_model import UPMEM_PROFILE
+    ix = IndexParams(n_total=100_000, nlist=1024, q=1, d=96, k=10, p=16,
+                     m=16, cb=256)
+    cold = cold_probe_seconds(ix, NVME_PROFILE)
+    assert cold > 0.0
+    hot = serving_batch_latency(ix, UPMEM_PROFILE, ranks=4, batch=8)
+    mixed = serving_batch_latency(ix, UPMEM_PROFILE, ranks=4, batch=8,
+                                  cold_fraction=0.25, disk=NVME_PROFILE)
+    assert mixed > hot               # any cold fraction adds latency
+    colder = serving_batch_latency(ix, UPMEM_PROFILE, ranks=4, batch=8,
+                                   cold_fraction=0.5, disk=NVME_PROFILE)
+    assert colder > mixed            # monotone in the cold fraction
+
+
+def test_cold_fraction_validation():
+    from repro.core.perf_model import UPMEM_PROFILE
+    ix = IndexParams(n_total=1000, nlist=64, q=1, d=16, k=5, p=4, m=8,
+                     cb=256)
+    with pytest.raises(ValueError):
+        serving_batch_latency(ix, UPMEM_PROFILE, ranks=1, batch=4,
+                              cold_fraction=0.5)   # no disk profile
+    with pytest.raises(ValueError):
+        serving_batch_latency(ix, UPMEM_PROFILE, ranks=1, batch=4,
+                              cold_fraction=1.5, disk=NVME_PROFILE)
+    slow = DiskProfile("slow", seek_s=1e-3, bw=1e8)
+    assert cold_probe_seconds(ix, slow) > cold_probe_seconds(ix,
+                                                             NVME_PROFILE)
