@@ -58,6 +58,17 @@
                          tier).  Results are exact vs the all-resident
                          engine (recall_drop must read 0.0000); the row
                          tracks the p99/hot-rate cost of tiering.
+  serve/chaos          — fail-operational floor: the canonical chaos
+                         experiment (repro.service.chaos) streams a
+                         Zipf trace through a tiered fleet with an
+                         armed seeded fault plan (replica batch
+                         crashes, cold-read IOErrors, a straggler, one
+                         corrupted spill cluster).  The row value
+                         encodes availability (1e-6/avail, like
+                         async_speedup) so an availability drop reads
+                         as a latency REGRESS; the note carries the
+                         recall under degradation, corrupt-result
+                         count (must be 0), and rebuild count.
 
 All timings are measured engine wall-clock charged onto a virtual-clock
 arrival trace (single-server model) — except the serve/async_* rows,
@@ -66,8 +77,9 @@ Every arrival trace is generated from its own fixed seed (never a
 shared generator), so a row's stream is identical run-to-run and
 independent of row order / --only selection.  The PIM-paced rows
 (async_r1/async_r3/async_speedup) are tagged ``stable=True`` — their
-service time is the Eq. 15 model, not host scheduling — and are the
-rows CI's ``bench_compare --fail-on-regress`` gates on.
+service time is the Eq. 15 model, not host scheduling — and, together
+with serve/chaos's availability encoding, are the rows CI's
+``bench_compare --fail-on-regress`` gates on.
 See docs/benchmarks.md for how to read the output.
 """
 
@@ -355,4 +367,17 @@ def run(quick: bool = False):
         f"_upserts={mut['upserts']}_deletes={mut['deletes']}"
         f"_gen={mut['generation']}_nlist={mut['nlist']}"))
     svc.shutdown()
+
+    # ---- serve/chaos: availability + recall floor under faults ----------
+    # One canonical experiment (shared with --selftest-chaos and
+    # tests/test_chaos.py); the bench only re-encodes its report as a
+    # gateable row.  Availability is encoded as 1e-6/avail so a drop
+    # below the committed baseline shows up as a timing REGRESS.
+    from repro.service.chaos import run_chaos
+    rep = run_chaos(seed=0, n_queries=200 if quick else 600)
+    out.append(row(
+        "serve/chaos", 1e-6 / max(rep["availability"], 1e-9),
+        f"avail={rep['availability']:.3f}_recall={rep['recall']:.3f}"
+        f"_degraded={rep['degraded']}_corrupt={rep['corrupt_results']}"
+        f"_rebuilds={rep['rebuilds']}_shed={rep['shed']}", stable=True))
     return out

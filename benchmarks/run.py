@@ -54,7 +54,8 @@ def main() -> None:
         "scaling": bench_scaling,          # Fig. 13
         "kernels": bench_kernels,          # Pallas micro-benches
         "dse": bench_dse,                  # §III-C
-        "serving": bench_serving,          # online micro-batching runtime
+        "serving": bench_serving,          # online runtime (+ serve/chaos
+                                           # fail-operational floor row)
         "pareto": bench_pareto,            # recall/latency frontier sweep
     }
     if args.only:

@@ -226,7 +226,8 @@ class Index:
                  compact_threshold: float = 0.5, pad_multiple: int = 8,
                  storage: str = "resident", storage_dir=None,
                  storage_budget_bytes: int = 0,
-                 storage_promote_margin: float = 1.25):
+                 storage_promote_margin: float = 1.25,
+                 storage_checksum: bool = True):
         if storage not in ("resident", "tiered"):
             raise ValueError(f"storage must be 'resident' or 'tiered', "
                              f"got {storage!r}")
@@ -263,7 +264,8 @@ class Index:
             self.tiered_store = TieredStore.from_index(
                 ivf, storage_dir, budget_bytes=int(storage_budget_bytes),
                 pad_multiple=pad_multiple,
-                promote_margin=float(storage_promote_margin))
+                promote_margin=float(storage_promote_margin),
+                checksum=bool(storage_checksum))
             # Replace the wrapped CSR with a lean view: centroids /
             # codebook / rotation / real offsets (so ``sizes`` stays
             # honest) but EMPTY code/id arrays — the full code tensor now
@@ -307,7 +309,8 @@ class Index:
               train_sample: Optional[int] = None, mutable: bool = False,
               compact_threshold: float = 0.5, storage: str = "resident",
               storage_dir=None, storage_budget_bytes: int = 0,
-              storage_promote_margin: float = 1.25) -> "Index":
+              storage_promote_margin: float = 1.25,
+              storage_checksum: bool = True) -> "Index":
         """Build from raw points (``core.ivf.build_ivfpq`` under the
         hood) and wrap in a handle — the unified front door.
 
@@ -321,7 +324,8 @@ class Index:
                    compact_threshold=compact_threshold, storage=storage,
                    storage_dir=storage_dir,
                    storage_budget_bytes=storage_budget_bytes,
-                   storage_promote_margin=storage_promote_margin)
+                   storage_promote_margin=storage_promote_margin,
+                   storage_checksum=storage_checksum)
 
     # -- read surface ------------------------------------------------------
     @property

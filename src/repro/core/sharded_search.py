@@ -600,6 +600,10 @@ class DistributedEngine:
         # host-side through the tier's batched fetch path (_scan_cold)
         self.tiered_store = tiered_store
         self._cold_mask: Optional[np.ndarray] = None
+        # per-batch degrade report, read by the serving adapter after
+        # search() returns (one worker serves a replica, so no race)
+        self.last_batch_info: dict = {"degraded": False,
+                                      "dropped_probes": 0}
         self.batches_served = 0
         self.relayouts = 0
         self.generations = 0        # index generations installed (mutation)
@@ -990,7 +994,7 @@ class DistributedEngine:
         return stack_lut_bank(luts)
 
     def _scan_cold(self, queries_np: np.ndarray, probes: np.ndarray,
-                   bank):
+                   bank, budget_s: Optional[float] = None):
         """Scan this batch's snapshot-cold probes through the tier.
 
         (q, pos) pairs whose cluster is absent from the device tensors
@@ -1000,6 +1004,13 @@ class DistributedEngine:
         ``q * nprobe + pos``, shared with split parts), a fresh pow2-
         padded RC+LC otherwise — and returned as extra (T, k) candidate
         rows for the host merge.  Returns ``None`` when nothing is cold.
+
+        Fail-operational: the fetch runs degraded — probes the tier
+        cannot serve (cold-read IOError, quarantined clusters, or all of
+        them when ``budget_s`` says the predicted cold cost would blow
+        the deadline) come back with ``size == 0``, so the scan stays
+        exact over what it scanned; the drop count lands in
+        ``last_batch_info``.
         """
         mask = self._cold_mask
         if mask is None or not mask.any():
@@ -1010,7 +1021,23 @@ class DistributedEngine:
         clusters = probes[cold_q, cold_pos]
         t = int(cold_q.size)
         tpad = next_pow2(t)
-        codes, ids, sizes = self.tiered_store.gather(clusters)
+        tier = self.tiered_store
+        resident_only = False
+        if budget_s is not None:
+            n_cold = int(np.unique(clusters).size)
+            if n_cold and (budget_s <= 0
+                           or tier.estimate_cold_seconds(n_cold)
+                           > budget_s):
+                resident_only = True
+        codes, ids, sizes, dropped = tier.gather_degraded(
+            clusters, resident_only=resident_only)
+        n_dropped = int(dropped.sum())
+        if n_dropped:
+            self.last_batch_info = {
+                "degraded": True,
+                "dropped_probes":
+                    self.last_batch_info.get("dropped_probes", 0)
+                    + n_dropped}
         codes_p = np.zeros((tpad,) + codes.shape[1:], codes.dtype)
         ids_p = np.full((tpad,) + ids.shape[1:], -1, ids.dtype)
         sizes_p = np.zeros((tpad,), sizes.dtype)
@@ -1061,15 +1088,23 @@ class DistributedEngine:
         return np.where((qi >= 0) & (pos >= 0), lidx, -1).astype(np.int32)
 
     def search(self, queries: jax.Array, flush: bool = True,
-               n_valid: Optional[int] = None):
+               n_valid: Optional[int] = None,
+               budget_s: Optional[float] = None):
         """Batched search.  With flush=True, deferred tasks are drained in
         follow-up rounds so results are complete (tests); a serving loop
         would instead leave them for the next batch (paper's filter).
 
         ``n_valid``: rows >= n_valid are serving-batch padding — excluded
         from heat observation and LUT-cache population (their results are
-        discarded by the caller)."""
+        discarded by the caller).
+
+        ``budget_s``: remaining deadline budget.  Only the tiered cold
+        scan consults it — when the predicted cold-read cost would blow
+        the budget the cold probes are dropped and the batch is reported
+        degraded via ``last_batch_info`` (device-resident scans are
+        already paced by the task scheduler and never shed)."""
         from repro.core.search import cluster_locate
+        self.last_batch_info = {"degraded": False, "dropped_probes": 0}
         # a pending periodic re-layout swaps in between batches: the
         # rebuild ran on a background thread concurrently with the
         # triggering batch's own scan/merge, and this batch starts on the
@@ -1151,7 +1186,7 @@ class DistributedEngine:
             pending = np.zeros((0, 0), np.int64)   # only carry-in tasks
         if self.tiered_store is not None:
             cold = self._scan_cold(np.asarray(queries, np.float32), probes,
-                                   bank)
+                                   bank, budget_s=budget_s)
             if cold is not None:
                 cd, ci, cq = cold
                 all_d.append(cd)

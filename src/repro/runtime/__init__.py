@@ -1,6 +1,8 @@
 from repro.runtime.fault_tolerance import (HeartbeatRegistry, ElasticPlan,
                                            plan_elastic_mesh, ReplicaHealth,
                                            StragglerPolicy, RunSupervisor)
+from repro.runtime.faults import (SITES, FaultInjector, FaultPlan,
+                                  FaultRule, InjectedFault)
 from repro.runtime.batching import (BucketPolicy, MicroBatch, MicroBatcher,
                                     Request, TasksPerShardController)
 from repro.runtime.cache import (AdmissionPolicy, CacheStats,
@@ -15,6 +17,8 @@ from repro.runtime.serving import (BatchServeError, LocalEngine,
 
 __all__ = ["HeartbeatRegistry", "ElasticPlan", "plan_elastic_mesh",
            "ReplicaHealth", "StragglerPolicy", "RunSupervisor",
+           "SITES", "FaultPlan", "FaultRule", "FaultInjector",
+           "InjectedFault",
            "BatchServeError", "PimPacedEngine",
            "BucketPolicy", "MicroBatch", "MicroBatcher", "Request",
            "TasksPerShardController",

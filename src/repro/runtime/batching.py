@@ -119,6 +119,9 @@ class Request:
     future: Optional[Any] = None   # SearchFuture-like completion hook
     replica: Optional[int] = None  # which replica served it (service tier)
     retried: bool = False          # re-routed after a replica failure
+    retries: int = 0               # how many times it was re-routed
+    degraded: bool = False         # served from resident-only probes
+    deadline_missed: bool = False  # t_done exceeded the deadline budget
 
     @property
     def done(self) -> bool:
@@ -143,6 +146,8 @@ class Request:
             "batch_s": t_svc - t_flush,
             "engine_s": self.t_done - t_svc,
             "total_s": self.t_done - self.t_arrival,
+            "degraded": self.degraded,
+            "deadline_missed": self.deadline_missed,
         }
 
 

@@ -96,23 +96,45 @@ def plan_elastic_mesh(n_alive: int, data_axis: int, model_axis: int,
 
 
 class ReplicaHealth:
-    """Consecutive-failure tracking for the service tier's replicas.
+    """Per-replica circuit breaker fed by batch outcomes.
 
-    A replica is *unhealthy* once it fails ``max_consecutive`` batches
-    in a row; any successful batch resets its count.  The service
-    consults ``healthy()`` when picking a retry target (never the
-    replica that just failed) and exports the counters in ``stats()``.
-    Thread-safe: executor workers record outcomes concurrently.
+    Classic three-state breaker, one per replica:
+
+      * **closed** — normal routing.  ``max_consecutive`` consecutive
+        batch failures trip the breaker *open* (``record_failure``).
+      * **open** — the replica takes no traffic (``allow`` is False) and
+        the router steers around it.  After ``half_open_after_s`` of
+        wall time the breaker transitions to *half-open*.
+      * **half-open** — exactly ONE probe batch is admitted (``allow``
+        returns True once per open period); its success closes the
+        breaker, its failure re-opens it and restarts the clock.
+
+    ``half_open_after_s=0`` (default) is the legacy PR 5 behavior: an
+    open breaker stays open until some success (e.g. a retry that still
+    landed there) resets it — no timed recovery.
+
+    ``is_healthy``/``healthy`` stay the *pure* views (closed-or-not,
+    used for retry-target picking and stats); ``allow`` is the
+    routing-time check that additionally claims the half-open probe
+    slot.  Thread-safe: executor workers record outcomes concurrently.
     """
 
-    def __init__(self, n_replicas: int, max_consecutive: int = 3):
+    def __init__(self, n_replicas: int, max_consecutive: int = 3,
+                 half_open_after_s: float = 0.0,
+                 clock: Callable[[], float] = time.monotonic):
         if n_replicas < 1:
             raise ValueError("n_replicas must be >= 1")
         if max_consecutive < 1:
             raise ValueError("max_consecutive must be >= 1")
+        if half_open_after_s < 0:
+            raise ValueError("half_open_after_s must be >= 0")
         self.max_consecutive = int(max_consecutive)
+        self.half_open_after_s = float(half_open_after_s)
+        self.clock = clock
         self._consecutive = [0] * int(n_replicas)
         self._total = [0] * int(n_replicas)
+        self._opened_at: List[Optional[float]] = [None] * int(n_replicas)
+        self._probing = [False] * int(n_replicas)
         self._lock = threading.Lock()
 
     @property
@@ -131,18 +153,63 @@ class ReplicaHealth:
             if n > cur:
                 self._consecutive += [0] * (n - cur)
                 self._total += [0] * (n - cur)
+                self._opened_at += [None] * (n - cur)
+                self._probing += [False] * (n - cur)
             else:
                 del self._consecutive[n:]
                 del self._total[n:]
+                del self._opened_at[n:]
+                del self._probing[n:]
 
     def record_success(self, replica: int) -> None:
         with self._lock:
             self._consecutive[replica] = 0
+            self._opened_at[replica] = None
+            self._probing[replica] = False
 
     def record_failure(self, replica: int) -> None:
         with self._lock:
             self._consecutive[replica] += 1
             self._total[replica] += 1
+            if self._probing[replica]:
+                # half-open probe failed: re-open, restart the clock
+                self._probing[replica] = False
+                self._opened_at[replica] = self.clock()
+            elif self._consecutive[replica] >= self.max_consecutive \
+                    and self._opened_at[replica] is None:
+                self._opened_at[replica] = self.clock()
+
+    def state(self, replica: int) -> str:
+        """'closed' | 'open' | 'half_open' (pure view)."""
+        with self._lock:
+            return self._state_locked(replica)
+
+    def _state_locked(self, replica: int) -> str:
+        if self._opened_at[replica] is None:
+            return "closed"
+        if self._probing[replica]:
+            return "half_open"
+        if self.half_open_after_s > 0 and \
+                self.clock() - self._opened_at[replica] \
+                >= self.half_open_after_s:
+            return "half_open"
+        return "open"
+
+    def allow(self, replica: int) -> bool:
+        """Routing-time admission: closed replicas always pass; an open
+        breaker passes exactly one probe batch once the half-open window
+        arrives (claiming it — concurrent routers race for one slot)."""
+        with self._lock:
+            if self._opened_at[replica] is None:
+                return True
+            if self._probing[replica]:
+                return False              # probe already in flight
+            if self.half_open_after_s > 0 and \
+                    self.clock() - self._opened_at[replica] \
+                    >= self.half_open_after_s:
+                self._probing[replica] = True
+                return True
+            return False
 
     def is_healthy(self, replica: int) -> bool:
         with self._lock:
@@ -153,12 +220,21 @@ class ReplicaHealth:
             return [r for r, c in enumerate(self._consecutive)
                     if c < self.max_consecutive]
 
+    def open_count(self) -> int:
+        """Replicas currently taking no traffic — the autoscaler's
+        lost-capacity signal."""
+        with self._lock:
+            return sum(1 for r in range(len(self._consecutive))
+                       if self._state_locked(r) == "open")
+
     def stats(self) -> dict:
         with self._lock:
             return {"failures": list(self._total),
                     "unhealthy": [r for r, c in
                                   enumerate(self._consecutive)
-                                  if c >= self.max_consecutive]}
+                                  if c >= self.max_consecutive],
+                    "breaker": [self._state_locked(r)
+                                for r in range(len(self._consecutive))]}
 
 
 @dataclasses.dataclass
@@ -188,13 +264,30 @@ class RunSupervisor:
 
     ``run_fn(mesh_shape, start_step) -> ('done'|'failed', last_step)`` is
     the training driver; ``failure injection`` in tests simulates node loss.
+
+    ``checkpoint_steps`` names the steps with a committed checkpoint: on
+    failure the run resumes from the *latest checkpoint* <= the failure
+    step — you cannot restart from a step that was never persisted.
+    With no checkpoint list the failure step itself is trusted (legacy
+    callers that checkpoint every step).
     """
 
     def __init__(self, data_axis: int, model_axis: int,
                  checkpoint_steps: Sequence[int] = ()):
         self.data_axis = data_axis
         self.model_axis = model_axis
+        self.checkpoint_steps = tuple(sorted(int(s)
+                                             for s in checkpoint_steps))
         self.history: List[dict] = []
+
+    def _resume_step(self, last_step: int) -> int:
+        """Latest checkpointed step <= ``last_step`` (0 if the failure
+        precedes every checkpoint); ``last_step`` itself when no
+        checkpoint schedule was declared."""
+        if not self.checkpoint_steps:
+            return last_step
+        eligible = [s for s in self.checkpoint_steps if s <= last_step]
+        return eligible[-1] if eligible else 0
 
     def supervise(self, run_fn, registry: HeartbeatRegistry,
                   max_restarts: int = 8):
@@ -214,6 +307,6 @@ class RunSupervisor:
             if plan is None:
                 raise RuntimeError("no usable mesh after failures")
             self.data_axis = plan.data_axis
-            start_step = last_step
+            start_step = self._resume_step(last_step)
             restarts += 1
         raise RuntimeError(f"exceeded {max_restarts} restarts")

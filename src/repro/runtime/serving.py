@@ -239,6 +239,9 @@ class LocalEngine:
                                else (coarse.n_groups if coarse is not None
                                      else 0))
         self.k = params.k
+        # per-batch degrade report, re-stamped by every search_batch call;
+        # the serving runtime reads it to flag requests as degraded
+        self.last_batch_info: dict = {"degraded": False, "dropped_probes": 0}
 
     # the (index, clusters) pair is one atomic view; the split properties
     # keep the long-standing attribute surface working
@@ -278,12 +281,14 @@ class LocalEngine:
                       gen + 1 if index is not None else gen)
 
     def search_batch(self, queries: np.ndarray,
-                     n_valid: Optional[int] = None
+                     n_valid: Optional[int] = None,
+                     budget_s: Optional[float] = None
                      ) -> Tuple[np.ndarray, np.ndarray]:
         index, clusters, _ = self._view
+        self.last_batch_info = {"degraded": False, "dropped_probes": 0}
         if self.tiered_store is not None or self.coarse is not None:
             return self._search_tasks(np.asarray(queries, np.float32),
-                                      n_valid)
+                                      n_valid, budget_s)
         if self.lut_cache is None:
             d, i = search_ivfpq(index, clusters,
                                 jnp.asarray(queries, jnp.float32),
@@ -360,7 +365,8 @@ class LocalEngine:
         return probes, flat_res
 
     def _search_tasks(self, queries: np.ndarray,
-                      n_valid: Optional[int] = None):
+                      n_valid: Optional[int] = None,
+                      budget_s: Optional[float] = None):
         """Tiered / two-level path: route, fetch task tensors through the
         tier (resident slab hit or batched mmap cold read), scan.
 
@@ -369,6 +375,14 @@ class LocalEngine:
         of — not after — the reads that want them.  Cold reads within the
         batch are deduplicated and fetched in one memmap gather
         (``TieredStore.gather``), i.e. per-probe misses batch per flush.
+
+        Fail-operational: the fetch runs through
+        ``TieredStore.gather_degraded`` — probes the tier cannot serve
+        (cold-read IOError, quarantined clusters, or *all* cold probes
+        when ``budget_s`` says the predicted cold-read cost would blow
+        the deadline) come back with ``size == 0`` and the scan's
+        n_valid masking yields a result exact over what was scanned.
+        The batch is then reported degraded via ``last_batch_info``.
         """
         p = self.params
         index, clusters, vgen = self._view    # one atomic read per batch
@@ -396,7 +410,23 @@ class LocalEngine:
             if p.lut_dtype == "uint8":
                 lut = quantize_lut(lut)
         if tier is not None:
-            codes, ids, sizes = tier.gather(flat_probes)
+            # deadline-at-risk check: if the predicted cold-fetch cost
+            # (online EWMA of measured mmap reads) would overrun the
+            # remaining budget, drop cold probes and serve resident-only
+            resident_only = False
+            if budget_s is not None:
+                cold_ids = flat_probes[~tier.resident_mask[flat_probes]]
+                n_cold = int(np.unique(cold_ids).size)
+                if n_cold and (budget_s <= 0 or
+                               tier.estimate_cold_seconds(n_cold)
+                               > budget_s):
+                    resident_only = True
+            codes, ids, sizes, dropped = tier.gather_degraded(
+                flat_probes, resident_only=resident_only)
+            n_dropped = int(dropped[:n_valid_q * npr].sum())
+            if n_dropped:
+                self.last_batch_info = {"degraded": True,
+                                        "dropped_probes": n_dropped}
             bd, bi = _dc_ts_tasks(lut, jnp.asarray(codes),
                                   jnp.asarray(ids), jnp.asarray(sizes),
                                   k=p.k, strategy=p.strategy, nprobe=npr)
@@ -442,11 +472,18 @@ class ShardedEngine:
     def serving_info(self) -> dict:
         return self.engine.serving_info()
 
+    @property
+    def last_batch_info(self) -> dict:
+        return getattr(self.engine, "last_batch_info",
+                       {"degraded": False, "dropped_probes": 0})
+
     def search_batch(self, queries: np.ndarray,
-                     n_valid: Optional[int] = None
+                     n_valid: Optional[int] = None,
+                     budget_s: Optional[float] = None
                      ) -> Tuple[np.ndarray, np.ndarray]:
         d, i, _info = self.engine.search(jnp.asarray(queries, jnp.float32),
-                                         n_valid=n_valid)
+                                         n_valid=n_valid,
+                                         budget_s=budget_s)
         return np.asarray(d), np.asarray(i)
 
 
@@ -508,10 +545,12 @@ class PimPacedEngine:
         return getattr(self.engine, name)
 
     def search_batch(self, queries: np.ndarray,
-                     n_valid: Optional[int] = None
+                     n_valid: Optional[int] = None,
+                     budget_s: Optional[float] = None
                      ) -> Tuple[np.ndarray, np.ndarray]:
         t0 = time.perf_counter()
-        d, i = self.engine.search_batch(queries, n_valid=n_valid)
+        kw = {} if budget_s is None else {"budget_s": budget_s}
+        d, i = self.engine.search_batch(queries, n_valid=n_valid, **kw)
         n = n_valid if n_valid is not None else len(queries)
         if n > 0:
             remaining = self.batch_latency_s(n) - (time.perf_counter() - t0)
@@ -554,6 +593,8 @@ class ServingStats:
         self.queue_depths: List[int] = []
         self.t_first_arrival: Optional[float] = None
         self.t_last_done: Optional[float] = None
+        self.degraded_requests = 0
+        self.deadline_missed = 0
         self._lock = threading.Lock()
 
     def record_arrival(self, req: Request, depth: int) -> None:
@@ -572,6 +613,10 @@ class ServingStats:
     def record_done(self, req: Request) -> None:
         with self._lock:
             self.latencies_s.append(req.latency_s)
+            if req.degraded:
+                self.degraded_requests += 1
+            if req.deadline_missed:
+                self.deadline_missed += 1
             if self.t_last_done is None or req.t_done > self.t_last_done:
                 self.t_last_done = req.t_done
 
@@ -608,6 +653,8 @@ class ServingStats:
             "max_queue_depth": (max(self.queue_depths)
                                 if self.queue_depths else 0),
             "flushes": reasons,
+            "degraded_requests": self.degraded_requests,
+            "deadline_missed": self.deadline_missed,
         }
 
 
@@ -617,10 +664,18 @@ class ServingStats:
 
 @dataclasses.dataclass
 class ServingConfig:
-    """Bucket-policy and flush knobs (see README §serving)."""
+    """Bucket-policy and flush knobs (see README §serving).
+
+    ``deadline_s`` > 0 arms deadline-bounded serving: each batch's
+    budget is ``oldest arrival + deadline_s - service start``, passed to
+    the engine so it can degrade (drop cold disk probes) rather than
+    blow the deadline, and every served request is stamped
+    ``deadline_missed`` when its completion still ran past the budget.
+    """
     buckets: Tuple[int, ...] = (1, 2, 4, 8, 16, 32)
     max_wait_s: float = 2e-3          # deadline flush bound
     max_batch: Optional[int] = None   # default: largest bucket
+    deadline_s: float = 0.0           # 0 = no per-request deadline
 
     def make_batcher(self) -> MicroBatcher:
         return MicroBatcher(BucketPolicy(self.buckets),
@@ -657,6 +712,10 @@ class ServingRuntime:
         self.config = config or ServingConfig()
         self.batcher = self.config.make_batcher()
         self.stats = ServingStats()
+        # chaos hooks (repro.runtime.faults): the service stamps these
+        # when an injector is armed; None costs one attribute load
+        self.faults = None
+        self.replica_idx: Optional[int] = None
 
     def warmup(self, d: int) -> None:
         """Compile every bucket shape once (zero queries) so the first
@@ -715,10 +774,32 @@ class ServingRuntime:
         return self._serve(batch, t_start=t_start)
 
     def _serve(self, batch: MicroBatch, t_start: float) -> List[Request]:
+        # deadline budget: remaining seconds (on the driving clock) until
+        # the batch's OLDEST request blows its deadline — the engine uses
+        # it to degrade (resident-only probes) instead of running long
+        deadline = None
+        kwargs: dict = {}
+        if self.config.deadline_s > 0 and batch.requests:
+            deadline = (min(r.t_arrival for r in batch.requests)
+                        + self.config.deadline_s)
+            kwargs["budget_s"] = deadline - t_start
+        if self.faults is not None:          # chaos sites (armed only)
+            rule = self.faults.fire("engine.straggler",
+                                    replica=self.replica_idx)
+            if rule is not None and rule.delay_s > 0:
+                time.sleep(rule.delay_s)
+            rule = self.faults.fire("engine.batch",
+                                    replica=self.replica_idx)
+            if rule is not None:
+                from repro.runtime.faults import InjectedFault
+                err = InjectedFault("engine.batch",
+                                    f"replica {self.replica_idx}")
+                raise BatchServeError(batch, err) from err
         t0 = time.perf_counter()
         try:
             d, i = self.engine.search_batch(batch.queries,
-                                            n_valid=batch.n_valid)
+                                            n_valid=batch.n_valid,
+                                            **kwargs)
         except Exception as e:
             # fail only this batch's requests; the caller decides whether
             # to retry them elsewhere (service tier) or propagate
@@ -726,12 +807,20 @@ class ServingRuntime:
         service_s = time.perf_counter() - t0
         self.stats.record_batch(batch, service_s)
         t_done = t_start + service_s
+        # engines that can degrade report it per batch (set fresh on
+        # every search_batch call, so a stale read is impossible)
+        info = getattr(self.engine, "last_batch_info", None)
+        degraded = bool(info and info.get("degraded"))
         for row, req in enumerate(batch.requests):   # de-pad: rows [0, n)
             req.dists = np.asarray(d[row])
             req.ids = np.asarray(i[row])
             req.t_flush = batch.t_flush
             req.t_service_start = t_start
             req.t_done = t_done
+            req.degraded = degraded
+            if self.config.deadline_s > 0:
+                req.deadline_missed = (
+                    t_done > req.t_arrival + self.config.deadline_s)
             self.stats.record_done(req)
             if req.future is not None:
                 req.future._resolve(req)

@@ -24,10 +24,11 @@ from repro.service.mutation import MutationCoordinator
 from repro.service.router import (CacheAwarePolicy, LeastQueuePolicy,
                                   RoundRobinPolicy, Router, RoutingPolicy,
                                   make_policy)
-from repro.service.service import AnnService, Replica
+from repro.service.service import AnnService, Replica, ServiceOverloaded
 from repro.service.spec import SPEC_VERSION, IndexSpec, ServiceSpec
 
-__all__ = ["AnnService", "Replica", "IndexSpec", "ServiceSpec",
+__all__ = ["AnnService", "Replica", "ServiceOverloaded", "IndexSpec",
+           "ServiceSpec",
            "SPEC_VERSION", "SearchFuture", "ReplicaExecutor",
            "Autoscaler", "ScaleSignals", "ScaleEvent",
            "Router", "RoutingPolicy", "RoundRobinPolicy",

@@ -257,6 +257,15 @@ def main() -> int:
                                  description=__doc__)
     ap.add_argument("--selftest", action="store_true",
                     help="run the end-to-end service smoke test")
+    ap.add_argument("--selftest-chaos", action="store_true",
+                    help="run the fault-injection chaos smoke: Zipf "
+                         "stream over an armed fleet; asserts "
+                         "availability >= 0.95, zero corrupt results, "
+                         "and corrupted-spill rebuild")
+    ap.add_argument("--chaos-queries", type=int, default=1000,
+                    help="chaos smoke: stream length (default 1000)")
+    ap.add_argument("--chaos-seed", type=int, default=0,
+                    help="chaos smoke: FaultPlan / stream seed")
     ap.add_argument("--clock", choices=("virtual", "wall"),
                     default="virtual",
                     help="stream driver for the smoke: discrete-event "
@@ -275,6 +284,10 @@ def main() -> int:
                     help="autotune: persist the winning ServiceSpec as a "
                          "deploy file (.json/.yaml)")
     args = ap.parse_args()
+    if args.selftest_chaos:
+        from repro.service.chaos import selftest_chaos
+        return selftest_chaos(seed=args.chaos_seed,
+                              n_queries=args.chaos_queries)
     if args.autotune:
         return autotune_smoke(args.slo_recall, args.slo_p99_ms,
                               args.save_spec)

@@ -41,11 +41,15 @@ class ScaleSignals:
     """One between-batches snapshot of the fleet's load signals."""
     queue_depths: Sequence[int]          # per live replica
     p99_s: Optional[float] = None        # recent-window p99 (None: no data)
+    open_breakers: int = 0               # replicas tripped open (no traffic)
 
     @property
     def mean_depth(self) -> float:
+        # an open-breaker replica serves nothing: its (stale) queue
+        # depth must not dilute the per-serving-replica mean
         qs = list(self.queue_depths)
-        return (sum(qs) / len(qs)) if qs else 0.0
+        n = max(len(qs) - self.open_breakers, 1)
+        return (sum(qs) / n) if qs else 0.0
 
 
 @dataclasses.dataclass
@@ -100,7 +104,11 @@ class Autoscaler:
         p99 = signals.p99_s
         over_budget = (self.p99_budget_s is not None and p99 is not None
                        and p99 > self.p99_budget_s)
-        if depth > self.queue_high or over_budget:
+        # an open circuit breaker is lost capacity: replace it (grow)
+        # even if the survivors' queues look calm, so the fleet's
+        # *serving* headroom is restored while the breaker cools off
+        lost_capacity = signals.open_breakers > 0 and n < self.max_replicas
+        if depth > self.queue_high or over_budget or lost_capacity:
             target = min(n + 1, self.max_replicas)
         elif depth < self.queue_low and not over_budget:
             target = max(n - 1, self.min_replicas)

@@ -1,0 +1,228 @@
+"""Chaos harness: drive a fault-injected fleet and measure what survives.
+
+The fail-operational claim is only testable under faults, so this module
+owns the one canonical experiment (shared by ``python -m repro.service
+--selftest-chaos``, tests/test_chaos.py, and the ``serve/chaos`` bench
+row): build a tiered-storage fleet, arm a seeded
+:class:`~repro.runtime.faults.FaultPlan` (replica batch crashes, cold
+read IOErrors, a straggler delay, and one corrupted spill cluster),
+stream a Zipf-skewed query trace through the wall-clock executor path,
+and report
+
+  * **availability** — answered / submitted (failed + shed count
+    against it);
+  * **correctness** — every *non-degraded* answer must be bit-identical
+    to the same spec's fault-free run (``corrupt_results`` == 0 is the
+    hard floor: faults may cost probes, never wrong bytes);
+  * **degraded accounting** — degraded answers are flagged in
+    ``future.timing()`` and exact over what was scanned (recall is
+    reported so the cost of degradation is visible);
+  * **integrity** — the corrupted spill cluster is caught by the CRC
+    path and rebuilt from the resident copy (demote-time heal or the
+    end-of-run ``verify(repair=True)`` scrub).
+
+Determinism: the injector's per-site decision *sequences* are pure
+functions of the plan seed (see :mod:`repro.runtime.faults`); which
+request a firing lands on depends on wall-clock batch composition, so
+the assertions here are interleaving-invariant (floors and exactness
+sets, not exact counts).
+"""
+
+from __future__ import annotations
+
+import time
+from typing import Optional
+
+import numpy as np
+
+from repro.runtime.faults import FaultInjector, FaultPlan, FaultRule
+
+
+def zipf_stream(n_queries: int, pool_size: int, seed: int,
+                exponent: float = 1.1) -> np.ndarray:
+    """Zipf-skewed query indices: rank r drawn with p ~ 1/(r+1)^exp."""
+    p = 1.0 / np.power(np.arange(1, pool_size + 1), exponent)
+    p /= p.sum()
+    rng = np.random.default_rng(seed)
+    return rng.choice(pool_size, size=int(n_queries), p=p)
+
+
+def default_plan(seed: int = 0, *, batch_fail_rate: float = 0.02,
+                 cold_read_rate: float = 0.05,
+                 straggler_rate: float = 0.05,
+                 straggler_delay_s: float = 5e-3) -> FaultPlan:
+    """The canonical chaos plan: replica crashes + cold-read IOErrors +
+    stragglers + exactly one corrupted spill cluster."""
+    return FaultPlan(seed=seed, rules=(
+        FaultRule("engine.batch", rate=batch_fail_rate),
+        FaultRule("tier.cold_read", rate=cold_read_rate),
+        FaultRule("engine.straggler", rate=straggler_rate,
+                  delay_s=straggler_delay_s),
+        FaultRule("tier.spill_corrupt", count=1, after=4),
+    ))
+
+
+def run_chaos(*, seed: int = 0, n_queries: int = 1000, replicas: int = 2,
+              deadline_ms: float = 50.0, interval_s: float = 5e-4,
+              plan: Optional[FaultPlan] = None,
+              verbose: bool = False) -> dict:
+    """Run the canonical chaos experiment; returns the report dict.
+
+    Pure measurement — callers (selftest / tests / bench) assert their
+    own floors on the report.  Keys: ``submitted``, ``answered``,
+    ``failed``, ``shed``, ``availability``, ``degraded``,
+    ``deadline_missed``, ``corrupt_results``, ``recall``,
+    ``recall_non_degraded``, ``rebuilds``, ``quarantined``,
+    ``fault_stats``, ``verify``."""
+    import jax
+
+    from repro.core import build_ivfpq
+    from repro.data import make_clustered_corpus
+    from repro.service import AnnService, ServiceSpec, ServiceOverloaded
+
+    ds = make_clustered_corpus(seed=seed, n=4000, d=16, n_queries=64,
+                               n_components=8, k_gt=10)
+    index = build_ivfpq(jax.random.PRNGKey(seed), ds.points, nlist=32,
+                        m=8, cb=32, kmeans_iters=4, pq_iters=4)
+    pool = np.asarray(ds.queries, np.float32)
+    gt = np.asarray(ds.groundtruth)
+    k = 10
+
+    def make_spec(storage_dir):
+        return ServiceSpec(
+            engine="local", replicas=replicas, nprobe=8, k=k,
+            buckets=(1, 2, 4, 8), max_wait_s=1e-3,
+            storage="tiered", storage_dir=storage_dir,
+            storage_budget_bytes=1,     # placeholder; fixed below
+            deadline_ms=deadline_ms, max_retries=2, backoff_base_ms=1.0,
+            breaker_threshold=3, breaker_half_open_s=0.05, checksum=True)
+
+    import dataclasses
+    import tempfile
+
+    # size the tier so a real cold set exists: ~1/4 of clusters resident
+    probe = AnnService.build(
+        dataclasses.replace(make_spec(tempfile.mkdtemp(prefix="chaos_t_")),
+                            replicas=1),
+        index=index)
+    budget = max(probe.index.tiered_store.total_bytes // 4,
+                 probe.index.tiered_store.bytes_per_cluster)
+    probe.shutdown()
+
+    def sized_spec():
+        return dataclasses.replace(
+            make_spec(tempfile.mkdtemp(prefix="chaos_tier_")),
+            storage_budget_bytes=budget)
+
+    # -- fault-free reference: the bit-exactness oracle -------------------
+    ref = AnnService.build(sized_spec(), index=index)
+    _, ref_ids = ref.search(pool)
+    ref_ids = np.asarray(ref_ids)
+    ref.shutdown()
+
+    # -- armed fleet -------------------------------------------------------
+    plan = plan if plan is not None else default_plan(seed)
+    injector = FaultInjector(plan)
+    svc = AnnService.build(sized_spec(), index=index,
+                           fault_injector=injector)
+    svc.warmup()
+
+    qidx = zipf_stream(n_queries, len(pool), seed)
+    futures = []          # (pool_idx, future)
+    shed = 0
+    t0 = time.monotonic()
+    for i, qi in enumerate(qidx):
+        target = t0 + i * interval_s
+        dt = target - time.monotonic()
+        if dt > 0:
+            time.sleep(dt)
+        try:
+            futures.append((int(qi), svc.submit_async(pool[qi])))
+        except ServiceOverloaded:
+            shed += 1
+
+    answered = failed = degraded = missed = corrupt = 0
+    recalls, recalls_nd = [], []
+    for qi, fut in futures:
+        try:
+            _, ids = fut.result(timeout=60.0)
+        except Exception:                            # noqa: BLE001
+            failed += 1
+            continue
+        answered += 1
+        t = fut.timing()
+        r = len(set(np.asarray(ids).tolist())
+                & set(gt[qi, :k].tolist())) / float(k)
+        recalls.append(r)
+        if t["degraded"]:
+            degraded += 1
+        else:
+            recalls_nd.append(r)
+            if not np.array_equal(np.asarray(ids), ref_ids[qi]):
+                corrupt += 1
+        if t["deadline_missed"]:
+            missed += 1
+
+    tier = svc.index.tiered_store
+    verify = tier.verify(repair=True)
+    rebuilds = int(tier.stats.rebuilds)
+    quarantined = sorted(tier.quarantined)
+    stats = svc.stats()
+    try:
+        svc.shutdown()
+    except RuntimeError:
+        pass                      # a wedged worker must not eat the report
+
+    report = {
+        "seed": seed,
+        "submitted": int(n_queries),
+        "answered": answered,
+        "failed": failed,
+        "shed": shed,
+        "availability": answered / max(n_queries, 1),
+        "degraded": degraded,
+        "deadline_missed": missed,
+        "corrupt_results": corrupt,
+        "recall": float(np.mean(recalls)) if recalls else 0.0,
+        "recall_non_degraded": (float(np.mean(recalls_nd))
+                                if recalls_nd else 0.0),
+        "rebuilds": rebuilds,
+        "quarantined": quarantined,
+        "verify": verify,
+        "fault_stats": injector.stats(),
+        "retries": stats["aggregate"]["retries"],
+        "breaker": stats["health"]["breaker"],
+    }
+    if verbose:
+        for key in ("availability", "answered", "failed", "degraded",
+                    "deadline_missed", "corrupt_results", "recall",
+                    "recall_non_degraded", "rebuilds", "quarantined",
+                    "retries"):
+            print(f"[chaos] {key} = {report[key]}")
+        print(f"[chaos] fault_stats = {report['fault_stats']}")
+    return report
+
+
+def selftest_chaos(seed: int = 0, n_queries: int = 1000) -> int:
+    """CI gate: run the canonical experiment and assert the floors."""
+    report = run_chaos(seed=seed, n_queries=n_queries, verbose=True)
+    assert report["availability"] >= 0.95, \
+        f"availability {report['availability']:.3f} < 0.95"
+    assert report["corrupt_results"] == 0, \
+        f"{report['corrupt_results']} non-degraded results diverged " \
+        f"from the fault-free run"
+    fs = report["fault_stats"]
+    assert fs.get("engine.batch", {}).get("fires", 0) > 0, \
+        "chaos plan never fired engine.batch — harness is not armed"
+    assert fs.get("tier.spill_corrupt", {}).get("fires", 0) == 1, fs
+    healed = (report["rebuilds"] > 0
+              or len(report["verify"]["rebuilt"]) > 0)
+    assert healed, \
+        f"corrupted spill cluster was never rebuilt: {report['verify']}"
+    assert not report["quarantined"] or report["verify"]["corrupt"], \
+        report["quarantined"]
+    print(f"[selftest-chaos] availability="
+          f"{report['availability']:.3f} degraded={report['degraded']} "
+          f"recall={report['recall']:.3f} rebuilds={report['rebuilds']} "
+          f"corrupt_results=0: OK")
+    return 0

@@ -121,13 +121,19 @@ class ReplicaExecutor:
                  on_batch_failure: Optional[
                      Callable[[int, MicroBatch, BaseException], None]]
                  = None,
-                 on_batch_success: Optional[Callable[[int], None]] = None):
+                 on_batch_success: Optional[Callable[[int], None]] = None,
+                 join_timeout_s: float = 30.0):
+        if join_timeout_s <= 0:
+            raise ValueError(f"join_timeout_s must be positive, "
+                             f"got {join_timeout_s}")
         self.runtime = runtime
         self.replica_idx = int(replica_idx)
         self.clock = clock
         self.on_batch_failure = on_batch_failure
         self.on_batch_success = on_batch_success
+        self.join_timeout_s = float(join_timeout_s)
         self.failures = 0
+        self.wedged = False
         self._cond = threading.Condition()
         self._stop = False
         self._draining = False
@@ -178,22 +184,25 @@ class ReplicaExecutor:
     def shutdown(self) -> None:
         """Drain outstanding requests, then stop and join the worker.
 
-        Raises ``RuntimeError`` if the worker does not exit within the
-        join timeout (a wedged engine): the thread is kept referenced so
-        ``running`` stays truthful and a later ``start()`` cannot spawn
-        a duplicate worker over the same runtime."""
+        Raises ``RuntimeError`` if the worker does not exit within
+        ``join_timeout_s`` (a wedged engine): ``wedged`` is set first so
+        ``AnnService.stats()`` can count it, and the thread is kept
+        referenced so ``running`` stays truthful and a later ``start()``
+        cannot spawn a duplicate worker over the same runtime."""
         if self._thread is None:
             return
         with self._cond:
             self._stop = True
             self._draining = True
             self._cond.notify()
-        self._thread.join(timeout=30.0)
+        self._thread.join(timeout=self.join_timeout_s)
         if self._thread.is_alive():
+            self.wedged = True
             raise RuntimeError(
                 f"replica {self.replica_idx} executor did not drain "
-                f"within 30s (engine wedged mid-batch?); its worker is "
-                f"still running")
+                f"within {self.join_timeout_s:g}s (engine wedged "
+                f"mid-batch?); its worker is still running")
+        self.wedged = False
         self._thread = None
 
     # -- worker ------------------------------------------------------------

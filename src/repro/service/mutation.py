@@ -60,6 +60,11 @@ class MutationCoordinator:
         self._last_maintenance: Optional[dict] = None
         self.maintenance_runs = 0
         self.propagations = 0
+        # chaos hook: AnnService.build arms this with the fleet's
+        # FaultInjector; the maintenance thread consults it (site
+        # "maintenance.death") so tests can exercise the stash-and-
+        # surface error path deterministically
+        self.faults = None
 
     # -- mutation fan-out --------------------------------------------------
     def upsert(self, ids, vectors) -> dict:
@@ -164,6 +169,11 @@ class MutationCoordinator:
 
         def work():
             try:
+                if self.faults is not None \
+                        and self.faults.fire("maintenance.death"):
+                    from repro.runtime.faults import InjectedFault
+                    raise InjectedFault("maintenance.death",
+                                        "maintenance thread killed")
                 gen = self.index.build_generation(
                     band=self.size_band, seed=run_seed)
                 info = self.index.install_generation(gen)

@@ -81,6 +81,14 @@ from repro.service.router import Router, make_policy
 from repro.service.spec import ServiceSpec
 
 
+class ServiceOverloaded(RuntimeError):
+    """Raised by the submit path when ``spec.queue_bound`` in-flight
+    requests are already queued: under overload the service degrades to
+    *fast rejection* (the caller can shed or retry elsewhere) instead of
+    letting the queue — and every queued request's latency — grow
+    without bound."""
+
+
 @dataclasses.dataclass
 class Replica:
     """One engine + runtime lane of the service."""
@@ -108,7 +116,10 @@ class AnnService:
         self.index = index                 # the unified Index handle
         self.replicas: List[Replica] = list(replicas)
         self.router = router
-        self.health = ReplicaHealth(len(self.replicas))
+        self.health = ReplicaHealth(
+            len(self.replicas),
+            max_consecutive=spec.breaker_threshold,
+            half_open_after_s=spec.breaker_half_open_s)
         self.autoscaler: Optional[Autoscaler] = None
         if spec.replicas_max:
             self.autoscaler = Autoscaler(
@@ -122,6 +133,13 @@ class AnnService:
         self._executors: List[ReplicaExecutor] = []
         self._batch_rr = 0
         self._retries = 0
+        self._shed = 0                 # submits rejected by queue_bound
+        # seeded jitter for retry backoff: deterministic given the spec,
+        # uncorrelated across retries (decorrelates replica thundering)
+        self._retry_rng = np.random.default_rng(spec.index.seed + 0x5EED)
+        # chaos: build(fault_injector=...) arms the whole stack through
+        # _arm_faults; None = every site hook is a dead branch
+        self.faults = None
         # serializes retry-target selection (worker threads) against
         # live-set updates (scale_to on the driver thread): a retry can
         # never be routed to a replica the autoscaler is draining —
@@ -137,15 +155,19 @@ class AnnService:
         # the Index handle — always the current generation's)
         self._sample_probes = None
         self._sample_queries = None
-        self._serving_cfg = ServingConfig(buckets=tuple(spec.buckets),
-                                          max_wait_s=spec.max_wait_s)
+        self._serving_cfg = ServingConfig(
+            buckets=tuple(spec.buckets), max_wait_s=spec.max_wait_s,
+            deadline_s=spec.deadline_ms * 1e-3)
         # mutation coordinator (wired by build() when spec.mutable)
         self.mutator = None
+        for i, rep in enumerate(self.replicas):
+            rep.runtime.replica_idx = i
 
     # -- construction ------------------------------------------------------
     @classmethod
     def build(cls, spec: ServiceSpec, points=None, *,
-              index=None, sample_queries=None) -> "AnnService":
+              index=None, sample_queries=None,
+              fault_injector=None) -> "AnnService":
         """Stand up the whole service from a validated spec.
 
         Either ``points`` (index built per ``spec.index``) or a prebuilt
@@ -155,11 +177,16 @@ class AnnService:
         handle (needs ``points``, or an already-mutable handle) and
         ``upsert``/``delete``/``run_maintenance`` come alive.
         ``sample_queries`` seeds the sharded engine's heat estimate
-        (falls back to a slice of the corpus)."""
+        (falls back to a slice of the corpus).  ``fault_injector``
+        (a :class:`~repro.runtime.faults.FaultInjector`) arms the
+        whole stack's chaos hooks — engines, tier, maintenance — for
+        fault-injection tests; None (production) leaves every hook a
+        dead branch."""
         spec.validate()
         storage_kw = dict(storage=spec.storage, storage_dir=spec.storage_dir,
                           storage_budget_bytes=spec.storage_budget_bytes,
-                          storage_promote_margin=spec.storage_promote_margin)
+                          storage_promote_margin=spec.storage_promote_margin,
+                          storage_checksum=spec.checksum)
         if spec.storage == "tiered" and spec.storage_dir is None:
             # fresh spill dir per build; lives as long as the process
             import tempfile
@@ -204,7 +231,8 @@ class AnnService:
             sample_probes = np.asarray(probes)
 
         serving_cfg = ServingConfig(buckets=tuple(spec.buckets),
-                                    max_wait_s=spec.max_wait_s)
+                                    max_wait_s=spec.max_wait_s,
+                                    deadline_s=spec.deadline_ms * 1e-3)
         replicas: List[Replica] = []
         with service_construction():
             for _ in range(spec.replicas):
@@ -234,7 +262,19 @@ class AnnService:
         if spec.mutable:
             from repro.service.mutation import MutationCoordinator
             svc.mutator = MutationCoordinator(svc)
+        if fault_injector is not None:
+            svc._arm_faults(fault_injector)
         return svc
+
+    def _arm_faults(self, injector) -> None:
+        """Attach one FaultInjector to every chaos hook in the stack."""
+        self.faults = injector
+        for rep in self.replicas:
+            rep.runtime.faults = injector
+        if self.index.tiered_store is not None:
+            self.index.tiered_store.faults = injector
+        if self.mutator is not None:
+            self.mutator.faults = injector
 
     @staticmethod
     def _build_replica(spec: ServiceSpec, index: Index,
@@ -390,13 +430,26 @@ class AnnService:
 
     def shutdown(self) -> dict:
         """Drain the executors, close the service (subsequent calls
-        raise) and return final stats."""
+        raise) and return final stats.
+
+        Fail-operational: a wedged worker (did not drain within
+        ``spec.shutdown_timeout_s``) does not abort the shutdown of the
+        rest of the fleet — it is counted in ``stats()['aggregate']
+        ['wedged_workers']`` and the first wedge error is re-raised
+        after every executor has been given its chance to drain."""
         if self.mutator is not None:
             self.mutator.close()
+        first_err: Optional[BaseException] = None
         for ex in self._executors:
-            ex.shutdown()
+            try:
+                ex.shutdown()
+            except RuntimeError as err:       # wedged — keep draining rest
+                if first_err is None:
+                    first_err = err
         out = self.stats()
         self._closed = True
+        if first_err is not None:
+            raise first_err
         return out
 
     # -- mutation API --------------------------------------------------------
@@ -461,14 +514,28 @@ class AnnService:
         permanently dying replica stops burning every routed request's
         single retry.  The router's pick counts record the policy's
         choice; ``stats()['health']`` shows who is being steered
-        around.  Like a heartbeat-dead host, a steered-around replica
-        receives no further traffic (nothing probes it), so it stays
-        out until an autoscaler shrink parks it or an operator resets
-        its health — the conservative choice for a replica that ate
-        ``max_consecutive`` batches in a row."""
+        around.  With ``spec.breaker_half_open_s`` set the breaker
+        itself re-admits a single probe batch after the cool-off
+        (``ReplicaHealth.allow``), so a recovered replica rejoins the
+        fleet without operator action; at the legacy default (0) an
+        open breaker stays open until an autoscaler shrink parks the
+        replica or an operator resets its health.
+
+        With ``spec.queue_bound`` set the submit path is *admission
+        controlled*: once that many requests are in flight fleet-wide,
+        submits fail fast with :class:`ServiceOverloaded` instead of
+        queueing without bound."""
         q = np.asarray(query, np.float32)
+        bound = self.spec.queue_bound
+        if bound and executor:
+            depth = sum(rep.queue_depth for rep in self.live_replicas)
+            if depth >= bound:
+                self._shed += 1
+                raise ServiceOverloaded(
+                    f"queue_bound={bound} in-flight requests already "
+                    f"queued (depth={depth}); shedding")
         r = self.router.route(q)
-        if executor and not self.health.is_healthy(r):
+        if executor and not self.health.allow(r):
             with self._scale_lock:
                 alt = self._retry_target(exclude=r)
             if alt is not None:
@@ -492,7 +559,8 @@ class AnnService:
             self._executors.append(ReplicaExecutor(
                 self.replicas[ridx].runtime, ridx,
                 on_batch_failure=self._on_batch_failure,
-                on_batch_success=self.health.record_success))
+                on_batch_success=self.health.record_success,
+                join_timeout_s=self.spec.shutdown_timeout_s))
         for ex in self._executors[:self._live if upto is None else upto]:
             ex.start()
 
@@ -541,22 +609,35 @@ class AnnService:
     def _on_batch_failure(self, ridx: int, batch: MicroBatch,
                           cause: BaseException) -> None:
         """A replica died mid-batch: fail only that batch's requests,
-        retrying each once on another healthy replica."""
+        retrying each on another healthy replica (retry v2).
+
+        Each request carries its own ``retries`` count; a request is
+        retried at most ``spec.max_retries`` times, with exponential
+        backoff ``backoff_base_ms * 2^attempt`` plus seeded jitter slept
+        *once per failed batch* (on this worker thread, outside the
+        scale lock — no router or retry is blocked by the wait)."""
         self.health.record_failure(ridx)
-        for req in batch.requests:
+        live = [req for req in batch.requests if req.future is not None]
+        retryable = [req for req in live
+                     if req.retries < self.spec.max_retries]
+        if retryable and self.spec.backoff_base_ms > 0:
+            attempt = min(req.retries for req in retryable)
+            delay = (self.spec.backoff_base_ms * 1e-3 * (2 ** attempt)
+                     * (0.5 + 0.5 * float(self._retry_rng.random())))
+            time.sleep(delay)
+        for req in live:
             fut = req.future
-            if fut is None:
-                continue
             with self._scale_lock:
-                target = (None if req.retried
-                          else self._retry_target(exclude=ridx))
+                target = (self._retry_target(exclude=ridx)
+                          if req.retries < self.spec.max_retries else None)
                 if target is None:
                     fut._fail(cause)
                     continue
                 self._retries += 1
 
-                def attach(new_req: Request, fut=fut,
-                           target=target) -> None:
+                def attach(new_req: Request, fut=fut, target=target,
+                           n=req.retries + 1) -> None:
+                    new_req.retries = n
                     fut._rebind(new_req, target)
 
                 # keep the original arrival stamp: the caller has been
@@ -589,6 +670,8 @@ class AnnService:
                     rep = self._build_replica(
                         self.spec, self.index,
                         self._sample_probes, self._serving_cfg)
+                    rep.runtime.replica_idx = len(self.replicas)
+                    rep.runtime.faults = self.faults
                     if self._warmed:
                         rep.runtime.warmup(self.index.dim)
                     self.replicas.append(rep)
@@ -618,7 +701,8 @@ class AnnService:
             lat.extend(rep.runtime.stats.recent_latencies(64))
         signals = ScaleSignals(
             queue_depths=[rep.queue_depth for rep in self.live_replicas],
-            p99_s=(_percentile(lat, 99) if lat else None))
+            p99_s=(_percentile(lat, 99) if lat else None),
+            open_breakers=self.health.open_count())
         target = self.autoscaler.decide(signals)
         if target != self._live:
             self.scale_to(target)
@@ -690,11 +774,19 @@ class AnnService:
             "p99_ms": _percentile(lat, 99) * 1e3,
             "qps": len(lat) / span if span > 0 else float("nan"),
             "retries": self._retries,
+            "shed": self._shed,
+            "wedged_workers": sum(1 for ex in self._executors
+                                  if ex.wedged),
+            "degraded": sum(m.get("degraded_requests", 0) for m in per),
+            "deadline_missed": sum(m.get("deadline_missed", 0)
+                                   for m in per),
         }
         if lookups:
             agg["lut_hit_rate"] = hits / lookups
         out = {"aggregate": agg, "router": self.router.stats(),
                "health": self.health.stats(), "replicas": per}
+        if self.faults is not None:
+            out["faults"] = self.faults.stats()
         if self.index.tiered_store is not None:
             out["tier"] = self.index.tiered_store.serving_info()
         if self.autoscaler is not None:

@@ -40,10 +40,13 @@ _ROUTERS = ("round_robin", "least_queue", "cache_aware")
 #: serialization schema version; bump when fields change incompatibly
 #: v1 -> v2: added `mutable` + `mutation_*` knobs (live-index mutation);
 #: v2 -> v3: added `storage*` (tiered RAM/disk residency) + `coarse_*`
-#: (two-level routing) knobs.  Older deploy files load unchanged (the
-#: new knobs default to off), but an old-stamped file carrying newer
-#: keys is rejected by name.
-SPEC_VERSION = 3
+#: (two-level routing) knobs;
+#: v3 -> v4: added the fail-operational knobs (`deadline_ms`,
+#: `queue_bound`, retry/breaker policy, `shutdown_timeout_s`,
+#: `checksum`).  Older deploy files load unchanged (the new knobs
+#: default to off / legacy behavior), but an old-stamped file carrying
+#: newer keys is rejected by name.
+SPEC_VERSION = 4
 
 #: fields that did not exist in spec schema v1 (migration guard)
 _V2_FIELDS = frozenset({"mutable", "mutation_size_band",
@@ -54,6 +57,12 @@ _V2_FIELDS = frozenset({"mutable", "mutation_size_band",
 _V3_FIELDS = frozenset({"storage", "storage_budget_bytes",
                         "storage_promote_margin", "storage_dir",
                         "coarse_groups", "coarse_nprobe1"})
+
+#: fields added by spec schema v4 (fail-operational serving)
+_V4_FIELDS = frozenset({"deadline_ms", "queue_bound", "max_retries",
+                        "backoff_base_ms", "breaker_threshold",
+                        "breaker_half_open_s", "shutdown_timeout_s",
+                        "checksum"})
 
 
 @dataclasses.dataclass(frozen=True)
@@ -81,7 +90,8 @@ class IndexSpec:
     def build(self, points, *, mutable: bool = False,
               storage: str = "resident", storage_dir=None,
               storage_budget_bytes: int = 0,
-              storage_promote_margin: float = 1.25):
+              storage_promote_margin: float = 1.25,
+              storage_checksum: bool = True):
         """The unified index front door: build an
         :class:`~repro.core.mutable_index.Index` handle from raw points.
         With ``mutable=True`` the handle also retains the raw vectors and
@@ -101,7 +111,8 @@ class IndexSpec:
                            train_sample=self.train_sample, mutable=mutable,
                            storage=storage, storage_dir=storage_dir,
                            storage_budget_bytes=storage_budget_bytes,
-                           storage_promote_margin=storage_promote_margin)
+                           storage_promote_margin=storage_promote_margin,
+                           storage_checksum=storage_checksum)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -220,6 +231,37 @@ class ServiceSpec:
     # 0 = flat CL.  coarse_nprobe1=0 means "all groups" (exact parity).
     coarse_groups: int = 0
     coarse_nprobe1: int = 0
+
+    # -- fail-operational serving (spec schema v4) -------------------------
+    # per-request deadline budget, milliseconds from arrival.  When the
+    # predicted cold-fetch cost would overrun the remaining budget the
+    # tiered engine sheds cold probes and serves a *degraded* result
+    # (exact over what was scanned, flagged in future.timing()).  0 = no
+    # deadline: every probe is always served.
+    deadline_ms: float = 0.0
+    # admission bound: reject submits (ServiceOverloaded) once this many
+    # requests are in flight, so a burst degrades to fast rejections
+    # instead of unbounded queueing.  0 = unbounded (legacy).
+    queue_bound: int = 0
+    # retry v2: a failed batch is retried up to max_retries times on the
+    # healthiest other replica, sleeping backoff_base_ms * 2^attempt
+    # (+ seeded jitter) between attempts.  backoff 0 = immediate retry.
+    max_retries: int = 1
+    backoff_base_ms: float = 0.0
+    # circuit breaker: breaker_threshold consecutive batch failures trip
+    # a replica's breaker open (no traffic); after breaker_half_open_s a
+    # single probe batch is admitted — success closes the breaker,
+    # failure re-opens it.  half_open 0 = open until a success (legacy).
+    breaker_threshold: int = 3
+    breaker_half_open_s: float = 0.0
+    # executor shutdown: seconds to wait for each worker thread to drain
+    # before declaring it wedged (counted in AnnService.stats()).
+    shutdown_timeout_s: float = 30.0
+    # tiered-storage integrity: per-cluster CRC32 checksums recorded at
+    # spill time, verified on open and on every cold fetch; corrupt
+    # clusters are quarantined and rebuilt from the resident copy.
+    # False skips checksum compute/verify (trusted local experiments).
+    checksum: bool = True
 
     @property
     def cache_enabled(self) -> bool:
@@ -381,6 +423,27 @@ class ServiceSpec:
         if self.relayout_every < 0:
             raise ValueError(f"ServiceSpec.relayout_every must be >= 0, "
                              f"got {self.relayout_every}")
+        if self.deadline_ms < 0:
+            raise ValueError(f"ServiceSpec.deadline_ms must be >= 0, "
+                             f"got {self.deadline_ms}")
+        if self.queue_bound < 0:
+            raise ValueError(f"ServiceSpec.queue_bound must be >= 0, "
+                             f"got {self.queue_bound}")
+        if self.max_retries < 0:
+            raise ValueError(f"ServiceSpec.max_retries must be >= 0, "
+                             f"got {self.max_retries}")
+        if self.backoff_base_ms < 0:
+            raise ValueError(f"ServiceSpec.backoff_base_ms must be >= 0, "
+                             f"got {self.backoff_base_ms}")
+        if self.breaker_threshold < 1:
+            raise ValueError(f"ServiceSpec.breaker_threshold must be >= 1, "
+                             f"got {self.breaker_threshold}")
+        if self.breaker_half_open_s < 0:
+            raise ValueError(f"ServiceSpec.breaker_half_open_s must be "
+                             f">= 0, got {self.breaker_half_open_s}")
+        if self.shutdown_timeout_s <= 0:
+            raise ValueError(f"ServiceSpec.shutdown_timeout_s must be "
+                             f"positive, got {self.shutdown_timeout_s}")
         return self
 
     # -- serialization: the durable deploy artifact ------------------------
@@ -404,11 +467,13 @@ class ServiceSpec:
         load, not boot a silently different fleet."""
         data = dict(data)
         version = data.pop("version", SPEC_VERSION)
-        if version in (1, 2):
+        if version in (1, 2, 3):
             # migration: every newer-schema field defaults to "off", so a
             # clean old file loads as-is; an old-stamped file that
             # nonetheless carries newer keys is lying about its version
-            newer = (_V2_FIELDS | _V3_FIELDS) if version == 1 else _V3_FIELDS
+            newer = {1: _V2_FIELDS | _V3_FIELDS | _V4_FIELDS,
+                     2: _V3_FIELDS | _V4_FIELDS,
+                     3: _V4_FIELDS}[version]
             leaked = sorted(set(data) & newer)
             if leaked:
                 raise ValueError(f"ServiceSpec version {version} file "

@@ -4,7 +4,8 @@ See :mod:`repro.storage.tiered` for the design; the serving wiring is
 ``ServiceSpec(storage="tiered", storage_budget_bytes=...)``.
 """
 
-from repro.storage.tiered import (ResidencyController, TierStats,
-                                  TieredStore)
+from repro.storage.tiered import (CorruptClusterError, ResidencyController,
+                                  TierStats, TieredStore, TieredStoreError)
 
-__all__ = ["ResidencyController", "TierStats", "TieredStore"]
+__all__ = ["ResidencyController", "TierStats", "TieredStore",
+           "TieredStoreError", "CorruptClusterError"]

@@ -25,14 +25,28 @@ Three pieces:
     and demotes the coldest to make room — the budget is never
     exceeded, by construction (slot count = budget // bytes/cluster).
   * the spill format — ``codes.u8`` / ``ids.i32`` raw little-endian
-    arrays plus a ``meta.json`` with shapes and sizes, each written
-    atomically (tmp + fsync + rename), so a crash mid-spill leaves the
-    previous generation readable.
+    arrays plus a ``meta.json`` with shapes, sizes, file byte counts,
+    and **per-cluster CRC checksums**, each written atomically (tmp +
+    fsync + rename), so a crash mid-spill leaves the previous
+    generation readable.
+
+Self-verification (the fail-operational contract): every cold fetch is
+checksum-verified before its bytes can reach a scan, ``open`` validates
+file sizes against ``meta.json`` *before* mmap and then verifies every
+cluster's checksum, and a cluster whose spill bytes rot is either
+**rebuilt** from its RAM-resident copy (demote-time and
+``verify(repair=True)`` scrubs) or **quarantined** and surfaced as
+:class:`CorruptClusterError` naming the cluster id.  Checksums use
+stdlib ``zlib.crc32`` (the container has no CRC32C library; the meta
+records the algorithm so a future swap is detectable).
 
 The disk tier ships uint8 PQ codes — the PR 4 quantized path's ~4x byte
 saving is exactly what makes cold probes affordable; its price (seek +
 bytes/bandwidth) is modeled by ``core.perf_model.cold_probe_seconds`` so
 schedulers and the auto-tuner stay honest about cold-probe cost.
+``TieredStore`` is thread-safe: replicated services share one store
+across executor workers, and residency churn under a reader could
+otherwise tear a slab row mid-copy.
 """
 
 from __future__ import annotations
@@ -41,6 +55,9 @@ import dataclasses
 import json
 import os
 import pathlib
+import threading
+import time
+import zlib
 from typing import Optional, Sequence, Tuple
 
 import numpy as np
@@ -51,17 +68,41 @@ from repro.runtime.cache import OnlineHeatEstimator
 _CODES_FILE = "codes.u8"
 _IDS_FILE = "ids.i32"
 _META_FILE = "meta.json"
+_CHECKSUM_ALGO = "crc32"          # stdlib zlib.crc32 (no crc32c in image)
+
+
+class TieredStoreError(RuntimeError):
+    """Damaged or inconsistent on-disk tier state (fails by name)."""
+
+
+class CorruptClusterError(TieredStoreError):
+    """A cluster's spill bytes fail checksum verification."""
+
+    def __init__(self, cluster: int, detail: str = ""):
+        self.cluster = int(cluster)
+        super().__init__(f"cluster {self.cluster} failed checksum "
+                         f"verification" + (f" ({detail})" if detail else ""))
+
+
+def _crc_rows(arr: np.ndarray) -> list:
+    """Per-cluster CRC over each leading-axis row's raw bytes."""
+    return [zlib.crc32(np.ascontiguousarray(arr[i]).tobytes())
+            for i in range(arr.shape[0])]
 
 
 @dataclasses.dataclass
 class TierStats:
-    """Cumulative fetch-path + residency-churn counters."""
+    """Cumulative fetch-path + residency-churn + integrity counters."""
     hot_hits: int = 0          # probed clusters served from the RAM slab
     cold_fetches: int = 0      # unique cold clusters read from mmap
     cold_requests: int = 0     # probed clusters that were cold (pre-dedup)
     cold_bytes: int = 0        # bytes read from the mmap tier
     promotions: int = 0
     demotions: int = 0
+    crc_failures: int = 0      # checksum mismatches observed (any path)
+    rebuilds: int = 0          # spill regions rewritten from the RAM slab
+    degraded_gathers: int = 0  # gathers that dropped probes (fault/budget)
+    dropped_probes: int = 0    # probe rows dropped across degraded gathers
 
     def as_dict(self) -> dict:
         return dataclasses.asdict(self)
@@ -143,13 +184,21 @@ class TieredStore:
     Residency is slot-based: ``n_slots = budget_bytes //
     bytes_per_cluster`` rows of a preallocated RAM slab, so
     ``resident_bytes <= budget_bytes`` is an invariant, not a goal.
+
+    ``checksum=True`` (default) arms self-verification: per-cluster CRCs
+    are recorded in ``meta.json`` at spill time, every cold fetch and
+    every demotion re-verifies, and ``verify()`` scrubs the whole tier.
+    ``faults`` (a :class:`~repro.runtime.faults.FaultInjector` or
+    ``None``) is the chaos hook — sites ``tier.cold_read`` and
+    ``tier.spill_corrupt``.
     """
 
     def __init__(self, directory, codes: np.ndarray, ids: np.ndarray,
                  sizes: np.ndarray, *, budget_bytes: int,
                  estimator: Optional[OnlineHeatEstimator] = None,
                  promote_margin: float = 1.25,
-                 heat_halflife_batches: float = 64.0):
+                 heat_halflife_batches: float = 64.0,
+                 checksum: bool = True):
         codes = np.ascontiguousarray(codes, np.uint8)
         ids = np.ascontiguousarray(ids, np.int32)
         sizes = np.ascontiguousarray(sizes, np.int32)
@@ -166,7 +215,16 @@ class TieredStore:
         self.nlist, self.cap, self.m = codes.shape
         self.sizes = sizes                      # tiny; always resident
         self.budget_bytes = int(budget_bytes)
+        self.checksum = bool(checksum)
+        self.faults = None                      # FaultInjector | None
         self.stats = TierStats()
+        self.quarantined: set = set()           # cluster ids, unrepairable
+        self._lock = threading.RLock()
+        # EWMA of measured per-cluster cold-read seconds — feeds the
+        # engine's "can the cold fetch make the deadline?" estimate
+        self._cold_s_per_cluster = 2e-4
+        self._codes_crc = _crc_rows(codes)
+        self._ids_crc = _crc_rows(ids)
         self._spill(codes, ids)
         self._codes_mm = np.memmap(self.dir / _CODES_FILE, np.uint8,
                                    mode="r", shape=codes.shape)
@@ -212,19 +270,71 @@ class TieredStore:
                                  **kwargs)
 
     @classmethod
-    def open(cls, directory, *, budget_bytes: int,
+    def open(cls, directory, *, budget_bytes: int, checksum: bool = True,
              **kwargs) -> "TieredStore":
-        """Re-open a previously-spilled directory (restart path)."""
+        """Re-open a previously-spilled directory (restart path).
+
+        Validates the on-disk state *before* anything is mmap'd: a
+        missing ``meta.json``, a truncated/short payload file, or a
+        meta/shape mismatch raises :class:`TieredStoreError` naming the
+        file; with ``checksum=True`` every cluster is then CRC-verified
+        against the recorded checksums and the first flipped-byte
+        cluster raises :class:`CorruptClusterError` with its id.
+        """
         directory = pathlib.Path(directory)
-        meta = json.loads((directory / _META_FILE).read_text())
-        shape = tuple(meta["codes_shape"])
+        meta_path = directory / _META_FILE
+        if not meta_path.exists():
+            raise TieredStoreError(f"{meta_path} is missing — not a "
+                                   f"spilled tier directory (or the "
+                                   f"spill never completed)")
+        try:
+            meta = json.loads(meta_path.read_text())
+        except ValueError as e:
+            raise TieredStoreError(f"{meta_path} is not valid JSON: {e}") \
+                from e
+        for key in ("codes_shape", "sizes"):
+            if key not in meta:
+                raise TieredStoreError(f"{meta_path} is missing required "
+                                       f"key {key!r}")
+        shape = tuple(int(s) for s in meta["codes_shape"])
+        if len(shape) != 3:
+            raise TieredStoreError(f"{meta_path}: codes_shape must have "
+                                   f"3 dims, got {list(shape)}")
+        sizes = np.asarray(meta["sizes"], np.int32)
+        if sizes.shape != shape[:1]:
+            raise TieredStoreError(f"{meta_path}: sizes has "
+                                   f"{sizes.shape[0]} entries but "
+                                   f"codes_shape names {shape[0]} clusters")
+        expected = {_CODES_FILE: int(np.prod(shape)),
+                    _IDS_FILE: int(np.prod(shape[:2])) * 4}
+        for fname, want in expected.items():
+            fpath = directory / fname
+            if not fpath.exists():
+                raise TieredStoreError(f"{fpath} is missing (meta.json "
+                                       f"expects {want} bytes)")
+            got = fpath.stat().st_size
+            if got != want:
+                kind = "truncated" if got < want else "oversized"
+                raise TieredStoreError(f"{fpath} is {kind}: {got} bytes "
+                                       f"on disk, meta.json expects "
+                                       f"{want}")
         codes = np.memmap(directory / _CODES_FILE, np.uint8, mode="r",
                           shape=shape)
         ids = np.memmap(directory / _IDS_FILE, np.int32, mode="r",
                         shape=shape[:2])
+        if checksum and "codes_crc" in meta:
+            codes_crc = meta["codes_crc"]
+            ids_crc = meta.get("ids_crc", [])
+            for c in range(shape[0]):
+                if zlib.crc32(codes[c].tobytes()) != codes_crc[c]:
+                    raise CorruptClusterError(c, f"codes payload in "
+                                              f"{directory / _CODES_FILE}")
+                if ids_crc and zlib.crc32(ids[c].tobytes()) != ids_crc[c]:
+                    raise CorruptClusterError(c, f"ids payload in "
+                                              f"{directory / _IDS_FILE}")
         return cls(directory, np.asarray(codes), np.asarray(ids),
-                   np.asarray(meta["sizes"], np.int32),
-                   budget_bytes=budget_bytes, **kwargs)
+                   sizes, budget_bytes=budget_bytes, checksum=checksum,
+                   **kwargs)
 
     def _spill(self, codes: np.ndarray, ids: np.ndarray) -> None:
         """Write the full cold tier atomically (tmp + fsync + rename per
@@ -237,6 +347,9 @@ class TieredStore:
         atomic_write_text(self.dir / _META_FILE, json.dumps({
             "codes_shape": list(codes.shape),
             "codes_dtype": "uint8", "ids_dtype": "int32",
+            "codes_bytes": codes.nbytes, "ids_bytes": ids.nbytes,
+            "checksum_algo": _CHECKSUM_ALGO,
+            "codes_crc": self._codes_crc, "ids_crc": self._ids_crc,
             "sizes": [int(s) for s in self.sizes]}, indent=1))
 
     # -- accounting --------------------------------------------------------
@@ -259,13 +372,99 @@ class TieredStore:
         """(nlist,) bool — True where the cluster is RAM-resident."""
         return self._slot_of >= 0
 
+    def estimate_cold_seconds(self, n_cold: int) -> float:
+        """Predicted wall seconds to fetch ``n_cold`` unique cold
+        clusters, from the online EWMA of measured cold-read cost — the
+        engine's input to the deadline/degrade decision."""
+        return float(n_cold) * self._cold_s_per_cluster
+
     def serving_info(self) -> dict:
         return dict(self.stats.as_dict(),
                     hot_rate=round(self.stats.hot_rate, 4),
                     resident_clusters=int((self._slot_of >= 0).sum()),
                     resident_bytes=self.resident_bytes,
                     budget_bytes=self.budget_bytes,
-                    total_bytes=self.total_bytes, n_slots=self.n_slots)
+                    total_bytes=self.total_bytes, n_slots=self.n_slots,
+                    checksum=self.checksum,
+                    quarantined=sorted(self.quarantined))
+
+    # -- integrity ---------------------------------------------------------
+    def _row_offsets(self, c: int) -> Tuple[int, int, int, int]:
+        """(codes_off, codes_len, ids_off, ids_len) byte ranges of one
+        cluster's spill regions."""
+        codes_len = self.cap * self.m
+        ids_len = self.cap * 4
+        return c * codes_len, codes_len, c * ids_len, ids_len
+
+    def _spill_row_ok(self, c: int) -> bool:
+        """CRC-check cluster ``c``'s on-disk bytes against the meta."""
+        return (zlib.crc32(self._codes_mm[c].tobytes())
+                == self._codes_crc[c]
+                and zlib.crc32(self._ids_mm[c].tobytes())
+                == self._ids_crc[c])
+
+    def _rewrite_from_slab(self, c: int) -> None:
+        """Rebuild cluster ``c``'s spill regions from its RAM-resident
+        copy (in-place region write — the data being replaced is already
+        corrupt, so non-atomicity cannot make it worse)."""
+        slot = int(self._slot_of[c])
+        if slot < 0:
+            raise CorruptClusterError(c, "no resident copy to rebuild from")
+        co, cl, io_, il = self._row_offsets(c)
+        for fname, off, payload in (
+                (_CODES_FILE, co, self._hot_codes[slot].tobytes()),
+                (_IDS_FILE, io_, self._hot_ids[slot].tobytes())):
+            with open(self.dir / fname, "r+b") as f:
+                f.seek(off)
+                f.write(payload)
+                f.flush()
+                os.fsync(f.fileno())
+        self.stats.rebuilds += 1
+        self.quarantined.discard(int(c))
+
+    def corrupt_spill(self, c: int, nbytes: int = 8) -> None:
+        """Flip ``nbytes`` of cluster ``c``'s on-disk codes region —
+        the ``tier.spill_corrupt`` chaos effect (also used directly by
+        the damage tests).  Deterministic: XORs with 0xFF."""
+        co, cl, _, _ = self._row_offsets(int(c))
+        n = min(int(nbytes), cl)
+        with open(self.dir / _CODES_FILE, "r+b") as f:
+            f.seek(co)
+            raw = f.read(n)
+            f.seek(co)
+            f.write(bytes(b ^ 0xFF for b in raw))
+            f.flush()
+            os.fsync(f.fileno())
+
+    def verify(self, *, repair: bool = True, strict: bool = False) -> dict:
+        """Scrub every cluster's spill bytes against the recorded CRCs.
+
+        Corrupt clusters with a RAM-resident copy are rebuilt in place
+        when ``repair=True``; corrupt cold clusters are quarantined
+        (degraded gathers drop them, strict gathers raise).  Returns
+        ``{checked, corrupt, rebuilt, quarantined}``; with
+        ``strict=True`` an unrepairable cluster raises
+        :class:`CorruptClusterError` instead.
+        """
+        with self._lock:
+            corrupt, rebuilt, quarantined = [], [], []
+            for c in range(self.nlist):
+                if self._spill_row_ok(c):
+                    self.quarantined.discard(c)
+                    continue
+                corrupt.append(c)
+                self.stats.crc_failures += 1
+                if repair and self._slot_of[c] >= 0:
+                    self._rewrite_from_slab(c)
+                    rebuilt.append(c)
+                else:
+                    self.quarantined.add(c)
+                    quarantined.append(c)
+                    if strict:
+                        raise CorruptClusterError(c, "no resident copy to "
+                                                  "rebuild from")
+            return {"checked": self.nlist, "corrupt": corrupt,
+                    "rebuilt": rebuilt, "quarantined": quarantined}
 
     # -- residency ---------------------------------------------------------
     def _load_slot(self, slot: int, c: int) -> None:
@@ -275,27 +474,39 @@ class TieredStore:
         self._cluster_of[slot] = c
 
     def promote(self, c: int, slot: Optional[int] = None) -> bool:
-        c = int(c)
-        if self._slot_of[c] >= 0 or self.n_slots == 0:
-            return False
-        if slot is None:
-            free = np.nonzero(self._cluster_of[:self.n_slots] < 0)[0]
-            if free.size == 0:
+        with self._lock:
+            c = int(c)
+            if self._slot_of[c] >= 0 or self.n_slots == 0:
                 return False
-            slot = int(free[0])
-        self._load_slot(slot, c)
-        self.stats.promotions += 1
-        return True
+            if c in self.quarantined:
+                return False       # never promote known-corrupt bytes
+            if slot is None:
+                free = np.nonzero(self._cluster_of[:self.n_slots] < 0)[0]
+                if free.size == 0:
+                    return False
+                slot = int(free[0])
+            self._load_slot(slot, c)
+            self.stats.promotions += 1
+            return True
 
     def demote(self, c: int) -> bool:
-        c = int(c)
-        slot = int(self._slot_of[c])
-        if slot < 0:
-            return False
-        self._slot_of[c] = -1
-        self._cluster_of[slot] = -1
-        self.stats.demotions += 1
-        return True
+        """Drop ``c`` from the RAM slab.  With checksums armed this is
+        the last moment a good copy provably exists, so the spill bytes
+        are verified first and rebuilt from the slab on mismatch —
+        corruption-while-resident self-heals instead of surfacing later
+        as a cold-read quarantine."""
+        with self._lock:
+            c = int(c)
+            slot = int(self._slot_of[c])
+            if slot < 0:
+                return False
+            if self.checksum and not self._spill_row_ok(c):
+                self.stats.crc_failures += 1
+                self._rewrite_from_slab(c)
+            self._slot_of[c] = -1
+            self._cluster_of[slot] = -1
+            self.stats.demotions += 1
+            return True
 
     def observe(self, probe_lists: np.ndarray) -> None:
         """Fold one served batch's CL output into the heat estimate and
@@ -304,24 +515,32 @@ class TieredStore:
         probe_lists = np.asarray(probe_lists)
         if probe_lists.size == 0:
             return
-        self.controller.observe(probe_lists)
-        promote, demote = self.controller.plan(self.resident_mask,
-                                               self.n_slots)
-        for v in demote:
-            self.demote(v)
-        for c in promote:
-            self.promote(c)
+        with self._lock:
+            self.controller.observe(probe_lists)
+            promote, demote = self.controller.plan(self.resident_mask,
+                                                   self.n_slots)
+            for v in demote:
+                self.demote(v)
+            for c in promote:
+                self.promote(c)
 
     def peek(self, c: int) -> Tuple[np.ndarray, np.ndarray]:
         """Residency-aware read of one cluster's padded (codes, ids)
         WITHOUT touching stats or residency — the offline materialize
         path (building device shard tensors) must not count as serving
-        traffic or perturb heat-driven promotion."""
-        c = int(c)
-        slot = int(self._slot_of[c])
-        if slot >= 0:
-            return self._hot_codes[slot], self._hot_ids[slot]
-        return np.asarray(self._codes_mm[c]), np.asarray(self._ids_mm[c])
+        traffic or perturb heat-driven promotion.  Cold reads are still
+        checksum-verified: device shard tensors built from rotten bytes
+        would serve wrong results for the cluster's whole lifetime."""
+        with self._lock:
+            c = int(c)
+            slot = int(self._slot_of[c])
+            if slot >= 0:
+                return self._hot_codes[slot], self._hot_ids[slot]
+            if self.checksum and not self._spill_row_ok(c):
+                self.stats.crc_failures += 1
+                self.quarantined.add(c)
+                raise CorruptClusterError(c, "detected during peek")
+            return np.asarray(self._codes_mm[c]), np.asarray(self._ids_mm[c])
 
     # -- fetch path --------------------------------------------------------
     def gather(self, cluster_ids: Sequence[int]
@@ -332,26 +551,128 @@ class TieredStore:
         Hot rows come from the RAM slab; cold rows are deduplicated and
         read from the mmap tier in one fancy-indexed read per call — the
         per-flush batching that amortizes seek cost across a batch's
-        probes.  Output bytes are independent of residency."""
+        probes.  Output bytes are independent of residency.  Strict:
+        cold-read failures and checksum mismatches raise (``IOError`` /
+        :class:`CorruptClusterError`); the degraded path is
+        :meth:`gather_degraded`."""
+        codes, ids, sizes, _ = self._gather(cluster_ids, resident_only=False,
+                                            degrade=False)
+        return codes, ids, sizes
+
+    def gather_degraded(self, cluster_ids: Sequence[int], *,
+                        resident_only: bool = False
+                        ) -> Tuple[np.ndarray, np.ndarray, np.ndarray,
+                                   np.ndarray]:
+        """Fail-operational fetch: like :meth:`gather` plus a (T,) bool
+        ``dropped`` mask.  Cold probes that cannot be served — tier read
+        errors, quarantined/corrupt clusters, or *all* cold probes when
+        ``resident_only=True`` (deadline pressure) — come back with
+        ``sizes == 0`` and zeroed payload instead of raising, so the
+        scan's n_valid masking yields a result exact over what was
+        scanned."""
+        return self._gather(cluster_ids, resident_only=resident_only,
+                            degrade=True)
+
+    def _gather(self, cluster_ids: Sequence[int], *, resident_only: bool,
+                degrade: bool) -> Tuple[np.ndarray, np.ndarray, np.ndarray,
+                                        np.ndarray]:
         cids = np.asarray(cluster_ids, np.int64).reshape(-1)
         t = cids.shape[0]
-        out_codes = np.empty((t, self.cap, self.m), np.uint8)
-        out_ids = np.empty((t, self.cap), np.int32)
-        slots = self._slot_of[cids]
-        hot = slots >= 0
-        n_hot = int(hot.sum())
-        if n_hot:
-            out_codes[hot] = self._hot_codes[slots[hot]]
-            out_ids[hot] = self._hot_ids[slots[hot]]
-        self.stats.hot_hits += n_hot
-        cold_rows = np.nonzero(~hot)[0]
-        if cold_rows.size:
-            uniq, inv = np.unique(cids[cold_rows], return_inverse=True)
-            blk_codes = np.asarray(self._codes_mm[uniq])   # one batched read
-            blk_ids = np.asarray(self._ids_mm[uniq])
-            out_codes[cold_rows] = blk_codes[inv]
-            out_ids[cold_rows] = blk_ids[inv]
-            self.stats.cold_fetches += int(uniq.size)
-            self.stats.cold_requests += int(cold_rows.size)
-            self.stats.cold_bytes += int(uniq.size) * self.bytes_per_cluster
-        return out_codes, out_ids, self.sizes[cids]
+        with self._lock:
+            if self.faults is not None:
+                rule = self.faults.fire("tier.spill_corrupt")
+                if rule is not None:
+                    self._fire_spill_corrupt(rule)
+            out_codes = np.empty((t, self.cap, self.m), np.uint8)
+            out_ids = np.empty((t, self.cap), np.int32)
+            dropped = np.zeros(t, bool)
+            slots = self._slot_of[cids]
+            hot = slots >= 0
+            n_hot = int(hot.sum())
+            if n_hot:
+                out_codes[hot] = self._hot_codes[slots[hot]]
+                out_ids[hot] = self._hot_ids[slots[hot]]
+            self.stats.hot_hits += n_hot
+            cold_rows = np.nonzero(~hot)[0]
+            if cold_rows.size:
+                dropped = self._fetch_cold(cids, cold_rows, out_codes,
+                                           out_ids, dropped, resident_only,
+                                           degrade)
+            sizes = self.sizes[cids].copy()
+            if dropped.any():
+                n_drop = int(dropped.sum())
+                sizes[dropped] = 0          # n_valid masking: contribute 0
+                out_codes[dropped] = 0
+                out_ids[dropped] = -1
+                self.stats.degraded_gathers += 1
+                self.stats.dropped_probes += n_drop
+            return out_codes, out_ids, sizes, dropped
+
+    def _fetch_cold(self, cids, cold_rows, out_codes, out_ids, dropped,
+                    resident_only: bool, degrade: bool) -> np.ndarray:
+        if resident_only:
+            dropped[cold_rows] = True
+            return dropped
+        if self.faults is not None \
+                and self.faults.fire("tier.cold_read") is not None:
+            if not degrade:
+                raise IOError("injected fault at tier.cold_read")
+            dropped[cold_rows] = True       # disk said no; serve resident
+            return dropped
+        uniq, inv = np.unique(cids[cold_rows], return_inverse=True)
+        bad = np.zeros(uniq.size, bool)
+        t0 = time.perf_counter()
+        blk_codes = np.asarray(self._codes_mm[uniq])   # one batched read
+        blk_ids = np.asarray(self._ids_mm[uniq])
+        elapsed = time.perf_counter() - t0
+        if uniq.size:                       # online cold-cost EWMA
+            per = elapsed / uniq.size
+            self._cold_s_per_cluster += 0.3 * (per - self._cold_s_per_cluster)
+        if self.checksum:
+            for j, c in enumerate(uniq):
+                c = int(c)
+                if c in self.quarantined:
+                    if not degrade:
+                        raise CorruptClusterError(c, "cluster is quarantined")
+                    bad[j] = True
+                    continue
+                if (zlib.crc32(blk_codes[j].tobytes()) == self._codes_crc[c]
+                        and zlib.crc32(blk_ids[j].tobytes())
+                        == self._ids_crc[c]):
+                    continue
+                # one re-read: a torn/transient read heals, rotten spill
+                # bytes do not
+                blk_codes[j] = self._codes_mm[c]
+                blk_ids[j] = self._ids_mm[c]
+                if (zlib.crc32(blk_codes[j].tobytes()) == self._codes_crc[c]
+                        and zlib.crc32(blk_ids[j].tobytes())
+                        == self._ids_crc[c]):
+                    continue
+                self.stats.crc_failures += 1
+                self.quarantined.add(c)
+                bad[j] = True
+                if not degrade:
+                    raise CorruptClusterError(c, "detected on cold fetch")
+        ok = ~bad[inv]
+        tgt = cold_rows[ok]
+        out_codes[tgt] = blk_codes[inv[ok]]
+        out_ids[tgt] = blk_ids[inv[ok]]
+        dropped[cold_rows[~ok]] = True
+        n_uniq_ok = int((~bad).sum())
+        self.stats.cold_fetches += n_uniq_ok
+        self.stats.cold_requests += int(cold_rows.size)
+        self.stats.cold_bytes += n_uniq_ok * self.bytes_per_cluster
+        return dropped
+
+    def _fire_spill_corrupt(self, rule) -> None:
+        """Apply a ``tier.spill_corrupt`` firing: rot the configured
+        cluster's spill bytes (or the first resident cluster, so the
+        demote-time rebuild path has a good copy to heal from)."""
+        if rule.cluster is not None:
+            c = int(rule.cluster)
+        else:
+            resident = np.nonzero(self._slot_of >= 0)[0]
+            if resident.size == 0:
+                return
+            c = int(resident[0])
+        self.corrupt_spill(c)

@@ -1,0 +1,279 @@
+"""Fail-operational serving tests.
+
+Groups:
+  * fault injector — site validation, seed-pure decision sequences,
+    replica filters / after / count caps, zero-rule near-no-op;
+  * circuit breaker — closed -> open -> half-open probe -> closed/
+    re-open, on a fake clock;
+  * supervisor resume — failures restart from the latest *persisted*
+    checkpoint, not the failure step (regression: checkpoint_steps was
+    silently dropped);
+  * degraded search — a tiny deadline forces resident-only scans and
+    the degraded/deadline_missed flags surface in future.timing();
+  * load shedding — a bounded queue rejects with ServiceOverloaded
+    instead of queueing unboundedly behind a straggler;
+  * maintenance death — a killed maintenance thread surfaces as an
+    error on the next mutation API call, never silently;
+  * chaos e2e — a reduced run of the canonical experiment
+    (repro.service.chaos) holds the availability/exactness floors.
+"""
+
+import numpy as np
+import pytest
+
+from repro.runtime.fault_tolerance import (HeartbeatRegistry, ReplicaHealth,
+                                           RunSupervisor)
+from repro.runtime.faults import (FaultInjector, FaultPlan, FaultRule,
+                                  InjectedFault, SITES)
+from repro.service import AnnService, ServiceOverloaded, ServiceSpec
+
+NPROBE = 8
+
+
+def _build(small_index, injector=None, **spec_kwargs):
+    defaults = dict(engine="local", nprobe=NPROBE, k=10,
+                    buckets=(1, 2, 4), max_wait_s=1e-3)
+    defaults.update(spec_kwargs)
+    return AnnService.build(ServiceSpec(**defaults), index=small_index,
+                            fault_injector=injector)
+
+
+# -- fault injector ----------------------------------------------------------
+
+def test_fault_rule_validation():
+    with pytest.raises(ValueError, match="unknown fault site"):
+        FaultRule("engine.btach")
+    with pytest.raises(ValueError, match="rate"):
+        FaultRule("engine.batch", rate=1.5)
+    with pytest.raises(ValueError, match="count"):
+        FaultRule("engine.batch", count=-1)
+    with pytest.raises(ValueError, match="after"):
+        FaultRule("engine.batch", after=-2)
+    with pytest.raises(ValueError, match="delay_s"):
+        FaultRule("engine.straggler", delay_s=-0.1)
+    for site in SITES:                   # every named site constructs
+        FaultRule(site)
+
+
+def test_injector_decision_sequence_is_seed_pure():
+    plan = FaultPlan(seed=7, rules=(FaultRule("engine.batch", rate=0.3),))
+    a = FaultInjector(plan)
+    b = FaultInjector(plan)
+    sa = [a.fire("engine.batch") is not None for _ in range(200)]
+    sb = [b.fire("engine.batch") is not None for _ in range(200)]
+    assert sa == sb                      # same plan -> same sequence
+    assert any(sa) and not all(sa)
+    other = FaultInjector(FaultPlan(seed=8, rules=plan.rules))
+    so = [other.fire("engine.batch") is not None for _ in range(200)]
+    assert sa != so                      # seed actually matters
+    st = a.stats()["engine.batch"]
+    assert st["consultations"] == 200 and st["fires"] == sum(sa)
+
+
+def test_injector_filters_after_count_replicas():
+    plan = FaultPlan(seed=0, rules=(
+        FaultRule("engine.batch", rate=1.0, count=2, after=3,
+                  replicas=(1,)),))
+    inj = FaultInjector(plan)
+    # wrong replica: never consults, never fires
+    assert all(inj.fire("engine.batch", replica=0) is None
+               for _ in range(10))
+    # right replica: first `after` consultations are clean, then
+    # exactly `count` firings, then silence
+    fires = [inj.fire("engine.batch", replica=1) is not None
+             for _ in range(10)]
+    assert fires == [False] * 3 + [True] * 2 + [False] * 5
+    # unruled site: a single dict probe, no state
+    assert inj.fire("tier.cold_read") is None
+    assert "tier.cold_read" not in inj.stats()
+
+
+def test_disarmed_service_reports_no_faults(small_index, small_corpus):
+    svc = _build(small_index, replicas=1)
+    svc.warmup()
+    q = np.asarray(small_corpus.queries[:4], np.float32)
+    svc.search(q)
+    st = svc.stats()
+    assert "faults" not in st
+    assert st["aggregate"]["degraded"] == 0
+    svc.shutdown()
+
+
+# -- circuit breaker ---------------------------------------------------------
+
+def test_breaker_full_state_machine():
+    t = [0.0]
+    h = ReplicaHealth(2, max_consecutive=2, half_open_after_s=10.0,
+                      clock=lambda: t[0])
+    assert h.state(0) == "closed" and h.allow(0)
+    h.record_failure(0)
+    assert h.state(0) == "closed"        # one short of the threshold
+    h.record_failure(0)
+    assert h.state(0) == "open" and not h.allow(0)
+    assert h.open_count() == 1 and h.stats()["breaker"] == ["open",
+                                                            "closed"]
+    t[0] = 9.9
+    assert not h.allow(0)                # window not yet reached
+    t[0] = 10.0
+    assert h.state(0) == "half_open"
+    assert h.allow(0)                    # claims the single probe slot
+    assert not h.allow(0)                # second router loses the race
+    h.record_failure(0)                  # probe failed: re-open + re-arm
+    assert h.state(0) == "open"
+    t[0] = 15.0
+    assert not h.allow(0)                # clock restarted at 10.0
+    t[0] = 20.0
+    assert h.allow(0)
+    h.record_success(0)                  # probe succeeded: closed again
+    assert h.state(0) == "closed" and h.allow(0)
+    assert h.open_count() == 0
+
+
+def test_breaker_legacy_never_times_out():
+    h = ReplicaHealth(1, max_consecutive=1)      # half_open_after_s=0
+    h.record_failure(0)
+    assert h.state(0) == "open" and not h.allow(0)
+    h.record_success(0)                  # only success reopens
+    assert h.allow(0)
+
+
+# -- supervisor checkpoint resume --------------------------------------------
+
+def test_supervisor_resumes_from_latest_checkpoint():
+    """Regression: RunSupervisor used to drop checkpoint_steps on the
+    floor and resume from the failure step — a step that was never
+    persisted."""
+    sup = RunSupervisor(data_axis=4, model_axis=4,
+                        checkpoint_steps=(30, 10, 20))
+    assert sup.checkpoint_steps == (10, 20, 30)    # stored, sorted
+    assert sup._resume_step(27) == 20
+    assert sup._resume_step(30) == 30
+    assert sup._resume_step(5) == 0      # failure before any checkpoint
+    # no schedule: legacy callers trust the failure step
+    assert RunSupervisor(4, 4)._resume_step(27) == 27
+
+    reg = HeartbeatRegistry(16, timeout_s=1e9)
+    calls = []
+
+    def run_fn(mesh_shape, start_step):
+        calls.append(start_step)
+        if len(calls) == 1:
+            return "failed", 27
+        return "done", 100
+
+    assert sup.supervise(run_fn, reg) == 100
+    assert calls == [0, 20]              # resumed from the checkpoint
+
+
+# -- deadline-bounded degraded search ----------------------------------------
+
+def test_deadline_degrades_and_flags(small_index, small_corpus, tmp_path):
+    """An (effectively) zero deadline over a mostly-cold tier forces
+    resident-only scans: requests complete, are flagged degraded in
+    timing(), and the service counters agree."""
+    svc = _build(small_index, replicas=1, storage="tiered",
+                 storage_dir=str(tmp_path), storage_budget_bytes=1 << 16,
+                 deadline_ms=1e-3)
+    svc.warmup()
+    q = np.asarray(small_corpus.queries[:8], np.float32)
+    futs = [svc.submit_async(q[i]) for i in range(8)]
+    degraded = 0
+    for fut in futs:
+        fut.result(timeout=30.0)
+        t = fut.timing()
+        assert {"degraded", "deadline_missed"} <= set(t)
+        degraded += bool(t["degraded"])
+    assert degraded > 0
+    st = svc.stats()["aggregate"]
+    assert st["degraded"] == degraded
+    svc.shutdown()
+
+
+def test_no_deadline_stays_exact(small_index, small_corpus, tmp_path):
+    """deadline_ms=0 (off) over the same tier: nothing is degraded and
+    tiered results equal the all-resident service's."""
+    plain = _build(small_index, replicas=1)
+    plain.warmup()
+    q = np.asarray(small_corpus.queries[:8], np.float32)
+    _, ref_ids = plain.search(q)
+    plain.shutdown()
+    svc = _build(small_index, replicas=1, storage="tiered",
+                 storage_dir=str(tmp_path), storage_budget_bytes=1 << 16)
+    svc.warmup()
+    futs = [svc.submit_async(q[i]) for i in range(8)]
+    for i, fut in enumerate(futs):
+        _, ids = fut.result(timeout=30.0)
+        np.testing.assert_array_equal(ids, np.asarray(ref_ids)[i])
+        assert not fut.timing()["degraded"]
+    assert svc.stats()["aggregate"]["degraded"] == 0
+    svc.shutdown()
+
+
+# -- load shedding -----------------------------------------------------------
+
+def test_bounded_queue_sheds_behind_straggler(small_index, small_corpus):
+    """With a straggler slowing the only replica and queue_bound set,
+    a burst is partially rejected with ServiceOverloaded (fast feedback)
+    instead of queueing unboundedly; accepted requests still finish."""
+    inj = FaultInjector(FaultPlan(seed=0, rules=(
+        FaultRule("engine.straggler", rate=1.0, delay_s=0.05),)))
+    svc = _build(small_index, replicas=1, queue_bound=2, injector=inj)
+    svc.warmup()
+    q = np.asarray(small_corpus.queries, np.float32)
+    futs, shed = [], 0
+    for i in range(24):
+        try:
+            futs.append(svc.submit_async(q[i % len(q)]))
+        except ServiceOverloaded:
+            shed += 1
+    assert shed > 0 and futs             # some rejected, some accepted
+    for fut in futs:
+        fut.result(timeout=60.0)
+    st = svc.stats()
+    assert st["aggregate"]["shed"] == shed
+    assert st["faults"]["engine.straggler"]["fires"] > 0
+    svc.shutdown()
+
+
+# -- maintenance thread death ------------------------------------------------
+
+def test_maintenance_death_surfaces_on_next_call(small_index, small_corpus):
+    inj = FaultInjector(FaultPlan(seed=0, rules=(
+        FaultRule("maintenance.death", count=1),)))
+    spec = ServiceSpec(engine="local", nprobe=NPROBE, k=10,
+                       buckets=(1, 2, 4), max_wait_s=1e-3, mutable=True)
+    svc = AnnService.build(spec,
+                           points=np.asarray(small_corpus.points,
+                                             np.float32),
+                           fault_injector=inj)
+    svc.warmup()
+    pts = np.asarray(small_corpus.points[:4], np.float32)
+    with pytest.raises(RuntimeError, match="maintenance failed") as ei:
+        svc.run_maintenance(force=True, wait=True)
+    assert isinstance(ei.value.__cause__, InjectedFault)
+    assert ei.value.__cause__.site == "maintenance.death"
+    # the fault is consumed (count=1): the next cycle succeeds and the
+    # mutation API works again
+    svc.upsert(np.arange(4) + 10_000, pts)
+    out = svc.run_maintenance(force=True, wait=True)
+    assert out["ran"]
+    svc.shutdown()
+
+
+# -- chaos end to end --------------------------------------------------------
+
+def test_chaos_e2e_floors():
+    """Reduced run of the canonical experiment: availability floor,
+    zero corrupt (non-degraded bit-exact vs fault-free), degraded
+    flagged, the one corrupted spill cluster healed, and the injector's
+    ledger consistent with the plan."""
+    from repro.service.chaos import run_chaos
+    rep = run_chaos(seed=0, n_queries=120)
+    assert rep["availability"] >= 0.95
+    assert rep["corrupt_results"] == 0
+    assert rep["answered"] + rep["failed"] == rep["submitted"] - rep["shed"]
+    fs = rep["fault_stats"]
+    assert fs["engine.batch"]["fires"] >= 1
+    assert fs["tier.spill_corrupt"]["fires"] == 1
+    assert rep["rebuilds"] > 0 or rep["verify"]["rebuilt"]
+    assert rep["degraded"] + rep["deadline_missed"] >= 0  # keys present

@@ -17,7 +17,7 @@ except ModuleNotFoundError:      # degrade to a fixed-example sweep
 
 from repro.core.autotune import TuneSpace, candidate_spec
 from repro.service.spec import (SPEC_VERSION, IndexSpec, ServiceSpec,
-                               _V2_FIELDS, _V3_FIELDS)
+                               _V2_FIELDS, _V3_FIELDS, _V4_FIELDS)
 
 # a spread of valid specs covering both schema eras: v1-style fields
 # only, each engine tier, cache/heat, routing, autoscaling, pacing, and
@@ -37,6 +37,11 @@ VALID_SPECS = [
     ServiceSpec(mutable=True, mutation_size_band=(4, 64),
                 mutation_maintenance_interval=8,
                 mutation_compact_threshold=0.25),
+    # the v4 fail-operational knobs
+    ServiceSpec(deadline_ms=25.0, queue_bound=64, max_retries=3,
+                backoff_base_ms=2.0, breaker_threshold=5,
+                breaker_half_open_s=0.5, shutdown_timeout_s=10.0,
+                checksum=False),
 ]
 
 # (field, bad value) edits that must make from_dict raise; each is a
@@ -57,6 +62,10 @@ BAD_EDITS = [
     ("mutation_size_band", [5, 2]),      # inverted band
     ("router_halflife_batches", 0.0),
     ("autoscale_queue_low", 9.0),        # low >= high
+    ("deadline_ms", -1.0), ("queue_bound", -2),
+    ("max_retries", -1), ("backoff_base_ms", -0.5),
+    ("breaker_threshold", 0), ("breaker_half_open_s", -1.0),
+    ("shutdown_timeout_s", 0.0),
 ]
 
 
@@ -110,13 +119,19 @@ def test_unknown_keys_and_versions_rejected():
             ServiceSpec.from_dict(d)
     # a clean v1 file (no newer-schema keys) still loads ...
     v1 = {k: v for k, v in base.items()
-          if k not in (_V2_FIELDS | _V3_FIELDS)}
+          if k not in (_V2_FIELDS | _V3_FIELDS | _V4_FIELDS)}
     v1["version"] = 1
     assert ServiceSpec.from_dict(v1) == ServiceSpec()
-    # ... but a v1-stamped file smuggling newer keys is lying
-    lying = dict(base, version=1)
-    with pytest.raises(ValueError, match="newer-schema keys"):
-        ServiceSpec.from_dict(lying)
+    # ... but an old-stamped file smuggling newer keys is lying — at
+    # every prior schema era (v3-stamped + v4 keys included)
+    for stamp in (1, 2, 3):
+        lying = dict(base, version=stamp)
+        with pytest.raises(ValueError, match="newer-schema keys"):
+            ServiceSpec.from_dict(lying)
+    # a clean v3 file (v4 keys absent) migrates; new knobs default off
+    v3 = {k: v for k, v in base.items() if k not in _V4_FIELDS}
+    v3["version"] = 3
+    assert ServiceSpec.from_dict(v3) == ServiceSpec()
     with pytest.raises(ValueError, match="mapping"):
         ServiceSpec.from_dict(dict(base, index=[1, 2]))
 

@@ -8,8 +8,11 @@ Groups:
     results);
   * budget — resident bytes never exceed the configured budget under a
     Zipf-skewed churn stream;
-  * spec schema v3 — round-trip, v1/v2 migration, and by-name rejection
-    of old-stamped files carrying newer keys;
+  * damage — TieredStore.open against a vandalized spill dir (truncated
+    payloads, missing/mismatched meta.json, flipped bytes): every case
+    fails loudly by name, never serves silently-wrong bytes;
+  * spec schema — round-trip at the current version, v1-v3 migration,
+    and by-name rejection of old-stamped files carrying newer keys;
   * perf model — cold probes are priced strictly above hot probes.
 """
 
@@ -26,8 +29,8 @@ from repro.core.perf_model import (DiskProfile, IndexParams, NVME_PROFILE,
                                    cold_probe_seconds, serving_batch_latency)
 from repro.core.search import cluster_locate
 from repro.runtime.serving import LocalEngine
-from repro.service.spec import SPEC_VERSION, ServiceSpec
-from repro.storage import TieredStore
+from repro.service.spec import SPEC_VERSION, ServiceSpec, _V4_FIELDS
+from repro.storage import CorruptClusterError, TieredStore, TieredStoreError
 
 
 # -- mmap round-trip ---------------------------------------------------------
@@ -156,6 +159,109 @@ def test_heat_estimator_drives_promotion(tmp_path, small_index):
     assert bool(tier.resident_mask[3]) and bool(tier.resident_mask[5])
 
 
+# -- damage: TieredStore.open must fail loudly, never serve bad bytes -------
+
+def _spilled_dir(index, tmp_path):
+    """Write a full spill dir (budget=1 keeps every cluster cold) and
+    return its path; the TieredStore object itself is discarded."""
+    TieredStore.from_index(index, tmp_path, budget_bytes=1)
+    return tmp_path
+
+
+def test_open_rejects_truncated_codes(small_index, tmp_path):
+    d = _spilled_dir(small_index, tmp_path)
+    f = d / "codes.u8"
+    f.write_bytes(f.read_bytes()[:-7])
+    with pytest.raises(TieredStoreError, match="truncated"):
+        TieredStore.open(d, budget_bytes=1)
+
+
+def test_open_rejects_truncated_ids(small_index, tmp_path):
+    d = _spilled_dir(small_index, tmp_path)
+    f = d / "ids.i32"
+    f.write_bytes(f.read_bytes()[:-4])
+    with pytest.raises(TieredStoreError, match="truncated"):
+        TieredStore.open(d, budget_bytes=1)
+
+
+def test_open_rejects_missing_meta(small_index, tmp_path):
+    d = _spilled_dir(small_index, tmp_path)
+    (d / "meta.json").unlink()
+    with pytest.raises(TieredStoreError, match="missing"):
+        TieredStore.open(d, budget_bytes=1)
+
+
+def test_open_rejects_meta_shape_mismatch(small_index, tmp_path):
+    """meta.json claiming a different cluster count than its own sizes
+    list (or than the payload files) is caught before any mmap."""
+    d = _spilled_dir(small_index, tmp_path)
+    meta = json.loads((d / "meta.json").read_text())
+    shape = list(meta["codes_shape"])
+    shape[0] += 1                       # one phantom cluster
+    meta["codes_shape"] = shape
+    (d / "meta.json").write_text(json.dumps(meta))
+    with pytest.raises(TieredStoreError, match="clusters"):
+        TieredStore.open(d, budget_bytes=1)
+
+
+def test_open_rejects_flipped_payload_byte(small_index, tmp_path):
+    """A single flipped byte inside one cluster's codes region fails
+    the CRC pass with that cluster's id — sizes all match, so only the
+    checksum can catch this."""
+    d = _spilled_dir(small_index, tmp_path)
+    cap = int(json.loads((d / "meta.json").read_text())["codes_shape"][1])
+    m = int(json.loads((d / "meta.json").read_text())["codes_shape"][2])
+    target = 2
+    raw = bytearray((d / "codes.u8").read_bytes())
+    raw[target * cap * m + 3] ^= 0xFF
+    (d / "codes.u8").write_bytes(bytes(raw))
+    with pytest.raises(CorruptClusterError) as ei:
+        TieredStore.open(d, budget_bytes=1)
+    assert ei.value.cluster == target
+    # with checksums off the same dir opens (sizes are consistent) —
+    # the verification is the checksum pass, not a side effect of mmap
+    TieredStore.open(d, budget_bytes=1, checksum=False)
+
+
+def test_corrupt_spill_quarantine_and_rebuild(small_index, tmp_path):
+    """In-process heal path: corrupt a resident cluster's spill bytes;
+    the cold-fetch CRC catches it, verify(repair=True) rebuilds it from
+    the RAM copy, and the tier serves the original bytes again."""
+    probe = TieredStore.from_index(small_index, tmp_path, budget_bytes=1)
+    tier = TieredStore.from_index(
+        small_index, str(tmp_path) + "_r",
+        budget_bytes=probe.bytes_per_cluster * 4)
+    res = np.nonzero(tier.resident_mask)[0]
+    if res.size:                        # slab pre-filled at build time
+        c = int(res[0])
+    else:
+        c = 1
+        assert tier.promote(c)
+    want = tier.gather(np.array([c]))
+    tier.corrupt_spill(c)
+    rep = tier.verify(repair=True)
+    assert c in rep["corrupt"] and c in rep["rebuilt"]
+    assert not rep["quarantined"]
+    tier.demote(c)                      # now served from the spill again
+    got = tier.gather(np.array([c]))
+    for a, b in zip(want, got):
+        np.testing.assert_array_equal(a, b)
+    assert tier.stats.rebuilds >= 1
+
+
+def test_corrupt_cold_cluster_quarantined(small_index, tmp_path):
+    """No resident copy -> the corrupt cluster is quarantined, named in
+    the verify report, and strict gather raises with its id."""
+    tier = TieredStore.from_index(small_index, tmp_path, budget_bytes=1)
+    c = 3
+    tier.corrupt_spill(c)
+    rep = tier.verify(repair=True)
+    assert c in rep["quarantined"] and not rep["rebuilt"]
+    with pytest.raises(CorruptClusterError) as ei:
+        tier.gather(np.array([c]))
+    assert ei.value.cluster == c
+
+
 # -- two-level coarse quantizer ---------------------------------------------
 
 def test_coarse2_full_fanout_matches_flat(small_index, small_corpus):
@@ -179,7 +285,7 @@ def test_coarse2_members_partition_clusters(small_index):
     assert sorted(live.tolist()) == list(range(small_index.nlist))
 
 
-# -- spec schema v3 ----------------------------------------------------------
+# -- spec schema (storage + fail-operational knobs) --------------------------
 
 def _tiered_spec(**kw):
     kw.setdefault("storage", "tiered")
@@ -187,28 +293,30 @@ def _tiered_spec(**kw):
     return ServiceSpec(**kw)
 
 
-def test_spec_v3_roundtrip(tmp_path):
+def test_spec_roundtrip_current_version(tmp_path):
     spec = _tiered_spec(storage_promote_margin=1.5, nprobe=4, k=5)
     path = spec.save(tmp_path / "deploy.json")
     assert ServiceSpec.load(path) == spec
     data = json.loads(path.read_text())
-    assert data["version"] == SPEC_VERSION == 3
+    assert data["version"] == SPEC_VERSION == 4
 
 
 def test_spec_v2_file_loads(tmp_path):
-    """A clean v2 deploy file (no v3 keys) loads; the new knobs default
-    to off."""
+    """A clean v2 deploy file (no v3/v4 keys) loads; the newer knobs
+    default to off."""
     data = ServiceSpec(nprobe=4, k=5).to_dict()
     for key in ("storage", "storage_budget_bytes", "storage_promote_margin",
-                "storage_dir", "coarse_groups", "coarse_nprobe1"):
+                "storage_dir", "coarse_groups", "coarse_nprobe1",
+                *_V4_FIELDS):
         data.pop(key)
     data["version"] = 2
     spec = ServiceSpec.from_dict(data)
     assert spec.storage == "resident" and spec.coarse_groups == 0
+    assert spec.deadline_ms == 0.0 and spec.checksum is True
 
 
-@pytest.mark.parametrize("stamp", [1, 2])
-def test_spec_old_stamp_with_v3_keys_rejected(stamp):
+@pytest.mark.parametrize("stamp", [1, 2, 3])
+def test_spec_old_stamp_with_newer_keys_rejected(stamp):
     data = _tiered_spec(nprobe=4, k=5).to_dict()
     data["version"] = stamp
     if stamp == 1:   # v1 files may not carry v2 keys either
