@@ -107,7 +107,12 @@ class ReplicaHealth:
         wall time the breaker transitions to *half-open*.
       * **half-open** — exactly ONE probe batch is admitted (``allow``
         returns True once per open period); its success closes the
-        breaker, its failure re-opens it and restarts the clock.
+        breaker, its failure re-opens it and restarts the clock.  A
+        claimed probe that never reports back (executor scaled down or
+        wedged before serving, service shutdown) would otherwise pin the
+        slot forever — after ``probe timeout`` (= ``half_open_after_s``)
+        of silence the slot is released so a fresh probe can be
+        admitted and the replica can still rejoin.
 
     ``half_open_after_s=0`` (default) is the legacy PR 5 behavior: an
     open breaker stays open until some success (e.g. a retry that still
@@ -135,6 +140,7 @@ class ReplicaHealth:
         self._total = [0] * int(n_replicas)
         self._opened_at: List[Optional[float]] = [None] * int(n_replicas)
         self._probing = [False] * int(n_replicas)
+        self._probe_started: List[Optional[float]] = [None] * int(n_replicas)
         self._lock = threading.Lock()
 
     @property
@@ -155,17 +161,20 @@ class ReplicaHealth:
                 self._total += [0] * (n - cur)
                 self._opened_at += [None] * (n - cur)
                 self._probing += [False] * (n - cur)
+                self._probe_started += [None] * (n - cur)
             else:
                 del self._consecutive[n:]
                 del self._total[n:]
                 del self._opened_at[n:]
                 del self._probing[n:]
+                del self._probe_started[n:]
 
     def record_success(self, replica: int) -> None:
         with self._lock:
             self._consecutive[replica] = 0
             self._opened_at[replica] = None
             self._probing[replica] = False
+            self._probe_started[replica] = None
 
     def record_failure(self, replica: int) -> None:
         with self._lock:
@@ -174,10 +183,23 @@ class ReplicaHealth:
             if self._probing[replica]:
                 # half-open probe failed: re-open, restart the clock
                 self._probing[replica] = False
+                self._probe_started[replica] = None
                 self._opened_at[replica] = self.clock()
             elif self._consecutive[replica] >= self.max_consecutive \
                     and self._opened_at[replica] is None:
                 self._opened_at[replica] = self.clock()
+
+    def _release_stale_probe_locked(self, replica: int) -> None:
+        """A claimed probe whose outcome never arrived (its request died
+        before record_success/record_failure) must not pin the half-open
+        slot forever: after a full ``half_open_after_s`` of silence the
+        claim is released so the next router can probe."""
+        if self._probing[replica] and self.half_open_after_s > 0 \
+                and self._probe_started[replica] is not None \
+                and self.clock() - self._probe_started[replica] \
+                >= self.half_open_after_s:
+            self._probing[replica] = False
+            self._probe_started[replica] = None
 
     def state(self, replica: int) -> str:
         """'closed' | 'open' | 'half_open' (pure view)."""
@@ -198,16 +220,20 @@ class ReplicaHealth:
     def allow(self, replica: int) -> bool:
         """Routing-time admission: closed replicas always pass; an open
         breaker passes exactly one probe batch once the half-open window
-        arrives (claiming it — concurrent routers race for one slot)."""
+        arrives (claiming it — concurrent routers race for one slot).
+        A claimed probe times out after ``half_open_after_s`` so a lost
+        probe request cannot wedge the replica out of the fleet."""
         with self._lock:
             if self._opened_at[replica] is None:
                 return True
+            self._release_stale_probe_locked(replica)
             if self._probing[replica]:
                 return False              # probe already in flight
             if self.half_open_after_s > 0 and \
                     self.clock() - self._opened_at[replica] \
                     >= self.half_open_after_s:
                 self._probing[replica] = True
+                self._probe_started[replica] = self.clock()
                 return True
             return False
 

@@ -774,20 +774,14 @@ class ServingRuntime:
         return self._serve(batch, t_start=t_start)
 
     def _serve(self, batch: MicroBatch, t_start: float) -> List[Request]:
-        # deadline budget: remaining seconds (on the driving clock) until
-        # the batch's OLDEST request blows its deadline — the engine uses
-        # it to degrade (resident-only probes) instead of running long
-        deadline = None
         kwargs: dict = {}
-        if self.config.deadline_s > 0 and batch.requests:
-            deadline = (min(r.t_arrival for r in batch.requests)
-                        + self.config.deadline_s)
-            kwargs["budget_s"] = deadline - t_start
+        slept = 0.0
         if self.faults is not None:          # chaos sites (armed only)
             rule = self.faults.fire("engine.straggler",
                                     replica=self.replica_idx)
             if rule is not None and rule.delay_s > 0:
                 time.sleep(rule.delay_s)
+                slept = rule.delay_s
             rule = self.faults.fire("engine.batch",
                                     replica=self.replica_idx)
             if rule is not None:
@@ -795,6 +789,16 @@ class ServingRuntime:
                 err = InjectedFault("engine.batch",
                                     f"replica {self.replica_idx}")
                 raise BatchServeError(batch, err) from err
+        # deadline budget: remaining seconds (on the driving clock) until
+        # the batch's OLDEST request blows its deadline — the engine uses
+        # it to degrade (resident-only probes) instead of running long.
+        # Computed AFTER the chaos straggler sleep and charged the slept
+        # time, so the degrade decision sees the true remaining budget
+        # instead of overcommitting to a cold fetch that must miss
+        if self.config.deadline_s > 0 and batch.requests:
+            deadline = (min(r.t_arrival for r in batch.requests)
+                        + self.config.deadline_s)
+            kwargs["budget_s"] = deadline - (t_start + slept)
         t0 = time.perf_counter()
         try:
             d, i = self.engine.search_batch(batch.queries,

@@ -42,14 +42,25 @@ class ScaleSignals:
     queue_depths: Sequence[int]          # per live replica
     p99_s: Optional[float] = None        # recent-window p99 (None: no data)
     open_breakers: int = 0               # replicas tripped open (no traffic)
+    open_mask: Optional[Sequence[bool]] = None   # per-replica breaker open
 
     @property
     def mean_depth(self) -> float:
-        # an open-breaker replica serves nothing: its (stale) queue
-        # depth must not dilute the per-serving-replica mean
+        # an open-breaker replica serves nothing: both its (stale) queue
+        # depth and its headcount must leave the per-serving-replica
+        # mean, else the stale numerator inflates it and triggers
+        # spurious scale-up on top of the explicit lost_capacity grow
         qs = list(self.queue_depths)
+        if not qs:
+            return 0.0
+        if self.open_mask is not None and len(self.open_mask) == len(qs):
+            qs = [q for q, is_open in zip(qs, self.open_mask)
+                  if not is_open]
+            return (sum(qs) / len(qs)) if qs else 0.0
+        # legacy callers (count only): shrink the denominator, keep the
+        # full sum — the best available without knowing which are open
         n = max(len(qs) - self.open_breakers, 1)
-        return (sum(qs) / n) if qs else 0.0
+        return sum(qs) / n
 
 
 @dataclasses.dataclass

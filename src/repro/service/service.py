@@ -699,10 +699,13 @@ class AnnService:
         lat: List[float] = []
         for rep in self.live_replicas:
             lat.extend(rep.runtime.stats.recent_latencies(64))
+        breaker = self.health.stats()["breaker"]
         signals = ScaleSignals(
             queue_depths=[rep.queue_depth for rep in self.live_replicas],
             p99_s=(_percentile(lat, 99) if lat else None),
-            open_breakers=self.health.open_count())
+            open_breakers=self.health.open_count(),
+            open_mask=[i < len(breaker) and breaker[i] == "open"
+                       for i in range(len(self.live_replicas))])
         target = self.autoscaler.decide(signals)
         if target != self._live:
             self.scale_to(target)

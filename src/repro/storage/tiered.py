@@ -406,14 +406,30 @@ class TieredStore:
     def _rewrite_from_slab(self, c: int) -> None:
         """Rebuild cluster ``c``'s spill regions from its RAM-resident
         copy (in-place region write — the data being replaced is already
-        corrupt, so non-atomicity cannot make it worse)."""
+        corrupt, so non-atomicity cannot make it worse).  The slab copy
+        is itself verified against the recorded CRC first: a "heal" that
+        rewrites rotten bytes and discards the quarantine would report
+        success while the cluster stays corrupt."""
         slot = int(self._slot_of[c])
         if slot < 0:
             raise CorruptClusterError(c, "no resident copy to rebuild from")
+        codes_payload = self._hot_codes[slot].tobytes()
+        ids_payload = self._hot_ids[slot].tobytes()
+        if zlib.crc32(codes_payload) != self._codes_crc[c] \
+                or zlib.crc32(ids_payload) != self._ids_crc[c]:
+            self.stats.crc_failures += 1
+            self.quarantined.add(int(c))
+            # evict the rotten resident copy: hot hits are served
+            # unchecked, so it must not stay in the slab
+            self._slot_of[c] = -1
+            self._cluster_of[slot] = -1
+            raise CorruptClusterError(c, "resident copy also fails "
+                                      "checksum; refusing to rebuild "
+                                      "from it")
         co, cl, io_, il = self._row_offsets(c)
         for fname, off, payload in (
-                (_CODES_FILE, co, self._hot_codes[slot].tobytes()),
-                (_IDS_FILE, io_, self._hot_ids[slot].tobytes())):
+                (_CODES_FILE, co, codes_payload),
+                (_IDS_FILE, io_, ids_payload)):
             with open(self.dir / fname, "r+b") as f:
                 f.seek(off)
                 f.write(payload)
@@ -454,14 +470,19 @@ class TieredStore:
                     continue
                 corrupt.append(c)
                 self.stats.crc_failures += 1
+                healed = False
                 if repair and self._slot_of[c] >= 0:
-                    self._rewrite_from_slab(c)
-                    rebuilt.append(c)
-                else:
+                    try:
+                        self._rewrite_from_slab(c)
+                        rebuilt.append(c)
+                        healed = True
+                    except CorruptClusterError:
+                        pass        # resident copy rotten too: fall through
+                if not healed:
                     self.quarantined.add(c)
                     quarantined.append(c)
                     if strict:
-                        raise CorruptClusterError(c, "no resident copy to "
+                        raise CorruptClusterError(c, "no intact copy to "
                                                   "rebuild from")
             return {"checked": self.nlist, "corrupt": corrupt,
                     "rebuilt": rebuilt, "quarantined": quarantined}
@@ -480,6 +501,12 @@ class TieredStore:
                 return False
             if c in self.quarantined:
                 return False       # never promote known-corrupt bytes
+            if self.checksum and not self._spill_row_ok(c):
+                # the slab is the trusted tier (hot hits are served
+                # unchecked), so rotten spill bytes must never enter it
+                self.stats.crc_failures += 1
+                self.quarantined.add(c)
+                return False
             if slot is None:
                 free = np.nonzero(self._cluster_of[:self.n_slots] < 0)[0]
                 if free.size == 0:
@@ -502,7 +529,13 @@ class TieredStore:
                 return False
             if self.checksum and not self._spill_row_ok(c):
                 self.stats.crc_failures += 1
-                self._rewrite_from_slab(c)
+                try:
+                    self._rewrite_from_slab(c)
+                except CorruptClusterError:
+                    # both copies rotten: still evict (the slab bytes are
+                    # no better) and leave the cluster quarantined so the
+                    # cold path drops/raises instead of serving them
+                    pass
             self._slot_of[c] = -1
             self._cluster_of[slot] = -1
             self.stats.demotions += 1

@@ -168,6 +168,31 @@ def test_autoscaler_decision_hysteresis():
     assert b.decide(ScaleSignals([5, 5])) == 3     # ...then expires
 
 
+def test_mean_depth_excludes_open_breaker_depths():
+    """Regression: mean_depth shrank the denominator by open_breakers
+    but kept the open replicas' stale queue depths in the sum, inflating
+    the per-serving-replica mean and triggering spurious scale-up on top
+    of the explicit lost_capacity grow."""
+    # open replica 0 wedged with 9 stale entries; survivors are idle
+    s = ScaleSignals([9, 0, 0], open_breakers=1,
+                     open_mask=[True, False, False])
+    assert s.mean_depth == 0.0           # stale depth fully excluded
+    s = ScaleSignals([9, 2, 4], open_breakers=1,
+                     open_mask=[True, False, False])
+    assert s.mean_depth == 3.0           # mean over serving replicas only
+    # all breakers open: no serving replica, depth signal is zero
+    assert ScaleSignals([9], open_breakers=1,
+                        open_mask=[True]).mean_depth == 0.0
+    # legacy count-only callers keep the old shrunken-denominator view
+    assert ScaleSignals([9, 0, 0], open_breakers=1).mean_depth == 4.5
+    # open breakers still force the lost_capacity grow, but idle
+    # survivors must not ALSO read as a deep queue
+    a = Autoscaler(1, 3, queue_high=2.0, queue_low=0.5, cooldown=1)
+    sig = ScaleSignals([9, 0], open_breakers=1, open_mask=[True, False])
+    assert sig.mean_depth < a.queue_high
+    assert a.decide(sig) == 3            # grow comes from lost capacity
+
+
 def test_autoscaler_p99_signal_and_validation():
     a = Autoscaler(1, 2, queue_high=100.0, queue_low=0.01,
                    p99_budget_s=0.010, cooldown=1)

@@ -25,6 +25,7 @@ from repro.runtime.fault_tolerance import (HeartbeatRegistry, ReplicaHealth,
                                            RunSupervisor)
 from repro.runtime.faults import (FaultInjector, FaultPlan, FaultRule,
                                   InjectedFault, SITES)
+from repro.runtime.serving import ServingConfig, ServingRuntime
 from repro.service import AnnService, ServiceOverloaded, ServiceSpec
 
 NPROBE = 8
@@ -129,6 +130,28 @@ def test_breaker_full_state_machine():
     assert h.open_count() == 0
 
 
+def test_breaker_releases_lost_probe_slot():
+    """Regression: a claimed half-open probe whose request never reported
+    back (executor scaled down / wedged, service shutdown) pinned
+    _probing forever — allow() returned False indefinitely and the
+    replica could never rejoin without an operator reset.  After a full
+    half_open_after_s of silence the slot is released."""
+    t = [0.0]
+    h = ReplicaHealth(1, max_consecutive=1, half_open_after_s=10.0,
+                      clock=lambda: t[0])
+    h.record_failure(0)
+    t[0] = 10.0
+    assert h.allow(0)                    # probe claimed...
+    assert not h.allow(0)                # ...slot pinned
+    t[0] = 19.9                          # probe still plausibly in flight
+    assert not h.allow(0)
+    t[0] = 20.0                          # timed out: slot released
+    assert h.allow(0)                    # a fresh probe is admitted
+    assert not h.allow(0)                # and claims the single slot again
+    h.record_success(0)                  # the fresh probe can still close
+    assert h.state(0) == "closed" and h.allow(0)
+
+
 def test_breaker_legacy_never_times_out():
     h = ReplicaHealth(1, max_consecutive=1)      # half_open_after_s=0
     h.record_failure(0)
@@ -207,6 +230,31 @@ def test_no_deadline_stays_exact(small_index, small_corpus, tmp_path):
         assert not fut.timing()["degraded"]
     assert svc.stats()["aggregate"]["degraded"] == 0
     svc.shutdown()
+
+
+def test_straggler_sleep_charged_to_deadline_budget():
+    """Regression: _serve computed budget_s before the injected
+    straggler sleep, so under chaos the engine's degrade decision saw
+    delay_s more budget than actually remained and could commit to a
+    cold fetch that must miss the deadline."""
+    seen = []
+
+    class RecordingEngine:
+        def search_batch(self, queries, n_valid=None, **kw):
+            seen.append(kw.get("budget_s"))
+            b = queries.shape[0]
+            return (np.zeros((b, 1), np.float32),
+                    np.zeros((b, 1), np.int64))
+
+    delay = 0.05
+    rt = ServingRuntime(RecordingEngine(),
+                        ServingConfig(buckets=(1,), max_wait_s=1e-3,
+                                      deadline_s=0.2))
+    rt.faults = FaultInjector(FaultPlan(seed=0, rules=(
+        FaultRule("engine.straggler", delay_s=delay),)))
+    rt.submit(np.zeros(4, np.float32), now=0.0)
+    rt.step(now=0.0, drain=True)
+    assert seen == [pytest.approx(0.2 - delay)]
 
 
 # -- load shedding -----------------------------------------------------------

@@ -262,6 +262,74 @@ def test_corrupt_cold_cluster_quarantined(small_index, tmp_path):
     assert ei.value.cluster == c
 
 
+def test_promote_refuses_corrupt_cold_cluster(small_index, tmp_path):
+    """Regression: promote() used to load cold bytes into the RAM slab
+    unchecked — a corrupted cold cluster promoted by residency churn
+    became a trusted hot hit and served rotten bytes as non-degraded
+    results.  Promotion must CRC-verify first, quarantine on mismatch,
+    and never let the bytes into the slab."""
+    probe = TieredStore.from_index(small_index, str(tmp_path) + "_sz",
+                                   budget_bytes=1)
+    tier = TieredStore.from_index(small_index, tmp_path,
+                                  budget_bytes=probe.bytes_per_cluster * 4)
+    cold = np.nonzero(~tier.resident_mask)[0]
+    assert cold.size, "fixture must leave cold clusters"
+    c = int(cold[0])
+    tier.corrupt_spill(c)
+    fails0 = tier.stats.crc_failures
+    assert not tier.promote(c)              # refused, not loaded
+    assert tier.stats.crc_failures == fails0 + 1
+    assert c in tier.quarantined
+    assert not tier.resident_mask[c]
+    # degraded gather drops it (sizes==0) instead of serving rotten rows
+    codes, ids, sizes, dropped = tier.gather_degraded(np.array([c]))
+    assert dropped[0] and sizes[0] == 0
+    # and a later promote attempt stays refused via the quarantine
+    assert not tier.promote(c)
+
+
+def test_rewrite_refuses_corrupt_slab_copy(small_index, tmp_path):
+    """Regression: the demote-time heal and verify(repair=True) trusted
+    the RAM slab unconditionally — a rotten slab copy was rewritten to
+    disk and counted as a successful rebuild.  The slab copy must match
+    the recorded CRC or the cluster is quarantined, never 'healed'."""
+    probe = TieredStore.from_index(small_index, str(tmp_path) + "_sz",
+                                   budget_bytes=1)
+    tier = TieredStore.from_index(small_index, tmp_path,
+                                  budget_bytes=probe.bytes_per_cluster * 4)
+    res = np.nonzero(tier.resident_mask)[0]
+    assert res.size
+    c = int(res[0])
+    tier.corrupt_spill(c)                   # spill rotten...
+    slot = int(tier._slot_of[c])
+    tier._hot_codes[slot][0, 0] ^= 0xFF     # ...and the slab copy too
+    rebuilds0 = tier.stats.rebuilds
+    rep = tier.verify(repair=True)
+    assert c in rep["corrupt"]
+    assert c not in rep["rebuilt"]          # no fake heal
+    assert c in rep["quarantined"] and c in tier.quarantined
+    assert tier.stats.rebuilds == rebuilds0
+    # the rotten resident copy is evicted (hot hits are unchecked, so
+    # it must not stay servable from the slab)...
+    assert not tier.resident_mask[c]
+    # ...and the cold path drops it instead of serving rotten bytes
+    codes, ids, sizes, dropped = tier.gather_degraded(np.array([c]))
+    assert dropped[0] and sizes[0] == 0
+
+    # demote-time heal hits the same wall: evicts, stays quarantined,
+    # still no rebuild counted
+    res = np.nonzero(tier.resident_mask)[0]
+    c2 = int(res[0])
+    tier.corrupt_spill(c2)
+    slot2 = int(tier._slot_of[c2])
+    tier._hot_codes[slot2][0, 0] ^= 0xFF
+    assert tier.demote(c2)
+    assert tier.stats.rebuilds == rebuilds0
+    assert c2 in tier.quarantined and not tier.resident_mask[c2]
+    codes, ids, sizes, dropped = tier.gather_degraded(np.array([c2]))
+    assert dropped[0] and sizes[0] == 0
+
+
 # -- two-level coarse quantizer ---------------------------------------------
 
 def test_coarse2_full_fanout_matches_flat(small_index, small_corpus):
