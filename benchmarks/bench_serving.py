@@ -58,6 +58,15 @@
                          tier).  Results are exact vs the all-resident
                          engine (recall_drop must read 0.0000); the row
                          tracks the p99/hot-rate cost of tiering.
+  serve/tenants_zipf   — multi-tenant QoS: 8 tenants share one index
+                         (vectors striped round-robin), tenant 0 offers
+                         8x a quiet tenant's arrival share while WFQ
+                         weights are equal.  Weighted fair queueing must
+                         keep the quiet tenants' paced p99 within 1.5x
+                         of their hot-tenant-free baseline while
+                         aggregate QPS stays within 10% of the same
+                         trace served unpartitioned.  PIM-paced, so
+                         stable-tagged and regression-gated.
   serve/chaos          — fail-operational floor: the canonical chaos
                          experiment (repro.service.chaos) streams a
                          Zipf trace through a tiered fleet with an
@@ -76,10 +85,10 @@ which run executor-backed replicas in real time with PIM-paced service.
 Every arrival trace is generated from its own fixed seed (never a
 shared generator), so a row's stream is identical run-to-run and
 independent of row order / --only selection.  The PIM-paced rows
-(async_r1/async_r3/async_speedup) are tagged ``stable=True`` — their
-service time is the Eq. 15 model, not host scheduling — and, together
-with serve/chaos's availability encoding, are the rows CI's
-``bench_compare --fail-on-regress`` gates on.
+(async_r1/async_r3/async_speedup/tenants_zipf) are tagged
+``stable=True`` — their service time is the Eq. 15 model, not host
+scheduling — and, together with serve/chaos's availability encoding,
+are the rows CI's ``bench_compare --fail-on-regress`` gates on.
 See docs/benchmarks.md for how to read the output.
 """
 
@@ -367,6 +376,86 @@ def run(quick: bool = False):
         f"_upserts={mut['upserts']}_deletes={mut['deletes']}"
         f"_gen={mut['generation']}_nlist={mut['nlist']}"))
     svc.shutdown()
+
+    # ---- serve/tenants_zipf: WFQ fairness under a hot tenant ------------
+    # 8 tenants share the index (vectors striped round-robin, so every
+    # tenant owns rows in every cluster); tenant 0 offers 8x a quiet
+    # tenant's arrival share (tenant_weights) while all WFQ weights are
+    # equal, so weighted fair queueing must keep the quiet tenants'
+    # paced p99 near their hot-tenant-free baseline (same quiet
+    # arrivals, hot tenant absent) while aggregate QPS stays near the
+    # unpartitioned run (same arrivals, no scoping).  PIM-paced like
+    # the async rows, hence stable-tagged and regression-gated.
+    n_ten = 8
+    ten_vec = (np.arange(np.asarray(ds.points).shape[0]) % n_ten
+               ).astype(np.int32)
+    ten_spec = ServiceSpec(
+        engine="local", replicas=3, router="least_queue", nprobe=8,
+        k=10, pim_paced_ranks=4, buckets=(1, 2, 4, 8), max_wait_s=2e-3,
+        tenants=tuple((f"t{i}", i, 1.0, 0.0, 1) for i in range(n_ten)),
+        qos_wfq=True, qos_window=24)
+    # offered load from the same Eq. 15 model the pacer runs: the 7
+    # quiet tenants together fill ~75% of modeled fleet capacity (so
+    # the solo baseline forms real batches and carries real queueing),
+    # and the hot tenant's 8x share pushes the total well past
+    # capacity — deterministic rates, so the trace is stable
+    # run-to-run like every other stream here
+    from repro.core.perf_model import (IndexParams, UPMEM_PROFILE,
+                                       lut_width_bytes,
+                                       make_task_latency_model)
+    sizes_np = np.asarray(clusters.sizes)
+    ixp = IndexParams(n_total=int(sizes_np.sum()), nlist=idx.nlist, q=1,
+                      d=idx.dim, k=10, p=8, m=idx.codebook.m,
+                      cb=idx.codebook.cb, b_lut=lut_width_bytes("f32"))
+    task_s = make_task_latency_model(ixp, UPMEM_PROFILE).task_latency(
+        float(sizes_np.mean()))
+    cap_qps = 3 * 4 / (8 * task_s)          # replicas*ranks/(nprobe*task)
+    ten_n = max(n_requests, 192)
+    mixed = _poisson_stream(pool, ten_n, cap_qps * 0.75 * 15.0 / 7.0,
+                            seed=11, skew=1.2, tenants=n_ten,
+                            tenant_weights=[8.0] + [1.0] * (n_ten - 1))
+    quiet_only = [a for a in mixed if a[2] != 0]
+    unpart = [(t, q) for t, q, _ in mixed]
+
+    def _quiet_p99(svc):
+        lat = []
+        for rep in svc.replicas:
+            for tid, ls in rep.runtime.stats.tenant_latencies.items():
+                if tid != 0:
+                    lat.extend(ls)
+        return float(np.percentile(np.asarray(lat), 99)) * 1e3
+
+    # baseline 1: the quiet tenants' arrivals with the hot tenant absent
+    svc = AnnService.build(ten_spec, index=idx, tenants=ten_vec)
+    svc.warmup()
+    svc.stream(quiet_only, clock="wall")
+    p99_solo = _quiet_p99(svc)
+    svc.shutdown()
+    # baseline 2: the full trace unpartitioned (no scoping, no QoS)
+    svc = AnnService.build(ServiceSpec(
+        engine="local", replicas=3, router="least_queue", nprobe=8,
+        k=10, pim_paced_ranks=4, buckets=(1, 2, 4, 8),
+        max_wait_s=2e-3), index=idx)
+    svc.warmup()
+    svc.stream(unpart, clock="wall")
+    qps_unpart = svc.stats()["aggregate"]["qps"]
+    svc.shutdown()
+    # the measured run: full mixed trace under tenant scoping + WFQ
+    svc = AnnService.build(ten_spec, index=idx, tenants=ten_vec)
+    svc.warmup()
+    svc.stream(mixed, clock="wall")
+    st = svc.stats()
+    p99_quiet = _quiet_p99(svc)
+    qps_mixed = st["aggregate"]["qps"]
+    svc.shutdown()
+    blowup = p99_quiet / max(p99_solo, 1e-9)
+    qps_ratio = qps_mixed / max(qps_unpart, 1e-9)
+    out.append(row(
+        "serve/tenants_zipf", p99_quiet * 1e-3,
+        f"quiet_p99_ms={p99_quiet:.2f}_solo_ms={p99_solo:.2f}"
+        f"_blowup={blowup:.2f}x_bar=1.5x_met={blowup <= 1.5}"
+        f"_qps={qps_mixed:.0f}_qps_ratio={qps_ratio:.2f}"
+        f"_bar=0.9_met={qps_ratio >= 0.9}", stable=True))
 
     # ---- serve/chaos: availability + recall floor under faults ----------
     # One canonical experiment (shared with --selftest-chaos and

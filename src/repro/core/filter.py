@@ -1,0 +1,342 @@
+"""Per-vector metadata: tenant namespaces + predicate filtering (PR 10).
+
+Multi-tenant serving shares one physical index (codebooks, centroids,
+clusters) across many logical corpora.  The isolation mechanism is NOT
+separate data structures — it is the same masking discipline the padding
+invariant already uses: ``adc_distances`` masks rows beyond ``sizes`` to
+``+inf`` before top-k, and scoped search masks rows outside the query's
+scope the same way, so filtered top-k is exact over the matching rows,
+never post-hoc truncated.
+
+Metadata is **id-keyed**, not layout-keyed.  :class:`VectorMeta` holds
+flat tables indexed by vector id:
+
+  tenant_of (N,) i32    owning tenant (-1 = unscoped / no tenant)
+  tags      (N, F) u32  predicate tags (NO_TAG = empty slot)
+  cluster_of(N,) i32    coarse cluster holding the vector (-1 unknown)
+
+Every scan path in the engine stack already carries vector-id tensors
+(PaddedClusters.ids, sharded task ids, tier-fetched ids), so the scope
+mask is a pure gather: ``meta_tenant[ids]`` — no sidecar arrays need to
+ride through mutation compaction, tiered spill files, or sharded
+materialization.  Deleted ids leave stale meta rows behind; that is
+harmless because dead ids never appear in any scan.  Meta stays
+RAM-resident even for tiered indexes (N x (8 + 4F) bytes — tiny next to
+the code payload).
+
+Scope rides per query as plain data so jit shapes stay stable:
+
+  q_tenant (Q,) i32     -1 = unscoped (match everything)
+  q_terms  (Q, W) u32   NO_TAG-padded term list; all-NO_TAG = no
+                        predicate; else a row matches iff ANY of its
+                        tags equals ANY valid term (OR semantics)
+
+``scope_mask`` combines liveness (id >= 0 — padding rows can never
+match any predicate), tenant equality, and the term grid into one
+(R, C) bool; ``mask_scoped_distances`` applies it as ``+inf`` exactly
+like the sizes mask.  Rows masked out also get id -1 downstream (the
+engines' existing ``where(isfinite(d), i, -1)`` epilogue), so a tenant
+with fewer than k matching rows yields an (inf, -1) tail identical to
+padding.
+
+The per-tenant **cluster bitmap** (:meth:`VectorMeta.bitmap`) marks
+which clusters hold at least one row of each tenant; scoped coarse
+search (``cluster_locate_masked``) ranks only those, which is what makes
+tenant-scoped results bit-identical to a dedicated single-tenant index
+built from the same rows (:func:`tenant_subindex` builds that reference
+view for tests).  After deletes the bitmap may be a superset (a wasted
+probe whose rows are masked anyway — correct, just not minimal); after
+a maintenance re-cluster, :meth:`VectorMeta.rebuild_clusters` restores
+it exactly from the new store layout.
+"""
+
+from __future__ import annotations
+
+import threading
+from typing import Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+NO_TAG = 0xFFFFFFFF     # reserved u32: empty tag slot / term pad
+NO_TENANT = -1          # unscoped row / unscoped query
+
+
+class VectorMeta:
+    """Id-keyed per-vector metadata tables (host numpy, device-cached).
+
+    Thread-safe for the service's usage: writers (build wiring, upserts)
+    hold the lock; readers grab version-consistent snapshots.  Device
+    tables and the tenant bitmap are cached per version — a mutation
+    bumps ``version`` and the next scoped batch re-uploads.
+    """
+
+    def __init__(self, capacity: int = 0, tag_fields: int = 4):
+        if tag_fields < 0:
+            raise ValueError(f"tag_fields must be >= 0, got {tag_fields}")
+        self.tag_fields = int(tag_fields)
+        self._lock = threading.Lock()
+        self.version = 0
+        self.tenant_of = np.full(capacity, NO_TENANT, np.int32)
+        self.tags = np.full((capacity, self.tag_fields), NO_TAG, np.uint32)
+        self.cluster_of = np.full(capacity, -1, np.int32)
+        self._device_cache: Optional[tuple] = None   # (version, jt, jg)
+        self._bitmap_cache: Optional[tuple] = None   # (version, nlist, bm)
+
+    # -- writers -----------------------------------------------------------
+    def _grow(self, n: int) -> None:
+        cur = self.tenant_of.shape[0]
+        if n <= cur:
+            return
+        cap = max(n, 2 * cur, 64)
+        t = np.full(cap, NO_TENANT, np.int32)
+        g = np.full((cap, self.tag_fields), NO_TAG, np.uint32)
+        c = np.full(cap, -1, np.int32)
+        t[:cur], g[:cur], c[:cur] = self.tenant_of, self.tags, self.cluster_of
+        self.tenant_of, self.tags, self.cluster_of = t, g, c
+
+    def set(self, ids, *, tenant=None, tags=None, cluster=None) -> None:
+        """Assign metadata for ``ids`` (array-like of vector ids).
+
+        ``tenant`` is a scalar or (n,) array; ``tags`` is (n, <=F) u32
+        (shorter rows are NO_TAG-padded); ``cluster`` is a scalar or
+        (n,) array of coarse cluster ids.  Omitted fields keep their
+        current values.
+        """
+        ids = np.asarray(ids, np.int64).reshape(-1)
+        if ids.size == 0:
+            return
+        if (ids < 0).any():
+            raise ValueError("vector ids must be non-negative")
+        with self._lock:
+            self._grow(int(ids.max()) + 1)
+            if tenant is not None:
+                self.tenant_of[ids] = np.broadcast_to(
+                    np.asarray(tenant, np.int32), ids.shape)
+            if tags is not None:
+                t = np.asarray(tags, np.uint32)
+                if t.ndim == 1:
+                    t = np.broadcast_to(t[None, :], (ids.size, t.shape[0]))
+                if t.shape[1] > self.tag_fields:
+                    raise ValueError(
+                        f"tags have {t.shape[1]} fields; meta holds "
+                        f"{self.tag_fields} (tag_fields at construction)")
+                full = np.full((ids.size, self.tag_fields), NO_TAG,
+                               np.uint32)
+                full[:, :t.shape[1]] = t
+                self.tags[ids] = full
+            if cluster is not None:
+                self.cluster_of[ids] = np.broadcast_to(
+                    np.asarray(cluster, np.int32), ids.shape)
+            self.version += 1
+
+    def rebuild_clusters(self, ids_2d: np.ndarray,
+                         sizes: np.ndarray) -> None:
+        """Refresh ``cluster_of`` from a padded (nlist, cap) id layout —
+        called after a maintenance generation install re-clusters the
+        store (old assignments are then meaningless)."""
+        ids_2d = np.asarray(ids_2d)
+        sizes = np.asarray(sizes)
+        with self._lock:
+            live = ids_2d[ids_2d >= 0]
+            if live.size:
+                self._grow(int(live.max()) + 1)
+            self.cluster_of[:] = -1
+            for c in range(ids_2d.shape[0]):
+                row = ids_2d[c, :int(sizes[c])]
+                row = row[row >= 0]
+                self.cluster_of[row] = c
+            self.version += 1
+
+    # -- readers -----------------------------------------------------------
+    @property
+    def n_tenants(self) -> int:
+        """1 + max assigned tenant id (0 when nothing is scoped)."""
+        with self._lock:
+            m = int(self.tenant_of.max()) if self.tenant_of.size else -1
+        return max(m + 1, 0)
+
+    def device_tables(self) -> Tuple[jax.Array, jax.Array]:
+        """(tenant_of, tags) as device arrays, cached per version."""
+        with self._lock:
+            version = self.version
+            cached = self._device_cache
+            if cached is not None and cached[0] == version:
+                return cached[1], cached[2]
+            t = self.tenant_of.copy()
+            g = self.tags.copy()
+        jt, jg = jnp.asarray(t), jnp.asarray(g)
+        with self._lock:
+            if self._device_cache is None or self._device_cache[0] < version:
+                self._device_cache = (version, jt, jg)
+        return jt, jg
+
+    def bitmap(self, nlist: int) -> np.ndarray:
+        """(n_tenants, nlist) bool — cluster c may hold rows of tenant t.
+
+        Derived purely from (tenant_of, cluster_of); exact after builds
+        and upserts, a superset after deletes (see module docstring).
+        """
+        with self._lock:
+            version = self.version
+            cached = self._bitmap_cache
+            if (cached is not None and cached[0] == version
+                    and cached[1] == nlist):
+                return cached[2]
+            tenant = self.tenant_of.copy()
+            cluster = self.cluster_of.copy()
+        n_t = max(int(tenant.max()) + 1, 0) if tenant.size else 0
+        bm = np.zeros((n_t, nlist), bool)
+        ok = (tenant >= 0) & (cluster >= 0) & (cluster < nlist)
+        if ok.any():
+            bm[tenant[ok], cluster[ok]] = True
+        with self._lock:
+            self._bitmap_cache = (version, nlist, bm)
+        return bm
+
+    def allowed_for(self, tenants, nlist: int) -> np.ndarray:
+        """(Q, nlist) bool CL mask for a batch of query tenants.
+
+        Tenant -1 (unscoped) allows every cluster; a tenant id with no
+        rows allows none (its scan yields the inf/-1 tail).
+        """
+        tenants = np.asarray(tenants, np.int64).reshape(-1)
+        bm = self.bitmap(nlist)
+        out = np.ones((tenants.size, nlist), bool)
+        scoped = tenants >= 0
+        if scoped.any():
+            t = tenants[scoped]
+            known = t < bm.shape[0]
+            rows = np.zeros((t.size, nlist), bool)
+            if known.any():
+                rows[known] = bm[t[known]]
+            out[scoped] = rows
+        return out
+
+    def match_host(self, ids, tenant: int = NO_TENANT,
+                   terms: Sequence[int] = ()) -> np.ndarray:
+        """Host-side reference mask over raw vector ids (tests/brute
+        force): same semantics as :func:`scope_mask`."""
+        ids = np.asarray(ids, np.int64)
+        with self._lock:
+            t = self.tenant_of.copy()
+            g = self.tags.copy()
+        live = (ids >= 0) & (ids < t.shape[0])
+        rid = np.clip(ids, 0, max(t.shape[0] - 1, 0))
+        rt = np.where(live, t[rid], NO_TENANT)
+        ok = live & ((tenant < 0) | (rt == tenant))
+        terms = [int(x) for x in terms if int(x) != NO_TAG]
+        if terms:
+            tg = g[rid]                                    # (..., F)
+            m = np.zeros(ids.shape, bool)
+            for term in terms:
+                m |= (tg == np.uint32(term)).any(axis=-1)
+            ok &= live & m
+        return ok
+
+
+# ---------------------------------------------------------------------------
+# Jit-side mask — shared by every scoped scan variant.
+# ---------------------------------------------------------------------------
+
+def scope_mask(row_ids: jax.Array, meta_tenant: jax.Array,
+               meta_tags: jax.Array, q_tenant: jax.Array,
+               q_terms: jax.Array) -> jax.Array:
+    """(R, C) bool: which candidate rows are in scope.
+
+    row_ids (R, C) i32 (-1 = padding); meta_tenant (N,) i32;
+    meta_tags (N, F) u32; q_tenant (R,) i32 (-1 = unscoped);
+    q_terms (R, W) u32 (NO_TAG pad; all-NO_TAG = no predicate).
+    Ids >= N (mutated after the tables were snapshotted) are treated as
+    unscoped rows: visible only to unscoped, predicate-free queries.
+    """
+    n = meta_tenant.shape[0]
+    live = row_ids >= 0
+    oob = row_ids >= n
+    rid = jnp.clip(row_ids, 0, max(n - 1, 0)).astype(jnp.int32)
+    rt = jnp.where(oob, NO_TENANT, meta_tenant[rid])          # (R, C)
+    tenant_ok = (q_tenant[:, None] < 0) | (rt == q_tenant[:, None])
+    term_valid = q_terms != jnp.uint32(NO_TAG)                # (R, W)
+    has_pred = term_valid.any(axis=-1)                        # (R,)
+    if meta_tags.shape[1] and q_terms.shape[1]:
+        tg = jnp.where(oob[..., None], jnp.uint32(NO_TAG),
+                       meta_tags[rid])                        # (R, C, F)
+        eq = tg[:, :, :, None] == q_terms[:, None, None, :]   # (R, C, F, W)
+        match = (eq & term_valid[:, None, None, :]).any(axis=(-1, -2))
+    else:
+        match = jnp.zeros(row_ids.shape, bool)
+    pred_ok = jnp.where(has_pred[:, None], match, True)
+    return live & tenant_ok & pred_ok
+
+
+def mask_scoped_distances(d: jax.Array, row_ids: jax.Array,
+                          meta_tenant: jax.Array, meta_tags: jax.Array,
+                          q_tenant: jax.Array,
+                          q_terms: jax.Array) -> jax.Array:
+    """Apply the scope mask the way the padding invariant does: out-of-
+    scope rows get ``+inf`` (and id -1 via the callers' isfinite
+    epilogue), so they can never displace a matching row from top-k."""
+    ok = scope_mask(row_ids, meta_tenant, meta_tags, q_tenant, q_terms)
+    return jnp.where(ok, d, jnp.inf)
+
+
+def pad_terms(terms_rows: Sequence[Sequence[int]], width: int) -> np.ndarray:
+    """Pack per-query term lists into the (Q, W) NO_TAG-padded u32 array
+    the scoped scans take.  Raises if any list exceeds ``width``."""
+    out = np.full((len(terms_rows), width), NO_TAG, np.uint32)
+    for i, row in enumerate(terms_rows):
+        row = list(row)
+        if len(row) > width:
+            raise ValueError(f"query {i} carries {len(row)} terms; "
+                             f"filter_width is {width}")
+        for j, term in enumerate(row):
+            out[i, j] = np.uint32(term)
+    return out
+
+
+# ---------------------------------------------------------------------------
+# Dedicated single-tenant reference view (isolation tests / migration).
+# ---------------------------------------------------------------------------
+
+def tenant_subindex(index, meta: VectorMeta, tenant: int):
+    """Build a dedicated single-tenant IVFPQIndex from the shared one.
+
+    Keeps ONLY the clusters holding the tenant's rows (centroid subset,
+    preserving relative cluster order) and only that tenant's rows inside
+    them (preserving relative row order), with the SAME codebook and
+    rotation and the original global vector ids.  Coarse ranking over
+    the surviving centroids and residual encoding are then identical to
+    the shared index's bitmap-masked scoped path — which is what the
+    isolation invariant asserts (scoped search == dedicated index,
+    bit-identical).  Returns ``(sub_index, member_clusters)``.
+    """
+    from repro.core.ivf import IVFPQIndex
+    codes_np = np.asarray(index.codes)
+    ids_np = np.asarray(index.ids)
+    offsets = np.asarray(index.offsets)
+    nlist = int(index.nlist)
+    keep_clusters = []
+    rows_per_cluster = []
+    for c in range(nlist):
+        lo, hi = int(offsets[c]), int(offsets[c + 1])
+        cids = ids_np[lo:hi]
+        sel = meta.match_host(cids, tenant=tenant)
+        if sel.any():
+            keep_clusters.append(c)
+            rows_per_cluster.append((np.arange(lo, hi)[sel]))
+    if not keep_clusters:
+        raise ValueError(f"tenant {tenant} has no rows")
+    member = np.asarray(keep_clusters, np.int64)
+    rows = [r for r in rows_per_cluster]
+    new_offsets = np.zeros(len(member) + 1, np.int64)
+    new_offsets[1:] = np.cumsum([r.size for r in rows])
+    flat = np.concatenate(rows)
+    sub = IVFPQIndex(
+        jnp.asarray(np.asarray(index.centroids)[member]),
+        index.codebook,
+        jnp.asarray(codes_np[flat]),
+        jnp.asarray(ids_np[flat]),
+        jnp.asarray(new_offsets),
+        index.rotation)
+    return sub, member

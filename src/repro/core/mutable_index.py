@@ -238,6 +238,10 @@ class Index:
         self._ivf = ivf
         self.storage = storage
         self.tiered_store = None
+        # per-vector tenant/tag metadata (repro.core.filter.VectorMeta),
+        # attached by the service tier when the spec declares tenants or
+        # tagged upserts are expected; None = single-tenant handle
+        self.meta = None
         self.mutable = bool(mutable)
         self.generation = 0
         self.stats = MutationStats()
@@ -491,12 +495,20 @@ class Index:
         self._clusters_cache = None
         self._csr_cache = None
 
-    def upsert(self, ids, vectors) -> dict:
+    def upsert(self, ids, vectors, tenant=None, tags=None) -> dict:
         """Insert or replace vectors by id: assign to the nearest live
         centroid, encode the residual with the live codebooks, append to
         the cluster's padded rows (an existing id's old row is
-        swap-compacted out first).  Returns insert/replace counts."""
+        swap-compacted out first).  Returns insert/replace counts.
+
+        With a ``meta`` table attached, ``tenant`` (scalar or per-row)
+        and ``tags`` stamp the vectors' scope; omitting them stamps
+        tenant -1 / no tags — a re-upsert must re-supply its scope, so a
+        recycled id can never inherit a previous owner's tenant."""
         self._require_mutable("upsert")
+        if self.meta is None and (tenant is not None or tags is not None):
+            raise ValueError("upsert(tenant=/tags=) needs a meta table "
+                             "attached to the index (Index.meta)")
         import jax.numpy as jnp
         pids = np.asarray(ids, np.int64).reshape(-1)
         vecs = np.asarray(vectors, np.float32)
@@ -539,6 +551,17 @@ class Index:
                     self._touched.add(pid)
                 self.stats.upserts += len(pids)
                 self.stats.replaced += replaced
+                if self.meta is not None:
+                    # stamp scope + cluster membership; NO defaults
+                    # carried over from a prior owner of a recycled id
+                    from repro.core.filter import NO_TAG, NO_TENANT
+                    self.meta.set(
+                        pids,
+                        tenant=NO_TENANT if tenant is None else tenant,
+                        tags=(np.full((len(pids), self.meta.tag_fields),
+                                      NO_TAG, np.uint32)
+                              if tags is None else tags),
+                        cluster=assign)
                 self._dirty()
                 return {"n": len(pids), "inserted": len(pids) - replaced,
                         "replaced": replaced, "generation": self.generation}
@@ -720,6 +743,12 @@ class Index:
             self._dirty()
             self._view_cache = None
             self._centroids_cache = None
+            if self.meta is not None:
+                # the generation re-clustered every vector: rebuild the
+                # id -> cluster map (and so the per-tenant bitmap) from
+                # the new store layout
+                self.meta.rebuild_clusters(self._store.ids,
+                                           self._store.sizes)
             return {"generation": self.generation,
                     "nlist": self.nlist,
                     "splits": gen.splits, "merges": gen.merges,

@@ -42,6 +42,23 @@ def cluster_locate(queries: jax.Array, centroids: jax.Array, nprobe: int):
     return idx.astype(jnp.int32), -nd
 
 
+def cluster_locate_masked(queries: jax.Array, centroids: jax.Array,
+                          nprobe: int, allowed: jax.Array):
+    """CL over a per-query cluster mask (tenant namespaces, PR 10).
+
+    ``allowed`` (Q, nlist) bool — disallowed centroids rank ``+inf`` so
+    a tenant's probes land on its member clusters first; allowed
+    clusters keep their exact distances AND their relative tie order, so
+    the ranking matches a dedicated index holding only those clusters.
+    When nprobe exceeds a tenant's member count the surplus probes fall
+    on disallowed clusters, whose rows the scope mask strikes anyway.
+    """
+    d = l2_sq(queries, centroids)
+    d = jnp.where(allowed, d, jnp.inf)
+    nd, idx = jax.lax.top_k(-d, nprobe)
+    return idx.astype(jnp.int32), -nd
+
+
 def _search_chunk(queries, centroids, codebook, clusters: PaddedClusters,
                   rotation, params: SearchParams):
     q = queries.astype(jnp.float32)

@@ -70,6 +70,7 @@ from repro.core.adc import (QuantizedLUT, adc_distances,
                             adc_distances_quantized, build_lut_batch,
                             quantize_lut)
 from repro.core.topk import topk_smallest
+from repro.core.filter import mask_scoped_distances
 from repro.util import next_pow2
 from repro.core.layout import Layout, build_layout, estimate_heat
 from repro.core.scheduler import ShardSchedule, schedule_batch
@@ -268,6 +269,65 @@ def _shard_tasks_fn(codes, ids, sizes, cluster_of, qidx, sidx, queries,
     return bd, bi
 
 
+def _shard_tasks_scoped_fn(codes, ids, sizes, cluster_of, qidx, sidx,
+                           queries, centroids, codebook: PQCodebook,
+                           rotation, meta_tenant, meta_tags, q_tenants,
+                           q_terms, *, k: int, strategy: str,
+                           quantize: bool = False):
+    """Scoped ``_shard_tasks_fn`` (PR 10): RC+LC+DC as usual, then the
+    tenant/predicate mask strikes out-of-scope candidate rows to ``+inf``
+    before TS.  Each task inherits its query's scope via ``qidx`` (pad
+    tasks gather query 0's scope harmlessly — their ``sizes == 0`` mask
+    already invalidates every row).  The kernels/fused fast paths fuse TS
+    into the scan and cannot interpose the mask, so scoped traffic always
+    runs this jnp dataflow."""
+    valid = qidx >= 0
+    qi = jnp.clip(qidx, 0, queries.shape[0] - 1)
+    si = jnp.clip(sidx, 0, codes.shape[0] - 1)
+
+    q = queries[qi].astype(jnp.float32)                       # (T, D)
+    cl = jnp.clip(cluster_of[si], 0, centroids.shape[0] - 1)
+    residual = q - centroids[cl]                              # RC
+    if rotation is not None:
+        residual = residual @ rotation
+    task_codes = codes[si]                                    # (T, cpart, M)
+    task_ids = ids[si]                                        # (T, cpart)
+    task_sizes = jnp.where(valid, sizes[si], 0)               # invalid -> 0
+
+    lut = build_lut_batch(codebook, residual)                 # LC
+    strat = "gather" if strategy == "gather" else "onehot"
+    if quantize:
+        d = adc_distances_quantized(quantize_lut(lut), task_codes,
+                                    task_sizes, strat)        # DC (u8)
+    else:
+        d = adc_distances(lut, task_codes, task_sizes, strat)  # DC
+    d = mask_scoped_distances(d, task_ids, meta_tenant, meta_tags,
+                              q_tenants[qi], q_terms[qi])
+    bd, bi = topk_smallest(d, task_ids, k)                    # TS
+    return bd, jnp.where(jnp.isfinite(bd), bi, -1)
+
+
+@functools.partial(jax.jit, static_argnames=("k", "strategy", "quantize"))
+def run_shards_vmap_scoped(sindex: ShardedIndex, qidx: jax.Array,
+                           sidx: jax.Array, queries: jax.Array,
+                           meta_tenant: jax.Array, meta_tags: jax.Array,
+                           q_tenants: jax.Array, q_terms: jax.Array, *,
+                           k: int, strategy: str = "onehot",
+                           quantize: bool = False):
+    """Simulation path for scoped batches: vmap over the shard axis with
+    the scope arrays replicated alongside queries (the same one
+    host->PIM broadcast — per-query tenant/terms ride with the query)."""
+    fn = functools.partial(_shard_tasks_scoped_fn, codebook=sindex.codebook,
+                           rotation=sindex.rotation,
+                           meta_tenant=meta_tenant, meta_tags=meta_tags,
+                           q_tenants=q_tenants, q_terms=q_terms, k=k,
+                           strategy=strategy, quantize=quantize)
+    return jax.vmap(
+        lambda c, i, sz, co, qq, ss: fn(c, i, sz, co, qq, ss, queries,
+                                        sindex.centroids)
+    )(sindex.codes, sindex.ids, sindex.sizes, sindex.cluster_of, qidx, sidx)
+
+
 def _fused_scan_topk(lut, task_codes, task_ids, task_sizes, k: int,
                      block: int = 512):
     """Streaming DC+TS: scan over C-blocks, (T, k) running winners carried.
@@ -427,6 +487,41 @@ def run_shards_vmap_lut(sindex: ShardedIndex, qidx: jax.Array,
     )(sindex.codes, sindex.ids, sindex.sizes, qidx, sidx, lidx)
 
 
+@functools.partial(jax.jit, static_argnames=("k", "strategy"))
+def run_shards_vmap_lut_scoped(sindex: ShardedIndex, qidx: jax.Array,
+                               sidx: jax.Array, lidx: jax.Array,
+                               lut_bank: jax.Array, meta_tenant: jax.Array,
+                               meta_tags: jax.Array, q_tenants: jax.Array,
+                               q_terms: jax.Array, *, k: int,
+                               strategy: str = "onehot"):
+    """Scoped cached step: DC from the replicated LUT bank, then the
+    tenant/predicate mask before TS (LUTs depend only on query x cluster,
+    so hits are shared between scoped and unscoped traffic)."""
+    def per_shard(codes, ids, sizes, qidx, sidx, lidx):
+        quantized = isinstance(lut_bank, QuantizedLUT)
+        n_rows = (lut_bank.lut_q if quantized else lut_bank).shape[0]
+        valid = (qidx >= 0) & (lidx >= 0)
+        qi = jnp.clip(qidx, 0, q_tenants.shape[0] - 1)
+        si = jnp.clip(sidx, 0, codes.shape[0] - 1)
+        li = jnp.clip(lidx, 0, n_rows - 1)
+        lut = jax.tree.map(lambda a: a[li], lut_bank)
+        task_codes = codes[si]
+        task_ids = ids[si]
+        task_sizes = jnp.where(valid, sizes[si], 0)
+        strat = "gather" if strategy == "gather" else "onehot"
+        if quantized:
+            d = adc_distances_quantized(lut, task_codes, task_sizes, strat)
+        else:
+            d = adc_distances(lut, task_codes, task_sizes, strat)
+        d = mask_scoped_distances(d, task_ids, meta_tenant, meta_tags,
+                                  q_tenants[qi], q_terms[qi])
+        bd, bi = topk_smallest(d, task_ids, k)
+        return bd, jnp.where(jnp.isfinite(bd), bi, -1)
+
+    return jax.vmap(per_shard)(sindex.codes, sindex.ids, sindex.sizes,
+                               qidx, sidx, lidx)
+
+
 def make_sharded_step_lut(mesh, sindex: ShardedIndex, *, k: int,
                           strategy: str = "onehot",
                           use_kernels: bool = False, axis: str = "shards"):
@@ -552,6 +647,24 @@ def _cold_scan(lut, codes, ids, sizes, *, k: int, strategy: str):
     return bd, jnp.where(jnp.isfinite(bd), bi, -1)
 
 
+@functools.partial(jax.jit, static_argnames=("k", "strategy"))
+def _cold_scan_scoped(lut, codes, ids, sizes, meta_tenant, meta_tags,
+                      t_tenants, t_terms, *, k: int, strategy: str):
+    """Scoped :func:`_cold_scan`: same tier-fetched DC+TS with the
+    tenant/predicate mask applied per task row (``t_tenants``/``t_terms``
+    already gathered per task host-side; pad tasks carry tenant -1 and
+    all-NO_TAG terms on top of ``sizes = 0``)."""
+    strat = "gather" if strategy == "gather" else "onehot"
+    if isinstance(lut, QuantizedLUT):
+        d = adc_distances_quantized(lut, codes, sizes, strat)
+    else:
+        d = adc_distances(lut, codes, sizes, strat)
+    d = mask_scoped_distances(d, ids, meta_tenant, meta_tags,
+                              t_tenants, t_terms)
+    bd, bi = topk_smallest(d, ids, k)
+    return bd, jnp.where(jnp.isfinite(bd), bi, -1)
+
+
 class DistributedEngine:
     """Offline build (layout + shards) and online batched search.
 
@@ -566,7 +679,7 @@ class DistributedEngine:
                  sample_probes: np.ndarray,
                  latency: Optional[TaskLatencyModel] = None,
                  mesh=None, lut_cache=None, heat_estimator=None,
-                 tasks_controller=None, tiered_store=None):
+                 tasks_controller=None, tiered_store=None, meta=None):
         from repro.core.perf_model import (IndexParams, UPMEM_PROFILE,
                                            lut_width_bytes)
         if cfg.lut_dtype not in ("f32", "uint8"):
@@ -599,6 +712,9 @@ class DistributedEngine:
         # resident clusters; probes of snapshot-cold clusters are scanned
         # host-side through the tier's batched fetch path (_scan_cold)
         self.tiered_store = tiered_store
+        # per-vector metadata (repro.core.filter.VectorMeta) for tenant-
+        # scoped / predicate-filtered search; None = single-tenant engine
+        self.meta = meta
         self._cold_mask: Optional[np.ndarray] = None
         # per-batch degrade report, read by the serving adapter after
         # search() returns (one worker serves a replica, so no race)
@@ -994,7 +1110,7 @@ class DistributedEngine:
         return stack_lut_bank(luts)
 
     def _scan_cold(self, queries_np: np.ndarray, probes: np.ndarray,
-                   bank, budget_s: Optional[float] = None):
+                   bank, budget_s: Optional[float] = None, scope=None):
         """Scan this batch's snapshot-cold probes through the tier.
 
         (q, pos) pairs whose cluster is absent from the device tensors
@@ -1057,9 +1173,22 @@ class DistributedEngine:
             lut = build_lut_batch(self.index.codebook, res)
             if self.cfg.lut_dtype == "uint8":
                 lut = quantize_lut(lut)
-        bd, bi = _cold_scan(lut, jnp.asarray(codes_p), jnp.asarray(ids_p),
-                            jnp.asarray(sizes_p), k=self.cfg.k,
-                            strategy=self.cfg.strategy)
+        if scope is not None:
+            from repro.core.filter import NO_TAG
+            mt, mg, _, _, tenants_np, terms_np = scope
+            t_ten = np.full(tpad, -1, np.int32)
+            t_ten[:t] = tenants_np[cold_q]
+            t_terms = np.full((tpad, terms_np.shape[1]), NO_TAG, np.uint32)
+            t_terms[:t] = terms_np[cold_q]
+            bd, bi = _cold_scan_scoped(
+                lut, jnp.asarray(codes_p), jnp.asarray(ids_p),
+                jnp.asarray(sizes_p), mt, mg, jnp.asarray(t_ten),
+                jnp.asarray(t_terms), k=self.cfg.k,
+                strategy=self.cfg.strategy)
+        else:
+            bd, bi = _cold_scan(lut, jnp.asarray(codes_p),
+                                jnp.asarray(ids_p), jnp.asarray(sizes_p),
+                                k=self.cfg.k, strategy=self.cfg.strategy)
         qarr = np.full(tpad, -1, np.int64)
         qarr[:t] = cold_q
         return np.asarray(bd), np.asarray(bi), qarr
@@ -1089,7 +1218,9 @@ class DistributedEngine:
 
     def search(self, queries: jax.Array, flush: bool = True,
                n_valid: Optional[int] = None,
-               budget_s: Optional[float] = None):
+               budget_s: Optional[float] = None,
+               tenants: Optional[np.ndarray] = None,
+               terms: Optional[np.ndarray] = None):
         """Batched search.  With flush=True, deferred tasks are drained in
         follow-up rounds so results are complete (tests); a serving loop
         would instead leave them for the next batch (paper's filter).
@@ -1102,9 +1233,35 @@ class DistributedEngine:
         scan consults it — when the predicted cold-read cost would blow
         the budget the cold probes are dropped and the batch is reported
         degraded via ``last_batch_info`` (device-resident scans are
-        already paced by the task scheduler and never shed)."""
-        from repro.core.search import cluster_locate
+        already paced by the task scheduler and never shed).
+
+        ``tenants`` (Q,) i32 / ``terms`` (Q, W) u32 (PR 10): per-query
+        tenant scope (-1 = unscoped) and predicate tags (NO_TAG pad).
+        Scoped batches run the scoped shard steps (the tenant/predicate
+        mask before TS); CL is additionally restricted to the tenants'
+        member clusters.  Requires a ``meta`` table; not supported on the
+        mesh path (the service tier always builds vmap engines)."""
+        from repro.core.search import cluster_locate, cluster_locate_masked
         self.last_batch_info = {"degraded": False, "dropped_probes": 0}
+        scope = None
+        if tenants is not None or terms is not None:
+            if self.meta is None:
+                raise ValueError(
+                    "tenant/filtered search needs an engine built with "
+                    "per-vector metadata (meta=VectorMeta); got meta=None")
+            if self.mesh is not None:
+                raise ValueError("scoped search is not supported on the "
+                                 "mesh (shard_map) path")
+            from repro.core.filter import NO_TAG
+            nq_s = queries.shape[0]
+            tenants_np = (np.full(nq_s, -1, np.int32) if tenants is None
+                          else np.asarray(tenants, np.int32))
+            terms_np = (np.full((nq_s, self.meta.tag_fields), NO_TAG,
+                                np.uint32) if terms is None
+                        else np.asarray(terms, np.uint32))
+            mt, mg = self.meta.device_tables()
+            scope = (mt, mg, jnp.asarray(tenants_np),
+                     jnp.asarray(terms_np), tenants_np, terms_np)
         # a pending periodic re-layout swaps in between batches: the
         # rebuild ran on a background thread concurrently with the
         # triggering batch's own scan/merge, and this batch starts on the
@@ -1113,8 +1270,17 @@ class DistributedEngine:
             self._join_pending_relayout()
         nq = queries.shape[0]
         nv = nq if n_valid is None else min(n_valid, nq)
-        probes, _ = cluster_locate(queries.astype(jnp.float32),
-                                   self.sindex.centroids, self.cfg.nprobe)
+        if scope is not None and (scope[4] >= 0).any():
+            # tenant namespaces: probe only the tenants' member clusters
+            allowed = self.meta.allowed_for(scope[4],
+                                            self.sindex.centroids.shape[0])
+            probes, _ = cluster_locate_masked(
+                queries.astype(jnp.float32), self.sindex.centroids,
+                self.cfg.nprobe, jnp.asarray(allowed))
+        else:
+            probes, _ = cluster_locate(queries.astype(jnp.float32),
+                                       self.sindex.centroids,
+                                       self.cfg.nprobe)
         probes = np.asarray(probes)
         if nv > 0:      # all-padding warmup batches don't count as traffic
             if self.heat_estimator is not None:
@@ -1153,7 +1319,20 @@ class DistributedEngine:
                     nq, len(sched.deferred) if full else 0)
             qidx = jnp.asarray(sched.query_idx)
             sidx = jnp.asarray(sched.slot_idx)
-            if bank is not None:
+            if scope is not None and bank is not None:
+                lidx = jnp.asarray(self._lut_idx(sched, posmap,
+                                                 self.cfg.nprobe))
+                bd, bi = run_shards_vmap_lut_scoped(
+                    self.sindex, qidx, sidx, lidx, bank, scope[0],
+                    scope[1], scope[2], scope[3], k=self.cfg.k,
+                    strategy=self.cfg.strategy)
+            elif scope is not None:
+                bd, bi = run_shards_vmap_scoped(
+                    self.sindex, qidx, sidx, queries, scope[0], scope[1],
+                    scope[2], scope[3], k=self.cfg.k,
+                    strategy=self.cfg.strategy,
+                    quantize=self.cfg.lut_dtype == "uint8")
+            elif bank is not None:
                 lidx = jnp.asarray(self._lut_idx(sched, posmap,
                                                  self.cfg.nprobe))
                 if self._step_lut is not None:
@@ -1186,7 +1365,7 @@ class DistributedEngine:
             pending = np.zeros((0, 0), np.int64)   # only carry-in tasks
         if self.tiered_store is not None:
             cold = self._scan_cold(np.asarray(queries, np.float32), probes,
-                                   bank, budget_s=budget_s)
+                                   bank, budget_s=budget_s, scope=scope)
             if cold is not None:
                 cd, ci, cq = cold
                 all_d.append(cd)

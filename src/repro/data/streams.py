@@ -1,13 +1,14 @@
 """Synthetic arrival traces for the serving stack.
 
 One generator shared by the serving benchmarks, the ``launch/serve
---ann`` demo, and the service-layer tests, so the trace model (Poisson
-arrivals, Zipf-by-rank query popularity) is defined exactly once.
+--ann`` demo, the ``--selftest-tenants`` smoke, and the service-layer
+tests, so the trace model (Poisson arrivals, Zipf-by-rank query
+popularity, Zipf-by-rank tenant mix) is defined exactly once.
 """
 
 from __future__ import annotations
 
-from typing import List, Optional, Tuple
+from typing import List, Optional, Sequence, Tuple, Union
 
 import numpy as np
 
@@ -15,13 +16,28 @@ import numpy as np
 def make_query_stream(queries, n_requests: int, qps: float,
                       rng: Optional[np.random.Generator] = None, *,
                       skew: Optional[float] = None, seed: int = 0,
-                      poisson: bool = True
-                      ) -> List[Tuple[float, np.ndarray]]:
-    """(t_arrival, query) pairs: arrivals at ``qps`` (Poisson gaps, or
-    fixed ``1/qps`` gaps with ``poisson=False`` for deterministic
-    tests), queries drawn from the pool uniformly or — with ``skew`` set
-    — Zipf(``skew``) over the pool by index rank (hot queries repeat,
-    which is what the LUT cache and cache-aware routing exploit)."""
+                      poisson: bool = True,
+                      tenants: Union[int, Sequence[int], None] = None,
+                      tenant_skew: Optional[float] = None,
+                      tenant_weights: Optional[Sequence[float]] = None
+                      ) -> List[Tuple]:
+    """Arrival trace: ``(t, query)`` pairs, or ``(t, query, tenant)``
+    triples when ``tenants`` is set.
+
+    Arrivals come at ``qps`` (Poisson gaps, or fixed ``1/qps`` gaps with
+    ``poisson=False`` for deterministic tests); queries are drawn from
+    the pool uniformly or — with ``skew`` set — Zipf(``skew``) over the
+    pool by index rank (hot queries repeat, which is what the LUT cache
+    and cache-aware routing exploit).
+
+    Multi-tenant mixes (PR 10): ``tenants`` is a tenant count or an
+    explicit id list; each request's tenant is drawn Zipf(``tenant_skew``)
+    by rank over that list (first entry hottest; ``tenant_skew=None`` =
+    uniform), or with the explicit per-tenant ``tenant_weights`` —
+    e.g. ``[8, 1, 1, 1, 1, 1, 1, 1]`` gives the WFQ bench's hot tenant
+    8x a quiet tenant's share.  Query choice stays independent of the
+    tenant draw (Zipf over tenants x Zipf over clusters).
+    """
     if qps <= 0:
         raise ValueError(f"qps must be positive, got {qps}")
     rng = rng if rng is not None else np.random.default_rng(seed)
@@ -37,4 +53,28 @@ def make_query_stream(queries, n_requests: int, qps: float,
         pmf = ranks ** -skew
         pmf /= pmf.sum()
         picks = rng.choice(len(queries), size=n_requests, p=pmf)
-    return [(float(times[i]), queries[picks[i]]) for i in range(n_requests)]
+    if tenants is None:
+        if tenant_skew is not None or tenant_weights is not None:
+            raise ValueError("tenant_skew/tenant_weights need tenants=")
+        return [(float(times[i]), queries[picks[i]])
+                for i in range(n_requests)]
+    ids = (np.arange(int(tenants), dtype=np.int64)
+           if np.isscalar(tenants) else np.asarray(tenants, np.int64))
+    if ids.size < 1:
+        raise ValueError(f"tenants must name at least one tenant, "
+                         f"got {tenants!r}")
+    if tenant_weights is not None:
+        if tenant_skew is not None:
+            raise ValueError("pass tenant_skew or tenant_weights, not both")
+        w = np.asarray(tenant_weights, np.float64)
+        if w.shape != ids.shape or (w <= 0).any():
+            raise ValueError(f"tenant_weights must be {ids.size} positive "
+                             f"weights, got {tenant_weights!r}")
+    elif tenant_skew is not None:
+        w = np.arange(1, ids.size + 1, dtype=np.float64) ** -tenant_skew
+    else:
+        w = np.ones(ids.size, np.float64)
+    w = w / w.sum()
+    tpicks = rng.choice(ids.size, size=n_requests, p=w)
+    return [(float(times[i]), queries[picks[i]], int(ids[tpicks[i]]))
+            for i in range(n_requests)]

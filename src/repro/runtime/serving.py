@@ -54,8 +54,10 @@ from repro.core.adc import (QuantizedLUT, adc_distances,
                             adc_distances_quantized, build_lut_batch,
                             quantize_lut)
 from repro.core.coarse2 import Coarse2, coarse2_locate
+from repro.core.filter import NO_TAG, VectorMeta, mask_scoped_distances
 from repro.core.ivf import IVFPQIndex, PaddedClusters
-from repro.core.search import SearchParams, cluster_locate, search_ivfpq
+from repro.core.search import (SearchParams, cluster_locate,
+                               cluster_locate_masked, search_ivfpq)
 from repro.core.topk import topk_smallest
 from repro.runtime.batching import (BucketPolicy, MicroBatch, MicroBatcher,
                                     Request)
@@ -163,6 +165,24 @@ def _rc_from_probes(queries, centroids, rotation, probes):
     return residual.reshape(probes.shape[0] * probes.shape[1], -1)
 
 
+@jax.jit
+def _lc_tasks(codebook, flat_res):
+    """Jitted LC for the task path: (T, D) residuals -> (T, M, CB) f32.
+
+    ``build_lut_batch`` is an eager vmap — fine inside the fused
+    ``search_ivfpq`` jit, but called op-by-op from ``_search_tasks`` its
+    dispatch overhead dominated the whole batch (several ms against a
+    sub-ms scan), which pushed the scoped/tiered paths past the
+    PIM-paced service model under replica contention."""
+    return build_lut_batch(codebook, flat_res)
+
+
+@jax.jit
+def _lc_tasks_u8(codebook, flat_res):
+    """`_lc_tasks` fused with uint8 LUT quantization."""
+    return quantize_lut(build_lut_batch(codebook, flat_res))
+
+
 @functools.partial(jax.jit, static_argnames=("k", "strategy", "nprobe"))
 def _dc_ts_tasks(lut, codes, ids, sizes, *, k: int, strategy: str,
                  nprobe: int):
@@ -189,6 +209,100 @@ def _dc_ts_tasks(lut, codes, ids, sizes, *, k: int, strategy: str,
     return topk_smallest(cand_d, cand_i, k)
 
 
+@functools.partial(jax.jit, static_argnames=("k", "strategy", "nprobe"))
+def _dc_ts_scoped(lut, flat_probes, clusters: PaddedClusters, meta_tenant,
+                  meta_tags, q_tenants, q_terms, *, k: int, strategy: str,
+                  nprobe: int):
+    """Scoped :func:`_dc_ts` (PR 10): same DC math, then the tenant /
+    predicate mask strikes out-of-scope candidate rows to ``+inf`` (and
+    id -1) before TS — the same discipline the sizes mask uses, so
+    filtered top-k is exact over the matching rows."""
+    codes = clusters.codes[flat_probes]
+    ids = clusters.ids[flat_probes]
+    sizes = clusters.sizes[flat_probes]
+    strat = "gather" if strategy == "gather" else "onehot"
+    if isinstance(lut, QuantizedLUT):
+        dists = adc_distances_quantized(lut, codes, sizes, strat)
+        n_rows = lut.lut_q.shape[0]
+    else:
+        dists = adc_distances(lut, codes, sizes, strat)
+        n_rows = lut.shape[0]
+    nq = n_rows // nprobe
+    cand_d = dists.reshape(nq, nprobe * clusters.cmax)
+    cand_i = ids.reshape(nq, nprobe * clusters.cmax)
+    cand_d = mask_scoped_distances(cand_d, cand_i, meta_tenant, meta_tags,
+                                   q_tenants, q_terms)
+    bd, bi = topk_smallest(cand_d, cand_i, k)
+    return bd, jnp.where(jnp.isfinite(bd), bi, -1)
+
+
+@functools.partial(jax.jit, static_argnames=("k", "strategy", "nprobe"))
+def _dc_ts_tasks_scoped(lut, codes, ids, sizes, meta_tenant, meta_tags,
+                        q_tenants, q_terms, *, k: int, strategy: str,
+                        nprobe: int):
+    """Scoped :func:`_dc_ts_tasks` — the tiered fetch path with the
+    tenant/predicate mask applied before TS (see ``_dc_ts_scoped``)."""
+    strat = "gather" if strategy == "gather" else "onehot"
+    if isinstance(lut, QuantizedLUT):
+        dists = adc_distances_quantized(lut, codes, sizes, strat)
+        n_rows = lut.lut_q.shape[0]
+    else:
+        dists = adc_distances(lut, codes, sizes, strat)
+        n_rows = lut.shape[0]
+    nq = n_rows // nprobe
+    cmax = codes.shape[1]
+    cand_d = dists.reshape(nq, nprobe * cmax)
+    cand_i = ids.reshape(nq, nprobe * cmax)
+    cand_d = mask_scoped_distances(cand_d, cand_i, meta_tenant, meta_tags,
+                                   q_tenants, q_terms)
+    bd, bi = topk_smallest(cand_d, cand_i, k)
+    return bd, jnp.where(jnp.isfinite(bd), bi, -1)
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("k", "strategy", "nprobe", "lut_u8"))
+def _scoped_search_fused(queries, centroids, rotation, codebook,
+                         clusters: PaddedClusters, allowed, meta_tenant,
+                         meta_tags, q_tenants, q_terms, *, k: int,
+                         strategy: str, nprobe: int, lut_u8: bool):
+    """The whole scoped five-phase pipeline in one jit (PR 10).
+
+    Running the scoped phases as separate jits (masked CL, RC, LC,
+    DC/TS) plus the host roundtrips between them cost several ms of
+    dispatch per batch — more than the Eq. 15 modeled service time, so
+    paced scoped serving was compute-bound where unscoped serving was
+    model-bound.  The all-resident no-cache scoped path fuses to one
+    dispatch here; the tiered / LUT-cached scoped paths keep the staged
+    ``_search_tasks`` route (their host-side fetch is the point).  Same
+    ops in the same order as the staged path: masked CL, RC, LC, DC,
+    scope mask, TS, id epilogue.
+    """
+    probes, _ = cluster_locate_masked(queries, centroids, nprobe, allowed)
+    residual = queries[:, None, :] - centroids[probes]
+    if rotation is not None:
+        residual = residual @ rotation
+    flat_res = residual.reshape(queries.shape[0] * nprobe, -1)
+    lut = build_lut_batch(codebook, flat_res)
+    if lut_u8:
+        lut = quantize_lut(lut)
+    flat_probes = probes.reshape(-1)
+    codes = clusters.codes[flat_probes]
+    ids = clusters.ids[flat_probes]
+    sizes = clusters.sizes[flat_probes]
+    strat = "gather" if strategy == "gather" else "onehot"
+    if lut_u8:
+        dists = adc_distances_quantized(lut, codes, sizes, strat)
+    else:
+        dists = adc_distances(lut, codes, sizes, strat)
+    nq = queries.shape[0]
+    cand_d = dists.reshape(nq, nprobe * clusters.cmax)
+    cand_i = ids.reshape(nq, nprobe * clusters.cmax)
+    cand_d = mask_scoped_distances(cand_d, cand_i, meta_tenant, meta_tags,
+                                   q_tenants, q_terms)
+    bd, bi = topk_smallest(cand_d, cand_i, k)
+    return bd, jnp.where(jnp.isfinite(bd), bi, -1)
+
+
 class LocalEngine:
     """Single-device five-phase pipeline behind the serving protocol.
 
@@ -212,7 +326,8 @@ class LocalEngine:
                  lut_cache: Optional[HotClusterLUTCache] = None,
                  tiered_store=None,
                  coarse: Optional[Coarse2] = None,
-                 coarse_nprobe1: int = 0):
+                 coarse_nprobe1: int = 0,
+                 meta: Optional[VectorMeta] = None):
         _warn_direct_use("LocalEngine")
         if (lut_cache is not None
                 and getattr(lut_cache, "lut_dtype", "f32")
@@ -239,6 +354,9 @@ class LocalEngine:
                                else (coarse.n_groups if coarse is not None
                                      else 0))
         self.k = params.k
+        # per-vector metadata for tenant-scoped / predicate-filtered
+        # search (PR 10); None = the legacy single-tenant engine
+        self.meta = meta
         # per-batch degrade report, re-stamped by every search_batch call;
         # the serving runtime reads it to flag requests as degraded
         self.last_batch_info: dict = {"degraded": False, "dropped_probes": 0}
@@ -282,10 +400,33 @@ class LocalEngine:
 
     def search_batch(self, queries: np.ndarray,
                      n_valid: Optional[int] = None,
-                     budget_s: Optional[float] = None
+                     budget_s: Optional[float] = None,
+                     tenants: Optional[np.ndarray] = None,
+                     terms: Optional[np.ndarray] = None
                      ) -> Tuple[np.ndarray, np.ndarray]:
         index, clusters, _ = self._view
         self.last_batch_info = {"degraded": False, "dropped_probes": 0}
+        scope = self._make_scope(tenants, terms)
+        if scope is not None:
+            if self.tiered_store is None and self.lut_cache is None:
+                # all-resident, no cache: one fused dispatch (an
+                # all-true row of ``allowed`` reduces masked CL to
+                # plain CL exactly, so unscoped tenants in a mixed
+                # batch rank identically to the fast path)
+                p = self.params
+                allowed = self.meta.allowed_for(
+                    scope[4], index.centroids.shape[0])
+                bd, bi = _scoped_search_fused(
+                    jnp.asarray(queries, jnp.float32), index.centroids,
+                    index.rotation, index.codebook, clusters,
+                    jnp.asarray(allowed), scope[0], scope[1], scope[2],
+                    scope[3], k=p.k, strategy=p.strategy,
+                    nprobe=p.nprobe, lut_u8=p.lut_dtype == "uint8")
+                return np.asarray(bd), np.asarray(bi)
+            # tiered / LUT-cached scoped traffic runs the task path:
+            # same LC/DC math, plus the tenant/predicate mask before TS
+            return self._search_tasks(np.asarray(queries, np.float32),
+                                      n_valid, budget_s, scope=scope)
         if self.tiered_store is not None or self.coarse is not None:
             return self._search_tasks(np.asarray(queries, np.float32),
                                       n_valid, budget_s)
@@ -296,6 +437,37 @@ class LocalEngine:
             return np.asarray(d), np.asarray(i)
         return self._search_cached(np.asarray(queries, np.float32),
                                    n_valid)
+
+    def _make_scope(self, tenants, terms):
+        """Package per-query scope arrays (PR 10 tenant namespaces and
+        predicate filters) for the scoped scan variants.
+
+        Returns None when the batch carries no scope at all, so legacy
+        traffic stays on the exact pre-tenancy code paths (bit-compat).
+        The scope tuple is ``(meta_tenant, meta_tags, q_tenants_dev,
+        q_terms_dev, q_tenants_host)`` — device tables are
+        version-cached on the VectorMeta so a steady state re-transfers
+        nothing."""
+        if tenants is None and terms is None:
+            return None
+        if self.meta is None:
+            raise ValueError(
+                "tenant/filtered search needs an engine built with "
+                "per-vector metadata (ServiceSpec tenants / tagged "
+                "upserts); this engine has meta=None")
+        if self.coarse is not None:
+            raise ValueError("scoped search is not supported with the "
+                             "two-level coarse router (spec validation "
+                             "rejects tenants + coarse_groups)")
+        if tenants is None:
+            tenants = np.full(len(terms), -1, np.int32)
+        tenants = np.asarray(tenants, np.int32)
+        if terms is None:
+            terms = np.full((tenants.shape[0], self.meta.tag_fields),
+                            NO_TAG, np.uint32)
+        terms = np.asarray(terms, np.uint32)
+        mt, mg = self.meta.device_tables()
+        return (mt, mg, jnp.asarray(tenants), jnp.asarray(terms), tenants)
 
     def serving_info(self) -> dict:
         """Engine-side metrics block (tier residency, routing mode)."""
@@ -366,7 +538,8 @@ class LocalEngine:
 
     def _search_tasks(self, queries: np.ndarray,
                       n_valid: Optional[int] = None,
-                      budget_s: Optional[float] = None):
+                      budget_s: Optional[float] = None,
+                      scope=None):
         """Tiered / two-level path: route, fetch task tensors through the
         tier (resident slab hit or batched mmap cold read), scan.
 
@@ -386,7 +559,20 @@ class LocalEngine:
         """
         p = self.params
         index, clusters, vgen = self._view    # one atomic read per batch
-        probes, flat_res = self._route(jnp.asarray(queries), index)
+        queries_j = jnp.asarray(queries)
+        if scope is not None and (scope[4] >= 0).any():
+            # tenant namespaces: CL ranks only the tenant's member
+            # clusters (per-tenant cluster bitmap), so nprobe probes land
+            # where that tenant's rows actually live
+            allowed = self.meta.allowed_for(scope[4],
+                                            index.centroids.shape[0])
+            probes, _ = cluster_locate_masked(queries_j, index.centroids,
+                                              p.nprobe,
+                                              jnp.asarray(allowed))
+            flat_res = _rc_from_probes(queries_j, index.centroids,
+                                       index.rotation, probes)
+        else:
+            probes, flat_res = self._route(queries_j, index)
         probes_np = np.asarray(probes)                     # (Q, P)
         nq, npr = probes_np.shape
         flat_probes = probes_np.reshape(-1)
@@ -406,9 +592,9 @@ class LocalEngine:
                                 flat_res_np[miss_rows])
             lut = stack_lut_bank(luts)
         else:
-            lut = build_lut_batch(index.codebook, flat_res)
-            if p.lut_dtype == "uint8":
-                lut = quantize_lut(lut)
+            lut = (_lc_tasks_u8(index.codebook, flat_res)
+                   if p.lut_dtype == "uint8"
+                   else _lc_tasks(index.codebook, flat_res))
         if tier is not None:
             # deadline-at-risk check: if the predicted cold-fetch cost
             # (online EWMA of measured mmap reads) would overrun the
@@ -427,9 +613,20 @@ class LocalEngine:
             if n_dropped:
                 self.last_batch_info = {"degraded": True,
                                         "dropped_probes": n_dropped}
-            bd, bi = _dc_ts_tasks(lut, jnp.asarray(codes),
-                                  jnp.asarray(ids), jnp.asarray(sizes),
-                                  k=p.k, strategy=p.strategy, nprobe=npr)
+            if scope is not None:
+                bd, bi = _dc_ts_tasks_scoped(
+                    lut, jnp.asarray(codes), jnp.asarray(ids),
+                    jnp.asarray(sizes), scope[0], scope[1], scope[2],
+                    scope[3], k=p.k, strategy=p.strategy, nprobe=npr)
+            else:
+                bd, bi = _dc_ts_tasks(lut, jnp.asarray(codes),
+                                      jnp.asarray(ids), jnp.asarray(sizes),
+                                      k=p.k, strategy=p.strategy,
+                                      nprobe=npr)
+        elif scope is not None:
+            bd, bi = _dc_ts_scoped(lut, jnp.asarray(flat_probes), clusters,
+                                   scope[0], scope[1], scope[2], scope[3],
+                                   k=p.k, strategy=p.strategy, nprobe=npr)
         else:
             bd, bi = _dc_ts(lut, jnp.asarray(flat_probes), clusters,
                             k=p.k, strategy=p.strategy, nprobe=npr)
@@ -477,13 +674,22 @@ class ShardedEngine:
         return getattr(self.engine, "last_batch_info",
                        {"degraded": False, "dropped_probes": 0})
 
+    @property
+    def meta(self):
+        return getattr(self.engine, "meta", None)
+
     def search_batch(self, queries: np.ndarray,
                      n_valid: Optional[int] = None,
-                     budget_s: Optional[float] = None
+                     budget_s: Optional[float] = None,
+                     tenants: Optional[np.ndarray] = None,
+                     terms: Optional[np.ndarray] = None
                      ) -> Tuple[np.ndarray, np.ndarray]:
+        kw: dict = {}
+        if tenants is not None or terms is not None:
+            kw["tenants"], kw["terms"] = tenants, terms
         d, i, _info = self.engine.search(jnp.asarray(queries, jnp.float32),
                                          n_valid=n_valid,
-                                         budget_s=budget_s)
+                                         budget_s=budget_s, **kw)
         return np.asarray(d), np.asarray(i)
 
 
@@ -546,10 +752,14 @@ class PimPacedEngine:
 
     def search_batch(self, queries: np.ndarray,
                      n_valid: Optional[int] = None,
-                     budget_s: Optional[float] = None
+                     budget_s: Optional[float] = None,
+                     tenants: Optional[np.ndarray] = None,
+                     terms: Optional[np.ndarray] = None
                      ) -> Tuple[np.ndarray, np.ndarray]:
         t0 = time.perf_counter()
-        kw = {} if budget_s is None else {"budget_s": budget_s}
+        kw = {k: v for k, v in (("budget_s", budget_s),
+                                ("tenants", tenants),
+                                ("terms", terms)) if v is not None}
         d, i = self.engine.search_batch(queries, n_valid=n_valid, **kw)
         n = n_valid if n_valid is not None else len(queries)
         if n > 0:
@@ -595,6 +805,9 @@ class ServingStats:
         self.t_last_done: Optional[float] = None
         self.degraded_requests = 0
         self.deadline_missed = 0
+        # per-tenant latency rollups (PR 10): tenant id -> latency list;
+        # unscoped requests (tenant -1) stay out of the breakdown
+        self.tenant_latencies: dict = {}
         self._lock = threading.Lock()
 
     def record_arrival(self, req: Request, depth: int) -> None:
@@ -613,6 +826,9 @@ class ServingStats:
     def record_done(self, req: Request) -> None:
         with self._lock:
             self.latencies_s.append(req.latency_s)
+            if req.tenant >= 0:
+                self.tenant_latencies.setdefault(req.tenant,
+                                                 []).append(req.latency_s)
             if req.degraded:
                 self.degraded_requests += 1
             if req.deadline_missed:
@@ -638,7 +854,15 @@ class ServingStats:
             return self._summary_locked(n, span, slots, valid, reasons)
 
     def _summary_locked(self, n, span, slots, valid, reasons) -> dict:
+        tenants = {
+            int(t): {
+                "requests": len(ls),
+                "p50_ms": _percentile(ls, 50) * 1e3,
+                "p99_ms": _percentile(ls, 99) * 1e3,
+                "qps": len(ls) / span if span > 0 else float("nan"),
+            } for t, ls in sorted(self.tenant_latencies.items())}
         return {
+            **({"tenants": tenants} if tenants else {}),
             "requests": n,
             "batches": len(self.batches),
             "p50_ms": _percentile(self.latencies_s, 50) * 1e3,
@@ -676,6 +900,7 @@ class ServingConfig:
     max_wait_s: float = 2e-3          # deadline flush bound
     max_batch: Optional[int] = None   # default: largest bucket
     deadline_s: float = 0.0           # 0 = no per-request deadline
+    filter_width: int = 4             # predicate terms per query (PR 10)
 
     def make_batcher(self) -> MicroBatcher:
         return MicroBatcher(BucketPolicy(self.buckets),
@@ -736,6 +961,16 @@ class ServingRuntime:
             for b in self.batcher.policy.buckets:
                 self.engine.search_batch(np.zeros((b, d), np.float32),
                                          n_valid=0)
+            if getattr(self.engine, "meta", None) is not None:
+                # scoped traffic runs distinct jit signatures (masked CL
+                # + scoped DC/TS); compile those per bucket too, with a
+                # tenant id present so the masked-CL branch is exercised
+                w = self.config.filter_width
+                for b in self.batcher.policy.buckets:
+                    self.engine.search_batch(
+                        np.zeros((b, d), np.float32), n_valid=0,
+                        tenants=np.zeros(b, np.int32),
+                        terms=np.full((b, w), NO_TAG, np.uint32))
             precompile = getattr(self.engine, "precompile_lc", None)
             if cache is not None and precompile is not None:
                 nprobe = (getattr(self.engine, "nprobe", None)
@@ -748,10 +983,14 @@ class ServingRuntime:
 
     # -- online API --------------------------------------------------------
     def submit(self, query: np.ndarray, now: float,
-               attach=None) -> Request:
+               attach=None, tenant: int = -1,
+               terms: Tuple[int, ...] = ()) -> Request:
         """Queue one request; ``attach(req)`` binds a future under the
-        batcher lock (see ``MicroBatcher.submit``)."""
-        req = self.batcher.submit(query, now, attach=attach)
+        batcher lock (see ``MicroBatcher.submit``).  ``tenant`` >= 0
+        scopes the search to that tenant's namespace; ``terms`` are
+        predicate tags (OR semantics) filtered inside the scan mask."""
+        req = self.batcher.submit(query, now, attach=attach,
+                                  tenant=tenant, terms=terms)
         self.stats.record_arrival(req, self.batcher.depth)
         return req
 
@@ -799,6 +1038,11 @@ class ServingRuntime:
             deadline = (min(r.t_arrival for r in batch.requests)
                         + self.config.deadline_s)
             kwargs["budget_s"] = deadline - (t_start + slept)
+        # scoped batches carry per-row tenant/term arrays; unscoped
+        # batches pass nothing so the engine stays on the legacy path
+        if batch.scoped:
+            kwargs["tenants"], kwargs["terms"] = batch.scope_arrays(
+                self.config.filter_width)
         t0 = time.perf_counter()
         try:
             d, i = self.engine.search_batch(batch.queries,

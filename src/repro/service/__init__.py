@@ -9,8 +9,13 @@ executor-backed replicas (:class:`ReplicaExecutor`), a multi-replica
 :class:`Router` with round-robin, least-queue, and cache-aware
 policies, and an :class:`Autoscaler` that moves the live fleet inside
 ``[replicas, replicas_max]`` from queue-depth/p99 signals.
+Multi-tenant serving (PR 10) layers per-tenant namespaces + predicate
+filters (``repro.core.filter``) under per-tenant QoS
+(:class:`TenantRegistry` token buckets + :class:`WFQScheduler` weighted
+fair queueing; over-quota submits raise :class:`TenantThrottled`).
 ``python -m repro.service --selftest`` runs an end-to-end smoke (both
-stream clocks); ``--spec deploy.json`` boots a fleet from a file;
+stream clocks); ``--selftest-tenants`` the multi-tenant isolation/quota
+smoke; ``--spec deploy.json`` boots a fleet from a file;
 ``--autotune`` searches configurations against the perf model
 (:func:`~repro.core.autotune.autotune`) and emits a spec meeting a
 declared :class:`~repro.core.autotune.SLO`.
@@ -24,8 +29,10 @@ from repro.service.mutation import MutationCoordinator
 from repro.service.router import (CacheAwarePolicy, LeastQueuePolicy,
                                   RoundRobinPolicy, Router, RoutingPolicy,
                                   make_policy)
-from repro.service.service import AnnService, Replica, ServiceOverloaded
+from repro.service.service import (AnnService, Replica, ServiceOverloaded,
+                                   TenantThrottled)
 from repro.service.spec import SPEC_VERSION, IndexSpec, ServiceSpec
+from repro.service.tenancy import TenantRegistry, TokenBucket, WFQScheduler
 
 __all__ = ["AnnService", "Replica", "ServiceOverloaded", "IndexSpec",
            "ServiceSpec",
@@ -34,5 +41,7 @@ __all__ = ["AnnService", "Replica", "ServiceOverloaded", "IndexSpec",
            "Router", "RoutingPolicy", "RoundRobinPolicy",
            "LeastQueuePolicy", "CacheAwarePolicy", "make_policy",
            "MutationCoordinator",
+           "TenantThrottled", "TenantRegistry", "TokenBucket",
+           "WFQScheduler",
            "SLO", "TuneSpace", "AutotuneResult", "SLOInfeasible",
            "autotune", "autotune_service"]

@@ -50,29 +50,57 @@ class SearchFuture:
     re-binds the future to the retried request.
     """
 
-    def __init__(self, request: Request, replica: int):
+    def __init__(self, request: Optional[Request] = None,
+                 replica: int = -1):
         self._event = threading.Event()
         self._request = request
         self._error: Optional[BaseException] = None
-        request.future = self
-        request.replica = replica
+        self._callbacks: list = []
+        self._cb_lock = threading.Lock()
+        if request is not None:
+            request.future = self
+            request.replica = replica
 
     # -- runtime-facing ---------------------------------------------------
-    def _rebind(self, request: Request, replica: int) -> None:
-        """Point this future at a retried request on another replica."""
-        request.retried = True
+    def _bind(self, request: Request, replica: int) -> None:
+        """First binding of a deferred future (WFQ-held submit) to the
+        request the dispatch created."""
         request.future = self
         request.replica = replica
         self._request = request
+
+    def _rebind(self, request: Request, replica: int) -> None:
+        """Point this future at a retried request on another replica."""
+        request.retried = True
+        self._bind(request, replica)
 
     def _resolve(self, request: Request) -> None:
         """Called by ``ServingRuntime._serve`` once results are stamped."""
         if request is self._request:      # a stale pre-retry request loses
             self._event.set()
+            self._run_callbacks()
 
     def _fail(self, error: BaseException) -> None:
         self._error = error
         self._event.set()
+        self._run_callbacks()
+
+    def _run_callbacks(self) -> None:
+        with self._cb_lock:
+            cbs, self._callbacks = self._callbacks, []
+        for cb in cbs:
+            cb(self)
+
+    def add_done_callback(self, fn) -> None:
+        """Run ``fn(self)`` once the future resolves or fails (on the
+        resolving thread); immediately if it already did.  Each callback
+        fires exactly once even across retries (resolve fires only for
+        the currently bound request)."""
+        with self._cb_lock:
+            if not self._event.is_set():
+                self._callbacks.append(fn)
+                return
+        fn(self)
 
     # -- caller-facing ----------------------------------------------------
     @property
@@ -157,15 +185,17 @@ class ReplicaExecutor:
         return self
 
     def submit(self, query: np.ndarray, now: Optional[float] = None,
-               attach=None) -> Request:
+               attach=None, tenant: int = -1,
+               terms: Tuple[int, ...] = ()) -> Request:
         """Enqueue one query (router thread); wakes the worker so a
         flush-on-full fires immediately rather than at the deadline.
         ``attach(req)`` binds a future before the worker can see the
-        request (it runs under the batcher lock)."""
+        request (it runs under the batcher lock).  ``tenant``/``terms``
+        scope the request (see repro.core.filter)."""
         req = self.runtime.submit(
             np.asarray(query, np.float32),
             float(now) if now is not None else self.clock(),
-            attach=attach)
+            attach=attach, tenant=tenant, terms=terms)
         with self._cond:
             self._cond.notify()
         return req

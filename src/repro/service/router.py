@@ -222,6 +222,10 @@ class Router:
         self._depth_fn = depth_fn
         self._probe_fn = probe_fn
         self.picks: List[int] = [0] * self.n_replicas
+        # per-tenant pick counts (tenant id -> per-replica list): shows
+        # whether QoS interleaving upstream still spreads each tenant's
+        # dispatches across the fleet (only scoped requests are tracked)
+        self.tenant_picks: dict = {}
 
     def resize(self, n_replicas: int) -> None:
         """Follow an autoscale event: route over the new live fleet.
@@ -242,7 +246,7 @@ class Router:
         :meth:`RoutingPolicy.invalidate_clusters`)."""
         self.policy.invalidate_clusters(int(nlist))
 
-    def route(self, query: np.ndarray) -> int:
+    def route(self, query: np.ndarray, tenant: int = -1) -> int:
         probes = (self._probe_fn(query) if self.policy.wants_probes
                   else None)
         depths = [self._depth_fn(r) for r in range(self.n_replicas)]
@@ -251,9 +255,35 @@ class Router:
             raise ValueError(f"policy {self.policy.name!r} picked replica "
                              f"{r} of {self.n_replicas}")
         self.picks[r] += 1
+        if tenant >= 0:
+            per = self.tenant_picks.setdefault(int(tenant),
+                                               [0] * len(self.picks))
+            if len(per) < len(self.picks):
+                per += [0] * (len(self.picks) - len(per))
+            per[r] += 1
         self.policy.observe(r, probes)
         return r
 
+    def record(self, r: int, tenant: int = -1) -> None:
+        """Account a dispatch that reused a prior pick (sticky WFQ
+        chunking upstream) without consulting the policy — pick counts
+        must still sum to the dispatched request count.  The policy's
+        ``observe`` is not called: a sticky repeat is a batching
+        decision, not an affinity signal."""
+        if not 0 <= r < self.n_replicas:
+            raise ValueError(f"record: replica {r} of {self.n_replicas}")
+        self.picks[r] += 1
+        if tenant >= 0:
+            per = self.tenant_picks.setdefault(int(tenant),
+                                               [0] * len(self.picks))
+            if len(per) < len(self.picks):
+                per += [0] * (len(self.picks) - len(per))
+            per[r] += 1
+
     def stats(self) -> dict:
-        return {"policy": self.policy.name, "picks": list(self.picks),
-                "live": self.n_replicas}
+        out = {"policy": self.policy.name, "picks": list(self.picks),
+               "live": self.n_replicas}
+        if self.tenant_picks:
+            out["tenant_picks"] = {t: list(p) for t, p in
+                                   sorted(self.tenant_picks.items())}
+        return out

@@ -64,6 +64,7 @@ from typing import List, Optional, Sequence, Tuple
 import jax.numpy as jnp
 import numpy as np
 
+from repro.core.filter import VectorMeta, pad_terms
 from repro.core.mutable_index import Index
 from repro.core.search import SearchParams, cluster_locate
 from repro.core.sharded_search import DistributedEngine, EngineConfig
@@ -79,6 +80,7 @@ from repro.service.autoscale import Autoscaler, ScaleSignals
 from repro.service.executor import ReplicaExecutor, SearchFuture
 from repro.service.router import Router, make_policy
 from repro.service.spec import ServiceSpec
+from repro.service.tenancy import TenantRegistry, WFQScheduler
 
 
 class ServiceOverloaded(RuntimeError):
@@ -87,6 +89,14 @@ class ServiceOverloaded(RuntimeError):
     *fast rejection* (the caller can shed or retry elsewhere) instead of
     letting the queue — and every queued request's latency — grow
     without bound."""
+
+
+class TenantThrottled(ServiceOverloaded):
+    """Raised by the submit path when a tenant's token bucket is out of
+    tokens (``ServiceSpec.tenants`` rate_qps/burst): per-tenant
+    admission control sheds *that tenant's* excess instead of letting it
+    queue ahead of everyone else.  Subclasses :class:`ServiceOverloaded`
+    so overload-aware callers need no new handler."""
 
 
 @dataclasses.dataclass
@@ -157,7 +167,20 @@ class AnnService:
         self._sample_queries = None
         self._serving_cfg = ServingConfig(
             buckets=tuple(spec.buckets), max_wait_s=spec.max_wait_s,
-            deadline_s=spec.deadline_ms * 1e-3)
+            deadline_s=spec.deadline_ms * 1e-3,
+            filter_width=spec.filter_width)
+        # multi-tenant QoS (PR 10): name<->id registry + token buckets,
+        # and (qos_wfq) weighted fair queueing on the executor path
+        self.tenancy: Optional[TenantRegistry] = (
+            TenantRegistry(spec.tenants) if spec.tenants else None)
+        self.wfq: Optional[WFQScheduler] = None
+        if spec.qos_wfq:
+            window = spec.qos_window or (
+                len(self.replicas) * max(spec.buckets))
+            self.wfq = WFQScheduler(self.tenancy, window)
+        # sticky WFQ dispatch anchor: (replica, remaining chunk) — see
+        # _dispatch_executor
+        self._wfq_anchor = (-1, 0)
         # mutation coordinator (wired by build() when spec.mutable)
         self.mutator = None
         for i, rep in enumerate(self.replicas):
@@ -167,6 +190,7 @@ class AnnService:
     @classmethod
     def build(cls, spec: ServiceSpec, points=None, *,
               index=None, sample_queries=None,
+              tenants=None, tags=None,
               fault_injector=None) -> "AnnService":
         """Stand up the whole service from a validated spec.
 
@@ -177,7 +201,14 @@ class AnnService:
         handle (needs ``points``, or an already-mutable handle) and
         ``upsert``/``delete``/``run_maintenance`` come alive.
         ``sample_queries`` seeds the sharded engine's heat estimate
-        (falls back to a slice of the corpus).  ``fault_injector``
+        (falls back to a slice of the corpus).
+
+        ``tenants`` (per-vector owning tenant ids, (N,) int, -1 =
+        unscoped) and ``tags`` (per-vector predicate tags, (N, <=
+        ``spec.filter_width``) u32) attach a :class:`~repro.core.filter.
+        VectorMeta` to the index handle; with ``spec.tenants`` set the
+        meta is attached even when both are None (tenant rows then
+        arrive via scoped ``upsert``).  ``fault_injector``
         (a :class:`~repro.runtime.faults.FaultInjector`) arms the
         whole stack's chaos hooks — engines, tier, maintenance — for
         fault-injection tests; None (production) leaves every hook a
@@ -215,6 +246,9 @@ class AnnService:
             handle = Index(index, points=points, mutable=spec.mutable,
                            **storage_kw)
 
+        if spec.tenants or tenants is not None or tags is not None:
+            cls._attach_meta(spec, handle, tenants, tags)
+
         sample_probes = None
         sample_np = None
         if spec.engine == "sharded":
@@ -232,7 +266,8 @@ class AnnService:
 
         serving_cfg = ServingConfig(buckets=tuple(spec.buckets),
                                     max_wait_s=spec.max_wait_s,
-                                    deadline_s=spec.deadline_ms * 1e-3)
+                                    deadline_s=spec.deadline_ms * 1e-3,
+                                    filter_width=spec.filter_width)
         replicas: List[Replica] = []
         with service_construction():
             for _ in range(spec.replicas):
@@ -265,6 +300,44 @@ class AnnService:
         if fault_injector is not None:
             svc._arm_faults(fault_injector)
         return svc
+
+    @staticmethod
+    def _attach_meta(spec: ServiceSpec, handle: Index,
+                     tenants, tags) -> VectorMeta:
+        """Build the id-keyed :class:`VectorMeta` tables for the handle:
+        per-vector tenant/tags from the caller's arrays (row i = vector
+        id i, the build's id assignment), cluster_of from the handle's
+        live layout (padded clusters, or the tier's per-cluster id rows
+        — meta stays RAM-resident either way)."""
+        meta = VectorMeta(tag_fields=spec.filter_width)
+        n = None
+        if tenants is not None:
+            tenants = np.asarray(tenants, np.int32).reshape(-1)
+            n = tenants.size
+        if tags is not None:
+            tags = np.asarray(tags, np.uint32)
+            if tags.ndim == 1:
+                tags = tags[:, None]
+            if n is not None and len(tags) != n:
+                raise ValueError(
+                    f"tenants ({n}) and tags ({len(tags)}) must describe "
+                    f"the same vectors")
+            n = len(tags)
+        if n:
+            meta.set(np.arange(n), tenant=tenants, tags=tags)
+        tier = handle.tiered_store
+        if tier is not None:
+            for c in range(handle.nlist):
+                _, ids_c = tier.peek(c)
+                row = np.asarray(ids_c)[:int(tier.sizes[c])]
+                row = row[row >= 0]
+                if row.size:
+                    meta.set(row, cluster=c)
+        else:
+            cl = handle.clusters
+            meta.rebuild_clusters(np.asarray(cl.ids), np.asarray(cl.sizes))
+        handle.meta = meta
+        return meta
 
     def _arm_faults(self, injector) -> None:
         """Attach one FaultInjector to every chaos hook in the stack."""
@@ -348,7 +421,8 @@ class AnnService:
                                             lut_dtype=spec.lut_dtype),
                                lut_cache=cache, tiered_store=tier,
                                coarse=coarse,
-                               coarse_nprobe1=spec.coarse_nprobe1)
+                               coarse_nprobe1=spec.coarse_nprobe1,
+                               meta=index.meta)
             return Replica(ServingRuntime(pace(core), serving_cfg), core,
                            core, cache, None)
         est = None
@@ -369,7 +443,8 @@ class AnnService:
         core = DistributedEngine(index.to_ivfpq(), EngineConfig(**cfg_kwargs),
                                  sample_probes, lut_cache=cache,
                                  heat_estimator=est,
-                                 tiered_store=index.tiered_store)
+                                 tiered_store=index.tiered_store,
+                                 meta=index.meta)
         if spec.tune_tasks_per_shard:
             core.tasks_controller = core.make_tasks_controller()
         adapter = ShardedEngine(core)
@@ -460,15 +535,24 @@ class AnnService:
                 f"ServiceSpec(mutable=True) and the points array")
         return self.mutator
 
-    def upsert(self, ids, vectors) -> dict:
+    def upsert(self, ids, vectors, *, tenant=None, tags=None) -> dict:
         """Insert or replace vectors in the live index: assign to the
         nearest centroid, encode with the live PQ codebooks, append to
         the per-cluster code arrays, and install the new tensors on
         every replica (centroids/codebooks unchanged, so LUT caches stay
         valid).  Visible to the next search batch.  Returns insert/
-        replace counts (see :meth:`Index.upsert`)."""
+        replace counts (see :meth:`Index.upsert`).
+
+        ``tenant`` (name or id) / ``tags`` scope the upserted vectors
+        (needs a service built with per-vector metadata); omitting them
+        stamps the rows unscoped — a recycled id never inherits its
+        previous owner's scope."""
         self._check_open()
-        return self._require_mutable("upsert").upsert(ids, vectors)
+        mut = self._require_mutable("upsert")
+        if tenant is None and tags is None:
+            return mut.upsert(ids, vectors)
+        return mut.upsert(ids, vectors,
+                          tenant=self._resolve_tenant(tenant), tags=tags)
 
     def delete(self, ids) -> int:
         """Remove ids from the live index (swap-compacted out of the
@@ -489,21 +573,48 @@ class AnnService:
         return self._require_mutable("run_maintenance").run_maintenance(
             force=force, wait=wait)
 
+    # -- tenant scoping ------------------------------------------------------
+    def _resolve_tenant(self, tenant) -> int:
+        """Tenant name/int/None -> int id (-1 = unscoped)."""
+        if self.tenancy is not None:
+            return self.tenancy.resolve(tenant)
+        if tenant is None:
+            return -1
+        if isinstance(tenant, str):
+            raise KeyError(f"tenant names need ServiceSpec.tenants; got "
+                           f"{tenant!r} on a spec without a tenants "
+                           f"section (pass the int tenant id instead)")
+        return int(tenant)
+
     # -- synchronous batch API ---------------------------------------------
-    def search(self, queries) -> Tuple[np.ndarray, np.ndarray]:
+    def search(self, queries, tenant=None,
+               terms=()) -> Tuple[np.ndarray, np.ndarray]:
         """One batched search, bypassing the micro-batcher (offline /
         bulk callers).  Batches rotate over live replicas round-robin;
         results are replica-independent.  With 1 replica, a local
-        engine, and no cache this is exactly ``search_ivfpq``."""
+        engine, and no cache this is exactly ``search_ivfpq``.
+
+        ``tenant`` (name or int id) scopes every query in the batch to
+        that tenant's rows; ``terms`` (u32 tags, OR semantics) filters
+        to rows carrying any of them.  Needs a service built with
+        per-vector metadata.  Quotas do not apply on this offline path
+        (admission control guards the *online* submit paths)."""
         self._check_open()
         r = self._batch_rr % self.n_replicas
         self._batch_rr += 1
+        q = np.asarray(queries, np.float32)
+        tid = self._resolve_tenant(tenant)
+        if tid < 0 and not len(tuple(terms)):
+            return self.replicas[r].engine.search_batch(q)
+        tenants_arr = np.full(len(q), tid, np.int32)
+        terms_arr = pad_terms([tuple(terms)] * len(q),
+                              self.spec.filter_width)
         return self.replicas[r].engine.search_batch(
-            np.asarray(queries, np.float32))
+            q, tenants=tenants_arr, terms=terms_arr)
 
     # -- async request lifecycle --------------------------------------------
-    def _route_and_submit(self, query, now: float,
-                          executor: bool) -> SearchFuture:
+    def _route_and_submit(self, query, now: float, executor: bool,
+                          tenant: int = -1, terms=()) -> SearchFuture:
         """The one submit path: route, enqueue, bind a future.  The
         future is attached under the batcher lock, so an executor worker
         can never serve the request before the future exists.
@@ -524,8 +635,21 @@ class AnnService:
         With ``spec.queue_bound`` set the submit path is *admission
         controlled*: once that many requests are in flight fleet-wide,
         submits fail fast with :class:`ServiceOverloaded` instead of
-        queueing without bound."""
+        queueing without bound.
+
+        Multi-tenant QoS (PR 10) layers in front: a scoped request
+        first passes its tenant's token bucket (over quota ->
+        :class:`TenantThrottled`, on both clock paths), and with
+        ``spec.qos_wfq`` the executor path holds the request in the
+        :class:`~repro.service.tenancy.WFQScheduler` — routing happens
+        at *dispatch* time, so depth-aware policies see the fleet as it
+        is when the request actually enters it."""
         q = np.asarray(query, np.float32)
+        if tenant >= 0 and self.tenancy is not None \
+                and not self.tenancy.admit(tenant, now):
+            raise TenantThrottled(
+                f"tenant {self.tenancy.name_of(tenant)!r} is over its "
+                f"token-bucket quota; shedding")
         bound = self.spec.queue_bound
         if bound and executor:
             depth = sum(rep.queue_depth for rep in self.live_replicas)
@@ -534,7 +658,19 @@ class AnnService:
                 raise ServiceOverloaded(
                     f"queue_bound={bound} in-flight requests already "
                     f"queued (depth={depth}); shedding")
-        r = self.router.route(q)
+        if executor and self.wfq is not None:
+            fut = SearchFuture()
+            fut.add_done_callback(self.wfq.on_complete)
+
+            def dispatch(fut=fut, q=q, now=now, tenant=tenant,
+                         terms=terms) -> None:
+                try:
+                    self._dispatch_executor(q, now, tenant, terms, fut)
+                except BaseException as err:    # noqa: BLE001 — the done
+                    fut._fail(err)              # callback frees the slot
+            self.wfq.submit(tenant, dispatch)
+            return fut
+        r = self.router.route(q, tenant=tenant)
         if executor and not self.health.allow(r):
             with self._scale_lock:
                 alt = self._retry_target(exclude=r)
@@ -546,10 +682,47 @@ class AnnService:
             cell.append(SearchFuture(req, r))
 
         if executor:
-            self._executors[r].submit(q, now=now, attach=attach)
+            self._executors[r].submit(q, now=now, attach=attach,
+                                      tenant=tenant, terms=terms)
         else:
-            self.replicas[r].runtime.submit(q, now, attach=attach)
+            self.replicas[r].runtime.submit(q, now, attach=attach,
+                                            tenant=tenant, terms=terms)
         return cell[0]
+
+    def _dispatch_executor(self, q: np.ndarray, now: float, tenant: int,
+                           terms, fut: SearchFuture) -> None:
+        """WFQ dispatch: route (now, not at submit), steer around open
+        breakers, bind the held future to the enqueued request.
+
+        WFQ dispatches route by *chunked round-robin* instead of the
+        spec's policy: the fair queue releases requests one per
+        completion, and per-request depth-aware routing marches across
+        the fleet with every pick (each pick deepens that replica's
+        queue, so the next pick moves on), shredding the batches the
+        micro-batcher wants to form — measured ~20% aggregate QPS loss
+        under saturation.  A bucket's worth of consecutive dispatches
+        goes to one replica (full batches), then the anchor advances to
+        the next (even spread); tenant interleaving is already the fair
+        queue's job, so the policy's per-request choice adds nothing
+        here.  Health steering still applies and pick accounting stays
+        complete (``Router.record``)."""
+        r, left = self._wfq_anchor
+        if not (0 <= r < self._live) or left <= 0:
+            r = (r + 1) % self._live
+            if not self.health.allow(r):
+                with self._scale_lock:
+                    alt = self._retry_target(exclude=r)
+                if alt is not None:
+                    r = alt
+            left = max(self.spec.buckets)
+        self.router.record(r, tenant=tenant)
+        self._wfq_anchor = (r, left - 1)
+
+        def attach(req: Request, r=r) -> None:
+            fut._bind(req, r)
+
+        self._executors[r].submit(q, now=now, attach=attach,
+                                  tenant=tenant, terms=terms)
 
     def _ensure_executors(self, upto: Optional[int] = None) -> None:
         """Stand up (or top up, after growth) one executor per replica
@@ -564,19 +737,26 @@ class AnnService:
         for ex in self._executors[:self._live if upto is None else upto]:
             ex.start()
 
-    def submit_async(self, query,
-                     now: Optional[float] = None) -> SearchFuture:
+    def submit_async(self, query, now: Optional[float] = None, *,
+                     tenant=None, terms=()) -> SearchFuture:
         """Route one query onto an executor-backed replica; returns a
         :class:`SearchFuture` (``result(timeout)``, ``done()``,
-        ``timing()``).  First call starts the replica workers."""
+        ``timing()``).  First call starts the replica workers.
+        ``tenant`` (name or id) / ``terms`` scope the request; a scoped
+        submit may raise :class:`TenantThrottled` (quota) and, under
+        ``spec.qos_wfq``, may be held by the fair queue before it
+        reaches a replica."""
         self._check_open()
         self._check_wall_ok("submit_async()")
         self._ensure_executors()
         t = float(now) if now is not None else time.monotonic()
-        return self._route_and_submit(query, t, executor=True)
+        return self._route_and_submit(query, t, executor=True,
+                                      tenant=self._resolve_tenant(tenant),
+                                      terms=tuple(terms))
 
     # -- old sync surface: thin wrappers over the same lifecycle -----------
-    def submit(self, query, now: float) -> Request:
+    def submit(self, query, now: float, *, tenant=None,
+               terms=()) -> Request:
         """Route one query and enqueue it on the chosen replica's
         micro-batcher under the caller's (virtual) clock.  Returns the
         live Request (stamped when served; its ``future`` resolves
@@ -584,7 +764,10 @@ class AnnService:
         completion with :meth:`step`."""
         self._check_open()
         self._check_virtual_ok("submit()")
-        return self._route_and_submit(query, now, executor=False).request
+        return self._route_and_submit(
+            query, now, executor=False,
+            tenant=self._resolve_tenant(tenant),
+            terms=tuple(terms)).request
 
     def step(self, now: float, drain: bool = False) -> List[Request]:
         """Advance every live replica's flush policy to time ``now``
@@ -643,10 +826,13 @@ class AnnService:
                 # keep the original arrival stamp: the caller has been
                 # waiting since then, and stats/autoscaling must see the
                 # failover's real latency (the stale deadline also makes
-                # the retry flush immediately)
+                # the retry flush immediately); scope rides along — a
+                # retried tenant query must stay that tenant's
                 self._executors[target].submit(req.query,
                                                now=req.t_arrival,
-                                               attach=attach)
+                                               attach=attach,
+                                               tenant=req.tenant,
+                                               terms=req.terms)
 
     # -- autoscaling ---------------------------------------------------------
     def scale_to(self, n: int) -> None:
@@ -711,9 +897,9 @@ class AnnService:
             self.scale_to(target)
 
     # -- stream drivers ------------------------------------------------------
-    def stream(self, arrivals: Sequence[Tuple[float, np.ndarray]],
+    def stream(self, arrivals: Sequence[Tuple],
                clock: str = "virtual") -> List[Request]:
-        """Replay (t_arrival, query) pairs across the replica fleet.
+        """Replay (t_arrival, query[, tenant]) arrivals across the fleet.
 
         One submit loop, two drivers:
 
@@ -728,8 +914,15 @@ class AnnService:
             replica workers overlap, and (with ``replicas_max`` set)
             the autoscaler moves the live fleet between batches.
 
-        Returns requests in arrival order (same neighbor sets under
-        either clock — pinned in tests)."""
+        Arrivals may carry an optional third element — the tenant (name
+        or int id), as produced by ``data.streams.make_query_stream(
+        tenants=...)``.  A tenant over its token-bucket quota has that
+        arrival *shed* (counted in ``stats()['tenants'][name]['shed']``,
+        absent from the returned list) rather than aborting the replay —
+        that is the quota doing its job under a hot-tenant burst.
+
+        Returns served requests in arrival order (same neighbor sets
+        under either clock — pinned in tests)."""
         self._check_open()
         if clock not in ("virtual", "wall"):
             raise ValueError(f"stream clock must be 'virtual' or 'wall', "
@@ -742,9 +935,14 @@ class AnnService:
         driver = (_WallStreamDriver(self) if clock == "wall"
                   else _VirtualStreamDriver(self))
         interval = self.spec.autoscale_interval
-        for i, (t, query) in enumerate(arrivals):
+        for i, arrival in enumerate(arrivals):
+            t, query = arrival[0], arrival[1]
+            tenant = arrival[2] if len(arrival) > 2 else None
             driver.advance_to(t)
-            driver.submit(query, t)
+            try:
+                driver.submit(query, t, tenant=tenant)
+            except TenantThrottled:
+                pass                    # shed: counted in tenancy stats
             if clock == "wall" and (i + 1) % interval == 0:
                 self._autoscale_tick()
         return driver.finish()
@@ -788,6 +986,11 @@ class AnnService:
             agg["lut_hit_rate"] = hits / lookups
         out = {"aggregate": agg, "router": self.router.stats(),
                "health": self.health.stats(), "replicas": per}
+        tenants = self._tenant_rollup(span)
+        if tenants:
+            out["tenants"] = tenants
+        if self.wfq is not None:
+            out["qos"] = self.wfq.stats()
         if self.faults is not None:
             out["faults"] = self.faults.stats()
         if self.index.tiered_store is not None:
@@ -796,6 +999,38 @@ class AnnService:
             out["autoscaler"] = self.autoscaler.stats()
         if self.mutator is not None:
             out["mutation"] = self.mutator.stats()
+        return out
+
+    def _tenant_rollup(self, span: float) -> dict:
+        """Fleet-wide per-tenant p50/p99/QPS/shed: merge every replica
+        runtime's per-tenant latency lists, then overlay the registry's
+        quota-shed counters (a registered tenant appears even if every
+        one of its requests was shed)."""
+        lat: dict = {}
+        for rep in self.replicas:
+            for tid, ls in rep.runtime.stats.tenant_latencies.items():
+                lat.setdefault(int(tid), []).extend(ls)
+        if not lat and self.tenancy is None:
+            return {}
+        name_of = (self.tenancy.name_of if self.tenancy is not None
+                   else lambda t: str(t))
+        out = {}
+        for tid, ls in sorted(lat.items()):
+            out[name_of(tid)] = {
+                "id": tid,
+                "requests": len(ls),
+                "p50_ms": _percentile(ls, 50) * 1e3,
+                "p99_ms": _percentile(ls, 99) * 1e3,
+                "qps": len(ls) / span if span > 0 else float("nan"),
+                "shed": 0,
+            }
+        if self.tenancy is not None:
+            for name, info in self.tenancy.stats().items():
+                row = out.setdefault(name, {
+                    "id": info["id"], "requests": 0, "p50_ms": 0.0,
+                    "p99_ms": 0.0, "qps": 0.0, "shed": 0})
+                row["shed"] = info["shed"]
+                row["weight"] = info["weight"]
         return out
 
 
@@ -839,8 +1074,10 @@ class _VirtualStreamDriver:
     def advance_to(self, t: float) -> None:
         self._fire_deadlines(until=t)
 
-    def submit(self, query, t: float) -> None:
-        fut = self.svc._route_and_submit(query, t, executor=False)
+    def submit(self, query, t: float, tenant=None) -> None:
+        fut = self.svc._route_and_submit(
+            query, t, executor=False,
+            tenant=self.svc._resolve_tenant(tenant))
         req = fut.request
         self.reqs.append(req)
         r = req.replica
@@ -872,11 +1109,18 @@ class _WallStreamDriver:
         if dt > 0:
             time.sleep(dt)
 
-    def submit(self, query, t: float) -> None:
-        self.futures.append(self.svc.submit_async(query))
+    def submit(self, query, t: float, tenant=None) -> None:
+        self.futures.append(self.svc.submit_async(query, tenant=tenant))
 
     def finish(self) -> List[Request]:
-        for ex in self.svc._executors[:self.svc._live]:
+        svc = self.svc
+        # WFQ holds a backlog outside the batchers: keep force-flushing
+        # so completions keep pulling the queue until it runs dry
+        while svc.wfq is not None and svc.wfq.pending:
+            for ex in svc._executors[:svc._live]:
+                ex.flush()
+            time.sleep(0.002)
+        for ex in svc._executors[:svc._live]:
             ex.flush()
         for fut in self.futures:
             fut.result(timeout=120.0)

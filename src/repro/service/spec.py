@@ -43,10 +43,13 @@ _ROUTERS = ("round_robin", "least_queue", "cache_aware")
 #: (two-level routing) knobs;
 #: v3 -> v4: added the fail-operational knobs (`deadline_ms`,
 #: `queue_bound`, retry/breaker policy, `shutdown_timeout_s`,
-#: `checksum`).  Older deploy files load unchanged (the new knobs
-#: default to off / legacy behavior), but an old-stamped file carrying
-#: newer keys is rejected by name.
-SPEC_VERSION = 4
+#: `checksum`);
+#: v4 -> v5: added multi-tenant serving (`tenants` namespace section,
+#: `filter_width` predicate-term width, `qos_wfq` + `qos_window`
+#: weighted-fair-queueing knobs).  Older deploy files load unchanged
+#: (the new knobs default to off / legacy behavior), but an old-stamped
+#: file carrying newer keys is rejected by name.
+SPEC_VERSION = 5
 
 #: fields that did not exist in spec schema v1 (migration guard)
 _V2_FIELDS = frozenset({"mutable", "mutation_size_band",
@@ -63,6 +66,13 @@ _V4_FIELDS = frozenset({"deadline_ms", "queue_bound", "max_retries",
                         "backoff_base_ms", "breaker_threshold",
                         "breaker_half_open_s", "shutdown_timeout_s",
                         "checksum"})
+
+#: fields added by spec schema v5 (multi-tenant serving)
+_V5_FIELDS = frozenset({"tenants", "filter_width", "qos_wfq",
+                        "qos_window"})
+
+#: per-tenant config keys inside the serialized ``tenants`` mapping
+_TENANT_KEYS = frozenset({"id", "weight", "rate_qps", "burst"})
 
 
 @dataclasses.dataclass(frozen=True)
@@ -263,6 +273,25 @@ class ServiceSpec:
     # False skips checksum compute/verify (trusted local experiments).
     checksum: bool = True
 
+    # -- multi-tenant serving (spec schema v5) -----------------------------
+    # namespaces: per-tenant index views over the shared codebooks /
+    # clusters.  Each entry is (name, id, weight, rate_qps, burst),
+    # sorted by id; the serialized form is a mapping
+    # ``{name: {id, weight, rate_qps, burst}}``.  ``weight`` is the WFQ
+    # share, ``rate_qps``/``burst`` the token-bucket quota (rate 0 = no
+    # quota).  () = single-tenant legacy behavior throughout.
+    tenants: Tuple[Tuple, ...] = ()
+    # width W of the per-query predicate-term array (u32 terms,
+    # NO_TAG-padded): jit shapes for the scoped scans are keyed on it
+    filter_width: int = 4
+    # per-tenant QoS on the wall-clock executor path: token-bucket
+    # admission + weighted fair queueing in front of the router, so a
+    # hot tenant's backlog queues in the scheduler instead of ahead of
+    # quiet tenants' requests
+    qos_wfq: bool = False
+    # WFQ in-flight dispatch window; 0 = auto (replicas x largest bucket)
+    qos_window: int = 0
+
     @property
     def cache_enabled(self) -> bool:
         return self.cache_capacity > 0 or self.cache_capacity_bytes > 0
@@ -444,6 +473,49 @@ class ServiceSpec:
         if self.shutdown_timeout_s <= 0:
             raise ValueError(f"ServiceSpec.shutdown_timeout_s must be "
                              f"positive, got {self.shutdown_timeout_s}")
+        if self.filter_width < 1:
+            raise ValueError(f"ServiceSpec.filter_width must be >= 1, "
+                             f"got {self.filter_width}")
+        names, ids = set(), set()
+        for entry in self.tenants:
+            entry = tuple(entry)
+            if len(entry) != 5:
+                raise ValueError(f"ServiceSpec.tenants entries must be "
+                                 f"(name, id, weight, rate_qps, burst), "
+                                 f"got {entry!r}")
+            name, tid, weight, rate_qps, burst = entry
+            if not isinstance(name, str) or not name:
+                raise ValueError(f"ServiceSpec.tenants: tenant name must "
+                                 f"be a non-empty string, got {name!r}")
+            if name in names:
+                raise ValueError(f"ServiceSpec.tenants: duplicate tenant "
+                                 f"name {name!r}")
+            if int(tid) < 0 or int(tid) in ids:
+                raise ValueError(f"ServiceSpec.tenants[{name!r}]: id must "
+                                 f"be a unique non-negative int, got {tid}")
+            if float(weight) <= 0:
+                raise ValueError(f"ServiceSpec.tenants[{name!r}]: weight "
+                                 f"must be positive, got {weight}")
+            if float(rate_qps) < 0:
+                raise ValueError(f"ServiceSpec.tenants[{name!r}]: rate_qps "
+                                 f"must be >= 0, got {rate_qps}")
+            if int(burst) < 1:
+                raise ValueError(f"ServiceSpec.tenants[{name!r}]: burst "
+                                 f"must be >= 1, got {burst}")
+            names.add(name)
+            ids.add(int(tid))
+        if self.tenants and self.coarse_groups:
+            raise ValueError("ServiceSpec.tenants is incompatible with "
+                             "coarse_groups > 0 (tenant-masked CL needs "
+                             "the flat coarse quantizer)")
+        if self.qos_wfq and not self.tenants:
+            raise ValueError("ServiceSpec.qos_wfq requires a non-empty "
+                             "tenants section")
+        if self.qos_window < 0:
+            raise ValueError(f"ServiceSpec.qos_window must be >= 0, "
+                             f"got {self.qos_window}")
+        if self.qos_window and not self.qos_wfq:
+            raise ValueError("ServiceSpec.qos_window requires qos_wfq=True")
         return self
 
     # -- serialization: the durable deploy artifact ------------------------
@@ -455,6 +527,10 @@ class ServiceSpec:
         out["mutation_size_band"] = list(self.mutation_size_band)
         if self.engine_overrides is not None:
             out["engine_overrides"] = dict(self.engine_overrides)
+        out["tenants"] = {
+            str(name): {"id": int(tid), "weight": float(weight),
+                        "rate_qps": float(rate_qps), "burst": int(burst)}
+            for name, tid, weight, rate_qps, burst in self.tenants}
         out["version"] = SPEC_VERSION
         return out
 
@@ -467,13 +543,14 @@ class ServiceSpec:
         load, not boot a silently different fleet."""
         data = dict(data)
         version = data.pop("version", SPEC_VERSION)
-        if version in (1, 2, 3):
+        if version in (1, 2, 3, 4):
             # migration: every newer-schema field defaults to "off", so a
             # clean old file loads as-is; an old-stamped file that
             # nonetheless carries newer keys is lying about its version
-            newer = {1: _V2_FIELDS | _V3_FIELDS | _V4_FIELDS,
-                     2: _V3_FIELDS | _V4_FIELDS,
-                     3: _V4_FIELDS}[version]
+            newer = {1: _V2_FIELDS | _V3_FIELDS | _V4_FIELDS | _V5_FIELDS,
+                     2: _V3_FIELDS | _V4_FIELDS | _V5_FIELDS,
+                     3: _V4_FIELDS | _V5_FIELDS,
+                     4: _V5_FIELDS}[version]
             leaked = sorted(set(data) & newer)
             if leaked:
                 raise ValueError(f"ServiceSpec version {version} file "
@@ -504,6 +581,33 @@ class ServiceSpec:
         if "mutation_size_band" in data:
             data["mutation_size_band"] = tuple(
                 int(b) for b in data["mutation_size_band"])
+        if "tenants" in data:
+            tenants = data["tenants"]
+            entries = []
+            if isinstance(tenants, Mapping):
+                for name, cfg in tenants.items():
+                    if not isinstance(cfg, Mapping):
+                        raise ValueError(
+                            f"ServiceSpec.from_dict: tenants[{name!r}] "
+                            f"must be a mapping, got "
+                            f"{type(cfg).__name__}")
+                    bad = sorted(set(cfg) - _TENANT_KEYS)
+                    if bad:
+                        raise ValueError(
+                            f"ServiceSpec.from_dict: tenants[{name!r}] "
+                            f"has unknown keys {bad} (known: "
+                            f"{sorted(_TENANT_KEYS)})")
+                    if "id" not in cfg:
+                        raise ValueError(
+                            f"ServiceSpec.from_dict: tenants[{name!r}] "
+                            f"needs an 'id'")
+                    entries.append((str(name), int(cfg["id"]),
+                                    float(cfg.get("weight", 1.0)),
+                                    float(cfg.get("rate_qps", 0.0)),
+                                    int(cfg.get("burst", 1))))
+            else:   # direct tuple/list-of-entries form
+                entries = [tuple(e) for e in tenants]
+            data["tenants"] = tuple(sorted(entries, key=lambda e: e[1]))
         return cls(**data).validate()
 
     def save(self, path: Union[str, pathlib.Path]) -> pathlib.Path:

@@ -24,7 +24,8 @@ from repro.runtime.cache import (HotClusterLUTCache, LRUCache,
                                  OnlineHeatEstimator)
 from repro.service import (AnnService, IndexSpec, ServiceSpec,
                            SPEC_VERSION)
-from repro.service.spec import _V2_FIELDS, _V3_FIELDS, _V4_FIELDS
+from repro.service.spec import (_V2_FIELDS, _V3_FIELDS, _V4_FIELDS,
+                                _V5_FIELDS)
 
 NPROBE = 8
 K = 10
@@ -401,7 +402,7 @@ def test_spec_v1_files_still_load():
     """A v1 deploy file (no mutation or storage keys) loads with both off."""
     d = ServiceSpec().to_dict()
     d["version"] = 1
-    for key in (_V2_FIELDS | _V3_FIELDS | _V4_FIELDS):
+    for key in (_V2_FIELDS | _V3_FIELDS | _V4_FIELDS | _V5_FIELDS):
         d.pop(key)
     spec = ServiceSpec.from_dict(d)
     assert not spec.mutable

@@ -17,7 +17,8 @@ except ModuleNotFoundError:      # degrade to a fixed-example sweep
 
 from repro.core.autotune import TuneSpace, candidate_spec
 from repro.service.spec import (SPEC_VERSION, IndexSpec, ServiceSpec,
-                               _V2_FIELDS, _V3_FIELDS, _V4_FIELDS)
+                               _V2_FIELDS, _V3_FIELDS, _V4_FIELDS,
+                               _V5_FIELDS)
 
 # a spread of valid specs covering both schema eras: v1-style fields
 # only, each engine tier, cache/heat, routing, autoscaling, pacing, and
@@ -42,6 +43,12 @@ VALID_SPECS = [
                 backoff_base_ms=2.0, breaker_threshold=5,
                 breaker_half_open_s=0.5, shutdown_timeout_s=10.0,
                 checksum=False),
+    # the v5 multi-tenant knobs (entries sorted by id, coerced types,
+    # so the to_dict mapping form round-trips to the same tuple)
+    ServiceSpec(tenants=(("acme", 0, 1.0, 0.0, 1),
+                         ("globex", 1, 2.0, 500.0, 32)),
+                filter_width=8, qos_wfq=True, qos_window=16),
+    ServiceSpec(tenants=(("solo", 7, 1.0, 100.0, 4),)),
 ]
 
 # (field, bad value) edits that must make from_dict raise; each is a
@@ -66,6 +73,15 @@ BAD_EDITS = [
     ("max_retries", -1), ("backoff_base_ms", -0.5),
     ("breaker_threshold", 0), ("breaker_half_open_s", -1.0),
     ("shutdown_timeout_s", 0.0),
+    ("filter_width", 0),
+    ("qos_wfq", True),                   # WFQ without a tenants section
+    ("qos_window", -1),
+    ("tenants", [["a", 0, 1.0, 0.0, 1],  # duplicate tenant id
+                 ["b", 0, 1.0, 0.0, 1]]),
+    ("tenants", [["a", -1, 1.0, 0.0, 1]]),    # negative id
+    ("tenants", [["a", 0, 0.0, 0.0, 1]]),     # non-positive weight
+    ("tenants", [["a", 0, 1.0, -2.0, 1]]),    # negative rate
+    ("tenants", [["a", 0, 1.0, 0.0, 0]]),     # burst below 1
 ]
 
 
@@ -119,19 +135,25 @@ def test_unknown_keys_and_versions_rejected():
             ServiceSpec.from_dict(d)
     # a clean v1 file (no newer-schema keys) still loads ...
     v1 = {k: v for k, v in base.items()
-          if k not in (_V2_FIELDS | _V3_FIELDS | _V4_FIELDS)}
+          if k not in (_V2_FIELDS | _V3_FIELDS | _V4_FIELDS | _V5_FIELDS)}
     v1["version"] = 1
     assert ServiceSpec.from_dict(v1) == ServiceSpec()
     # ... but an old-stamped file smuggling newer keys is lying — at
-    # every prior schema era (v3-stamped + v4 keys included)
-    for stamp in (1, 2, 3):
+    # every prior schema era (v4-stamped + v5 keys included)
+    for stamp in (1, 2, 3, 4):
         lying = dict(base, version=stamp)
         with pytest.raises(ValueError, match="newer-schema keys"):
             ServiceSpec.from_dict(lying)
-    # a clean v3 file (v4 keys absent) migrates; new knobs default off
-    v3 = {k: v for k, v in base.items() if k not in _V4_FIELDS}
+    # a clean v3 file (v4/v5 keys absent) migrates; new knobs default off
+    v3 = {k: v for k, v in base.items()
+          if k not in (_V4_FIELDS | _V5_FIELDS)}
     v3["version"] = 3
     assert ServiceSpec.from_dict(v3) == ServiceSpec()
+    # a clean v4 file (v5 tenant keys absent) migrates to an untenanted
+    # single-namespace service — the pre-v5 behavior, bit for bit
+    v4 = {k: v for k, v in base.items() if k not in _V5_FIELDS}
+    v4["version"] = 4
+    assert ServiceSpec.from_dict(v4) == ServiceSpec()
     with pytest.raises(ValueError, match="mapping"):
         ServiceSpec.from_dict(dict(base, index=[1, 2]))
 

@@ -29,7 +29,8 @@ from repro.core.perf_model import (DiskProfile, IndexParams, NVME_PROFILE,
                                    cold_probe_seconds, serving_batch_latency)
 from repro.core.search import cluster_locate
 from repro.runtime.serving import LocalEngine
-from repro.service.spec import SPEC_VERSION, ServiceSpec, _V4_FIELDS
+from repro.service.spec import (SPEC_VERSION, ServiceSpec, _V4_FIELDS,
+                               _V5_FIELDS)
 from repro.storage import CorruptClusterError, TieredStore, TieredStoreError
 
 
@@ -366,7 +367,7 @@ def test_spec_roundtrip_current_version(tmp_path):
     path = spec.save(tmp_path / "deploy.json")
     assert ServiceSpec.load(path) == spec
     data = json.loads(path.read_text())
-    assert data["version"] == SPEC_VERSION == 4
+    assert data["version"] == SPEC_VERSION == 5
 
 
 def test_spec_v2_file_loads(tmp_path):
@@ -375,7 +376,7 @@ def test_spec_v2_file_loads(tmp_path):
     data = ServiceSpec(nprobe=4, k=5).to_dict()
     for key in ("storage", "storage_budget_bytes", "storage_promote_margin",
                 "storage_dir", "coarse_groups", "coarse_nprobe1",
-                *_V4_FIELDS):
+                *_V4_FIELDS, *_V5_FIELDS):
         data.pop(key)
     data["version"] = 2
     spec = ServiceSpec.from_dict(data)

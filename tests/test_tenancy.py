@@ -1,0 +1,348 @@
+"""Multi-tenant serving properties (PR 10): isolation, predicate
+filtering, padding discipline, and the QoS mechanism units.
+
+The load-bearing invariants, asserted bit-exactly:
+
+  * tenant-scoped search over the shared index equals a dedicated
+    single-tenant index built from the same rows (same codebook /
+    rotation / ids) — across nprobe and both LUT dtypes, and across the
+    local, sharded, and tiered engines;
+  * predicate-filtered search equals brute-force post-filtering: an
+    unfiltered large-k search over the same probes, filtered by the
+    host-side reference mask and truncated to k — never the other way
+    around (exact filtered top-k, no post-hoc truncation);
+  * padding rows (id -1) and out-of-scope rows can never match: a
+    tenant with fewer than k rows gets an (inf, -1) tail identical to
+    the padding invariant's.
+
+Plus unit tests for the QoS mechanism pieces: TokenBucket refill,
+TenantRegistry resolution/shed accounting, WFQScheduler weight-ratio
+dispatch order and window bounding, and Router.record pick accounting
+for sticky WFQ dispatch.
+"""
+
+import numpy as np
+import pytest
+
+import jax.numpy as jnp
+
+from repro.core import SearchParams, pad_clusters, search_ivfpq
+from repro.core.filter import (NO_TAG, NO_TENANT, VectorMeta, pad_terms,
+                               scope_mask, tenant_subindex)
+from repro.service import AnnService, ServiceSpec
+from repro.service.router import LeastQueuePolicy, Router
+from repro.service.tenancy import TenantRegistry, TokenBucket, WFQScheduler
+
+N_TENANTS = 3
+TAG_MOD = 5
+
+
+def _meta_arrays(n):
+    """Per-vector tenants striped over N_TENANTS; one tag column
+    cycling mod TAG_MOD (so every tenant holds every tag value)."""
+    tenants = (np.arange(n) % N_TENANTS).astype(np.int32)
+    tags = (np.arange(n) % TAG_MOD).astype(np.uint32)[:, None]
+    return tenants, tags
+
+
+def _build_service(index, points, nprobe, lut_dtype, **spec_kw):
+    n = len(points)
+    tenants, tags = _meta_arrays(n)
+    spec_kw.setdefault("engine", "local")
+    spec = ServiceSpec(replicas=1, nprobe=nprobe, k=10,
+                       lut_dtype=lut_dtype, buckets=(1, 2, 4),
+                       max_wait_s=1e-3, **spec_kw)
+    return AnnService.build(spec, index=index, tenants=tenants, tags=tags,
+                            **({"sample_queries": points[:32]}
+                               if spec_kw.get("engine") == "sharded" else {}))
+
+
+def _dedicated_reference(index, meta, tid, queries, nprobe, k, lut_dtype):
+    """The isolation oracle: a dedicated single-tenant index from the
+    same rows (same codebook/rotation, original global ids)."""
+    sub, members = tenant_subindex(index, meta, tid)
+    p = min(nprobe, len(members))
+    d, i = search_ivfpq(sub, pad_clusters(sub), jnp.asarray(queries),
+                        SearchParams(nprobe=p, k=k, lut_dtype=lut_dtype))
+    return np.asarray(d), np.asarray(i)
+
+
+def _assert_same_results(d_got, i_got, d_ref, i_ref):
+    np.testing.assert_array_equal(np.asarray(i_got), np.asarray(i_ref))
+    d_got = np.where(np.isfinite(d_got), d_got, 0.0)
+    d_ref = np.where(np.isfinite(d_ref), d_ref, 0.0)
+    np.testing.assert_allclose(d_got, d_ref, rtol=1e-5, atol=1e-5)
+
+
+# -- isolation: scoped == dedicated single-tenant index ----------------------
+
+@pytest.mark.parametrize("lut_dtype", ["f32", "uint8"])
+@pytest.mark.parametrize("nprobe", [1, 4, 16])
+def test_scoped_bit_identical_to_dedicated_index(small_corpus, small_index,
+                                                 nprobe, lut_dtype):
+    """Tenant-scoped search over the shared index returns bit-identical
+    neighbor ids (and matching distances) to a dedicated index holding
+    only that tenant's rows — at every nprobe and both LUT dtypes."""
+    points = np.asarray(small_corpus.points)
+    queries = np.asarray(small_corpus.queries, np.float32)
+    svc = _build_service(small_index, points, nprobe, lut_dtype)
+    try:
+        tenants, _ = _meta_arrays(len(points))
+        meta = svc.index.meta
+        for tid in range(N_TENANTS):
+            d_s, i_s = svc.search(queries, tenant=tid)
+            live = i_s[i_s >= 0]
+            assert live.size and np.all(tenants[live] == tid), \
+                f"tenant {tid} result leaks another tenant's rows"
+            d_ref, i_ref = _dedicated_reference(
+                small_index, meta, tid, queries, nprobe, 10, lut_dtype)
+            _assert_same_results(d_s, i_s, d_ref, i_ref)
+    finally:
+        svc.shutdown()
+
+
+@pytest.mark.parametrize("engine_kw", [
+    {"engine": "local"},
+    {"engine": "sharded", "n_shards": 4},
+    {"engine": "local", "storage": "tiered",
+     "storage_budget_bytes": 1 << 16},
+], ids=["local", "sharded", "tiered"])
+def test_isolation_holds_across_engines(small_corpus, small_index,
+                                        engine_kw, tmp_path):
+    """The acceptance invariant end-to-end: the same dedicated-index
+    oracle holds for the local, sharded, and tiered engine tiers."""
+    points = np.asarray(small_corpus.points)
+    queries = np.asarray(small_corpus.queries[:16], np.float32)
+    if engine_kw.get("storage") == "tiered":
+        engine_kw = dict(engine_kw, storage_dir=str(tmp_path))
+    svc = _build_service(small_index, points, 4, "f32", **engine_kw)
+    try:
+        meta = svc.index.meta
+        for tid in range(N_TENANTS):
+            d_s, i_s = svc.search(queries, tenant=tid)
+            d_ref, i_ref = _dedicated_reference(
+                small_index, meta, tid, queries, 4, 10, "f32")
+            _assert_same_results(d_s, i_s, d_ref, i_ref)
+    finally:
+        svc.shutdown()
+
+
+# -- predicate filtering: exact, never post-hoc truncated --------------------
+
+@pytest.mark.parametrize("lut_dtype", ["f32", "uint8"])
+@pytest.mark.parametrize("nprobe", [1, 4, 16])
+def test_filtered_equals_brute_force_post_filter(small_corpus, small_index,
+                                                 small_clusters, nprobe,
+                                                 lut_dtype):
+    """Predicate-filtered results are bit-identical to brute force:
+    rank ALL candidates of the same probes (k = nprobe * cmax, i.e. the
+    whole candidate set), drop rows failing the host-side reference
+    mask, truncate to k.  Works because predicates don't change coarse
+    ranking and top-k tie order is stable by candidate position."""
+    points = np.asarray(small_corpus.points)
+    queries = np.asarray(small_corpus.queries, np.float32)
+    terms = (1, 3)
+    k = 10
+    svc = _build_service(small_index, points, nprobe, lut_dtype)
+    try:
+        meta = svc.index.meta
+        d_f, i_f = svc.search(queries, terms=terms)
+
+        k_big = nprobe * small_clusters.cmax        # every candidate row
+        d_all, i_all = search_ivfpq(
+            small_index, small_clusters, jnp.asarray(queries),
+            SearchParams(nprobe=nprobe, k=k_big, lut_dtype=lut_dtype))
+        d_all, i_all = np.asarray(d_all), np.asarray(i_all)
+        keep = meta.match_host(i_all, terms=terms)
+        d_ref = np.full((len(queries), k), np.inf, d_all.dtype)
+        i_ref = np.full((len(queries), k), -1, i_all.dtype)
+        for qi in range(len(queries)):
+            sel = np.flatnonzero(keep[qi])[:k]
+            d_ref[qi, :sel.size] = d_all[qi, sel]
+            i_ref[qi, :sel.size] = i_all[qi, sel]
+
+        _assert_same_results(d_f, i_f, d_ref, i_ref)
+        live = i_f[i_f >= 0]
+        assert np.all(meta.match_host(live, terms=terms))
+    finally:
+        svc.shutdown()
+
+
+def test_tenant_and_predicate_compose(small_corpus, small_index):
+    """Tenant scope AND predicate terms compose (both masks applied):
+    every returned row belongs to the tenant and carries a term."""
+    points = np.asarray(small_corpus.points)
+    queries = np.asarray(small_corpus.queries[:16], np.float32)
+    svc = _build_service(small_index, points, 4, "f32")
+    try:
+        meta = svc.index.meta
+        _, i_f = svc.search(queries, tenant=1, terms=(2,))
+        live = i_f[i_f >= 0]
+        assert live.size
+        assert np.all(meta.match_host(live, tenant=1, terms=(2,)))
+        # and none of the rows matching only one half of the scope leak
+        assert np.all(meta.match_host(live, tenant=1))
+        assert np.all(meta.match_host(live, terms=(2,)))
+    finally:
+        svc.shutdown()
+
+
+# -- padding discipline ------------------------------------------------------
+
+def test_scarce_tenant_gets_inf_minus_one_tail(small_corpus, small_index):
+    """A tenant with fewer than k rows yields exactly those rows, then
+    an (inf, -1) tail — identical to the padding invariant; no foreign
+    or padding row is ever promoted to fill the deficit."""
+    points = np.asarray(small_corpus.points)
+    queries = np.asarray(small_corpus.queries[:16], np.float32)
+    svc = _build_service(small_index, points, 4, "f32")
+    try:
+        scarce = np.asarray([5, 17, 29])
+        svc.index.meta.set(scarce, tenant=7)     # 3 rows < k=10
+        d_s, i_s = svc.search(queries, tenant=7)
+        assert set(i_s[i_s >= 0]) <= set(scarce.tolist())
+        live_n = (i_s >= 0).sum(axis=1)
+        assert live_n.max() <= scarce.size
+        # the tail is (inf, -1), rows sorted live-first
+        for qi in range(len(queries)):
+            n = int(live_n[qi])
+            assert np.all(i_s[qi, :n] >= 0)
+            assert np.all(i_s[qi, n:] == -1)
+            assert np.all(np.isinf(d_s[qi, n:]))
+    finally:
+        svc.shutdown()
+
+
+def test_scope_mask_padding_and_oob_rows():
+    """Unit check on the jit-side mask: padding rows (id -1) never
+    match anything; ids beyond the meta tables (mutated after snapshot)
+    are visible only to unscoped, predicate-free queries."""
+    meta = VectorMeta(capacity=4, tag_fields=2)
+    meta.set([0, 1, 2, 3], tenant=[0, 0, 1, NO_TENANT],
+             tags=[[7, NO_TAG]] * 4)
+    jt, jg = meta.device_tables()
+    row_ids = jnp.asarray([[-1, 0, 2, 9],        # pad, t0, t1, out-of-bounds
+                           [-1, 1, 3, 9]], jnp.int32)
+    # unscoped, no predicate: everything live is visible (incl. oob)
+    m = scope_mask(row_ids, jt, jg,
+                   jnp.asarray([NO_TENANT, NO_TENANT], jnp.int32),
+                   jnp.asarray(pad_terms([(), ()], 2)))
+    np.testing.assert_array_equal(np.asarray(m),
+                                  [[False, True, True, True],
+                                   [False, True, True, True]])
+    # tenant-scoped: padding, foreign, unscoped, and oob rows all drop
+    m = scope_mask(row_ids, jt, jg, jnp.asarray([0, 0], jnp.int32),
+                   jnp.asarray(pad_terms([(), ()], 2)))
+    np.testing.assert_array_equal(np.asarray(m),
+                                  [[False, True, False, False],
+                                   [False, True, False, False]])
+    # predicate: oob rows have no tags, so they drop too
+    m = scope_mask(row_ids, jt, jg,
+                   jnp.asarray([NO_TENANT, NO_TENANT], jnp.int32),
+                   jnp.asarray(pad_terms([(7,), (8,)], 2)))
+    np.testing.assert_array_equal(np.asarray(m),
+                                  [[False, True, True, False],
+                                   [False, False, False, False]])
+
+
+def test_pad_terms_width_enforced():
+    out = pad_terms([(1,), (), (2, 3)], 3)
+    assert out.shape == (3, 3) and out.dtype == np.uint32
+    np.testing.assert_array_equal(out[1], [NO_TAG] * 3)
+    with pytest.raises(ValueError, match="filter_width"):
+        pad_terms([(1, 2, 3, 4)], 3)
+
+
+# -- QoS mechanism units -----------------------------------------------------
+
+def test_token_bucket_refill_and_burst_cap():
+    b = TokenBucket(rate_qps=2.0, burst=2)
+    assert b.take(0.0) and b.take(0.0)           # burst drains
+    assert not b.take(0.0)                       # empty
+    assert not b.take(0.4)                       # 0.8 tokens — still < 1
+    assert b.take(0.6)                           # 1.2 accrued by now
+    # a long idle gap refills to the burst cap, not beyond
+    assert not b.take(0.6)
+    assert b.take(100.0) and b.take(100.0)
+    assert not b.take(100.0)
+
+
+def test_token_bucket_zero_rate_always_admits():
+    b = TokenBucket(rate_qps=0.0, burst=1)
+    assert all(b.take(float(t)) for t in range(100))
+
+
+def test_tenant_registry_resolution_and_shed():
+    reg = TenantRegistry((("anna", 0, 4.0, 0.0, 1),
+                          ("zoe", 3, 1.0, 2.0, 2)))
+    assert reg.resolve(None) == NO_TENANT
+    assert reg.resolve("zoe") == 3 and reg.resolve(3) == 3
+    assert reg.resolve(42) == 42                 # unregistered ids pass
+    with pytest.raises(KeyError, match="unknown tenant"):
+        reg.resolve("nobody")
+    assert reg.weight_of(0) == 4.0 and reg.weight_of(42) == 1.0
+    # anna has no quota; zoe sheds past her burst, refills with time
+    assert all(reg.admit(0, 0.0) for _ in range(50))
+    assert reg.admit(3, 0.0) and reg.admit(3, 0.0)
+    assert not reg.admit(3, 0.0)
+    assert reg.admit(3, 1.0)                     # 2 qps: 1s -> 2 tokens
+    st = reg.stats()
+    assert st["anna"]["shed"] == 0 and st["zoe"]["shed"] == 1
+    assert st["zoe"]["rate_qps"] == 2.0
+
+
+def test_wfq_dispatch_order_follows_weight_ratio():
+    """Backlogged tenants dispatch at their weight ratio: with A:B
+    weights 1:2 and both queues full, every weight-window of dispatches
+    sends two B for each A, per-tenant FIFO preserved."""
+    reg = TenantRegistry((("a", 0, 1.0, 0.0, 1), ("b", 1, 2.0, 0.0, 1)))
+    wfq = WFQScheduler(reg, window=1)
+    order = []
+    wfq.submit(NO_TENANT, lambda: order.append("warm"))  # occupy the window
+    for j in range(6):
+        wfq.submit(0, lambda j=j: order.append(("a", j)))
+    for j in range(6):
+        wfq.submit(1, lambda j=j: order.append(("b", j)))
+    assert order == ["warm"] and wfq.pending == 12
+    for _ in range(12):
+        wfq.on_complete()
+    labels = [t for t, _ in order[1:]]
+    assert labels[:6] == ["b", "a", "b", "b", "a", "b"]  # 2:1 interleave
+    assert labels.count("a") == labels.count("b") == 6   # all drained
+    for t in ("a", "b"):                                 # per-tenant FIFO
+        assert [j for tt, j in order[1:] if tt == t] == list(range(6))
+    st = wfq.stats()
+    assert st["queued"] == 0
+    assert st["dispatched"] == {"-1": 1, "a": 6, "b": 6}
+    assert st["max_queued"] == 12
+
+
+def test_wfq_window_bounds_in_flight():
+    reg = TenantRegistry()
+    wfq = WFQScheduler(reg, window=3)
+    n_dispatched = []
+    for j in range(10):
+        wfq.submit(NO_TENANT, lambda: n_dispatched.append(1))
+    assert len(n_dispatched) == 3 and wfq.in_flight == 3
+    assert wfq.pending == 7
+    wfq.on_complete()
+    assert len(n_dispatched) == 4 and wfq.in_flight == 3
+    with pytest.raises(ValueError, match="window"):
+        WFQScheduler(reg, window=0)
+
+
+def test_router_record_accounts_sticky_dispatch():
+    """Router.record (the sticky WFQ dispatch path) keeps pick counts
+    summing to the dispatched request count, per tenant too, without
+    feeding the policy an affinity signal."""
+    router = Router(LeastQueuePolicy(), 3, depth_fn=lambda r: 0)
+    q = np.zeros(4, np.float32)
+    r0 = router.route(q, tenant=1)
+    router.record(r0, tenant=1)                  # sticky repeat
+    router.record((r0 + 1) % 3, tenant=2)
+    st = router.stats()
+    assert sum(st["picks"]) == 3
+    assert sum(st["tenant_picks"][1]) == 2
+    assert sum(st["tenant_picks"][2]) == 1
+    with pytest.raises(ValueError, match="record"):
+        router.record(3)
